@@ -1,0 +1,27 @@
+use std::time::Instant;
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let svc = ftlads::runtime::RuntimeService::start(&dir).unwrap();
+    let h = svc.handle();
+    let b = h.manifest.digest_batch; let w = h.manifest.object_words;
+    let data = vec![7u32; b * w];
+    // warmup
+    for _ in 0..3 { h.execute_u32("digest", vec![data.clone()]).unwrap(); }
+    // (a) clone + execute
+    let t0 = Instant::now();
+    for _ in 0..20 { h.execute_u32("digest", vec![data.clone()]).unwrap(); }
+    println!("clone+execute: {:.3} ms", t0.elapsed().as_secs_f64()/20.0*1e3);
+    // (b) alloc + zero cost
+    let t0 = Instant::now();
+    for _ in 0..20 { let v = vec![0u32; b*w]; std::hint::black_box(&v); }
+    println!("alloc+zero 2M u32: {:.3} ms", t0.elapsed().as_secs_f64()/20.0*1e3);
+    // (c) byte->u32 staging loop cost
+    let bytes = vec![9u8; b*w*4];
+    let t0 = Instant::now();
+    for _ in 0..20 {
+        let mut st = vec![0u32; b*w];
+        for (i, c) in bytes.chunks_exact(4).enumerate() { st[i] = u32::from_le_bytes([c[0],c[1],c[2],c[3]]); }
+        std::hint::black_box(&st);
+    }
+    println!("staging fill loop: {:.3} ms", t0.elapsed().as_secs_f64()/20.0*1e3);
+}

@@ -1,0 +1,191 @@
+//! End-to-end reproduction driver: exercises the full three-layer stack
+//! on a real (scaled) workload and regenerates every figure of the
+//! paper's evaluation section, printing paper-vs-measured for the
+//! headline claims:
+//!
+//!   * FT data-transfer-time overhead < 1 %            (Figs 5, 6)
+//!   * log space overhead KB-scale, bitbinary smallest  (Fig 7)
+//!   * recovery time ≈ 10 % of transfer time, ~flat in
+//!     the fault point; universal+bitbinary best        (Figs 8, 9, 10)
+//!
+//! It also runs one transfer with `integrity = pjrt`, proving the
+//! compiled Pallas digest artifact sits on the sink's hot path (L1→L2→L3
+//! composition), and one fault/resume cycle through that same stack.
+//!
+//!     cargo run --release --example reproduce_figures            # default scale
+//!     FTLADS_BENCH_SCALE=quick cargo run --release --example reproduce_figures
+//!
+//! The per-figure tables are produced by the dedicated benches
+//! (`cargo bench --bench fig5_big_overhead`, ...); this driver runs a
+//! representative subset of each so one command tells the whole story.
+
+use std::time::Duration;
+
+use ftlads::bench_support::{
+    measure_recovery_bbcp, measure_recovery_ftlads, print_table, run_case, BenchScale, Case,
+};
+use ftlads::config::Config;
+use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::fault::FaultPlan;
+use ftlads::ftlog::{Mechanism, Method};
+use ftlads::integrity::IntegrityMode;
+use ftlads::net::Side;
+use ftlads::runtime::RuntimeService;
+use ftlads::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let scale = BenchScale::from_env();
+    println!("FT-LADS end-to-end reproduction driver");
+    println!(
+        "scale: big {}x{}, small {}x{}, {} iteration(s)\n",
+        scale.big_files,
+        fmt_bytes(scale.big_file_size),
+        scale.small_files,
+        fmt_bytes(scale.small_file_size),
+        scale.iterations
+    );
+
+    // ---- headline 1: FT overhead on transfer time (Figs 5a/6a) --------
+    let wl_big = scale.big();
+    let lads = run_case(&scale, &wl_big, Case::Lads, "rf-lads");
+    let mut rows = Vec::new();
+    let mut worst_overhead: f64 = f64::MIN;
+    for case in [
+        Case::Ft(Mechanism::File, Method::Bit64),
+        Case::Ft(Mechanism::File, Method::Char),
+        Case::Ft(Mechanism::Transaction, Method::Bit64),
+        Case::Ft(Mechanism::Universal, Method::Bit64),
+        Case::Ft(Mechanism::Universal, Method::Enc),
+    ] {
+        let out = run_case(&scale, &wl_big, case, &format!("rf-{}", case.label()));
+        let ovh = (out.elapsed.as_secs_f64() / lads.elapsed.as_secs_f64() - 1.0) * 100.0;
+        worst_overhead = worst_overhead.max(ovh);
+        rows.push(vec![
+            case.label(),
+            format!("{:.3}", out.elapsed.as_secs_f64()),
+            format!("{ovh:+.2}%"),
+            format!("{:.1}", out.resources.cpu_percent),
+            fmt_bytes(out.resources.peak_rss_bytes),
+            fmt_bytes(out.log_space.peak_bytes),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Fig 5 (subset), big workload — LADS baseline {:.3}s",
+            lads.elapsed.as_secs_f64()
+        ),
+        &["case", "time (s)", "vs LADS", "cpu %", "peak rss", "log peak"],
+        &rows,
+    );
+    println!(
+        "paper: FT overhead < 1%  |  measured worst case here: {worst_overhead:+.2}% \
+         (run-to-run noise dominates at this scale)"
+    );
+
+    // ---- headline 2: space overhead (Fig 7) ----------------------------
+    let mut rows = Vec::new();
+    for mech in Mechanism::ALL_FT {
+        let mut row = vec![mech.as_str().to_string()];
+        for m in [Method::Char, Method::Int, Method::Enc, Method::Binary, Method::Bit8, Method::Bit64]
+        {
+            let out = run_case(
+                &scale,
+                &wl_big,
+                Case::Ft(mech, m),
+                &format!("rf7-{}-{}", mech.as_str(), m.as_str()),
+            );
+            row.push(fmt_bytes(out.log_space.peak_bytes));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig 7, big workload: peak logger bytes",
+        &["mechanism", "char", "int", "enc", "binary", "bit8", "bit64"],
+        &rows,
+    );
+    println!("paper: bitbinary (bit8/bit64) smallest; everything KB-scale");
+
+    // ---- headline 3: recovery time (Figs 8/10) -------------------------
+    let mut rows = Vec::new();
+    let mut file_bit64_rec = Duration::ZERO;
+    let mut tt_ref = Duration::ZERO;
+    for (label, case) in [
+        ("LADS (restart)", Case::Lads),
+        ("file/bit64", Case::Ft(Mechanism::File, Method::Bit64)),
+        ("file/char", Case::Ft(Mechanism::File, Method::Char)),
+        ("transaction/bit64", Case::Ft(Mechanism::Transaction, Method::Bit64)),
+        ("universal/bit64", Case::Ft(Mechanism::Universal, Method::Bit64)),
+    ] {
+        let mut row = vec![label.to_string()];
+        for &p in &[0.2, 0.8] {
+            let r = measure_recovery_ftlads(&scale, &wl_big, case, p, "rf8");
+            if label == "file/bit64" && p == 0.8 {
+                file_bit64_rec = r.estimated_recovery();
+                tt_ref = r.tt;
+            }
+            row.push(format!("{:.3}", r.estimated_recovery().as_secs_f64()));
+        }
+        rows.push(row);
+    }
+    let rb = measure_recovery_bbcp(&scale, &wl_big, 0.8, "rf8-bbcp");
+    rows.push(vec![
+        "bbcp".to_string(),
+        "-".to_string(),
+        format!("{:.3}", rb.estimated_recovery().as_secs_f64()),
+    ]);
+    print_table(
+        "Fig 8/10 (subset), big workload: ER_t (s) at 20% / 80% fault",
+        &["case", "ER@20%", "ER@80%"],
+        &rows,
+    );
+    println!(
+        "paper: recovery ≈10% of transfer time at any fault point  |  measured \
+         file/bit64 @80%: {:.1}% of TT ({:.3}s / {:.3}s)",
+        file_bit64_rec.as_secs_f64() / tt_ref.as_secs_f64().max(1e-9) * 100.0,
+        file_bit64_rec.as_secs_f64(),
+        tt_ref.as_secs_f64()
+    );
+
+    // ---- full-stack proof: PJRT integrity on the hot path --------------
+    println!("\n=== three-layer composition: Pallas digest artifact on the sink hot path ===");
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let service = RuntimeService::start(&artifacts)?;
+        let handle = service.handle();
+        let mut cfg = Config::for_tests("rf-pjrt");
+        cfg.integrity = IntegrityMode::Pjrt;
+        cfg.object_size = handle.manifest.object_bytes as u64;
+        cfg.rma_bytes = 64 * cfg.object_size as usize;
+        cfg.time_scale = scale.time_scale;
+        cfg.mechanism = Mechanism::Universal;
+        cfg.method = Method::Bit64;
+        let wl = ftlads::workload::big_workload(8, 4 * cfg.object_size);
+        let env = SimEnv::new(cfg, &wl);
+        // corrupt one write to prove the kernel is actually checking
+        env.sink.inject_write_corruption(&env.files[3], 0);
+        let out = env.run_with_runtime(
+            &TransferSpec::fresh(env.files.clone())
+                .with_fault(FaultPlan::at_fraction(0.55, Side::Source)),
+            Some(handle.clone()),
+        )?;
+        assert!(!out.completed, "fault should trigger");
+        let out2 = env.run_with_runtime(
+            &TransferSpec::resuming(env.files.clone()),
+            Some(handle),
+        )?;
+        assert!(out2.completed, "{:?}", out2.fault);
+        env.verify_sink_complete()?;
+        let caught = out.sink.objects_failed_verify + out2.sink.objects_failed_verify;
+        println!(
+            "pjrt integrity transfer: fault at 55% -> resume -> verified. \
+             corrupted writes caught by the compiled Pallas kernel: {caught} \
+             (objects skipped on resume: {})",
+            out2.source.objects_skipped_resume
+        );
+    } else {
+        println!("artifacts/ not built — run `make artifacts` for the PJRT leg");
+    }
+
+    println!("\ndriver complete. Full tables: cargo bench --bench fig5..fig10.");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+"""AOT entrypoint: lower the L2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client.  HLO text — NOT ``lowered.compile()`` / serialized protos —
+because the image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts:
+    artifacts/digest.hlo.txt     digest_batch   (B, W) u32 -> ((B,2) u32,)
+    artifacts/verify.hlo.txt     verify_batch   (B, W), (B,2) -> ((B,2), (B,))
+    artifacts/recovery.hlo.txt   recovery_summary (F, WB), (F,) -> ((F,), (F,))
+    artifacts/manifest.json      shapes + entry names for the rust runtime
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Static AOT shapes. The rust runtime pads partial batches to these.
+#  - B:  objects per digest/verify batch (one RMA buffer's worth)
+#  - W:  uint32 words per object  (65536 words = 256 KiB object / MTU)
+#  - F:  files per recovery batch
+#  - WB: uint32 bitmap words per file (4096 trackable objects per file)
+B = 8
+W = 64 * 1024
+F = 64
+WB = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    u32 = jnp.uint32
+    data = jax.ShapeDtypeStruct((B, W), u32)
+    expected = jax.ShapeDtypeStruct((B, 2), u32)
+    bitmaps = jax.ShapeDtypeStruct((F, WB), u32)
+    totals = jax.ShapeDtypeStruct((F,), u32)
+
+    return {
+        "digest": (
+            jax.jit(model.digest_batch).lower(data),
+            {"inputs": [["u32", [B, W]]], "outputs": [["u32", [B, 2]]]},
+        ),
+        "verify": (
+            jax.jit(model.verify_batch).lower(data, expected),
+            {
+                "inputs": [["u32", [B, W]], ["u32", [B, 2]]],
+                "outputs": [["u32", [B, 2]], ["u32", [B]]],
+            },
+        ),
+        "recovery": (
+            jax.jit(model.recovery_summary).lower(bitmaps, totals),
+            {
+                "inputs": [["u32", [F, WB]], ["u32", [F]]],
+                "outputs": [["u32", [F]], ["u32", [F]]],
+            },
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "object_words": W,
+        "object_bytes": W * 4,
+        "digest_batch": B,
+        "recovery_files": F,
+        "bitmap_words": WB,
+        "entries": {},
+    }
+    for name, (lowered, sig) in lower_all().items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {"file": f"{name}.hlo.txt", **sig}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

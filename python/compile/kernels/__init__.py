@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from . import digest, recovery, ref  # noqa: F401

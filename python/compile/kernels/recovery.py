@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: FT-log bitmap popcount (recovery-set summary).
+
+The Bit8/Bit64 FT logging methods (paper §4.2, Algorithm 1) record one bit
+per completed object.  On resume, the source must turn each file's bitmap
+into a completed-object count (and, with the total block count, a pending
+count).  This kernel computes the per-row popcount of a ``(F, W)`` uint32
+bitmap batch with the SWAR reduction, tiled over both axes.
+
+interpret=True: see digest.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F_TILE = 8
+W_TILE = 1024
+
+
+def _popcount_kernel(x_ref, o_ref):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    part = jnp.sum(x, axis=1, dtype=jnp.uint32)  # (F_TILE,)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+def popcount(bitmaps: jnp.ndarray, *, f_tile: int = F_TILE, w_tile: int = W_TILE) -> jnp.ndarray:
+    """Per-row popcount of a ``(F, W)`` uint32 batch → ``(F,)`` uint32."""
+    f, w = bitmaps.shape
+    f_tile = min(f_tile, f)
+    if f % f_tile != 0:
+        f_tile = _largest_divisor_tile(f, f_tile)
+    if w % w_tile != 0:
+        w_tile = _largest_divisor_tile(w, w_tile)
+    grid = (f // f_tile, w // w_tile)
+    return pl.pallas_call(
+        functools.partial(_popcount_kernel),
+        grid=grid,
+        in_specs=[pl.BlockSpec((f_tile, w_tile), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((f_tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((f,), jnp.uint32),
+        interpret=True,
+    )(bitmaps)
+
+
+def _largest_divisor_tile(n: int, cap: int) -> int:
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1

@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must be array_equal against the function of the same name here, for all
+shapes and dtypes the AOT manifest exports. The rust `integrity::native`
+module implements bit-identical versions of the same math (wrapping u32), so
+ref.py is also the cross-language contract.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["digest_ref", "popcount_ref", "recovery_summary_ref"]
+
+
+def digest_ref(data: jnp.ndarray) -> jnp.ndarray:
+    """Order-independent-combinable dual-sum digest of a batch of objects.
+
+    For each row ``d`` of ``data`` (shape ``(B, W)``, dtype uint32) compute
+
+        A = sum_i d[i]                 (mod 2**32)
+        B = sum_i (W - i) * d[i]       (mod 2**32)
+
+    and return ``(B, 2)`` uint32 ``[A, B]`` per row.  This is the blocked
+    Adler-like digest from DESIGN.md: both sums are plain reductions, so
+    the Pallas kernel can tile the W axis and accumulate per grid step.
+    """
+    data = data.astype(jnp.uint32)
+    _, w = data.shape
+    idx = jnp.arange(w, dtype=jnp.uint32)
+    weights = jnp.uint32(w) - idx  # W, W-1, ..., 1
+    a = jnp.sum(data, axis=1, dtype=jnp.uint32)
+    bsum = jnp.sum(data * weights[None, :], axis=1, dtype=jnp.uint32)
+    return jnp.stack([a, bsum], axis=1)
+
+
+def popcount_ref(bitmaps: jnp.ndarray) -> jnp.ndarray:
+    """Per-row population count of uint32 bitmap words.
+
+    ``bitmaps`` has shape ``(F, W)`` uint32; returns ``(F,)`` uint32 — the
+    number of set bits per row, i.e. the number of completed objects recorded
+    in a Bit8/Bit64 FT log bitmap (Algorithm 1 in the paper).
+    """
+    x = bitmaps.astype(jnp.uint32)
+    # SWAR popcount, identical to the kernel's math.
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    return jnp.sum(x, axis=1, dtype=jnp.uint32)
+
+
+def recovery_summary_ref(bitmaps: jnp.ndarray, total_blocks: jnp.ndarray):
+    """Completed / pending object counts per file from FT log bitmaps.
+
+    ``total_blocks`` is ``(F,)`` uint32 (number of objects of each file).
+    Returns ``(completed, pending)`` both ``(F,)`` uint32.  ``completed`` is
+    clamped to ``total_blocks`` so junk bits beyond a file's last object
+    (possible after a torn bitmap write) can never produce a negative
+    pending count.
+    """
+    completed = jnp.minimum(popcount_ref(bitmaps), total_blocks.astype(jnp.uint32))
+    pending = total_blocks.astype(jnp.uint32) - completed
+    return completed, pending

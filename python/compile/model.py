@@ -1,0 +1,57 @@
+"""L2: the data-integrity compute graphs FT-LADS runs via PJRT.
+
+Two exported computations, both calling the L1 Pallas kernels:
+
+- ``verify_batch(data, expected)`` — sink-side integrity check.  Digests a
+  batch of objects (Pallas ``digest`` kernel) and compares against the
+  digests carried in the NEW_BLOCK messages.  Returns the recomputed
+  digests and a per-object ok flag.  The rust sink runs this over each RMA
+  buffer's worth of objects after ``pwrite`` and before emitting
+  BLOCK_SYNC — a PFS write error can therefore never go unnoticed (the
+  exact failure mode paper §3.2 attributes to stock LADS).
+
+- ``recovery_summary(bitmaps, total_blocks)`` — source-side resume helper.
+  Turns a batch of Bit8/Bit64 FT-log bitmaps into per-file completed and
+  pending counts (Pallas ``popcount`` kernel).
+
+Shapes are static (AOT); the manifest in artifacts/ records them and the
+rust runtime pads the final partial batch.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import digest as digest_kernel
+from .kernels import recovery as recovery_kernel
+
+
+def verify_batch(data: jnp.ndarray, expected: jnp.ndarray):
+    """Digest ``(B, W)`` u32 objects and compare with ``(B, 2)`` u32 expected.
+
+    Returns ``(digests (B,2) u32, ok (B,) u32)`` where ``ok[i]`` is 1 iff
+    both digest words match.
+    """
+    digests = digest_kernel.digest_cpu_fullblock(data)
+    ok = jnp.all(digests == expected.astype(jnp.uint32), axis=1)
+    return digests, ok.astype(jnp.uint32)
+
+
+def digest_batch(data: jnp.ndarray):
+    """Digest-only variant (source-side precompute): ``(B, W)`` → ``(B, 2)``."""
+    return (digest_kernel.digest_cpu_fullblock(data),)
+
+
+def recovery_summary(bitmaps: jnp.ndarray, total_blocks: jnp.ndarray):
+    """Per-file completed/pending counts from ``(F, W)`` u32 log bitmaps.
+
+    ``completed`` is clamped to ``total_blocks`` (torn-write safety — see
+    ref.recovery_summary_ref).  Returns ``(completed, pending)``, both
+    ``(F,)`` uint32.
+    """
+    f, w = bitmaps.shape
+    counts = recovery_kernel.popcount(bitmaps, f_tile=f, w_tile=w)
+    total = total_blocks.astype(jnp.uint32)
+    completed = jnp.minimum(counts, total)
+    pending = total - completed
+    return completed, pending

@@ -1,0 +1,50 @@
+"""Cross-language golden vectors: ref.py (and therefore the Pallas
+kernels) must reproduce tests/golden/digest_vectors.json exactly. The
+rust side asserts the same file in rust/tests/golden_vectors.rs, closing
+the python<->rust contract.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import digest, recovery, ref
+
+GOLDEN = os.path.join(
+    os.path.dirname(__file__), "..", "..", "tests", "golden", "digest_vectors.json"
+)
+
+
+def load():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def test_ref_matches_golden_digests():
+    data = load()
+    for i, case in enumerate(data["digest"]):
+        words = jnp.asarray(np.array(case["words"], dtype=np.uint32)[None, :])
+        out = np.asarray(ref.digest_ref(words))[0]
+        assert int(out[0]) == case["a"], f"case {i}: A mismatch"
+        assert int(out[1]) == case["b"], f"case {i}: B mismatch"
+
+
+def test_pallas_kernel_matches_golden_digests():
+    data = load()
+    for i, case in enumerate(data["digest"]):
+        words = jnp.asarray(np.array(case["words"], dtype=np.uint32)[None, :])
+        out = np.asarray(digest.digest(words))[0]
+        assert int(out[0]) == case["a"], f"case {i}: A mismatch (kernel)"
+        assert int(out[1]) == case["b"], f"case {i}: B mismatch (kernel)"
+
+
+def test_popcount_matches_golden():
+    data = load()
+    for i, case in enumerate(data["popcount"]):
+        words = jnp.asarray(np.array(case["words"], dtype=np.uint32)[None, :])
+        assert int(np.asarray(ref.popcount_ref(words))[0]) == case["popcount"], i
+        assert int(np.asarray(recovery.popcount(words))[0]) == case["popcount"], i

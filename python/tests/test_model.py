@@ -1,0 +1,75 @@
+"""L2 correctness: model graphs (verify_batch / recovery_summary) vs refs."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def rand_u32(rng, shape):
+    return rng.integers(0, 2**32, size=shape, dtype=np.uint32)
+
+
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_verify_accepts_correct_digests(seed, b):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rand_u32(rng, (b, 512)))
+    digests, ok = model.verify_batch(d, ref.digest_ref(d))
+    assert (np.asarray(ok) == 1).all()
+    assert (np.asarray(digests) == np.asarray(ref.digest_ref(d))).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1), row=st.integers(0, 3))
+@settings(**SETTINGS)
+def test_verify_rejects_corrupted_row(seed, row):
+    rng = np.random.default_rng(seed)
+    d = rand_u32(rng, (4, 256))
+    expected = np.asarray(ref.digest_ref(jnp.asarray(d)))
+    d[row, rng.integers(0, 256)] ^= np.uint32(1) << np.uint32(rng.integers(0, 32))
+    _, ok = model.verify_batch(jnp.asarray(d), jnp.asarray(expected))
+    ok = np.asarray(ok)
+    assert ok[row] == 0
+    mask = np.ones(4, bool)
+    mask[row] = False
+    assert (ok[mask] == 1).all()
+
+
+def test_verify_checks_both_words():
+    # A digest that matches on A but not B must be rejected.
+    d = jnp.zeros((1, 64), jnp.uint32)
+    true_dig = np.asarray(ref.digest_ref(d))  # zeros
+    bad = true_dig.copy()
+    bad[0, 1] = 123
+    _, ok = model.verify_batch(d, jnp.asarray(bad))
+    assert np.asarray(ok)[0] == 0
+
+
+@given(seed=st.integers(0, 2**31 - 1), f=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_recovery_summary_matches_ref(seed, f):
+    rng = np.random.default_rng(seed)
+    bm = jnp.asarray(rand_u32(rng, (f, 32)))
+    totals = jnp.asarray(rng.integers(0, 32 * 32, size=(f,), dtype=np.uint32))
+    c, p = model.recovery_summary(bm, totals)
+    cr, pr = ref.recovery_summary_ref(bm, totals)
+    assert (np.asarray(c) == np.asarray(cr)).all()
+    assert (np.asarray(p) == np.asarray(pr)).all()
+    # Invariant: completed + pending == total, completed <= total.
+    assert (np.asarray(c) + np.asarray(p) == np.asarray(totals)).all()
+    assert (np.asarray(c) <= np.asarray(totals)).all()
+
+
+def test_recovery_clamps_junk_bits():
+    # More bits set than total_blocks (torn write) must clamp, not underflow.
+    bm = jnp.full((1, 4), 0xFFFFFFFF, jnp.uint32)  # 128 bits set
+    totals = jnp.asarray([100], dtype=jnp.uint32)
+    c, p = model.recovery_summary(bm, totals)
+    assert int(c[0]) == 100
+    assert int(p[0]) == 0

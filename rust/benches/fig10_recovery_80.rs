@@ -1,0 +1,52 @@
+//! Figure 10: recovery time of **all FT mechanisms × methods** at the
+//! 80 % fault point, for (a) big and (b) small workloads.
+//!
+//! Expected shape (paper §6.4): for big workloads the file logger shows
+//! the highest recovery among FT mechanisms (unsorted append parse);
+//! Universal lowest; Bit8/Bit64 lowest among methods. For small
+//! workloads all mechanisms/methods are similar.
+//!
+//! Run: `cargo bench --bench fig10_recovery_80`
+
+use ftlads::bench_support::{
+    measure_recovery_ftlads, print_table, BenchScale, Case,
+};
+use ftlads::ftlog::{Mechanism, Method};
+use ftlads::stats::Series;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    println!("Figure 10 — recovery time at the 80% fault point");
+
+    for (panel, wl) in [("(a) big", scale.big()), ("(b) small", scale.small())] {
+        let mut rows = Vec::new();
+        let iters = scale.iterations.max(3);
+        for mech in Mechanism::ALL_FT {
+            let mut row = vec![mech.as_str().to_string()];
+            for m in Method::ALL {
+                let mut s = Series::new();
+                for i in 0..iters {
+                    let r = measure_recovery_ftlads(
+                        &scale,
+                        &wl,
+                        Case::Ft(mech, m),
+                        0.8,
+                        &format!("fig10-{panel}-{}-{}-{i}", mech.as_str(), m.as_str()),
+                    );
+                    s.push(r.estimated_recovery().as_secs_f64());
+                }
+                row.push(format!("{:.3}", s.summary().mean));
+            }
+            rows.push(row);
+        }
+        print_table(
+            &format!("Fig 10 {panel} workload: ER_t (s) at 80% fault"),
+            &["mechanism", "char", "int", "enc", "binary", "bit8", "bit64"],
+            &rows,
+        );
+    }
+    println!(
+        "\nexpected shape: big — file row highest, universal lowest, bit8/bit64 \
+         columns lowest; small — all cells similar"
+    );
+}

@@ -1,0 +1,67 @@
+//! Figure 5: performance comparison of LADS and FT-LADS, **big workload**
+//! (paper: 100 × 1 GB; scaled per BenchScale).
+//!
+//! Three panels: (a) total transfer time, (b) CPU load, (c) memory load —
+//! for each FT mechanism × method, with stock LADS as the reference line.
+//! Expected shape (paper §6.2): FT overhead on transfer time < 1 %; CPU
+//! comparable; memory: File ≈ LADS < Transaction ≈ Universal (in-memory
+//! sorted completed-sets).
+//!
+//! Run: `cargo bench --bench fig5_big_overhead`
+//! (set FTLADS_BENCH_SCALE=quick|default|paper).
+
+use ftlads::bench_support::{print_table, run_case, BenchScale, Case};
+use ftlads::stats::Series;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let wl = scale.big();
+    println!(
+        "Figure 5 — big workload: {} files x {}, {} iterations",
+        wl.file_count(),
+        ftlads::util::fmt_bytes(scale.big_file_size),
+        scale.iterations
+    );
+
+    let mut cases = vec![Case::Lads];
+    cases.extend(Case::all_ft());
+
+    let mut rows = Vec::new();
+    let mut lads_time = None;
+    for case in cases {
+        let mut time = Series::new();
+        let mut cpu = Series::new();
+        let mut mem = Series::new();
+        // one discarded warmup run per case (cold caches/thread spin-up
+        // dominate the first run and would inflate the error bars)
+        let _ = run_case(&scale, &wl, case, &format!("warm-{}", case.label()));
+        for i in 0..scale.iterations {
+            let out = run_case(&scale, &wl, case, &format!("fig5-{}-{i}", case.label()));
+            time.push(out.elapsed.as_secs_f64());
+            cpu.push(out.resources.cpu_percent);
+            mem.push(out.resources.peak_rss_bytes as f64 / (1 << 20) as f64);
+        }
+        let t = time.summary();
+        let c = cpu.summary();
+        let m = mem.summary();
+        if case == Case::Lads {
+            lads_time = Some(t.mean);
+        }
+        let overhead = lads_time
+            .map(|base| format!("{:+.2}%", (t.mean / base - 1.0) * 100.0))
+            .unwrap_or_default();
+        rows.push(vec![
+            case.label(),
+            format!("{:.3}±{:.3}", t.mean, t.ci99),
+            overhead,
+            format!("{:.1}±{:.1}", c.mean, c.ci99),
+            format!("{:.1}±{:.1}", m.mean, m.ci99),
+        ]);
+    }
+    print_table(
+        "Fig 5(a,b,c): big workload — transfer time / CPU / memory",
+        &["case", "time (s, 99% CI)", "vs LADS", "cpu (%)", "peak rss (MiB)"],
+        &rows,
+    );
+    println!("\nexpected shape: FT time overhead <1% of LADS; memory File ≈ LADS < Txn ≈ Univ");
+}

@@ -1,0 +1,72 @@
+//! Figure 6: performance comparison of LADS and FT-LADS, **small
+//! workload** (paper: 10 000 × 1 MB files, each exactly one MTU).
+//!
+//! Same three panels as Fig 5. Expected shape (paper §6.2): overhead
+//! still negligible but with visibly higher run-to-run variability (file
+//! management overhead dominates with many small files).
+//!
+//! Run: `cargo bench --bench fig6_small_overhead`
+
+use ftlads::bench_support::{print_table, run_case, BenchScale, Case};
+use ftlads::stats::Series;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let wl = scale.small();
+    println!(
+        "Figure 6 — small workload: {} files x {}, {} iterations",
+        wl.file_count(),
+        ftlads::util::fmt_bytes(scale.small_file_size),
+        scale.iterations
+    );
+
+    let mut cases = vec![Case::Lads];
+    cases.extend(Case::all_ft());
+
+    let mut rows = Vec::new();
+    let mut lads_time = None;
+    let mut max_rel_ci: f64 = 0.0;
+    for case in cases {
+        let mut time = Series::new();
+        let mut cpu = Series::new();
+        let mut mem = Series::new();
+        // one discarded warmup run per case (cold caches/thread spin-up
+        // dominate the first run and would inflate the error bars)
+        let _ = run_case(&scale, &wl, case, &format!("warm-{}", case.label()));
+        for i in 0..scale.iterations {
+            let out = run_case(&scale, &wl, case, &format!("fig6-{}-{i}", case.label()));
+            time.push(out.elapsed.as_secs_f64());
+            cpu.push(out.resources.cpu_percent);
+            mem.push(out.resources.peak_rss_bytes as f64 / (1 << 20) as f64);
+        }
+        let t = time.summary();
+        let c = cpu.summary();
+        let m = mem.summary();
+        if t.mean > 0.0 {
+            max_rel_ci = max_rel_ci.max(t.ci99 / t.mean);
+        }
+        if case == Case::Lads {
+            lads_time = Some(t.mean);
+        }
+        let overhead = lads_time
+            .map(|base| format!("{:+.2}%", (t.mean / base - 1.0) * 100.0))
+            .unwrap_or_default();
+        rows.push(vec![
+            case.label(),
+            format!("{:.3}±{:.3}", t.mean, t.ci99),
+            overhead,
+            format!("{:.1}±{:.1}", c.mean, c.ci99),
+            format!("{:.1}±{:.1}", m.mean, m.ci99),
+        ]);
+    }
+    print_table(
+        "Fig 6(a,b,c): small workload — transfer time / CPU / memory",
+        &["case", "time (s, 99% CI)", "vs LADS", "cpu (%)", "peak rss (MiB)"],
+        &rows,
+    );
+    println!(
+        "\nexpected shape: overhead negligible; higher variability than Fig 5 \
+         (max relative CI here: {:.1}%)",
+        max_rel_ci * 100.0
+    );
+}

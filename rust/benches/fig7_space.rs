@@ -1,0 +1,60 @@
+//! Figure 7: FT logger methods space overhead.
+//!
+//! Peak bytes occupied by logger files (logs + index) during a transfer,
+//! for every mechanism × method, on both workloads. Expected shape
+//! (paper §6.3): Bit8/Bit64 smallest (1 bit/object); all methods only
+//! KB-scale (~60 KB at paper scale); Universal ≤ Transaction ≤ File in
+//! structural overhead for the same in-flight set.
+//!
+//! Run: `cargo bench --bench fig7_space`
+
+use ftlads::bench_support::{print_table, run_case, BenchScale, Case};
+use ftlads::ftlog::{Mechanism, Method};
+use ftlads::util::fmt_bytes;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    println!(
+        "Figure 7 — logger space overhead (peak bytes on disk during transfer)"
+    );
+
+    for (wl_name, wl) in [("big", scale.big()), ("small", scale.small())] {
+        let mut rows = Vec::new();
+        let mut alloc_rows = Vec::new();
+        for mech in Mechanism::ALL_FT {
+            let mut row = vec![mech.as_str().to_string()];
+            let mut arow = vec![mech.as_str().to_string()];
+            for m in Method::ALL {
+                let out = run_case(
+                    &scale,
+                    &wl,
+                    Case::Ft(mech, m),
+                    &format!("fig7-{wl_name}-{}-{}", mech.as_str(), m.as_str()),
+                );
+                row.push(fmt_bytes(out.log_space.peak_bytes));
+                arow.push(fmt_bytes(out.log_space.peak_alloc_bytes));
+            }
+            rows.push(row);
+            alloc_rows.push(arow);
+        }
+        print_table(
+            &format!(
+                "Fig 7 ({wl_name} workload: {} files): peak logger bytes (apparent)",
+                wl.file_count()
+            ),
+            &["mechanism", "char", "int", "enc", "binary", "bit8", "bit64"],
+            &rows,
+        );
+        print_table(
+            &format!(
+                "Fig 7 ({wl_name}): peak ALLOCATED bytes (4 KiB fs blocks — the                  paper's du-style measure; universal lowest)",
+            ),
+            &["mechanism", "char", "int", "enc", "binary", "bit8", "bit64"],
+            &alloc_rows,
+        );
+    }
+    println!(
+        "\nexpected shape: bit8/bit64 columns smallest; every cell KB-scale; \
+         universal row lowest structural overhead"
+    );
+}

@@ -1,0 +1,82 @@
+//! Figure 8: recovery time of the **File logger** (all six methods) at
+//! fault points 20/40/60/80 %, big workload — vs bbcp and LADS-restart.
+//!
+//! `ER_t = TBF_t + TAF_t − TT_t` (paper Eq. 1). Expected shape (§6.4.1):
+//! file-logger recovery roughly flat across fault points (deleted logs of
+//! completed files keep the parse bounded); ≈2× bbcp's offset-checkpoint
+//! recovery; far below LADS-restart, which grows with the fault point.
+//!
+//! Run: `cargo bench --bench fig8_recovery_big`
+
+use ftlads::bench_support::{
+    measure_recovery_bbcp, measure_recovery_ftlads, print_table, BenchScale, Case,
+};
+use ftlads::fault::FaultPlan;
+use ftlads::ftlog::{Mechanism, Method};
+use ftlads::stats::Series;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let wl = scale.big();
+    println!(
+        "Figure 8 — recovery time (s), big workload: {} files x {}",
+        wl.file_count(),
+        ftlads::util::fmt_bytes(scale.big_file_size)
+    );
+
+    let points = FaultPlan::paper_points();
+    let mut rows = Vec::new();
+
+    let iters = scale.iterations.max(3);
+    let avg_ftlads = |case: Case, p: f64, tag: &str| -> String {
+        let mut s = Series::new();
+        for i in 0..iters {
+            let r = measure_recovery_ftlads(&scale, &wl, case, p, &format!("{tag}-{i}"));
+            s.push(r.estimated_recovery().as_secs_f64());
+        }
+        let sum = s.summary();
+        format!("{:.3}", sum.mean)
+    };
+
+    // LADS-restart baseline (no FT: retransmit everything).
+    let mut row = vec!["LADS (restart)".to_string()];
+    for &p in &points {
+        row.push(avg_ftlads(Case::Lads, p, "fig8-lads"));
+    }
+    rows.push(row);
+
+    // bbcp baseline (offset checkpoint).
+    let mut row = vec!["bbcp".to_string()];
+    for &p in &points {
+        let mut s = Series::new();
+        for i in 0..iters {
+            let r = measure_recovery_bbcp(&scale, &wl, p, &format!("fig8-bbcp-{i}"));
+            s.push(r.estimated_recovery().as_secs_f64());
+        }
+        row.push(format!("{:.3}", s.summary().mean));
+    }
+    rows.push(row);
+
+    // File logger × every method.
+    for m in Method::ALL {
+        let mut row = vec![format!("file/{}", m.as_str())];
+        for &p in &points {
+            row.push(avg_ftlads(
+                Case::Ft(Mechanism::File, m),
+                p,
+                &format!("fig8-{}", m.as_str()),
+            ));
+        }
+        rows.push(row);
+    }
+
+    print_table(
+        "Fig 8: ER_t = TBF + TAF − TT (s) at fault points, big workload",
+        &["case", "20%", "40%", "60%", "80%"],
+        &rows,
+    );
+    println!(
+        "\nexpected shape: LADS-restart grows with fault point; file-logger rows \
+         ~flat and well below LADS; bbcp lowest (sequential offset checkpoint)"
+    );
+}

@@ -1,0 +1,98 @@
+//! Figure 9: recovery time of the **File logger** at fault points
+//! 20/40/60/80 %, **small workload** (file == one MTU).
+//!
+//! Expected shape (paper §6.4.2): with 1-object files, a file is either
+//! fully transferred or not — there are no partially-logged files to
+//! parse, so FT recovery is flat/small across fault points. bbcp's
+//! *relative* overhead is lower (5–7 % vs FT's 12–14 %) but bbcp's
+//! absolute transfer time on many small files is much higher than LADS.
+//!
+//! Run: `cargo bench --bench fig9_recovery_small`
+
+use ftlads::bench_support::{
+    measure_recovery_bbcp, measure_recovery_ftlads, print_table, BenchScale, Case,
+};
+use ftlads::fault::FaultPlan;
+use ftlads::ftlog::{Mechanism, Method};
+use ftlads::stats::Series;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let wl = scale.small();
+    println!(
+        "Figure 9 — recovery time (s), small workload: {} files x {}",
+        wl.file_count(),
+        ftlads::util::fmt_bytes(scale.small_file_size)
+    );
+
+    let points = FaultPlan::paper_points();
+    let mut rows = Vec::new();
+    let mut rel_rows = Vec::new();
+
+    let iters = scale.iterations.max(3);
+    let avg_ft = |case: Case, p: f64, tag: &str| -> (f64, f64) {
+        let mut er = Series::new();
+        let mut tt = Series::new();
+        for i in 0..iters {
+            let r = measure_recovery_ftlads(&scale, &wl, case, p, &format!("{tag}-{i}"));
+            er.push(r.estimated_recovery().as_secs_f64());
+            tt.push(r.tt.as_secs_f64());
+        }
+        (er.summary().mean, tt.summary().mean)
+    };
+
+    let mut row = vec!["LADS (restart)".to_string()];
+    for &p in &points {
+        let (er, _) = avg_ft(Case::Lads, p, "fig9-lads");
+        row.push(format!("{er:.3}"));
+    }
+    rows.push(row);
+
+    let mut row = vec!["bbcp".to_string()];
+    let mut rel = vec!["bbcp".to_string()];
+    for &p in &points {
+        let mut er = Series::new();
+        let mut tt = Series::new();
+        for i in 0..iters {
+            let r = measure_recovery_bbcp(&scale, &wl, p, &format!("fig9-bbcp-{i}"));
+            er.push(r.estimated_recovery().as_secs_f64());
+            tt.push(r.tt.as_secs_f64());
+        }
+        let (er, tt) = (er.summary().mean, tt.summary().mean);
+        row.push(format!("{er:.3}"));
+        rel.push(format!("{:.1}%", er / tt.max(1e-9) * 100.0));
+    }
+    rows.push(row);
+    rel_rows.push(rel);
+
+    for m in Method::ALL {
+        let mut row = vec![format!("file/{}", m.as_str())];
+        let mut rel = vec![format!("file/{}", m.as_str())];
+        for &p in &points {
+            let (er, tt) = avg_ft(
+                Case::Ft(Mechanism::File, m),
+                p,
+                &format!("fig9-{}", m.as_str()),
+            );
+            row.push(format!("{er:.3}"));
+            rel.push(format!("{:.1}%", er / tt.max(1e-9) * 100.0));
+        }
+        rows.push(row);
+        rel_rows.push(rel);
+    }
+
+    print_table(
+        "Fig 9: ER_t (s) at fault points, small workload",
+        &["case", "20%", "40%", "60%", "80%"],
+        &rows,
+    );
+    print_table(
+        "Fig 9 (relative): ER_t / TT — the paper's §6.4.2 percentage comparison",
+        &["case", "20%", "40%", "60%", "80%"],
+        &rel_rows,
+    );
+    println!(
+        "\nexpected shape: FT rows flat across fault points (file == MTU ⇒ no log \
+         parse); LADS-restart grows with fault point"
+    );
+}

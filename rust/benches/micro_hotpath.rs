@@ -1,0 +1,236 @@
+//! Hot-path micro-benchmarks (no paper figure — the §Perf inputs):
+//!
+//!   log-append      per-object FT logging cost, every mechanism × method
+//!   recovery-parse  log-dir -> CompletedSets throughput
+//!   digest          native digest GB/s vs PJRT batched digest GB/s
+//!   scheduler       OST queue push/pop throughput
+//!   codec           NEW_BLOCK encode/decode round-trip
+//!
+//! Plain timing mains (no criterion offline); each reports mean ± 99 % CI
+//! over fixed iteration counts with warmup.
+
+
+use ftlads::bench_support::print_table;
+use ftlads::coordinator::queues::OstQueues;
+use ftlads::ftlog::{self, codec::Method, CompletedSet, FtConfig, Mechanism};
+use ftlads::integrity::{DigestEngine, NativeEngine};
+use ftlads::net::Message;
+use ftlads::pfs::ost::{OstConfig, OstId, OstModel};
+use ftlads::stats::bench_seconds;
+use ftlads::testutil::Pcg32;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ftlads-micro-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn bench_log_append() {
+    let blocks_per_file = 64u32;
+    let files = 32usize;
+    let mut rows = Vec::new();
+    for mech in Mechanism::ALL_FT {
+        for method in Method::ALL {
+            let dir = tmp_dir(&format!("append-{}-{}", mech.as_str(), method.as_str()));
+            let cfg = FtConfig {
+                mechanism: mech,
+                method,
+                dir: dir.clone(),
+                txn_size: 4,
+            };
+            let mut rng = Pcg32::new(1);
+            let s = bench_seconds(1, 3, || {
+                let mut logger = ftlog::create_logger(&cfg).unwrap();
+                for f in 0..files {
+                    let key = logger
+                        .register_file(&format!("f{f}"), blocks_per_file)
+                        .unwrap();
+                    // out-of-order completion order
+                    let mut order: Vec<u32> = (0..blocks_per_file).collect();
+                    rng.shuffle(&mut order);
+                    for b in order {
+                        logger.log_block(key, b).unwrap();
+                    }
+                    logger.complete_file(key).unwrap();
+                }
+                logger.finish_dataset().unwrap();
+            });
+            let per_append =
+                s.mean / (files as f64 * blocks_per_file as f64) * 1e6;
+            rows.push(vec![
+                format!("{}/{}", mech.as_str(), method.as_str()),
+                format!("{per_append:.2}"),
+            ]);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    print_table("log-append cost (µs/object)", &["mechanism/method", "µs"], &rows);
+}
+
+fn bench_recovery_parse() {
+    let blocks_per_file = 256u32;
+    let files = 64usize;
+    let mut rows = Vec::new();
+    for mech in Mechanism::ALL_FT {
+        for method in [Method::Char, Method::Int, Method::Enc, Method::Binary, Method::Bit8, Method::Bit64] {
+            let dir = tmp_dir(&format!("rec-{}-{}", mech.as_str(), method.as_str()));
+            let cfg = FtConfig {
+                mechanism: mech,
+                method,
+                dir: dir.clone(),
+                txn_size: 4,
+            };
+            // Produce a half-complete dataset (like an 80% fault).
+            let mut logger = ftlog::create_logger(&cfg).unwrap();
+            let mut rng = Pcg32::new(2);
+            for f in 0..files {
+                let key = logger
+                    .register_file(&format!("f{f}"), blocks_per_file)
+                    .unwrap();
+                let mut order: Vec<u32> = (0..blocks_per_file).collect();
+                rng.shuffle(&mut order);
+                for &b in order.iter().take(blocks_per_file as usize / 2) {
+                    logger.log_block(key, b).unwrap();
+                }
+            }
+            drop(logger);
+            let s = bench_seconds(1, 5, || {
+                let rec = ftlog::recover::recover_all(&cfg).unwrap();
+                assert_eq!(rec.len(), files);
+            });
+            let objs_per_sec =
+                (files as f64 * blocks_per_file as f64 / 2.0) / s.mean;
+            rows.push(vec![
+                format!("{}/{}", mech.as_str(), method.as_str()),
+                format!("{:.2}", s.mean * 1e3),
+                format!("{:.2}M", objs_per_sec / 1e6),
+            ]);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    print_table(
+        "recovery parse (64 files x 128 logged objects)",
+        &["mechanism/method", "ms/parse", "objs/s"],
+        &rows,
+    );
+}
+
+fn bench_digest() {
+    let words = 64 * 1024; // 256 KiB object
+    let mut rng = Pcg32::new(3);
+    let mut obj = vec![0u8; words * 4];
+    rng.fill_bytes(&mut obj);
+    let objs: Vec<&[u8]> = vec![&obj; 8];
+
+    let engine = NativeEngine;
+    let s = bench_seconds(3, 20, || {
+        let d = engine.digest_batch(&objs, words).unwrap();
+        std::hint::black_box(d);
+    });
+    let gbps = (8.0 * obj.len() as f64) / s.mean / 1e9;
+    let mut rows = vec![vec![
+        "native".to_string(),
+        format!("{:.3}", s.mean * 1e3),
+        format!("{gbps:.2}"),
+    ]];
+
+    // PJRT path if artifacts exist.
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let service = ftlads::runtime::RuntimeService::start(&dir).unwrap();
+        let engine = ftlads::integrity::PjrtEngine::new(service.handle()).unwrap();
+        let s = bench_seconds(3, 20, || {
+            let d = engine.digest_batch(&objs, words).unwrap();
+            std::hint::black_box(d);
+        });
+        let gbps = (8.0 * obj.len() as f64) / s.mean / 1e9;
+        rows.push(vec![
+            "pjrt (batch 8)".to_string(),
+            format!("{:.3}", s.mean * 1e3),
+            format!("{gbps:.2}"),
+        ]);
+    }
+    print_table(
+        "digest throughput (8 x 256 KiB objects)",
+        &["engine", "ms/batch", "GB/s"],
+        &rows,
+    );
+}
+
+fn bench_scheduler() {
+    let osts = OstModel::new(11, OstConfig { time_scale: 0.0, ..Default::default() });
+    let q: OstQueues<u64> = OstQueues::new(11);
+    let n = 100_000u64;
+    let s = bench_seconds(1, 5, || {
+        for i in 0..n {
+            q.push(OstId((i % 11) as u32), i);
+        }
+        for _ in 0..n {
+            q.pop_least_congested(&osts).unwrap();
+        }
+    });
+    let ops = 2.0 * n as f64 / s.mean;
+    print_table(
+        "OST queue scheduler",
+        &["op", "Mops/s"],
+        &[vec!["push+pop".into(), format!("{:.2}", ops / 1e6)]],
+    );
+}
+
+fn bench_codec() {
+    let mut rng = Pcg32::new(4);
+    let mut data = vec![0u8; 256 << 10];
+    rng.fill_bytes(&mut data);
+    let msg = Message::NewBlock {
+        file_idx: 3,
+        block_idx: 77,
+        offset: 77 << 18,
+        digest: 0x1234_5678_9abc_def0,
+        data,
+    };
+    let mut buf = Vec::with_capacity(300 << 10);
+    let s = bench_seconds(3, 30, || {
+        buf.clear();
+        msg.encode(&mut buf);
+        let back = Message::decode(&buf).unwrap();
+        std::hint::black_box(back);
+    });
+    let gbps = (256 << 10) as f64 / s.mean / 1e9;
+    print_table(
+        "NEW_BLOCK wire codec (256 KiB payload, encode+decode)",
+        &["", "ms/rt", "GB/s"],
+        &[vec!["codec".into(), format!("{:.3}", s.mean * 1e3), format!("{gbps:.2}")]],
+    );
+}
+
+fn bench_completed_set() {
+    let total = 4096u32;
+    let mut rng = Pcg32::new(5);
+    let mut order: Vec<u32> = (0..total).collect();
+    rng.shuffle(&mut order);
+    let s = bench_seconds(3, 50, || {
+        let mut set = CompletedSet::new(total);
+        for &b in &order {
+            set.insert(b);
+        }
+        std::hint::black_box(set.pending().len());
+    });
+    print_table(
+        "CompletedSet (4096 inserts + pending scan)",
+        &["", "µs"],
+        &[vec!["set".into(), format!("{:.1}", s.mean * 1e6)]],
+    );
+}
+
+fn main() {
+    println!("micro_hotpath — §Perf hot-path microbenchmarks");
+    bench_digest();
+    bench_codec();
+    bench_scheduler();
+    bench_completed_set();
+    bench_log_append();
+    bench_recovery_parse();
+}

@@ -1,0 +1,555 @@
+//! bbcp-model baseline: sequential, file-oriented transfer with offset
+//! checkpointing — the comparator of §6.4 and Related Work.
+//!
+//! Faithful properties (per the paper's description of bbcp):
+//! - the workload is a list of *logical files* transferred **one file at
+//!   a time, sequentially** — no layout awareness, no OST scheduling;
+//! - multiple **streams** (paper config: 2) pipeline blocks of the
+//!   current file within a **window** (paper config: 8 MB);
+//! - FT is a per-file **checkpoint record**: the highest contiguous
+//!   acked byte offset, *overwritten* on every advance (Fig 1a). On
+//!   resume: if a checkpoint exists the transfer appends from its offset;
+//!   else if the target file's attributes match, the file is skipped;
+//!   else it restarts from zero.
+//!
+//! Because transmission is sequential, an offset checkpoint fully
+//! describes progress — which is exactly the property LADS's
+//! out-of-order object scheduling destroys, motivating FT-LADS.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::TransferOutcome;
+use crate::fault::FaultPlan;
+use crate::ftlog::SpaceStats;
+use crate::metrics::{Counters, Sampler};
+use crate::net::{channel, Endpoint, Message, NetError};
+use crate::pfs::Pfs;
+
+/// bbcp tuning (paper §6.4: "2 tcp streams with window size of 8MB").
+#[derive(Debug, Clone)]
+pub struct BbcpConfig {
+    pub streams: usize,
+    pub window_bytes: u64,
+    /// Transfer block size (kept equal to the LADS MTU for comparability).
+    pub block_size: u64,
+    /// Directory for checkpoint records.
+    pub ckpt_dir: PathBuf,
+}
+
+impl BbcpConfig {
+    pub fn paper_defaults(cfg: &Config) -> Self {
+        BbcpConfig {
+            streams: 2,
+            window_bytes: 8 << 20,
+            block_size: cfg.object_size,
+            ckpt_dir: cfg.ft_dir.join("bbcp"),
+        }
+    }
+}
+
+fn ckpt_path(bcfg: &BbcpConfig, name: &str) -> PathBuf {
+    bcfg.ckpt_dir
+        .join(format!("{}.bbcp.ckpt", crate::ftlog::escape_name(name)))
+}
+
+/// Read a checkpoint record (contiguous acked offset).
+fn read_ckpt(bcfg: &BbcpConfig, name: &str) -> Option<u64> {
+    let text = std::fs::read_to_string(ckpt_path(bcfg, name)).ok()?;
+    text.trim().parse().ok()
+}
+
+/// Overwrite the checkpoint record (Fig 1a: "overwrite the checkpoint
+/// record with the updated file offset information").
+fn write_ckpt(bcfg: &BbcpConfig, name: &str, offset: u64, stats: &Mutex<SpaceStats>) {
+    let path = ckpt_path(bcfg, name);
+    let body = format!("{offset}\n");
+    let len = body.len() as u64;
+    if std::fs::write(&path, body).is_ok() {
+        let mut s = stats.lock().unwrap_or_else(|e| e.into_inner());
+        s.bytes_written += len;
+        s.appends += 1;
+        s.current_bytes = s.current_bytes.max(len); // one live record at a time
+        s.peak_bytes = s.peak_bytes.max(s.current_bytes);
+        s.current_alloc_bytes = 4096;
+        s.peak_alloc_bytes = s.peak_alloc_bytes.max(4096);
+    }
+}
+
+fn remove_ckpt(bcfg: &BbcpConfig, name: &str, stats: &Mutex<SpaceStats>) {
+    let _ = std::fs::remove_file(ckpt_path(bcfg, name));
+    let mut s = stats.lock().unwrap_or_else(|e| e.into_inner());
+    s.current_bytes = 0;
+    s.current_alloc_bytes = 0;
+}
+
+/// In-flight byte window (the TCP window stand-in).
+struct Window {
+    inflight: Mutex<u64>,
+    cv: Condvar,
+    cap: u64,
+}
+
+impl Window {
+    fn new(cap: u64) -> Self {
+        Window { inflight: Mutex::new(0), cv: Condvar::new(), cap }
+    }
+
+    fn acquire(&self, bytes: u64, aborted: &AtomicBool) -> bool {
+        let mut g = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+        while *g + bytes > self.cap {
+            if aborted.load(Ordering::SeqCst) {
+                return false;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(g, Duration::from_millis(20))
+                .unwrap_or_else(|e| e.into_inner());
+            g = guard;
+        }
+        *g += bytes;
+        true
+    }
+
+    fn release(&self, bytes: u64) {
+        let mut g = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+        *g = g.saturating_sub(bytes);
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+/// Run a bbcp-model transfer over the channel transport. Returns the same
+/// outcome shape as the LADS coordinator so benches treat both uniformly
+/// (`log_space` carries checkpoint-record accounting).
+pub fn run_bbcp(
+    cfg: &Config,
+    bcfg: &BbcpConfig,
+    source_pfs: Arc<dyn Pfs>,
+    sink_pfs: Arc<dyn Pfs>,
+    files: &[String],
+    fault: FaultPlan,
+) -> Result<TransferOutcome> {
+    std::fs::create_dir_all(&bcfg.ckpt_dir)
+        .with_context(|| format!("creating ckpt dir {}", bcfg.ckpt_dir.display()))?;
+
+    let mut total_bytes = 0u64;
+    for name in files {
+        let (_, meta) = source_pfs
+            .lookup(name)
+            .ok_or_else(|| anyhow::anyhow!("file '{name}' not on source PFS"))?;
+        total_bytes += meta.size;
+    }
+    let fault_ctl = fault.arm(total_bytes);
+    let (src_ep, sink_ep) = channel::pair(cfg.wire(), fault_ctl);
+    let src_ep: Arc<dyn Endpoint> = Arc::new(src_ep);
+    let sink_ep: Arc<dyn Endpoint> = Arc::new(sink_ep);
+
+    let sampler = Sampler::start(Duration::from_millis(20));
+    let started = Instant::now();
+    let counters = Arc::new(Counters::default());
+    let sink_counters = Arc::new(Counters::default());
+
+    // Sink: single service thread (bbcp's target side has no layout
+    // scheduling — writes land in arrival order).
+    let sink_thread = {
+        let pfs = sink_pfs.clone();
+        let ep = sink_ep.clone();
+        let ctr = sink_counters.clone();
+        std::thread::Builder::new()
+            .name("bbcp-sink".into())
+            .spawn(move || bbcp_sink(&*pfs, &*ep, &ctr))?
+    };
+
+    let space = Mutex::new(SpaceStats::default());
+    let result = bbcp_source(bcfg, &*source_pfs, src_ep.clone(), files, &counters, &space);
+    let _ = sink_thread.join();
+
+    let elapsed = started.elapsed();
+    let resources = sampler.finish();
+    let fault_msg = result.err().map(|e: anyhow::Error| e.to_string());
+    let log_space = *space.lock().unwrap_or_else(|e| e.into_inner());
+
+    Ok(TransferOutcome {
+        completed: fault_msg.is_none(),
+        fault: fault_msg,
+        elapsed,
+        source: counters.snapshot(),
+        sink: sink_counters.snapshot(),
+        log_space,
+        resources,
+        payload_bytes: src_ep.payload_sent(),
+        rma_stalls: (0, 0),
+    })
+}
+
+fn bbcp_sink(pfs: &dyn Pfs, ep: &dyn Endpoint, ctr: &Counters) {
+    let mut current: Option<crate::pfs::FileId> = None;
+    loop {
+        let msg = match ep.recv_timeout(Duration::from_millis(100)) {
+            Ok(m) => m,
+            Err(NetError::Timeout) => continue,
+            Err(_) => break,
+        };
+        match msg {
+            Message::Connect { .. } => {
+                let _ = ep.send(Message::ConnectAck { rma_slots: 0 });
+            }
+            Message::NewFile { file_idx, name, size, start_ost } => {
+                // bbcp resume: attributes identical -> assume completed.
+                if let Some((_, meta)) = pfs.lookup(&name) {
+                    if meta.committed && meta.size == size {
+                        let _ =
+                            ep.send(Message::FileId { file_idx, sink_fd: 0, skip: true });
+                        continue;
+                    }
+                }
+                let fid = match pfs.lookup(&name) {
+                    Some((fid, _)) => fid,
+                    None => match pfs.create(&name, size, start_ost) {
+                        Ok(fid) => fid,
+                        Err(_) => break,
+                    },
+                };
+                current = Some(fid);
+                let _ = ep.send(Message::FileId { file_idx, sink_fd: fid.0, skip: false });
+            }
+            Message::NewBlock { file_idx, block_idx, offset, mut data, .. } => {
+                let Some(fid) = current else { break };
+                let len = data.len() as u64;
+                if pfs.write_at(fid, offset, &mut data).is_err() {
+                    break;
+                }
+                ctr.bytes_written.fetch_add(len, Ordering::Relaxed);
+                ctr.objects_synced.fetch_add(1, Ordering::Relaxed);
+                let _ = ep.send(Message::BlockSync { file_idx, block_idx, ok: true });
+            }
+            Message::FileClose { file_idx } => {
+                if let Some(fid) = current.take() {
+                    let _ = pfs.commit_file(fid);
+                    ctr.files_completed.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = ep.send(Message::FileCloseAck { file_idx });
+            }
+            Message::Bye => break,
+            _ => break,
+        }
+    }
+}
+
+fn bbcp_source(
+    bcfg: &BbcpConfig,
+    pfs: &dyn Pfs,
+    ep: Arc<dyn Endpoint>,
+    files: &[String],
+    ctr: &Arc<Counters>,
+    space: &Mutex<SpaceStats>,
+) -> Result<()> {
+    ep.send(Message::Connect {
+        max_object_size: bcfg.block_size,
+        rma_slots: 0,
+        resume: false,
+    })
+    .map_err(|e| anyhow::anyhow!("connect: {e}"))?;
+    match ep.recv_timeout(Duration::from_secs(10)) {
+        Ok(Message::ConnectAck { .. }) => {}
+        other => anyhow::bail!("handshake failed: {other:?}"),
+    }
+
+    for (idx, name) in files.iter().enumerate() {
+        let (fid, meta) = pfs
+            .lookup(name)
+            .ok_or_else(|| anyhow::anyhow!("'{name}' not on source"))?;
+        let file_idx = idx as u32;
+
+        // Resume decision (paper: ckpt record > attribute match > fresh).
+        let ckpt = read_ckpt(bcfg, name);
+        ep.send(Message::NewFile {
+            file_idx,
+            name: name.clone(),
+            size: meta.size,
+            start_ost: meta.start_ost,
+        })
+        .map_err(|e| anyhow::anyhow!("NEW_FILE: {e}"))?;
+        let skip = loop {
+            match ep.recv_timeout(Duration::from_secs(10)) {
+                Ok(Message::FileId { skip, .. }) => break skip,
+                Ok(Message::BlockSync { .. }) => continue, // stale ack
+                Ok(m) => anyhow::bail!("unexpected {}", m.type_name()),
+                Err(e) => anyhow::bail!("FILE_ID: {e}"),
+            }
+        };
+        if skip {
+            if ckpt.is_some() {
+                remove_ckpt(bcfg, name, space);
+            }
+            ctr.files_skipped_resume.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        let start_offset = ckpt.unwrap_or(0).min(meta.size);
+        if start_offset > 0 {
+            let saved = start_offset / bcfg.block_size;
+            ctr.objects_skipped_resume.fetch_add(saved, Ordering::Relaxed);
+        }
+
+        transfer_file_streams(
+            bcfg,
+            pfs,
+            &ep,
+            file_idx,
+            name,
+            fid,
+            meta.size,
+            start_offset,
+            ctr,
+            space,
+        )?;
+
+        ep.send(Message::FileClose { file_idx })
+            .map_err(|e| anyhow::anyhow!("FILE_CLOSE: {e}"))?;
+        loop {
+            match ep.recv_timeout(Duration::from_secs(10)) {
+                Ok(Message::FileCloseAck { .. }) => break,
+                Ok(Message::BlockSync { .. }) => continue,
+                Ok(m) => anyhow::bail!("unexpected {}", m.type_name()),
+                Err(e) => anyhow::bail!("FILE_CLOSE_ACK: {e}"),
+            }
+        }
+        remove_ckpt(bcfg, name, space);
+        ctr.files_completed.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = ep.send(Message::Bye);
+    Ok(())
+}
+
+/// Pipeline one file's blocks through `streams` sender threads inside the
+/// window, acking on the calling thread and advancing the checkpoint.
+#[allow(clippy::too_many_arguments)]
+fn transfer_file_streams(
+    bcfg: &BbcpConfig,
+    pfs: &dyn Pfs,
+    ep: &Arc<dyn Endpoint>,
+    file_idx: u32,
+    name: &str,
+    fid: crate::pfs::FileId,
+    size: u64,
+    start_offset: u64,
+    ctr: &Arc<Counters>,
+    space: &Mutex<SpaceStats>,
+) -> Result<()> {
+    let window = Arc::new(Window::new(bcfg.window_bytes));
+    let next = Arc::new(AtomicU64::new(start_offset));
+    let aborted = Arc::new(AtomicBool::new(false));
+    let abort_msg: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+
+    let total_blocks = crate::util::div_ceil(size - start_offset, bcfg.block_size);
+    if total_blocks == 0 {
+        return Ok(());
+    }
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for s in 0..bcfg.streams {
+            let window = window.clone();
+            let next = next.clone();
+            let aborted = aborted.clone();
+            let abort_msg = abort_msg.clone();
+            let ep = ep.clone();
+            let ctr = ctr.clone();
+            let block = bcfg.block_size;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("bbcp-stream-{s}"))
+                    .spawn_scoped(scope, move || loop {
+                        if aborted.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let offset = next.fetch_add(block, Ordering::SeqCst);
+                        if offset >= size {
+                            break;
+                        }
+                        let len = (size - offset).min(block) as usize;
+                        if !window.acquire(len as u64, &aborted) {
+                            break;
+                        }
+                        let mut buf = vec![0u8; len];
+                        match pfs.read_at(fid, offset, &mut buf) {
+                            Ok(n) if n == len => {}
+                            _ => {
+                                aborted.store(true, Ordering::SeqCst);
+                                break;
+                            }
+                        }
+                        let block_idx = (offset / block) as u32;
+                        match ep.send(Message::NewBlock {
+                            file_idx,
+                            block_idx,
+                            offset,
+                            digest: 0, // bbcp has no object integrity digest
+                            data: buf,
+                        }) {
+                            Ok(()) => {
+                                ctr.objects_sent.fetch_add(1, Ordering::Relaxed);
+                                ctr.bytes_sent.fetch_add(len as u64, Ordering::Relaxed);
+                            }
+                            Err(e) => {
+                                let mut g =
+                                    abort_msg.lock().unwrap_or_else(|p| p.into_inner());
+                                if g.is_none() {
+                                    *g = Some(e.to_string());
+                                }
+                                aborted.store(true, Ordering::SeqCst);
+                                break;
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        // Ack loop: advance the contiguous watermark + overwrite the ckpt.
+        let mut acked: BTreeSet<u64> = BTreeSet::new();
+        let mut watermark = start_offset;
+        let mut acked_blocks = 0u64;
+        while acked_blocks < total_blocks {
+            if aborted.load(Ordering::SeqCst) {
+                break;
+            }
+            match ep.recv_timeout(Duration::from_millis(100)) {
+                Ok(Message::BlockSync { block_idx, ok: true, .. }) => {
+                    let offset = block_idx as u64 * bcfg.block_size;
+                    let len = (size - offset).min(bcfg.block_size);
+                    window.release(len);
+                    acked.insert(offset);
+                    acked_blocks += 1;
+                    ctr.objects_synced.fetch_add(1, Ordering::Relaxed);
+                    // Advance the contiguous prefix.
+                    let mut advanced = false;
+                    while acked.remove(&watermark) {
+                        watermark += (size - watermark).min(bcfg.block_size);
+                        advanced = true;
+                    }
+                    if advanced {
+                        write_ckpt(bcfg, name, watermark, space);
+                    }
+                }
+                Ok(Message::BlockSync { ok: false, .. }) => {
+                    aborted.store(true, Ordering::SeqCst);
+                    break;
+                }
+                Ok(_) => continue,
+                Err(NetError::Timeout) => continue,
+                Err(e) => {
+                    let mut g = abort_msg.lock().unwrap_or_else(|p| p.into_inner());
+                    if g.is_none() {
+                        *g = Some(e.to_string());
+                    }
+                    aborted.store(true, Ordering::SeqCst);
+                    break;
+                }
+            }
+        }
+        let fully_acked = acked_blocks >= total_blocks;
+        aborted.store(true, Ordering::SeqCst); // release stragglers
+        for h in handles {
+            let _ = h.join();
+        }
+        let msg = abort_msg.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(m) = msg {
+            anyhow::bail!("{m}");
+        }
+        if !fully_acked {
+            anyhow::bail!("transfer aborted at watermark {watermark}");
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimEnv;
+    use crate::net::Side;
+    use crate::workload;
+
+    fn env(tag: &str, files: usize, size: u64) -> SimEnv {
+        let cfg = Config::for_tests(tag);
+        let wl = workload::big_workload(files, size);
+        SimEnv::new(cfg, &wl)
+    }
+
+    fn bcfg(env: &SimEnv) -> BbcpConfig {
+        BbcpConfig::paper_defaults(&env.cfg)
+    }
+
+    #[test]
+    fn bbcp_transfers_dataset() {
+        let env = env("bbcp1", 3, 256 << 10);
+        let out = run_bbcp(
+            &env.cfg,
+            &bcfg(&env),
+            env.source.clone(),
+            env.sink.clone(),
+            &env.files,
+            FaultPlan::none(),
+        )
+        .unwrap();
+        assert!(out.completed, "{:?}", out.fault);
+        assert_eq!(out.sink.files_completed, 3);
+        env.verify_sink_complete().unwrap();
+    }
+
+    #[test]
+    fn bbcp_fault_leaves_ckpt_and_resume_appends() {
+        let env = env("bbcp2", 4, 512 << 10);
+        let b = bcfg(&env);
+        let out = run_bbcp(
+            &env.cfg,
+            &b,
+            env.source.clone(),
+            env.sink.clone(),
+            &env.files,
+            FaultPlan::at_fraction(0.5, Side::Source),
+        )
+        .unwrap();
+        assert!(!out.completed);
+        // At most the in-flight file has a checkpoint record.
+        let ckpts = std::fs::read_dir(&b.ckpt_dir).unwrap().count();
+        assert!(ckpts <= 1);
+        let out2 = run_bbcp(
+            &env.cfg,
+            &b,
+            env.source.clone(),
+            env.sink.clone(),
+            &env.files,
+            FaultPlan::none(),
+        )
+        .unwrap();
+        assert!(out2.completed, "{:?}", out2.fault);
+        // Completed files skipped by attribute match.
+        assert!(out2.source.files_skipped_resume > 0);
+        env.verify_sink_complete().unwrap();
+        assert_eq!(std::fs::read_dir(&b.ckpt_dir).unwrap().count(), 0);
+    }
+
+    #[test]
+    fn bbcp_all_objects_acked() {
+        let env = env("bbcp3", 3, 128 << 10);
+        let out = run_bbcp(
+            &env.cfg,
+            &bcfg(&env),
+            env.source.clone(),
+            env.sink.clone(),
+            &env.files,
+            FaultPlan::none(),
+        )
+        .unwrap();
+        assert!(out.completed);
+        assert_eq!(out.source.objects_sent, out.source.objects_synced);
+    }
+}

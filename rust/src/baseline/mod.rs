@@ -1,0 +1,3 @@
+//! Baseline data movers (bbcp model).
+
+pub mod bbcp;

@@ -1,0 +1,373 @@
+//! Shared harness for the figure benches (`rust/benches/fig*.rs`) and
+//! the `examples/reproduce_figures.rs` driver.
+//!
+//! Each paper figure maps to one bench binary; this module holds the
+//! common machinery: scaled workload definitions, the per-case runner
+//! (fresh SimPfs pair + fresh FT dir per case), the Eq. (1) recovery-time
+//! measurement `ER_t = TBF_t + TAF_t − TT_t`, and fixed-width table
+//! printing that mirrors the paper's rows/series.
+//!
+//! Scaling: the paper's datasets (100 × 1 GB, 10 000 × 1 MB) are scaled
+//! ~1/64 by default so a full figure regenerates in seconds; set
+//! `FTLADS_BENCH_SCALE=paper` for the full sizes (hours) or `=quick` for
+//! smoke runs. EXPERIMENTS.md records which scale produced each table.
+
+use std::time::Duration;
+
+use crate::config::Config;
+use crate::coordinator::{SimEnv, TransferOutcome, TransferSpec};
+use crate::fault::FaultPlan;
+use crate::ftlog::{Mechanism, Method};
+use crate::net::Side;
+use crate::workload::{big_workload, small_workload, Workload};
+
+/// Workload + iteration scaling for a figure run.
+#[derive(Debug, Clone)]
+pub struct BenchScale {
+    pub big_files: usize,
+    pub big_file_size: u64,
+    pub small_files: usize,
+    pub small_file_size: u64,
+    /// Repetitions per case (error bars).
+    pub iterations: usize,
+    /// OST/wire time scaling (1.0 = modeled service times).
+    pub time_scale: f64,
+}
+
+impl BenchScale {
+    /// Default: ~1/64 of the paper, minutes per figure.
+    pub fn default_scale() -> BenchScale {
+        BenchScale {
+            big_files: 24,
+            big_file_size: 4 << 20, // 16 objects @ 256 KiB
+            small_files: 192,
+            small_file_size: 256 << 10, // file == one MTU (paper property)
+            iterations: 3,
+            time_scale: 1.0,
+        }
+    }
+
+    /// Smoke scale for CI: seconds per figure.
+    pub fn quick() -> BenchScale {
+        BenchScale {
+            big_files: 6,
+            big_file_size: 1 << 20,
+            small_files: 24,
+            small_file_size: 256 << 10,
+            iterations: 2,
+            time_scale: 0.2,
+        }
+    }
+
+    /// The paper's absolute sizes (needs ~100 GB of patience; the SimPfs
+    /// never materializes the data, but service times are modeled).
+    pub fn paper() -> BenchScale {
+        BenchScale {
+            big_files: 100,
+            big_file_size: 1 << 30,
+            small_files: 10_000,
+            small_file_size: 1 << 20,
+            iterations: 3,
+            time_scale: 1.0,
+        }
+    }
+
+    /// Resolve from `FTLADS_BENCH_SCALE` (quick|default|paper), with
+    /// `FTLADS_BENCH_ITERS` overriding the per-case repetition count.
+    pub fn from_env() -> BenchScale {
+        let mut s = match std::env::var("FTLADS_BENCH_SCALE").as_deref() {
+            Ok("quick") => Self::quick(),
+            Ok("paper") => Self::paper(),
+            _ => Self::default_scale(),
+        };
+        if let Ok(n) = std::env::var("FTLADS_BENCH_ITERS") {
+            if let Ok(n) = n.parse() {
+                s.iterations = n;
+            }
+        }
+        s
+    }
+
+    pub fn big(&self) -> Workload {
+        big_workload(self.big_files, self.big_file_size)
+    }
+
+    pub fn small(&self) -> Workload {
+        // Small workload: file size must equal the MTU so that "a file
+        // transfer state can be either completed or not" (paper §6.4.2).
+        small_workload(self.small_files, self.small_file_size)
+    }
+
+    /// Base config for bench runs (object size = small file size = MTU).
+    pub fn base_config(&self, tag: &str) -> Config {
+        let mut cfg = Config::for_tests(tag);
+        cfg.object_size = self.small_file_size;
+        cfg.rma_bytes = 64 * self.small_file_size as usize;
+        cfg.time_scale = self.time_scale;
+        cfg
+    }
+}
+
+/// One (mechanism, method) cell of Figs 5–7, or a baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Case {
+    Lads, // stock LADS (no FT)
+    Ft(Mechanism, Method),
+}
+
+impl Case {
+    pub fn label(&self) -> String {
+        match self {
+            Case::Lads => "LADS".to_string(),
+            Case::Ft(mech, m) => format!("{}/{}", mech.as_str(), m.as_str()),
+        }
+    }
+
+    pub fn apply(&self, cfg: &mut Config) {
+        match self {
+            Case::Lads => cfg.mechanism = Mechanism::None,
+            Case::Ft(mech, m) => {
+                cfg.mechanism = *mech;
+                cfg.method = *m;
+            }
+        }
+    }
+
+    /// All 18 FT cells (3 mechanisms × 6 methods).
+    pub fn all_ft() -> Vec<Case> {
+        let mut v = Vec::new();
+        for mech in Mechanism::ALL_FT {
+            for m in Method::ALL {
+                v.push(Case::Ft(mech, m));
+            }
+        }
+        v
+    }
+}
+
+/// Run one complete (no-fault) transfer for a case; fresh env per call.
+pub fn run_case(scale: &BenchScale, wl: &Workload, case: Case, tag: &str) -> TransferOutcome {
+    let mut cfg = scale.base_config(tag);
+    case.apply(&mut cfg);
+    let env = SimEnv::new(cfg, wl);
+    let out = env
+        .run(&TransferSpec::fresh(env.files.clone()))
+        .expect("bench transfer failed");
+    assert!(out.completed, "bench case {} did not complete: {:?}", case.label(), out.fault);
+    cleanup(&env);
+    out
+}
+
+/// Eq. (1) recovery measurement for one case at one fault fraction.
+#[derive(Debug, Clone, Copy)]
+pub struct Recovery {
+    /// Time consumed before the fault.
+    pub tbf: Duration,
+    /// Time consumed after the fault (the resume run).
+    pub taf: Duration,
+    /// Fault-free transfer time for the same case.
+    pub tt: Duration,
+}
+
+impl Recovery {
+    /// ER_t = TBF_t + TAF_t − TT_t.
+    pub fn estimated_recovery(&self) -> Duration {
+        (self.tbf + self.taf).saturating_sub(self.tt)
+    }
+}
+
+/// Measure recovery for an FT-LADS case: fault at `frac`, resume, and an
+/// independent fault-free run for TT.
+pub fn measure_recovery_ftlads(
+    scale: &BenchScale,
+    wl: &Workload,
+    case: Case,
+    frac: f64,
+    tag: &str,
+) -> Recovery {
+    // TT: fault-free reference.
+    let tt = run_case(scale, wl, case, &format!("{tag}-tt")).elapsed;
+
+    // TBF: run to the fault.
+    let mut cfg = scale.base_config(&format!("{tag}-f"));
+    case.apply(&mut cfg);
+    let env = SimEnv::new(cfg, wl);
+    let faulted = env
+        .run(
+            &TransferSpec::fresh(env.files.clone())
+                .with_fault(FaultPlan::at_fraction(frac, Side::Source)),
+        )
+        .expect("faulted run failed");
+    assert!(!faulted.completed, "fault at {frac} did not trigger");
+
+    // TAF: resume on the same env. Stock LADS cannot resume — it restarts
+    // from scratch (retransmitting everything), which is the paper's
+    // baseline for recovery overhead.
+    let resume_spec = match case {
+        Case::Lads => TransferSpec::fresh(env.files.clone()),
+        Case::Ft(..) => TransferSpec::resuming(env.files.clone()),
+    };
+    let resumed = env.run(&resume_spec).expect("resume run failed");
+    assert!(
+        resumed.completed,
+        "resume did not complete: {:?}",
+        resumed.fault
+    );
+    env.verify_sink_complete().expect("post-resume verification");
+    cleanup(&env);
+
+    Recovery { tbf: faulted.elapsed, taf: resumed.elapsed, tt }
+}
+
+/// Measure recovery for the bbcp baseline at one fault fraction.
+pub fn measure_recovery_bbcp(
+    scale: &BenchScale,
+    wl: &Workload,
+    frac: f64,
+    tag: &str,
+) -> Recovery {
+    use crate::baseline::bbcp::{run_bbcp, BbcpConfig};
+    let mk_env = |t: &str| {
+        let cfg = scale.base_config(t);
+        SimEnv::new(cfg, wl)
+    };
+
+    let env_tt = mk_env(&format!("{tag}-tt"));
+    let bcfg_tt = BbcpConfig::paper_defaults(&env_tt.cfg);
+    let tt = run_bbcp(
+        &env_tt.cfg,
+        &bcfg_tt,
+        env_tt.source.clone(),
+        env_tt.sink.clone(),
+        &env_tt.files,
+        FaultPlan::none(),
+    )
+    .expect("bbcp tt run")
+    .elapsed;
+    cleanup(&env_tt);
+
+    let env = mk_env(&format!("{tag}-f"));
+    let bcfg = BbcpConfig::paper_defaults(&env.cfg);
+    let faulted = run_bbcp(
+        &env.cfg,
+        &bcfg,
+        env.source.clone(),
+        env.sink.clone(),
+        &env.files,
+        FaultPlan::at_fraction(frac, Side::Source),
+    )
+    .expect("bbcp faulted run");
+    assert!(!faulted.completed);
+    let resumed = run_bbcp(
+        &env.cfg,
+        &bcfg,
+        env.source.clone(),
+        env.sink.clone(),
+        &env.files,
+        FaultPlan::none(),
+    )
+    .expect("bbcp resume run");
+    assert!(resumed.completed, "bbcp resume failed: {:?}", resumed.fault);
+    env.verify_sink_complete().expect("bbcp post-resume verify");
+    cleanup(&env);
+
+    Recovery { tbf: faulted.elapsed, taf: resumed.elapsed, tt }
+}
+
+/// Remove the per-case FT dir (fresh logger state per case).
+pub fn cleanup(env: &SimEnv) {
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+// ---------------------------------------------------------------------------
+// table printing
+// ---------------------------------------------------------------------------
+
+/// Print a fixed-width table: `headers` then `rows` (first column left-
+/// aligned, the rest right-aligned) — the shape the paper's figures report.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut line = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            if i == 0 {
+                line.push_str(&format!("{:<width$}  ", cell, width = widths[0]));
+            } else {
+                line.push_str(&format!("{:>width$}  ", cell, width = widths[i]));
+            }
+        }
+        line
+    };
+    let header_cells: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&header_cells));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+pub fn fmt_secs(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64())
+}
+
+pub fn fmt_secs_ci(mean: f64, ci: f64) -> String {
+    format!("{mean:.3}±{ci:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_resolve() {
+        let d = BenchScale::default_scale();
+        assert_eq!(d.big().file_count(), 24);
+        assert_eq!(d.small().total_objects(d.small_file_size), 192);
+        let q = BenchScale::quick();
+        assert!(q.big_files < d.big_files);
+        let p = BenchScale::paper();
+        assert_eq!(p.big_files, 100);
+        assert_eq!(p.big_file_size, 1 << 30);
+    }
+
+    #[test]
+    fn case_labels() {
+        assert_eq!(Case::Lads.label(), "LADS");
+        assert_eq!(
+            Case::Ft(Mechanism::Universal, Method::Bit64).label(),
+            "universal/bit64"
+        );
+        assert_eq!(Case::all_ft().len(), 18);
+    }
+
+    #[test]
+    fn quick_recovery_roundtrip() {
+        // Exercise the Eq. (1) machinery end to end at tiny scale.
+        let scale = BenchScale {
+            big_files: 3,
+            big_file_size: 256 << 10,
+            small_files: 4,
+            small_file_size: 64 << 10,
+            iterations: 1,
+            time_scale: 0.0,
+        };
+        let wl = scale.big();
+        let r = measure_recovery_ftlads(
+            &scale,
+            &wl,
+            Case::Ft(Mechanism::File, Method::Bit64),
+            0.5,
+            "bs-rec",
+        );
+        // With time_scale 0 everything is fast, but the identity holds.
+        assert!(r.estimated_recovery() <= r.tbf + r.taf);
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny argv parser (no clap in the offline vendor set).
+//!
+//! Grammar: `ftlads <subcommand> [--key value | --flag]...`
+//! Values may also be attached as `--key=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding argv[0]). `flag_names` lists options that
+    /// take no value.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    i += 1;
+                    let Some(v) = argv.get(i) else {
+                        bail!("--{rest} expects a value");
+                    };
+                    out.opts
+                        .entry(rest.to_string())
+                        .or_default()
+                        .push(v.clone());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                bail!("unexpected positional argument '{a}'");
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key)?.last().map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.opts
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_subcommand_opts_flags() {
+        let a = Args::parse(
+            &argv(&["transfer", "--files", "10", "--resume", "--method=bit8"]),
+            &["resume"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("transfer"));
+        assert_eq!(a.get("files"), Some("10"));
+        assert_eq!(a.get("method"), Some("bit8"));
+        assert!(a.flag("resume"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn repeated_opts_collect() {
+        let a = Args::parse(&argv(&["x", "--set", "a=1", "--set", "b=2"]), &[]).unwrap();
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.get("set"), Some("b=2")); // last wins for single get
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&argv(&["x", "--key"]), &[]).is_err());
+    }
+
+    #[test]
+    fn get_parse_typed() {
+        let a = Args::parse(&argv(&["x", "--n", "7"]), &[]).unwrap();
+        assert_eq!(a.get_parse::<u32>("n", 0).unwrap(), 7);
+        assert_eq!(a.get_parse::<u32>("missing", 42).unwrap(), 42);
+        let b = Args::parse(&argv(&["x", "--n", "zz"]), &[]).unwrap();
+        assert!(b.get_parse::<u32>("n", 0).is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(&argv(&["a", "b"]), &[]).is_err());
+    }
+}

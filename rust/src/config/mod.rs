@@ -1,0 +1,306 @@
+//! Session configuration: typed settings + a TOML-subset file parser +
+//! CLI override layer (the offline crate set has no serde/toml/clap).
+//!
+//! Precedence: built-in defaults < config file (`--config path.toml`) <
+//! command-line flags. The defaults mirror the paper's §6.1 configuration
+//! (4 IO threads, 1 master, 1 comm, transaction size 4, 256 MB RMA,
+//! 11 OSTs, 1 MB stripes), scaled per DESIGN.md §Substitutions.
+
+pub mod toml_lite;
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::ftlog::{FtConfig, LoggingMode, Mechanism, Method};
+use crate::integrity::IntegrityMode;
+use crate::net::WireModel;
+use crate::pfs::layout::StripeLayout;
+use crate::pfs::ost::OstConfig;
+
+pub use toml_lite::TomlLite;
+
+/// Everything a transfer session needs.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Transfer MTU — one object (paper: 1 MiB; scaled default 256 KiB,
+    /// which equals the AOT artifact's object size).
+    pub object_size: u64,
+    /// IO threads per side (paper evaluation: 4).
+    pub io_threads: usize,
+    /// RMA DRAM per side (paper: max 256 MB). Scaled with object size.
+    pub rma_bytes: usize,
+    /// Files allowed in flight concurrently at the source.
+    pub file_window: usize,
+    /// FT logging.
+    pub mechanism: Mechanism,
+    pub method: Method,
+    pub txn_size: usize,
+    pub ft_dir: PathBuf,
+    /// Synchronous (comm-thread context) or asynchronous (logger thread)
+    /// FT logging (§5.1).
+    pub logging: LoggingMode,
+    /// Integrity verification backend.
+    pub integrity: IntegrityMode,
+    /// Artifacts directory for the PJRT runtime (integrity = pjrt).
+    pub artifacts_dir: PathBuf,
+    /// PFS geometry + service model (both ends).
+    pub stripe_size: u64,
+    pub stripe_count: u32,
+    pub ost_count: u32,
+    pub ost_bandwidth: f64,
+    pub ost_latency_us: u64,
+    pub ost_concurrent: usize,
+    /// Wire model.
+    pub net_latency_us: u64,
+    pub net_bandwidth: f64,
+    /// Global time scaling for the simulated service times (0 = no sleeps).
+    pub time_scale: f64,
+    /// Workload seed (synthetic data + mixed distribution).
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            object_size: 256 << 10,
+            io_threads: 4,
+            rma_bytes: 16 << 20, // 64 slots of 256 KiB (256 MB / same 1:64 scale)
+            file_window: 8,
+            mechanism: Mechanism::File,
+            method: Method::Bit64,
+            txn_size: 4,
+            ft_dir: default_ft_dir(),
+            logging: LoggingMode::Sync,
+            integrity: IntegrityMode::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            stripe_size: 1 << 20,
+            stripe_count: 1,
+            ost_count: 11,
+            ost_bandwidth: 1.5e9,
+            ost_latency_us: 80,
+            ost_concurrent: 1,
+            net_latency_us: 15,
+            net_bandwidth: 6.0e9,
+            time_scale: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+/// `~/ftlads` per §5.2 ("logger file will be created in *ftlads*
+/// subdirectory under user home directory").
+pub fn default_ft_dir() -> PathBuf {
+    std::env::var_os("HOME")
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir)
+        .join("ftlads")
+}
+
+impl Config {
+    pub fn layout(&self) -> StripeLayout {
+        StripeLayout::new(self.stripe_size, self.stripe_count, self.ost_count)
+    }
+
+    pub fn ost_config(&self) -> OstConfig {
+        OstConfig {
+            bandwidth: self.ost_bandwidth,
+            base_latency: Duration::from_micros(self.ost_latency_us),
+            max_concurrent: self.ost_concurrent,
+            time_scale: self.time_scale,
+        }
+    }
+
+    pub fn wire(&self) -> WireModel {
+        WireModel {
+            latency: Duration::from_micros(self.net_latency_us),
+            bandwidth: self.net_bandwidth,
+            time_scale: self.time_scale,
+        }
+    }
+
+    pub fn ft(&self) -> FtConfig {
+        FtConfig {
+            mechanism: self.mechanism,
+            method: self.method,
+            dir: self.ft_dir.clone(),
+            txn_size: self.txn_size,
+        }
+    }
+
+    /// Fast-test profile: no simulated sleeping, tiny RMA, temp FT dir.
+    pub fn for_tests(tag: &str) -> Config {
+        let dir = std::env::temp_dir().join(format!(
+            "ftlads-test-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        Config {
+            time_scale: 0.0,
+            object_size: 64 << 10,
+            rma_bytes: 8 * (64 << 10),
+            ft_dir: dir,
+            ..Default::default()
+        }
+    }
+
+    /// Apply `key = value` (config file or CLI `--set key=value`).
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "object_size" => self.object_size = parse_bytes(value)?,
+            "io_threads" => self.io_threads = value.parse()?,
+            "rma_bytes" => self.rma_bytes = parse_bytes(value)? as usize,
+            "file_window" => self.file_window = value.parse()?,
+            "mechanism" => self.mechanism = Mechanism::parse(value)?,
+            "method" => self.method = Method::parse(value)?,
+            "txn_size" => self.txn_size = value.parse()?,
+            "ft_dir" => self.ft_dir = PathBuf::from(value),
+            "logging" => self.logging = LoggingMode::parse(value)?,
+            "integrity" => self.integrity = IntegrityMode::parse(value)?,
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "stripe_size" => self.stripe_size = parse_bytes(value)?,
+            "stripe_count" => self.stripe_count = value.parse()?,
+            "ost_count" => self.ost_count = value.parse()?,
+            "ost_bandwidth" => self.ost_bandwidth = value.parse()?,
+            "ost_latency_us" => self.ost_latency_us = value.parse()?,
+            "ost_concurrent" => self.ost_concurrent = value.parse()?,
+            "net_latency_us" => self.net_latency_us = value.parse()?,
+            "net_bandwidth" => self.net_bandwidth = value.parse()?,
+            "time_scale" => self.time_scale = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            _ => anyhow::bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Load a TOML-subset config file over the current values. Sections
+    /// are flattened (`[pfs] ost_count = 11` == `ost_count = 11`).
+    pub fn apply_file(&mut self, path: &std::path::Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let parsed = TomlLite::parse(&text)?;
+        for (key, value) in parsed.flat_items() {
+            self.apply_kv(&key, &value)?;
+        }
+        Ok(())
+    }
+
+    /// Sanity-check cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.object_size > 0, "object_size must be positive");
+        anyhow::ensure!(self.io_threads >= 1, "need at least one IO thread");
+        anyhow::ensure!(
+            self.rma_bytes as u64 >= self.object_size,
+            "RMA pool smaller than one object"
+        );
+        anyhow::ensure!(self.file_window >= 1, "file_window must be >= 1");
+        anyhow::ensure!(self.txn_size >= 1, "txn_size must be >= 1");
+        anyhow::ensure!(
+            (1..=self.ost_count).contains(&self.stripe_count),
+            "stripe_count must be in 1..=ost_count"
+        );
+        Ok(())
+    }
+}
+
+/// Parse "4096", "256K", "16M", "1G" (binary units).
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('K') | Some('k') => (&s[..s.len() - 1], 1u64 << 10),
+        Some('M') | Some('m') => (&s[..s.len() - 1], 1u64 << 20),
+        Some('G') | Some('g') => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad byte size '{s}'"))?;
+    anyhow::ensure!(v >= 0.0, "negative byte size '{s}'");
+    Ok((v * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_configuration() {
+        let c = Config::default();
+        assert_eq!(c.io_threads, 4);
+        assert_eq!(c.txn_size, 4);
+        assert_eq!(c.ost_count, 11);
+        assert_eq!(c.stripe_count, 1);
+        assert_eq!(c.stripe_size, 1 << 20);
+        assert!(c.validate().is_ok());
+        // RMA slots: pool / object = 64 (same count as 256MB/4MB... scaled).
+        assert_eq!(c.rma_bytes as u64 / c.object_size, 64);
+    }
+
+    #[test]
+    fn parse_bytes_units() {
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes("256K").unwrap(), 256 << 10);
+        assert_eq!(parse_bytes("16M").unwrap(), 16 << 20);
+        assert_eq!(parse_bytes("1G").unwrap(), 1 << 30);
+        assert_eq!(parse_bytes("1.5k").unwrap(), 1536);
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-5").is_err());
+    }
+
+    #[test]
+    fn apply_kv_typed() {
+        let mut c = Config::default();
+        c.apply_kv("object_size", "1M").unwrap();
+        assert_eq!(c.object_size, 1 << 20);
+        c.apply_kv("mechanism", "universal").unwrap();
+        assert_eq!(c.mechanism, Mechanism::Universal);
+        c.apply_kv("method", "bit8").unwrap();
+        assert_eq!(c.method, Method::Bit8);
+        c.apply_kv("integrity", "pjrt").unwrap();
+        assert_eq!(c.integrity, IntegrityMode::Pjrt);
+        assert!(c.apply_kv("nonsense", "1").is_err());
+        assert!(c.apply_kv("io_threads", "lots").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_combos() {
+        let mut c = Config::default();
+        c.rma_bytes = 4;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.stripe_count = 99;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.io_threads = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn apply_file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ftlads-cfg-{}.toml", std::process::id()));
+        std::fs::write(
+            &path,
+            "# comment\nio_threads = 8\n[pfs]\nost_count = 5\nstripe_size = \"2M\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.io_threads, 8);
+        assert_eq!(c.ost_count, 5);
+        assert_eq!(c.stripe_size, 2 << 20);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn test_profile_is_fast() {
+        let c = Config::for_tests("x");
+        assert_eq!(c.time_scale, 0.0);
+        assert!(c.validate().is_ok());
+    }
+}

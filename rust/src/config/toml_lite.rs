@@ -1,0 +1,130 @@
+//! TOML-subset parser: `key = value` lines, `[section]` headers, `#`
+//! comments, quoted or bare values. No arrays-of-tables, no multiline
+//! strings — config files here are flat settings, and the offline crate
+//! set has no `toml`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TomlLite {
+    /// section -> key -> value ("" section = top level).
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl TomlLite {
+    pub fn parse(text: &str) -> Result<TomlLite> {
+        let mut out = TomlLite::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+            };
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = unquote(value.trim());
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// All (key, value) pairs with sections flattened away (section names
+    /// are organizational only for our config).
+    pub fn flat_items(&self) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        for kv in self.sections.values() {
+            for (k, v) in kv {
+                out.push((k.clone(), v.clone()));
+            }
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside quotes is content, not a comment.
+    let mut in_quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flat_and_sections() {
+        let t = TomlLite::parse(
+            "a = 1\n# full comment\nb = \"two\" # trailing\n[sec]\nc = 3.5\n",
+        )
+        .unwrap();
+        assert_eq!(t.get("", "a"), Some("1"));
+        assert_eq!(t.get("", "b"), Some("two"));
+        assert_eq!(t.get("sec", "c"), Some("3.5"));
+        assert_eq!(t.get("sec", "missing"), None);
+        assert_eq!(t.flat_items().len(), 3);
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let t = TomlLite::parse("key = \"a#b\"\n").unwrap();
+        assert_eq!(t.get("", "key"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_lined() {
+        let err = TomlLite::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(TomlLite::parse("[unterminated\n").is_err());
+        assert!(TomlLite::parse(" = novalue\n").is_err());
+    }
+
+    #[test]
+    fn empty_and_whitespace() {
+        let t = TomlLite::parse("\n\n  \n# only comments\n").unwrap();
+        assert!(t.sections.is_empty());
+    }
+
+    #[test]
+    fn last_duplicate_wins() {
+        let t = TomlLite::parse("a = 1\na = 2\n").unwrap();
+        assert_eq!(t.get("", "a"), Some("2"));
+    }
+}

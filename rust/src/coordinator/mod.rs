@@ -1,0 +1,217 @@
+//! The LADS/FT-LADS coordinator: source and sink nodes, each with the
+//! paper's thread structure (one master, one comm, N IO threads over
+//! per-OST work queues), the BLOCK_SYNC protocol, FT logging and resume.
+//!
+//! Entry point: [`run_transfer`] wires a source and a sink over an
+//! in-process channel transport (the Verbs-like path), runs the transfer
+//! to completion or injected fault, and reports timing/counters/space.
+//! The `ftlads` CLI's two-process mode uses the same source/sink nodes
+//! over the TCP transport instead.
+
+pub mod queues;
+pub mod sink;
+pub mod source;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::fault::FaultPlan;
+use crate::ftlog::SpaceStats;
+use crate::metrics::{CounterSnapshot, ResourceReport, Sampler};
+use crate::net::{channel, Endpoint};
+use crate::pfs::Pfs;
+use crate::runtime::RuntimeHandle;
+
+/// What to transfer.
+#[derive(Debug, Clone)]
+pub struct TransferSpec {
+    /// File names (must exist on the source PFS).
+    pub files: Vec<String>,
+    /// Resume an interrupted transfer (§5.2.2) instead of starting fresh.
+    pub resume: bool,
+    /// Injected fault plan (§6's simulation environment).
+    pub fault: FaultPlan,
+}
+
+impl TransferSpec {
+    pub fn fresh(files: Vec<String>) -> Self {
+        TransferSpec { files, resume: false, fault: FaultPlan::none() }
+    }
+
+    pub fn resuming(files: Vec<String>) -> Self {
+        TransferSpec { files, resume: true, fault: FaultPlan::none() }
+    }
+
+    pub fn with_fault(mut self, fault: FaultPlan) -> Self {
+        self.fault = fault;
+        self
+    }
+}
+
+/// Result of one transfer session.
+#[derive(Debug, Clone)]
+pub struct TransferOutcome {
+    /// True iff every file was committed at the sink.
+    pub completed: bool,
+    /// The fault that ended the session, if any.
+    pub fault: Option<String>,
+    pub elapsed: Duration,
+    pub source: CounterSnapshot,
+    pub sink: CounterSnapshot,
+    /// FT logger space accounting (Fig 7).
+    pub log_space: SpaceStats,
+    /// CPU/RSS over the run (Fig 5b/c, 6b/c).
+    pub resources: ResourceReport,
+    /// Payload bytes that crossed the wire.
+    pub payload_bytes: u64,
+    /// RMA reservation stalls at the sink (back-pressure signal).
+    pub rma_stalls: (u64, u64),
+}
+
+impl TransferOutcome {
+    pub fn throughput_bytes_per_sec(&self) -> f64 {
+        self.payload_bytes as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Run one transfer session over the in-process channel transport.
+///
+/// `runtime` is required when `cfg.integrity == Pjrt` (the sink's verify
+/// path executes the compiled digest artifact through it).
+pub fn run_transfer(
+    cfg: &Config,
+    source_pfs: Arc<dyn Pfs>,
+    sink_pfs: Arc<dyn Pfs>,
+    spec: &TransferSpec,
+    runtime: Option<RuntimeHandle>,
+) -> Result<TransferOutcome> {
+    cfg.validate()?;
+    if cfg.integrity == crate::integrity::IntegrityMode::Pjrt {
+        let rt = runtime
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("integrity=pjrt requires a RuntimeHandle"))?;
+        anyhow::ensure!(
+            rt.manifest.object_bytes as u64 == cfg.object_size,
+            "object_size {} does not match artifact object size {} — rebuild artifacts \
+             or set object_size = {}",
+            cfg.object_size,
+            rt.manifest.object_bytes,
+            rt.manifest.object_bytes
+        );
+    }
+
+    // Total dataset bytes — the denominator for %-of-transfer fault points.
+    let mut total_bytes = 0u64;
+    for name in &spec.files {
+        let (_, meta) = source_pfs
+            .lookup(name)
+            .ok_or_else(|| anyhow::anyhow!("file '{name}' not on source PFS"))?;
+        anyhow::ensure!(meta.size > 0, "zero-size file '{name}' not supported");
+        total_bytes += meta.size;
+    }
+
+    let fault = spec.fault.arm(total_bytes);
+    let (src_ep, sink_ep) = channel::pair(cfg.wire(), fault);
+    let src_ep: Arc<dyn Endpoint> = Arc::new(src_ep);
+    let sink_ep: Arc<dyn Endpoint> = Arc::new(sink_ep);
+
+    let sampler = Sampler::start(Duration::from_millis(20));
+    let started = Instant::now();
+
+    let sink_node = sink::spawn_sink(cfg, sink_pfs, sink_ep, runtime)?;
+    let source_report = source::run_source(cfg, source_pfs, src_ep.clone(), spec)?;
+    let sink_report = sink_node.join();
+    let elapsed = started.elapsed();
+    let resources = sampler.finish();
+
+    let fault_msg = source_report.fault.clone().or(sink_report.fault);
+    let completed =
+        fault_msg.is_none() && source_report.files_done as usize == spec.files.len();
+
+    Ok(TransferOutcome {
+        completed,
+        fault: fault_msg,
+        elapsed,
+        source: source_report.counters,
+        sink: sink_report.counters,
+        log_space: source_report.log_space,
+        resources,
+        payload_bytes: src_ep.payload_sent(),
+        rma_stalls: sink_report.rma_stalls,
+    })
+}
+
+/// Convenience harness: a SimPfs pair populated with a workload. Used by
+/// tests, examples and the figure benches.
+pub struct SimEnv {
+    pub cfg: Config,
+    pub source: Arc<crate::pfs::sim::SimPfs>,
+    pub sink: Arc<crate::pfs::sim::SimPfs>,
+    pub files: Vec<String>,
+}
+
+impl SimEnv {
+    pub fn new(cfg: Config, workload: &crate::workload::Workload) -> SimEnv {
+        let source = Arc::new(crate::pfs::sim::SimPfs::new(
+            cfg.layout(),
+            cfg.ost_config(),
+            cfg.seed,
+        ));
+        source.populate(&workload.as_tuples());
+        let sink = Arc::new(crate::pfs::sim::SimPfs::new(
+            cfg.layout(),
+            cfg.ost_config(),
+            cfg.seed,
+        ));
+        let files = workload.files.iter().map(|f| f.name.clone()).collect();
+        SimEnv { cfg, source, sink, files }
+    }
+
+    pub fn run(&self, spec: &TransferSpec) -> Result<TransferOutcome> {
+        run_transfer(&self.cfg, self.source.clone(), self.sink.clone(), spec, None)
+    }
+
+    pub fn run_with_runtime(
+        &self,
+        spec: &TransferSpec,
+        runtime: Option<RuntimeHandle>,
+    ) -> Result<TransferOutcome> {
+        run_transfer(&self.cfg, self.source.clone(), self.sink.clone(), spec, runtime)
+    }
+
+    /// Check every byte of every file arrived intact at the sink: all
+    /// object writes present with the digests the source data implies,
+    /// and all files committed.
+    pub fn verify_sink_complete(&self) -> Result<()> {
+        for name in &self.files {
+            let (_, meta) = self
+                .sink
+                .lookup(name)
+                .ok_or_else(|| anyhow::anyhow!("'{name}' missing at sink"))?;
+            anyhow::ensure!(meta.committed, "'{name}' not committed at sink");
+            let (_, src_meta) = self.source.lookup(name).unwrap();
+            anyhow::ensure!(
+                meta.size == src_meta.size,
+                "'{name}' size mismatch: {} vs {}",
+                meta.size,
+                src_meta.size
+            );
+            let objects = crate::util::div_ceil(src_meta.size, self.cfg.object_size);
+            for b in 0..objects {
+                let offset = b * self.cfg.object_size;
+                let len = (src_meta.size - offset).min(self.cfg.object_size) as usize;
+                let (got, glen) = self
+                    .sink
+                    .written_digest(name, offset)
+                    .ok_or_else(|| anyhow::anyhow!("'{name}' block {b} never written"))?;
+                anyhow::ensure!(glen as usize == len, "'{name}' block {b} length mismatch");
+                let want = self.source.expected_digest(name, offset, len);
+                anyhow::ensure!(got == want, "'{name}' block {b} digest mismatch");
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,233 @@
+//! Per-OST work queues + the layout/congestion-aware dequeue policy.
+//!
+//! LADS's core scheduling idea (§2.1): requests are queued *per OST*, and
+//! an IO thread picks its next request from the least-congested OST that
+//! has work. If one OST is slow (external load, deep queue), threads
+//! naturally drain the others — "the N−1 threads are free to issue new
+//! requests to other OSTs".
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::pfs::ost::{OstId, OstModel};
+
+/// Work queues for one side's IO threads. `T` is the request type
+/// (source: block reads; sink: block writes).
+pub struct OstQueues<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+struct Inner<T> {
+    queues: Vec<VecDeque<T>>,
+    queued: usize,
+    closed: bool,
+}
+
+impl<T> OstQueues<T> {
+    pub fn new(ost_count: u32) -> Self {
+        OstQueues {
+            inner: Mutex::new(Inner {
+                queues: (0..ost_count).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request for `ost` and wake one IO thread.
+    pub fn push(&self, ost: OstId, item: T) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.queues[ost.0 as usize].push_back(item);
+        g.queued += 1;
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Dequeue from the least-congested non-empty OST (congestion signal =
+    /// the OST model's in-service depth; ties by queue length then id).
+    /// Blocks until work arrives or the queues are closed (returns None).
+    pub fn pop_least_congested(&self, osts: &OstModel) -> Option<(OstId, T)> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if g.queued > 0 {
+                let pick = g
+                    .queues
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| !q.is_empty())
+                    .min_by_key(|(i, q)| {
+                        (osts.queue_depth(OstId(*i as u32)), usize::MAX - q.len(), *i)
+                    })
+                    .map(|(i, _)| i);
+                if let Some(i) = pick {
+                    let item = g.queues[i].pop_front().unwrap();
+                    g.queued -= 1;
+                    return Some((OstId(i as u32), item));
+                }
+            }
+            if g.closed {
+                return None;
+            }
+            // Wake periodically so a closed/fault flag set without a
+            // notify (e.g. panicking peer) cannot strand us.
+            let (guard, _) = self
+                .cv
+                .wait_timeout(g, Duration::from_millis(20))
+                .unwrap_or_else(|e| e.into_inner());
+            g = guard;
+        }
+    }
+
+    /// Close the queues: blocked and future pops return None once drained.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.closed = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Close and drop all queued work (abort path).
+    pub fn close_and_clear(&self) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.closed = true;
+        g.queued = 0;
+        for q in &mut g.queues {
+            q.clear();
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pfs::ost::OstConfig;
+    use std::sync::Arc;
+
+    fn model(n: u32) -> OstModel {
+        OstModel::new(n, OstConfig { time_scale: 0.0, ..Default::default() })
+    }
+
+    #[test]
+    fn push_pop_fifo_within_ost() {
+        let q: OstQueues<u32> = OstQueues::new(3);
+        let m = model(3);
+        q.push(OstId(1), 10);
+        q.push(OstId(1), 11);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(1), 10)));
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(1), 11)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn prefers_longer_queue_when_equally_idle() {
+        let q: OstQueues<u32> = OstQueues::new(3);
+        let m = model(3);
+        q.push(OstId(0), 1);
+        q.push(OstId(2), 2);
+        q.push(OstId(2), 3);
+        // Both OSTs idle -> deeper backlog first (drain pressure).
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(2), 2)));
+    }
+
+    #[test]
+    fn avoids_congested_ost() {
+        let q: OstQueues<u32> = OstQueues::new(2);
+        let m = Arc::new(OstModel::new(
+            2,
+            OstConfig {
+                base_latency: Duration::from_millis(50),
+                max_concurrent: 1,
+                time_scale: 1.0,
+                ..Default::default()
+            },
+        ));
+        q.push(OstId(0), 1);
+        q.push(OstId(1), 2);
+        // Busy out OST 0.
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || m2.service(OstId(0), 0, false));
+        std::thread::sleep(Duration::from_millis(10));
+        // Scheduler must pick OST 1's work even though OST 0 enqueued first.
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(1), 2)));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn close_unblocks_waiters() {
+        let q: Arc<OstQueues<u32>> = Arc::new(OstQueues::new(1));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let m = model(1);
+            q2.pop_least_congested(&m)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn close_drains_remaining_work_first() {
+        let q: OstQueues<u32> = OstQueues::new(1);
+        let m = model(1);
+        q.push(OstId(0), 7);
+        q.close();
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(0), 7)));
+        assert_eq!(q.pop_least_congested(&m), None);
+    }
+
+    #[test]
+    fn close_and_clear_drops_work() {
+        let q: OstQueues<u32> = OstQueues::new(1);
+        let m = model(1);
+        q.push(OstId(0), 7);
+        q.close_and_clear();
+        assert_eq!(q.pop_least_congested(&m), None);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let q: Arc<OstQueues<u64>> = Arc::new(OstQueues::new(4));
+        let m = Arc::new(model(4));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    q.push(OstId((i % 4) as u32), t * 1000 + i);
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = q.clone();
+            let m = m.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some((_, v)) = q.pop_least_congested(&m) {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
+        assert_eq!(total, 400);
+    }
+}

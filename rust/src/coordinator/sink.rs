@@ -1,0 +1,470 @@
+//! Sink node: comm + master + N IO threads + optional PJRT verifier
+//! (paper §3.1/Fig 4 with the §5.1 BLOCK_SYNC change).
+//!
+//! - **comm** receives NEW_FILE (running the §5.2.2 metadata match),
+//!   NEW_BLOCK (reserving an RMA slot and "RMA-reading" the payload into
+//!   it; if the pool is dry the request parks with the master), and
+//!   FILE_CLOSE (commit + ack).
+//! - **master** sleeps on the RMA pool and requeues parked blocks once a
+//!   slot frees up — the paper's buffer-wait path.
+//! - **IO threads** pull the least-congested OST write queue, `pwrite`
+//!   the object (charging the OST model), verify the digest, release the
+//!   slot, and send BLOCK_SYNC.
+//! - **verifier** (integrity = pjrt): IO threads hand written objects
+//!   over; it batches them into the compiled Pallas digest artifact's
+//!   fixed (B, W) shape, executes it via the PJRT service, and emits the
+//!   BLOCK_SYNCs. This is the L1/L2 integration point on the hot path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::queues::OstQueues;
+use crate::config::Config;
+use crate::integrity::{Digest, DigestEngine, IntegrityMode, NativeEngine, PjrtEngine};
+use crate::metrics::{Counters, CounterSnapshot};
+use crate::net::{Endpoint, Message, NetError, RmaPool, RmaSlot};
+use crate::pfs::{FileId, Pfs};
+use crate::runtime::RuntimeHandle;
+
+/// One received object awaiting pwrite (+ its RMA slot).
+struct WriteReq {
+    file_idx: u32,
+    block_idx: u32,
+    fid: FileId,
+    offset: u64,
+    len: usize,
+    digest: u64,
+    slot: RmaSlot,
+}
+
+struct SnkFile {
+    fid: FileId,
+    start_ost: u32,
+}
+
+struct Shared {
+    pfs: Arc<dyn Pfs>,
+    ep: Arc<dyn Endpoint>,
+    queues: OstQueues<WriteReq>,
+    rma: RmaPool,
+    counters: Counters,
+    files: Mutex<BTreeMap<u32, SnkFile>>,
+    abort: Mutex<Option<String>>,
+    aborted: AtomicBool,
+    done: AtomicBool,
+    integrity: IntegrityMode,
+    padded_words: usize,
+    /// Set from the CONNECT handshake: the peer is resuming, so the
+    /// §5.2.2 metadata match may skip committed files. A *fresh* transfer
+    /// must rewrite everything (stock-LADS restart retransmits all).
+    resume: AtomicBool,
+}
+
+impl Shared {
+    fn abort_with(&self, msg: String) {
+        let mut g = self.abort.lock().unwrap_or_else(|e| e.into_inner());
+        if g.is_none() {
+            *g = Some(msg);
+        }
+        drop(g);
+        self.aborted.store(true, Ordering::SeqCst);
+        self.queues.close_and_clear();
+    }
+
+    fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::SeqCst)
+    }
+}
+
+pub struct SinkReport {
+    pub fault: Option<String>,
+    pub counters: CounterSnapshot,
+    pub rma_stalls: (u64, u64),
+}
+
+/// Handle to the running sink node.
+pub struct SinkNode {
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Spawn the sink: comm + master + IO threads (+ verifier with pjrt).
+pub fn spawn_sink(
+    cfg: &Config,
+    pfs: Arc<dyn Pfs>,
+    ep: Arc<dyn Endpoint>,
+    runtime: Option<RuntimeHandle>,
+) -> Result<SinkNode> {
+    let shared = Arc::new(Shared {
+        pfs,
+        ep,
+        queues: OstQueues::new(cfg.ost_count),
+        rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
+        counters: Counters::default(),
+        files: Mutex::new(BTreeMap::new()),
+        abort: Mutex::new(None),
+        aborted: AtomicBool::new(false),
+        done: AtomicBool::new(false),
+        integrity: cfg.integrity,
+        padded_words: (cfg.object_size as usize).div_ceil(4),
+        resume: AtomicBool::new(false),
+    });
+
+    let mut threads = Vec::new();
+
+    // Verifier channel (pjrt mode only).
+    let verify_tx: Option<mpsc::Sender<WriteReq>> = if cfg.integrity == IntegrityMode::Pjrt {
+        let handle = runtime
+            .ok_or_else(|| anyhow::anyhow!("integrity=pjrt requires a RuntimeHandle"))?;
+        let engine = PjrtEngine::new(handle)?;
+        let (tx, rx) = mpsc::channel::<WriteReq>();
+        let sh = shared.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("snk-verify".into())
+                .spawn(move || verifier_thread(&sh, engine, rx))?,
+        );
+        Some(tx)
+    } else {
+        None
+    };
+
+    // Parked-block channel: comm -> master when the RMA pool is dry.
+    let (park_tx, park_rx) = mpsc::channel::<Message>();
+
+    // IO threads.
+    for t in 0..cfg.io_threads {
+        let sh = shared.clone();
+        let vtx = verify_tx.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("snk-io-{t}"))
+                .spawn(move || io_thread(&sh, vtx))?,
+        );
+    }
+
+    // Master (buffer-wait path).
+    {
+        let sh = shared.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("snk-master".into())
+                .spawn(move || master_thread(&sh, park_rx))?,
+        );
+    }
+
+    // Comm (receive loop).
+    {
+        let sh = shared.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("snk-comm".into())
+                .spawn(move || comm_thread(&sh, park_tx))?,
+        );
+    }
+
+    Ok(SinkNode { shared, threads })
+}
+
+impl SinkNode {
+    /// Wait for the sink to finish (BYE or fault) and collect its report.
+    pub fn join(self) -> SinkReport {
+        for t in self.threads {
+            let _ = t.join();
+        }
+        SinkReport {
+            fault: self
+                .shared
+                .abort
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .clone(),
+            counters: self.shared.counters.snapshot(),
+            rma_stalls: self.shared.rma.stall_stats(),
+        }
+    }
+}
+
+fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
+    loop {
+        if shared.is_aborted() {
+            break;
+        }
+        let msg = match shared.ep.recv_timeout(Duration::from_millis(50)) {
+            Ok(m) => m,
+            Err(NetError::Timeout) => continue,
+            Err(NetError::Closed) => {
+                if !shared.done.load(Ordering::SeqCst) {
+                    shared.abort_with("connection closed by source".into());
+                }
+                break;
+            }
+            Err(NetError::Fault(e)) => {
+                shared.abort_with(e);
+                break;
+            }
+        };
+        match msg {
+            Message::Connect { max_object_size, resume, .. } => {
+                shared.resume.store(resume, Ordering::SeqCst);
+                if max_object_size as usize > shared.rma.slot_bytes() {
+                    shared.abort_with(format!(
+                        "peer object size {} exceeds RMA slot {}",
+                        max_object_size,
+                        shared.rma.slot_bytes()
+                    ));
+                    break;
+                }
+                let _ = shared
+                    .ep
+                    .send(Message::ConnectAck { rma_slots: shared.rma.slots() as u32 });
+            }
+            Message::NewFile { file_idx, name, size, start_ost } => {
+                handle_new_file(shared, file_idx, &name, size, start_ost);
+            }
+            Message::NewBlock { .. } => {
+                // Reserve an RMA slot; park with the master if dry (§3.1).
+                if let Some(slot) = shared.rma.try_reserve() {
+                    enqueue_block(shared, msg, slot);
+                } else {
+                    let _ = park_tx.send(msg);
+                }
+            }
+            Message::FileClose { file_idx } => {
+                let fid = {
+                    let files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
+                    files.get(&file_idx).map(|f| f.fid)
+                };
+                if let Some(fid) = fid {
+                    if let Err(e) = shared.pfs.commit_file(fid) {
+                        shared.abort_with(format!("commit failed: {e}"));
+                        break;
+                    }
+                    shared.counters.files_completed.fetch_add(1, Ordering::Relaxed);
+                    let _ = shared.ep.send(Message::FileCloseAck { file_idx });
+                }
+            }
+            Message::Bye => {
+                shared.done.store(true, Ordering::SeqCst);
+                shared.queues.close();
+                break;
+            }
+            other => {
+                shared.abort_with(format!("sink comm: unexpected {}", other.type_name()));
+                break;
+            }
+        }
+    }
+    // Comm gone: drain stops; make sure nothing waits forever.
+    shared.queues.close();
+}
+
+/// §5.2.2 sink half (resume only): metadata match -> skip, else
+/// (re)create the file. Fresh transfers always rewrite.
+fn handle_new_file(shared: &Arc<Shared>, file_idx: u32, name: &str, size: u64, start_ost: u32) {
+    let resuming = shared.resume.load(Ordering::SeqCst);
+    if let Some((_, meta)) = shared.pfs.lookup(name) {
+        if resuming && meta.committed && meta.size == size {
+            let _ = shared
+                .ep
+                .send(Message::FileId { file_idx, sink_fd: 0, skip: true });
+            return;
+        }
+        // Exists but partial/mismatched: LADS rewrites objects in place on
+        // resume; a non-committed file is reopened, a size-mismatched one
+        // is recreated.
+        if meta.size != size {
+            let _ = shared.pfs.remove(name);
+        }
+    }
+    let fid = match shared.pfs.lookup(name) {
+        Some((fid, _)) => fid,
+        None => match shared.pfs.create(name, size, start_ost) {
+            Ok(fid) => fid,
+            Err(e) => {
+                shared.abort_with(format!("sink create '{name}': {e}"));
+                return;
+            }
+        },
+    };
+    shared
+        .files
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .insert(file_idx, SnkFile { fid, start_ost });
+    let _ = shared
+        .ep
+        .send(Message::FileId { file_idx, sink_fd: fid.0, skip: false });
+}
+
+/// Copy the payload into the RMA slot ("RMA read") and queue the write on
+/// the object's OST (§5.1: "determines the appropriate OST by the
+/// object's file offset and queues it on the OST's work queue").
+fn enqueue_block(shared: &Arc<Shared>, msg: Message, mut slot: RmaSlot) {
+    let Message::NewBlock { file_idx, block_idx, offset, digest, data } = msg else {
+        return;
+    };
+    let (fid, start_ost) = {
+        let files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
+        match files.get(&file_idx) {
+            Some(f) => (f.fid, f.start_ost),
+            None => {
+                shared.abort_with(format!("NEW_BLOCK for unknown file {file_idx}"));
+                return;
+            }
+        }
+    };
+    let buf = slot.buf();
+    buf.clear();
+    buf.extend_from_slice(&data);
+    let ost = shared.pfs.layout().ost_for(start_ost, offset);
+    shared.queues.push(
+        ost,
+        WriteReq { file_idx, block_idx, fid, offset, len: data.len(), digest, slot },
+    );
+}
+
+/// Master: the RMA buffer wait queue (§3.1's "master thread will sleep on
+/// the RMA buffer's wait queue until a buffer is released").
+fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<Message>) {
+    loop {
+        let msg = match park_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(m) => m,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shared.is_aborted() || shared.done.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        // Block (abort-aware) until a slot frees.
+        let slot = loop {
+            match shared.rma.reserve_timeout(Duration::from_millis(50)) {
+                Some(s) => break Some(s),
+                None if shared.is_aborted() => break None,
+                None => continue,
+            }
+        };
+        let Some(slot) = slot else { break };
+        enqueue_block(shared, msg, slot);
+    }
+}
+
+/// IO thread: pwrite + verify + BLOCK_SYNC (or hand to the verifier).
+fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
+    let osts = shared.pfs.ost_model();
+    while let Some((_ost, mut req)) = shared.queues.pop_least_congested(osts) {
+        if shared.is_aborted() {
+            break;
+        }
+        let len = req.len;
+        let buf = req.slot.buf();
+        // pwrite: the PFS may observe/corrupt the buffer like a DMA would;
+        // verification below digests the post-write buffer.
+        if let Err(e) = shared.pfs.write_at(req.fid, req.offset, &mut buf[..len]) {
+            shared.abort_with(format!("pwrite failed: {e}"));
+            break;
+        }
+        shared
+            .counters
+            .bytes_written
+            .fetch_add(len as u64, Ordering::Relaxed);
+
+        match shared.integrity {
+            IntegrityMode::Pjrt => {
+                // Hand off to the batched PJRT verifier (slot moves along).
+                if let Some(tx) = &verify_tx {
+                    if tx.send(req).is_err() {
+                        shared.abort_with("verifier gone".into());
+                        break;
+                    }
+                }
+                continue;
+            }
+            IntegrityMode::Native => {
+                let ok = NativeEngine
+                    .digest_batch(&[&req.slot.data()[..len]], shared.padded_words)
+                    .map(|d| d[0] == Digest::from_u64(req.digest))
+                    .unwrap_or(false);
+                finish_block(shared, &req, ok);
+            }
+            IntegrityMode::Off => {
+                // Stock LADS: acknowledge without verification (§3.2's
+                // silent-corruption window, reproduced for A/B runs).
+                finish_block(shared, &req, true);
+            }
+        }
+        // Slot released on req drop.
+    }
+}
+
+fn finish_block(shared: &Arc<Shared>, req: &WriteReq, ok: bool) {
+    if ok {
+        shared.counters.objects_synced.fetch_add(1, Ordering::Relaxed);
+    } else {
+        shared
+            .counters
+            .objects_failed_verify
+            .fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = shared.ep.send(Message::BlockSync {
+        file_idx: req.file_idx,
+        block_idx: req.block_idx,
+        ok,
+    });
+}
+
+/// Verifier thread: batch written objects into the compiled digest
+/// artifact's fixed (B, W) batch, execute via PJRT, emit BLOCK_SYNCs.
+fn verifier_thread(shared: &Arc<Shared>, engine: PjrtEngine, rx: mpsc::Receiver<WriteReq>) {
+    let batch_max = engine.batch_size();
+    let mut batch: Vec<WriteReq> = Vec::with_capacity(batch_max);
+    loop {
+        // Collect up to batch_max requests, waiting briefly for stragglers
+        // so the artifact's batch dimension is actually used.
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shared.is_aborted() || shared.done.load(Ordering::SeqCst) {
+                    // done is set on BYE, which the source only sends after
+                    // every BLOCK_SYNC arrived — the channel is empty here.
+                    break;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        batch.push(first);
+        let deadline = std::time::Instant::now() + Duration::from_millis(2);
+        while batch.len() < batch_max {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+
+        let objects: Vec<&[u8]> = batch.iter().map(|r| &r.slot.data()[..r.len]).collect();
+        match engine.digest_batch(&objects, shared.padded_words) {
+            Ok(digests) => {
+                for (req, d) in batch.drain(..).zip(digests) {
+                    let ok = d == Digest::from_u64(req.digest);
+                    finish_block(shared, &req, ok);
+                }
+            }
+            Err(e) => {
+                shared.abort_with(format!("PJRT verify failed: {e}"));
+                batch.clear();
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,549 @@
+//! Source node: master + comm + N IO threads (paper §3.1 / Fig 4).
+//!
+//! - **master** walks the dataset (windowed), runs the NEW_FILE/FILE_ID
+//!   handshake, and on FILE_ID splits the file into objects, excluding
+//!   anything the FT log proved durable (resume, §5.2.2), and enqueues
+//!   the rest on the per-OST work queues.
+//! - **IO threads** pull from the least-congested OST queue, reserve an
+//!   RMA slot, `pread` the object from the PFS (charging the OST model),
+//!   digest it, and hand it to the wire as NEW_BLOCK.
+//! - **comm** owns the receive side: routes FILE_ID / FILE_CLOSE_ACK to
+//!   the master and handles BLOCK_SYNC — *synchronous logging* in the
+//!   comm thread's context (§5.1), FILE_CLOSE when a file's last object
+//!   is synced, retransmission when the sink reports a failed write.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::queues::OstQueues;
+use super::TransferSpec;
+use crate::config::Config;
+use crate::ftlog::{self, CompletedSet, FileKey, FtLogger, SpaceStats};
+use crate::integrity::{self, IntegrityMode};
+use crate::metrics::{Counters, CounterSnapshot};
+use crate::net::{Endpoint, Message, NetError, RmaPool};
+use crate::pfs::{FileId, Pfs};
+
+/// One object read+send request.
+#[derive(Debug, Clone)]
+struct BlockReq {
+    file_idx: u32,
+    block_idx: u32,
+    fid: FileId,
+    offset: u64,
+    len: u32,
+}
+
+/// Per-file transfer state (comm + master shared).
+struct SrcFile {
+    name: String,
+    size: u64,
+    fid: FileId,
+    start_ost: u32,
+    total_blocks: u32,
+    /// Blocks durable at the sink (seeded from the FT log on resume).
+    synced: CompletedSet,
+    log_key: Option<FileKey>,
+    close_sent: bool,
+}
+
+enum MasterEvent {
+    FileId { file_idx: u32, skip: bool },
+    CloseAck { file_idx: u32 },
+    Abort,
+}
+
+struct Shared {
+    pfs: Arc<dyn Pfs>,
+    ep: Arc<dyn Endpoint>,
+    queues: OstQueues<BlockReq>,
+    rma: RmaPool,
+    counters: Counters,
+    files: Mutex<BTreeMap<u32, SrcFile>>,
+    logger: Mutex<Box<dyn FtLogger>>,
+    abort: Mutex<Option<String>>,
+    aborted: AtomicBool,
+    done: AtomicBool,
+    integrity: IntegrityMode,
+    object_size: u64,
+    padded_words: usize,
+}
+
+impl Shared {
+    fn abort_with(&self, msg: String) {
+        let mut g = self.abort.lock().unwrap_or_else(|e| e.into_inner());
+        if g.is_none() {
+            *g = Some(msg);
+        }
+        drop(g);
+        self.aborted.store(true, Ordering::SeqCst);
+        self.queues.close_and_clear();
+    }
+
+    fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::SeqCst)
+    }
+}
+
+/// Source-side session report.
+pub struct SourceReport {
+    pub fault: Option<String>,
+    pub counters: CounterSnapshot,
+    pub log_space: SpaceStats,
+    /// Files fully accounted for (committed at sink or skipped by resume).
+    pub files_done: u64,
+}
+
+/// Run the source node to completion/fault. Blocks the calling thread
+/// (which acts as the orchestrator); master/comm/IO threads are spawned
+/// internally and joined before returning.
+pub fn run_source(
+    cfg: &Config,
+    pfs: Arc<dyn Pfs>,
+    ep: Arc<dyn Endpoint>,
+    spec: &TransferSpec,
+) -> Result<SourceReport> {
+    let logger = ftlog::create_logger_with_mode(&cfg.ft(), cfg.logging)?;
+    let shared = Arc::new(Shared {
+        pfs,
+        ep,
+        queues: OstQueues::new(cfg.ost_count),
+        rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
+        counters: Counters::default(),
+        files: Mutex::new(BTreeMap::new()),
+        logger: Mutex::new(logger),
+        abort: Mutex::new(None),
+        aborted: AtomicBool::new(false),
+        done: AtomicBool::new(false),
+        integrity: cfg.integrity,
+        object_size: cfg.object_size,
+        padded_words: (cfg.object_size as usize).div_ceil(4),
+    });
+
+    // Connect handshake.
+    let rma_slots = shared.rma.slots() as u32;
+    if let Err(e) = shared.ep.send(Message::Connect {
+        max_object_size: cfg.object_size,
+        rma_slots,
+        resume: spec.resume,
+    }) {
+        return Ok(report_with_fault(&shared, format!("connect: {e}"), 0));
+    }
+    match shared.ep.recv_timeout(Duration::from_secs(10)) {
+        Ok(Message::ConnectAck { .. }) => {}
+        Ok(m) => anyhow::bail!("handshake: unexpected {}", m.type_name()),
+        Err(e) => return Ok(report_with_fault(&shared, format!("connect ack: {e}"), 0)),
+    }
+
+    let (master_tx, master_rx) = mpsc::channel::<MasterEvent>();
+
+    // IO threads.
+    let mut io_threads = Vec::new();
+    for t in 0..cfg.io_threads {
+        let sh = shared.clone();
+        io_threads.push(
+            std::thread::Builder::new()
+                .name(format!("src-io-{t}"))
+                .spawn(move || io_thread(&sh))?,
+        );
+    }
+
+    // Comm thread (receive side).
+    let comm = {
+        let sh = shared.clone();
+        let tx = master_tx.clone();
+        std::thread::Builder::new()
+            .name("src-comm".into())
+            .spawn(move || comm_thread(&sh, tx))?
+    };
+
+    // Master runs on the calling thread.
+    let files_done = master_loop(cfg, &shared, spec, master_rx);
+
+    // Teardown: stop IO threads, then the comm thread.
+    shared.done.store(true, Ordering::SeqCst);
+    shared.queues.close();
+    for h in io_threads {
+        let _ = h.join();
+    }
+    let _ = comm.join();
+
+    let fault = shared.abort.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let log_space = shared.logger.lock().unwrap_or_else(|e| e.into_inner()).space();
+    Ok(SourceReport {
+        fault,
+        counters: shared.counters.snapshot(),
+        log_space,
+        files_done,
+    })
+}
+
+fn report_with_fault(shared: &Shared, msg: String, files_done: u64) -> SourceReport {
+    shared.abort_with(msg);
+    SourceReport {
+        fault: shared.abort.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        counters: shared.counters.snapshot(),
+        log_space: shared.logger.lock().unwrap_or_else(|e| e.into_inner()).space(),
+        files_done,
+    }
+}
+
+/// Master: windowed file admission + handshake bookkeeping (§5.2.1).
+fn master_loop(
+    cfg: &Config,
+    shared: &Arc<Shared>,
+    spec: &TransferSpec,
+    master_rx: mpsc::Receiver<MasterEvent>,
+) -> u64 {
+    // §5.2.2: on resume, parse the FT logs left by the interrupted run.
+    let recovered: BTreeMap<String, CompletedSet> = if spec.resume {
+        ftlog::recover::recover_all(&cfg.ft()).unwrap_or_default()
+    } else {
+        BTreeMap::new()
+    };
+
+    let total_files = spec.files.len();
+    let mut next_file = 0usize;
+    let mut inflight = 0usize;
+    let mut done_files = 0u64;
+
+    while done_files < total_files as u64 && !shared.is_aborted() {
+        // Admit files up to the window.
+        while next_file < total_files && inflight < cfg.file_window && !shared.is_aborted() {
+            let name = &spec.files[next_file];
+            let file_idx = next_file as u32;
+            next_file += 1;
+            let Some((fid, meta)) = shared.pfs.lookup(name) else {
+                shared.abort_with(format!("source file '{name}' disappeared"));
+                break;
+            };
+            let total_blocks =
+                crate::util::div_ceil(meta.size, shared.object_size) as u32;
+            let mut synced = CompletedSet::new(total_blocks);
+            if let Some(rec) = recovered.get(name) {
+                if rec.total() == total_blocks {
+                    for b in rec.iter_completed() {
+                        synced.insert(b);
+                    }
+                }
+            }
+            shared.files.lock().unwrap_or_else(|e| e.into_inner()).insert(
+                file_idx,
+                SrcFile {
+                    name: name.clone(),
+                    size: meta.size,
+                    fid,
+                    start_ost: meta.start_ost,
+                    total_blocks,
+                    synced,
+                    log_key: None,
+                    close_sent: false,
+                },
+            );
+            if shared
+                .ep
+                .send(Message::NewFile {
+                    file_idx,
+                    name: name.clone(),
+                    size: meta.size,
+                    start_ost: meta.start_ost,
+                })
+                .is_err()
+            {
+                shared.abort_with("NEW_FILE send failed".into());
+                break;
+            }
+            inflight += 1;
+        }
+
+        if done_files >= total_files as u64 || shared.is_aborted() {
+            break;
+        }
+
+        // Wait for one event, then drain whatever else arrived.
+        let ev = match master_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => ev,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        let mut events = vec![ev];
+        while let Ok(ev) = master_rx.try_recv() {
+            events.push(ev);
+        }
+        for ev in events {
+            match ev {
+                MasterEvent::FileId { file_idx, skip } => {
+                    if skip {
+                        // Sink metadata matched a committed file: skip it
+                        // (§5.2.2) and account every object as saved.
+                        let mut files =
+                            shared.files.lock().unwrap_or_else(|e| e.into_inner());
+                        if let Some(f) = files.remove(&file_idx) {
+                            shared
+                                .counters
+                                .files_skipped_resume
+                                .fetch_add(1, Ordering::Relaxed);
+                            shared.counters.objects_skipped_resume.fetch_add(
+                                f.total_blocks as u64,
+                                Ordering::Relaxed,
+                            );
+                        }
+                        drop(files);
+                        inflight -= 1;
+                        done_files += 1;
+                    } else {
+                        schedule_file_blocks(shared, file_idx);
+                    }
+                }
+                MasterEvent::CloseAck { file_idx } => {
+                    let mut files =
+                        shared.files.lock().unwrap_or_else(|e| e.into_inner());
+                    files.remove(&file_idx);
+                    drop(files);
+                    shared.counters.files_completed.fetch_add(1, Ordering::Relaxed);
+                    inflight -= 1;
+                    done_files += 1;
+                }
+                MasterEvent::Abort => {}
+            }
+        }
+    }
+
+    if !shared.is_aborted() && done_files == total_files as u64 {
+        // Dataset complete: tear the session down cleanly.
+        let _ = shared.ep.send(Message::Bye);
+        let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = logger.finish_dataset();
+    }
+    done_files
+}
+
+/// On FILE_ID: register with the FT logger (seeded from recovery) and
+/// enqueue the pending objects on their OST queues.
+fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
+    let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(f) = files.get_mut(&file_idx) else { return };
+
+    // Register with the logger, seeding already-durable blocks so a second
+    // fault cannot lose pre-first-fault progress.
+    {
+        let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
+        match logger.register_file(&f.name, f.total_blocks) {
+            Ok(key) => {
+                f.log_key = Some(key);
+                for b in f.synced.iter_completed() {
+                    let _ = logger.log_block(key, b);
+                }
+            }
+            Err(e) => {
+                drop(logger);
+                drop(files);
+                shared.abort_with(format!("FT log registration failed: {e}"));
+                return;
+            }
+        }
+    }
+
+    let pending = f.synced.pending();
+    shared
+        .counters
+        .objects_skipped_resume
+        .fetch_add((f.total_blocks - pending.len() as u32) as u64, Ordering::Relaxed);
+
+    if pending.is_empty() {
+        // Everything was durable before the fault but the file was never
+        // closed: close it now.
+        f.close_sent = true;
+        if let Some(key) = f.log_key {
+            let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = logger.complete_file(key);
+        }
+        let _ = shared.ep.send(Message::FileClose { file_idx });
+        return;
+    }
+
+    let layout = shared.pfs.layout();
+    for b in pending {
+        let offset = b as u64 * shared.object_size;
+        let len = (f.size - offset).min(shared.object_size) as u32;
+        let ost = layout.ost_for(f.start_ost, offset);
+        shared.queues.push(
+            ost,
+            BlockReq { file_idx, block_idx: b, fid: f.fid, offset, len },
+        );
+    }
+}
+
+/// IO thread: least-congested-OST dequeue → RMA reserve → pread → digest
+/// → NEW_BLOCK.
+fn io_thread(shared: &Arc<Shared>) {
+    let osts = shared.pfs.ost_model();
+    while let Some((_ost, req)) = shared.queues.pop_least_congested(osts) {
+        if shared.is_aborted() {
+            break;
+        }
+        // Reserve an RMA slot (bounded buffer registration), abort-aware.
+        let mut slot = loop {
+            match shared.rma.reserve_timeout(Duration::from_millis(50)) {
+                Some(s) => break Some(s),
+                None if shared.is_aborted() || shared.done.load(Ordering::SeqCst) => {
+                    break None
+                }
+                None => continue,
+            }
+        };
+        let Some(slot) = slot.as_mut() else { break };
+
+        let buf = slot.buf();
+        buf.resize(req.len as usize, 0);
+        match shared.pfs.read_at(req.fid, req.offset, buf) {
+            Ok(n) if n == req.len as usize => {}
+            Ok(n) => {
+                shared.abort_with(format!(
+                    "short read: file {} block {} got {n} of {}",
+                    req.file_idx, req.block_idx, req.len
+                ));
+                break;
+            }
+            Err(e) => {
+                shared.abort_with(format!("pread failed: {e}"));
+                break;
+            }
+        }
+
+        let digest = match shared.integrity {
+            IntegrityMode::Off => 0u64,
+            // Send-side digests are always computed natively — they must
+            // exist *before* the object leaves the node; the sink side is
+            // where the batched PJRT verify runs (see sink::verifier).
+            _ => integrity::digest_bytes_padded(slot.data(), shared.padded_words).as_u64(),
+        };
+
+        let msg = Message::NewBlock {
+            file_idx: req.file_idx,
+            block_idx: req.block_idx,
+            offset: req.offset,
+            digest,
+            data: slot.data().to_vec(),
+        };
+        match shared.ep.send(msg) {
+            Ok(()) => {
+                shared.counters.objects_sent.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .counters
+                    .bytes_sent
+                    .fetch_add(req.len as u64, Ordering::Relaxed);
+            }
+            Err(NetError::Fault(e)) => {
+                shared.abort_with(e);
+                break;
+            }
+            Err(e) => {
+                shared.abort_with(format!("send failed: {e}"));
+                break;
+            }
+        }
+        // Slot drops here -> released for the next read.
+    }
+}
+
+/// Comm thread: the receive loop. BLOCK_SYNC handling — synchronous FT
+/// logging in this thread's context — is the paper's §5.1 change.
+fn comm_thread(shared: &Arc<Shared>, master_tx: mpsc::Sender<MasterEvent>) {
+    loop {
+        if shared.is_aborted() || shared.done.load(Ordering::SeqCst) {
+            break;
+        }
+        let msg = match shared.ep.recv_timeout(Duration::from_millis(50)) {
+            Ok(m) => m,
+            Err(NetError::Timeout) => continue,
+            Err(NetError::Closed) => {
+                if !shared.done.load(Ordering::SeqCst) {
+                    shared.abort_with("connection closed by sink".into());
+                    let _ = master_tx.send(MasterEvent::Abort);
+                }
+                break;
+            }
+            Err(NetError::Fault(e)) => {
+                shared.abort_with(e);
+                let _ = master_tx.send(MasterEvent::Abort);
+                break;
+            }
+        };
+        match msg {
+            Message::FileId { file_idx, skip, .. } => {
+                let _ = master_tx.send(MasterEvent::FileId { file_idx, skip });
+            }
+            Message::BlockSync { file_idx, block_idx, ok } => {
+                handle_block_sync(shared, file_idx, block_idx, ok);
+            }
+            Message::FileCloseAck { file_idx } => {
+                let _ = master_tx.send(MasterEvent::CloseAck { file_idx });
+            }
+            other => {
+                shared.abort_with(format!(
+                    "source comm: unexpected {}",
+                    other.type_name()
+                ));
+                let _ = master_tx.send(MasterEvent::Abort);
+                break;
+            }
+        }
+    }
+}
+
+fn handle_block_sync(shared: &Arc<Shared>, file_idx: u32, block_idx: u32, ok: bool) {
+    if !ok {
+        // Sink write/verify failed: reschedule the object (§3.2 — without
+        // this, the corruption would go unnoticed).
+        shared
+            .counters
+            .objects_failed_verify
+            .fetch_add(1, Ordering::Relaxed);
+        let files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(f) = files.get(&file_idx) {
+            let offset = block_idx as u64 * shared.object_size;
+            let len = (f.size - offset).min(shared.object_size) as u32;
+            let ost = shared.pfs.layout().ost_for(f.start_ost, offset);
+            shared.queues.push(
+                ost,
+                BlockReq { file_idx, block_idx, fid: f.fid, offset, len },
+            );
+        }
+        return;
+    }
+
+    let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(f) = files.get_mut(&file_idx) else { return };
+    if !f.synced.insert(block_idx) {
+        return; // duplicate sync
+    }
+    shared.counters.objects_synced.fetch_add(1, Ordering::Relaxed);
+
+    // Synchronous logging (§5.1): log in the comm thread's context.
+    if let Some(key) = f.log_key {
+        let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
+        if let Err(e) = logger.log_block(key, block_idx) {
+            drop(logger);
+            drop(files);
+            shared.abort_with(format!("FT logging failed: {e}"));
+            return;
+        }
+        shared.counters.log_appends.fetch_add(1, Ordering::Relaxed);
+    }
+
+    if f.synced.is_complete() && !f.close_sent {
+        f.close_sent = true;
+        // §5.2.1: all objects synced -> delete the file's log entry and
+        // tell the sink to commit.
+        if let Some(key) = f.log_key {
+            let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = logger.complete_file(key);
+        }
+        let _ = shared.ep.send(Message::FileClose { file_idx });
+    }
+}

@@ -1,0 +1,130 @@
+//! Fault injection plans.
+//!
+//! Paper §6: "we have created a simulation environment in which we
+//! generate faults after transferring 20 %, 40 %, 60 %, 80 % of total
+//! data size … for the purpose of our experiments, we have executed this
+//! simulation in the source end."
+//!
+//! A [`FaultPlan`] describes *when* (fraction or absolute bytes of payload
+//! across the wire) and *where* (source or sink attribution) the
+//! connection dies; [`FaultPlan::arm`] turns it into the transport-level
+//! [`FaultController`] that actually severs the link. PFS write-error
+//! injection (the §3.2 corruption case) lives in `pfs::sim`.
+
+use std::sync::Arc;
+
+use crate::net::{FaultController, Side};
+
+/// When a transfer should be killed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultPoint {
+    /// Never fault (baseline runs).
+    None,
+    /// After this fraction of the dataset's payload bytes crossed the wire
+    /// (paper uses 0.2 / 0.4 / 0.6 / 0.8).
+    Fraction(f64),
+    /// After an absolute number of payload bytes.
+    Bytes(u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    pub point: FaultPoint,
+    /// End the fault is attributed to (paper simulates at the source).
+    pub side: Side,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        FaultPlan { point: FaultPoint::None, side: Side::Source }
+    }
+
+    pub fn at_fraction(frac: f64, side: Side) -> Self {
+        assert!((0.0..=1.0).contains(&frac), "fault fraction must be in [0,1]");
+        FaultPlan { point: FaultPoint::Fraction(frac), side }
+    }
+
+    pub fn at_bytes(bytes: u64, side: Side) -> Self {
+        FaultPlan { point: FaultPoint::Bytes(bytes), side }
+    }
+
+    /// The paper's four fault points.
+    pub fn paper_points() -> [f64; 4] {
+        [0.2, 0.4, 0.6, 0.8]
+    }
+
+    /// Build the transport hook for a dataset of `total_bytes`.
+    pub fn arm(&self, total_bytes: u64) -> Arc<FaultController> {
+        match self.point {
+            FaultPoint::None => FaultController::unarmed(),
+            FaultPoint::Fraction(f) => {
+                let thresh = (total_bytes as f64 * f).round() as u64;
+                FaultController::armed(thresh.max(1), self.side)
+            }
+            FaultPoint::Bytes(b) => FaultController::armed(b.max(1), self.side),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self.point, FaultPoint::None)
+    }
+
+    pub fn label(&self) -> String {
+        match self.point {
+            FaultPoint::None => "no-fault".to_string(),
+            FaultPoint::Fraction(f) => format!("{}%@{}", (f * 100.0).round() as u32, self.side),
+            FaultPoint::Bytes(b) => format!("{}B@{}", b, self.side),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_never_trips() {
+        let c = FaultPlan::none().arm(1_000_000);
+        assert!(!c.account(u64::MAX / 2));
+        assert!(!c.is_tripped());
+    }
+
+    #[test]
+    fn fraction_plan_threshold() {
+        let c = FaultPlan::at_fraction(0.4, Side::Source).arm(1000);
+        assert!(!c.account(399));
+        assert!(c.account(1)); // 400 == threshold
+        assert!(c.is_tripped());
+    }
+
+    #[test]
+    fn bytes_plan_threshold() {
+        let c = FaultPlan::at_bytes(512, Side::Sink).arm(0);
+        assert!(!c.account(511));
+        assert!(c.account(1));
+        assert_eq!(c.side, Side::Sink);
+    }
+
+    #[test]
+    fn zero_fraction_trips_immediately() {
+        let c = FaultPlan::at_fraction(0.0, Side::Source).arm(1000);
+        assert!(c.account(1), "threshold clamps to 1 byte");
+    }
+
+    #[test]
+    #[should_panic]
+    fn fraction_out_of_range_rejected() {
+        FaultPlan::at_fraction(1.5, Side::Source);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(FaultPlan::none().label(), "no-fault");
+        assert_eq!(
+            FaultPlan::at_fraction(0.6, Side::Source).label(),
+            "60%@source"
+        );
+        assert_eq!(FaultPlan::at_bytes(7, Side::Sink).label(), "7B@sink");
+        assert_eq!(FaultPlan::paper_points(), [0.2, 0.4, 0.6, 0.8]);
+    }
+}

@@ -1,0 +1,410 @@
+//! Per-method encodings of completed-block information (paper §4.2).
+//!
+//! Six methods, two families:
+//!
+//! **Record streams** (Char, Int, Enc, Binary): each completed block id is
+//! one record. The file logger appends records in completion order (out
+//! of order); the transaction/universal loggers write a sorted,
+//! count-prefixed region. Decoders tolerate torn tails (a crash can land
+//! mid-record — the lost suffix is simply retransmitted).
+//!
+//! **Bitmaps** (Bit8, Bit64): one bit per block, Algorithm 1's
+//! read-modify-write on N-bit words. Word size is the only difference
+//! between the two (and the rounding of region size it implies).
+
+use super::vld;
+
+/// The paper's six logging methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Char,
+    Int,
+    Enc,
+    Binary,
+    Bit8,
+    Bit64,
+}
+
+impl Method {
+    pub const ALL: [Method; 6] = [
+        Method::Char,
+        Method::Int,
+        Method::Enc,
+        Method::Binary,
+        Method::Bit8,
+        Method::Bit64,
+    ];
+
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "char" => Method::Char,
+            "int" => Method::Int,
+            "enc" => Method::Enc,
+            "binary" => Method::Binary,
+            "bit8" => Method::Bit8,
+            "bit64" => Method::Bit64,
+            _ => anyhow::bail!("unknown FT method '{s}' (char|int|enc|binary|bit8|bit64)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::Char => "char",
+            Method::Int => "int",
+            Method::Enc => "enc",
+            Method::Binary => "binary",
+            Method::Bit8 => "bit8",
+            Method::Bit64 => "bit64",
+        }
+    }
+
+    pub fn is_bitmap(&self) -> bool {
+        matches!(self, Method::Bit8 | Method::Bit64)
+    }
+
+    /// Bitmap word size in bytes (Algorithm 1's N/8).
+    pub fn word_bytes(&self) -> usize {
+        match self {
+            Method::Bit8 => 1,
+            Method::Bit64 => 8,
+            _ => panic!("word_bytes on non-bitmap method"),
+        }
+    }
+
+    /// Worst-case bytes to record all of `total_blocks` completions —
+    /// the region size the transaction/universal loggers reserve.
+    pub fn region_bytes(&self, total_blocks: u32) -> usize {
+        match self {
+            // count prefix + records
+            Method::Char => 4 + total_blocks as usize * 11, // "4294967295\n"
+            Method::Int | Method::Binary => 4 + total_blocks as usize * 4,
+            Method::Enc => 4 + total_blocks as usize * 5,
+            Method::Bit8 => {
+                (total_blocks as usize).div_ceil(8)
+            }
+            Method::Bit64 => {
+                (total_blocks as usize).div_ceil(64) * 8
+            }
+        }
+    }
+
+    /// Append one record (record-stream methods only).
+    pub fn encode_record(&self, block: u32, out: &mut Vec<u8>) {
+        match self {
+            Method::Char => {
+                out.extend_from_slice(block.to_string().as_bytes());
+                out.push(b'\n');
+            }
+            Method::Int => out.extend_from_slice(&block.to_le_bytes()),
+            Method::Enc => {
+                vld::encode_u32(block, out);
+            }
+            Method::Binary => {
+                // "converted to binary format … 32-bit binary
+                // representation": big-endian bit-string, byte-packed.
+                out.extend_from_slice(&block.to_be_bytes());
+            }
+            Method::Bit8 | Method::Bit64 => panic!("encode_record on bitmap method"),
+        }
+    }
+
+    /// Decode a record stream, tolerating a torn tail. Returns block ids
+    /// in stream order (may contain duplicates if a block was re-sent).
+    pub fn decode_stream(&self, buf: &[u8]) -> Vec<u32> {
+        let mut out = Vec::new();
+        match self {
+            Method::Char => {
+                for line in buf.split(|&b| b == b'\n') {
+                    if line.is_empty() {
+                        continue;
+                    }
+                    if let Ok(s) = std::str::from_utf8(line) {
+                        if let Ok(v) = s.trim().parse::<u32>() {
+                            out.push(v);
+                        }
+                    }
+                }
+                // A torn tail (no trailing newline) was still parsed above;
+                // drop it only if the buffer does not end with '\n' AND the
+                // tail parsed — we cannot distinguish "complete but
+                // unterminated" from torn, so be conservative and keep it:
+                // a duplicate retransmit is harmless, a lost record is not.
+            }
+            Method::Int => {
+                for c in buf.chunks_exact(4) {
+                    out.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            Method::Binary => {
+                for c in buf.chunks_exact(4) {
+                    out.push(u32::from_be_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            Method::Enc => {
+                let mut pos = 0;
+                while pos < buf.len() {
+                    match vld::decode_u32(&buf[pos..]) {
+                        Some((v, n)) => {
+                            out.push(v);
+                            pos += n;
+                        }
+                        None => break, // torn tail
+                    }
+                }
+            }
+            Method::Bit8 | Method::Bit64 => panic!("decode_stream on bitmap method"),
+        }
+        out
+    }
+
+    /// Bitmap byte + bit position for `block` (Algorithm 1: index = A/N,
+    /// bit = A%N — expressed byte-wise; word size only affects I/O width
+    /// and region rounding).
+    pub fn bit_position(&self, block: u32) -> (usize, u8) {
+        ((block / 8) as usize, (block % 8) as u8)
+    }
+
+    /// The word-aligned byte range Algorithm 1 reads+writes for `block`.
+    pub fn word_range(&self, block: u32) -> std::ops::Range<usize> {
+        let wb = self.word_bytes();
+        let word = (block as usize / 8) / wb;
+        word * wb..(word + 1) * wb
+    }
+}
+
+/// A set of completed blocks, the output of recovery decoding and the
+/// in-memory state of the transaction/universal loggers.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CompletedSet {
+    bits: Vec<u64>,
+    count: u32,
+    total: u32,
+}
+
+impl CompletedSet {
+    pub fn new(total_blocks: u32) -> Self {
+        CompletedSet {
+            bits: vec![0u64; (total_blocks as usize).div_ceil(64)],
+            count: 0,
+            total: total_blocks,
+        }
+    }
+
+    pub fn insert(&mut self, block: u32) -> bool {
+        assert!(block < self.total, "block {block} >= total {}", self.total);
+        let w = (block / 64) as usize;
+        let m = 1u64 << (block % 64);
+        if self.bits[w] & m == 0 {
+            self.bits[w] |= m;
+            self.count += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn contains(&self, block: u32) -> bool {
+        if block >= self.total {
+            return false;
+        }
+        self.bits[(block / 64) as usize] & (1u64 << (block % 64)) != 0
+    }
+
+    pub fn count(&self) -> u32 {
+        self.count
+    }
+
+    pub fn total(&self) -> u32 {
+        self.total
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.count == self.total
+    }
+
+    /// Blocks NOT in the set — the pending list the resume path schedules.
+    pub fn pending(&self) -> Vec<u32> {
+        (0..self.total).filter(|&b| !self.contains(b)).collect()
+    }
+
+    /// Completed blocks in ascending order.
+    pub fn iter_completed(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.total).filter(move |&b| self.contains(b))
+    }
+
+    /// Build from a decoded record stream (ignores out-of-range ids from
+    /// corrupt logs and duplicates from retransmits).
+    pub fn from_stream(total_blocks: u32, stream: &[u32]) -> Self {
+        let mut set = CompletedSet::new(total_blocks);
+        for &b in stream {
+            if b < total_blocks {
+                set.insert(b);
+            }
+        }
+        set
+    }
+
+    /// Build from bitmap bytes (little-endian bit order within bytes).
+    pub fn from_bitmap_bytes(total_blocks: u32, bytes: &[u8]) -> Self {
+        let mut set = CompletedSet::new(total_blocks);
+        for b in 0..total_blocks {
+            let (byte, bit) = ((b / 8) as usize, b % 8);
+            if byte < bytes.len() && bytes[byte] & (1 << bit) != 0 {
+                set.insert(b);
+            }
+        }
+        set
+    }
+
+    /// The bitmap as u32 words — the layout the PJRT recovery artifact
+    /// consumes (little-endian within words, same bit order as bytes).
+    pub fn to_u32_words(&self) -> Vec<u32> {
+        let mut words = Vec::with_capacity(self.bits.len() * 2);
+        for &w in &self.bits {
+            words.push(w as u32);
+            words.push((w >> 32) as u32);
+        }
+        words.truncate((self.total as usize).div_ceil(32).max(1));
+        words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_methods() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(Method::parse("xor").is_err());
+    }
+
+    #[test]
+    fn record_roundtrip_all_stream_methods() {
+        let blocks = [0u32, 1, 9, 127, 128, 300, 65_535, 1_000_000, u32::MAX];
+        for m in [Method::Char, Method::Int, Method::Enc, Method::Binary] {
+            let mut buf = Vec::new();
+            for &b in &blocks {
+                m.encode_record(b, &mut buf);
+            }
+            assert_eq!(m.decode_stream(&buf), blocks, "method {m:?}");
+        }
+    }
+
+    #[test]
+    fn torn_tail_tolerated() {
+        for m in [Method::Int, Method::Enc, Method::Binary] {
+            let mut buf = Vec::new();
+            m.encode_record(1000, &mut buf);
+            m.encode_record(2000, &mut buf);
+            buf.pop(); // tear the last record
+            let got = m.decode_stream(&buf);
+            assert_eq!(got[0], 1000, "method {m:?}");
+            assert!(got.len() <= 2);
+            if got.len() == 2 {
+                assert_ne!(got[1], 2000, "torn record must not decode to 2000");
+            }
+        }
+        // Char: torn digits parse as a different (prefix) number or are kept;
+        // either way the first record survives.
+        let m = Method::Char;
+        let mut buf = Vec::new();
+        m.encode_record(1234, &mut buf);
+        m.encode_record(5678, &mut buf);
+        buf.truncate(buf.len() - 3); // "1234\n56"
+        let got = m.decode_stream(&buf);
+        assert_eq!(got[0], 1234);
+    }
+
+    #[test]
+    fn region_bytes_ordering_matches_fig7() {
+        // Per-method space for the same file: bit < enc <= int/binary < char.
+        let n = 1024;
+        let char_b = Method::Char.region_bytes(n);
+        let int_b = Method::Int.region_bytes(n);
+        let enc_b = Method::Enc.region_bytes(n);
+        let bin_b = Method::Binary.region_bytes(n);
+        let b8 = Method::Bit8.region_bytes(n);
+        let b64 = Method::Bit64.region_bytes(n);
+        assert!(b8 <= b64);
+        assert!(b64 < enc_b);
+        assert!(enc_b <= int_b + n as usize); // enc worst case 5B vs 4B
+        assert_eq!(int_b, bin_b);
+        assert!(int_b < char_b);
+        assert_eq!(b8, 128);
+        assert_eq!(b64, 128);
+    }
+
+    #[test]
+    fn bitmap_positions() {
+        let m = Method::Bit8;
+        assert_eq!(m.bit_position(0), (0, 0));
+        assert_eq!(m.bit_position(7), (0, 7));
+        assert_eq!(m.bit_position(8), (1, 0));
+        assert_eq!(m.word_range(0), 0..1);
+        assert_eq!(m.word_range(15), 1..2);
+        let m64 = Method::Bit64;
+        assert_eq!(m64.word_range(0), 0..8);
+        assert_eq!(m64.word_range(63), 0..8);
+        assert_eq!(m64.word_range(64), 8..16);
+    }
+
+    #[test]
+    fn completed_set_basics() {
+        let mut s = CompletedSet::new(10);
+        assert!(s.insert(3));
+        assert!(!s.insert(3), "duplicate insert reports false");
+        assert!(s.insert(9));
+        assert!(s.contains(3));
+        assert!(!s.contains(4));
+        assert_eq!(s.count(), 2);
+        assert!(!s.is_complete());
+        assert_eq!(s.pending(), vec![0, 1, 2, 4, 5, 6, 7, 8]);
+        assert_eq!(s.iter_completed().collect::<Vec<_>>(), vec![3, 9]);
+        for b in 0..10 {
+            s.insert(b);
+        }
+        assert!(s.is_complete());
+        assert!(s.pending().is_empty());
+    }
+
+    #[test]
+    fn completed_set_from_stream_ignores_junk() {
+        let s = CompletedSet::from_stream(5, &[0, 2, 2, 99, 4]);
+        assert_eq!(s.count(), 3);
+        assert!(s.contains(4));
+        assert!(!s.contains(3));
+    }
+
+    #[test]
+    fn bitmap_bytes_roundtrip() {
+        let mut s = CompletedSet::new(20);
+        for b in [0, 7, 8, 19] {
+            s.insert(b);
+        }
+        // bytes: bit0+bit7 -> 0x81, bit8 -> 0x01, bit19 -> byte2 bit3 = 0x08
+        let bytes = [0x81u8, 0x01, 0x08];
+        let back = CompletedSet::from_bitmap_bytes(20, &bytes);
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn u32_words_match_popcount() {
+        let mut s = CompletedSet::new(100);
+        for b in (0..100).step_by(3) {
+            s.insert(b);
+        }
+        let words = s.to_u32_words();
+        assert_eq!(words.len(), 4); // ceil(100/32)
+        let pop: u32 = words.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(pop, s.count());
+    }
+
+    #[test]
+    #[should_panic]
+    fn insert_out_of_range_panics() {
+        CompletedSet::new(4).insert(4);
+    }
+}

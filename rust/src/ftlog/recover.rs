@@ -1,0 +1,319 @@
+//! Recovery: parse whatever logger state a fault left on disk back into
+//! per-file completed sets (§5.2.2's source-side half).
+//!
+//! The three mechanisms leave different artifacts:
+//! - File logger: `*.flog` files (header + records/bitmap), one per
+//!   in-flight file. Record streams are *unsorted* — recovery pays the
+//!   parse+dedup cost the paper measures as file logger's recovery
+//!   overhead (Fig 8).
+//! - Transaction/Universal: `index.tidx` + region logs. Regions are
+//!   count-prefixed and sorted; a `DONE` tombstone hides completed files.
+//!
+//! For the bitmap methods the popcounts (completed counts per file) can
+//! be computed through the compiled PJRT recovery artifact — see
+//! [`recovered_counts_pjrt`] — which is the L1/L2 path the resume flow
+//! uses when a runtime is available; [`recover_all`] itself is pure rust
+//! so recovery never *requires* the artifacts.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::codec::{CompletedSet, Method};
+use super::file_logger;
+use super::region::INDEX_NAME;
+use super::{unescape_name, FtConfig, Mechanism};
+
+/// Parse all recoverable per-file completed sets under `cfg.dir`.
+/// Keys are the original (unescaped) transferred-file names.
+pub fn recover_all(cfg: &FtConfig) -> Result<BTreeMap<String, CompletedSet>> {
+    if cfg.mechanism == Mechanism::None {
+        return Ok(BTreeMap::new());
+    }
+    if !cfg.dir.exists() {
+        return Ok(BTreeMap::new());
+    }
+    if cfg.dir.join(INDEX_NAME).exists() {
+        recover_region(&cfg.dir, cfg.method)
+    } else {
+        recover_file_logs(&cfg.dir)
+    }
+}
+
+/// File-logger recovery: scan `*.flog`, parse header + body.
+fn recover_file_logs(dir: &Path) -> Result<BTreeMap<String, CompletedSet>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).context("reading FT log dir")? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.extension().map(|e| e != "flog").unwrap_or(true) {
+            continue;
+        }
+        let mut buf = Vec::new();
+        std::fs::File::open(&path)?.read_to_end(&mut buf)?;
+        let Some((method, total, name, header_len)) = file_logger::decode_header(&buf) else {
+            // Torn header (crash during creation): nothing was logged for
+            // this file that the sink could have durably written *and*
+            // acked, so skipping it is safe (blocks get retransmitted).
+            continue;
+        };
+        let body = &buf[header_len..];
+        let set = if method.is_bitmap() {
+            CompletedSet::from_bitmap_bytes(total, body)
+        } else {
+            CompletedSet::from_stream(total, &method.decode_stream(body))
+        };
+        out.insert(name, set);
+    }
+    Ok(out)
+}
+
+/// Index line for a live file region.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct IndexEntry {
+    log_name: String,
+    total_blocks: u32,
+    offset: u64,
+    region_len: usize,
+}
+
+/// Parse `index.tidx`: later LOG lines override earlier ones (a reused
+/// region re-registers the file); DONE removes the entry.
+fn parse_index(text: &str) -> BTreeMap<String, IndexEntry> {
+    let mut live: BTreeMap<String, IndexEntry> = BTreeMap::new();
+    for line in text.lines() {
+        let mut parts = line.split(' ');
+        match parts.next() {
+            Some("LOG") => {
+                let Some(log_name) = parts.next() else { continue };
+                let Some(escname) = parts.next() else { continue };
+                let Some(name) = unescape_name(escname) else { continue };
+                let (Some(total), Some(offset), Some(len)) = (
+                    parts.next().and_then(|s| s.parse::<u32>().ok()),
+                    parts.next().and_then(|s| s.parse::<u64>().ok()),
+                    parts.next().and_then(|s| s.parse::<usize>().ok()),
+                ) else {
+                    continue; // torn tail line
+                };
+                live.insert(
+                    name,
+                    IndexEntry {
+                        log_name: log_name.to_string(),
+                        total_blocks: total,
+                        offset,
+                        region_len: len,
+                    },
+                );
+            }
+            Some("DONE") => {
+                if let Some(name) = parts.next().and_then(unescape_name_opt) {
+                    live.remove(&name);
+                }
+            }
+            _ => continue,
+        }
+    }
+    live
+}
+
+fn unescape_name_opt(s: &str) -> Option<String> {
+    unescape_name(s)
+}
+
+/// Transaction/universal recovery: index + region decode. `method` is the
+/// session's configured method (a resume runs with the same FT flags as
+/// the interrupted transfer, §5.2) — regions do not self-describe.
+fn recover_region(dir: &Path, method: Method) -> Result<BTreeMap<String, CompletedSet>> {
+    let text = std::fs::read_to_string(dir.join(INDEX_NAME)).context("reading index")?;
+    let live = parse_index(&text);
+
+    // Read each log file once.
+    let mut logs: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+    let mut out = BTreeMap::new();
+    for (name, e) in live {
+        let log = match logs.entry(e.log_name.clone()) {
+            std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                let path = dir.join(&e.log_name);
+                let mut buf = Vec::new();
+                if let Ok(mut f) = std::fs::File::open(&path) {
+                    f.read_to_end(&mut buf)?;
+                }
+                v.insert(buf)
+            }
+        };
+        let start = e.offset as usize;
+        if start >= log.len() {
+            // Region beyond the (possibly truncated) log: nothing durable.
+            out.insert(name, CompletedSet::new(e.total_blocks));
+            continue;
+        }
+        let end = (start + e.region_len).min(log.len());
+        let region = &log[start..end];
+        let set = decode_region(region, e.total_blocks, method);
+        out.insert(name, set);
+    }
+    Ok(out)
+}
+
+/// Decode one region with the session method. Bitmap regions are raw
+/// bitmaps; record regions carry a little-endian u32 count followed by
+/// sorted records. A torn/garbled region decodes to as many prefix
+/// records as are consistent (lost completions are just retransmitted).
+fn decode_region(region: &[u8], total_blocks: u32, method: Method) -> CompletedSet {
+    if method.is_bitmap() {
+        return CompletedSet::from_bitmap_bytes(total_blocks, region);
+    }
+    if region.len() < 4 {
+        return CompletedSet::new(total_blocks);
+    }
+    let count = u32::from_le_bytes(region[..4].try_into().unwrap());
+    if count <= total_blocks {
+        if let Some(set) = try_counted(region, total_blocks, count, method) {
+            return set;
+        }
+    }
+    // Count/record mismatch (torn write): take the valid sorted prefix.
+    let stream = method.decode_stream(&region[4..]);
+    let mut prefix = Vec::new();
+    for &b in &stream {
+        if b >= total_blocks || prefix.last().map(|&p| b <= p).unwrap_or(false) {
+            break;
+        }
+        prefix.push(b);
+    }
+    CompletedSet::from_stream(total_blocks, &prefix)
+}
+
+fn try_counted(
+    region: &[u8],
+    total_blocks: u32,
+    count: u32,
+    method: Method,
+) -> Option<CompletedSet> {
+    let body = &region[4..];
+    let stream = method.decode_stream(body);
+    if stream.len() < count as usize {
+        return None;
+    }
+    let taken = &stream[..count as usize];
+    // Sorted, strictly increasing, in range — the invariant the region
+    // writer maintains. Reject otherwise so we do not misdecode.
+    if taken.windows(2).any(|w| w[0] >= w[1]) {
+        return None;
+    }
+    if taken.iter().any(|&b| b >= total_blocks) {
+        return None;
+    }
+    Some(CompletedSet::from_stream(total_blocks, taken))
+}
+
+/// Bit8/Bit64 resume acceleration: batch the recovered bitmap sets
+/// through the PJRT recovery artifact, returning (completed, pending)
+/// counts per file in the iteration order of `sets`.
+pub fn recovered_counts_pjrt(
+    handle: &crate::runtime::RuntimeHandle,
+    sets: &BTreeMap<String, CompletedSet>,
+) -> Result<BTreeMap<String, (u32, u32)>> {
+    let max_words = handle.manifest.bitmap_words;
+    let mut names = Vec::new();
+    let mut bitmaps = Vec::new();
+    let mut totals = Vec::new();
+    for (name, set) in sets {
+        let mut words = set.to_u32_words();
+        anyhow::ensure!(
+            words.len() <= max_words,
+            "file '{name}' needs {} bitmap words, artifact supports {max_words}",
+            words.len()
+        );
+        words.resize(max_words, 0);
+        names.push(name.clone());
+        bitmaps.push(words);
+        totals.push(set.total());
+    }
+    let (completed, pending) =
+        crate::integrity::pjrt_recovery_summary(handle, &bitmaps, &totals)?;
+    Ok(names
+        .into_iter()
+        .zip(completed.into_iter().zip(pending))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_index_basic() {
+        let text = "LOG u.ulog a.dat 10 0 44\nLOG u.ulog b.dat 5 44 24\nDONE a.dat\n";
+        let live = parse_index(text);
+        assert_eq!(live.len(), 1);
+        let e = &live["b.dat"];
+        assert_eq!(e.total_blocks, 5);
+        assert_eq!(e.offset, 44);
+        assert_eq!(e.region_len, 24);
+    }
+
+    #[test]
+    fn parse_index_reregistration_overrides() {
+        let text = "LOG u.ulog f 10 0 44\nDONE f\nLOG u.ulog f 10 100 44\n";
+        let live = parse_index(text);
+        assert_eq!(live["f"].offset, 100);
+    }
+
+    #[test]
+    fn parse_index_tolerates_torn_tail() {
+        let text = "LOG u.ulog a 10 0 44\nLOG u.ulog b 5 4";
+        let live = parse_index(text);
+        assert_eq!(live.len(), 1);
+        assert!(live.contains_key("a"));
+    }
+
+    #[test]
+    fn parse_index_escaped_names() {
+        let esc = crate::ftlog::escape_name("dir/with space.dat");
+        let text = format!("LOG u.ulog {esc} 3 0 16\n");
+        let live = parse_index(&text);
+        assert!(live.contains_key("dir/with space.dat"));
+    }
+
+    #[test]
+    fn counted_decode_rejects_unsorted() {
+        let mut region = 2u32.to_le_bytes().to_vec();
+        Method::Int.encode_record(5, &mut region);
+        Method::Int.encode_record(3, &mut region); // unsorted
+        assert!(try_counted(&region, 10, 2, Method::Int).is_none());
+    }
+
+    #[test]
+    fn counted_decode_accepts_sorted() {
+        let mut region = 3u32.to_le_bytes().to_vec();
+        for b in [1u32, 4, 9] {
+            Method::Enc.encode_record(b, &mut region);
+        }
+        let set = try_counted(&region, 10, 3, Method::Enc).unwrap();
+        assert_eq!(set.iter_completed().collect::<Vec<_>>(), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn empty_dir_recovers_nothing() {
+        let dir = std::env::temp_dir().join(format!(
+            "ftlads-recover-empty-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = FtConfig::new(Mechanism::File, Method::Int, &dir);
+        assert!(recover_all(&cfg).unwrap().is_empty());
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(recover_all(&cfg).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mechanism_none_recovers_nothing() {
+        let cfg = FtConfig::new(Mechanism::None, Method::Int, "/nonexistent-xyz");
+        assert!(recover_all(&cfg).unwrap().is_empty());
+    }
+}

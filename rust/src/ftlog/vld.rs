@@ -1,0 +1,126 @@
+//! Variable-Length Datatype (VLD) codec — the paper's `Enc` method.
+//!
+//! The paper describes `Enc` as "successful block information with the
+//! char type … encoded using a Variable Length Datatype (VLD) library
+//! written by one of the authors". The library itself is not published;
+//! we use LEB128 (the canonical varint): 7 data bits per byte, high bit =
+//! continuation. Block ids < 128 take 1 byte, < 16384 take 2, etc. —
+//! strictly smaller than both the `Char` (ASCII decimal) and `Int`
+//! (fixed 4-byte) encodings for realistic block counts, which is the
+//! property the paper's Fig 7 relies on.
+
+/// Append the varint encoding of `v` to `out`; returns bytes written.
+pub fn encode_u32(v: u32, out: &mut Vec<u8>) -> usize {
+    let mut v = v;
+    let mut n = 0;
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return n + 1;
+        }
+        out.push(byte | 0x80);
+        n += 1;
+    }
+}
+
+/// Decode one varint from `buf`; returns `(value, bytes_consumed)` or
+/// `None` on truncation/overflow.
+pub fn decode_u32(buf: &[u8]) -> Option<(u32, usize)> {
+    let mut v: u64 = 0;
+    for (i, &b) in buf.iter().enumerate().take(5) {
+        v |= ((b & 0x7f) as u64) << (7 * i);
+        if b & 0x80 == 0 {
+            if v > u32::MAX as u64 {
+                return None;
+            }
+            return Some((v as u32, i + 1));
+        }
+    }
+    None // truncated or > 5 bytes
+}
+
+/// Encoded size of `v` without materializing it.
+pub fn encoded_len(v: u32) -> usize {
+    match v {
+        0..=0x7f => 1,
+        0x80..=0x3fff => 2,
+        0x4000..=0x1f_ffff => 3,
+        0x20_0000..=0xfff_ffff => 4,
+        _ => 5,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_boundaries() {
+        for v in [
+            0u32,
+            1,
+            0x7f,
+            0x80,
+            0x3fff,
+            0x4000,
+            0x1f_ffff,
+            0x20_0000,
+            0xfff_ffff,
+            0x1000_0000,
+            u32::MAX,
+        ] {
+            let mut buf = Vec::new();
+            let n = encode_u32(v, &mut buf);
+            assert_eq!(n, buf.len());
+            assert_eq!(n, encoded_len(v), "len mismatch for {v}");
+            let (back, used) = decode_u32(&buf).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(used, n);
+        }
+    }
+
+    #[test]
+    fn decode_stream() {
+        let mut buf = Vec::new();
+        for v in [3u32, 300, 70_000, 5] {
+            encode_u32(v, &mut buf);
+        }
+        let mut pos = 0;
+        let mut out = Vec::new();
+        while pos < buf.len() {
+            let (v, n) = decode_u32(&buf[pos..]).unwrap();
+            out.push(v);
+            pos += n;
+        }
+        assert_eq!(out, vec![3, 300, 70_000, 5]);
+    }
+
+    #[test]
+    fn truncated_returns_none() {
+        let mut buf = Vec::new();
+        encode_u32(300, &mut buf); // 2 bytes
+        assert!(decode_u32(&buf[..1]).is_none());
+        assert!(decode_u32(&[]).is_none());
+    }
+
+    #[test]
+    fn overlong_rejected() {
+        // 6 continuation bytes: invalid for u32.
+        assert!(decode_u32(&[0x80, 0x80, 0x80, 0x80, 0x80, 0x01]).is_none());
+        // 5 bytes encoding > u32::MAX.
+        assert!(decode_u32(&[0xff, 0xff, 0xff, 0xff, 0x7f]).is_none());
+    }
+
+    #[test]
+    fn smaller_than_char_and_int() {
+        // The Fig 7 property: enc <= int (4B) and enc <= char for ids
+        // that fit in 3 decimal digits or fewer bytes.
+        for v in 0..100_000u32 {
+            let char_len = v.to_string().len() + 1; // + '\n'
+            assert!(encoded_len(v) <= 4);
+            assert!(encoded_len(v) <= char_len);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Native (pure-rust) implementation of the integrity math.
+//!
+//! Bit-identical to `python/compile/kernels/ref.py` — the cross-language
+//! contract: `digest(data)` here equals `digest_ref` there for the same
+//! words, and both equal the Pallas kernel and the compiled PJRT artifact.
+//!
+//! The digest of one object (little-endian u32 words `d[0..W]`) is
+//!
+//! ```text
+//! A = Σ d[i]            (mod 2^32)
+//! B = Σ (W - i)·d[i]    (mod 2^32)
+//! ```
+//!
+//! `A` detects value changes, `B` detects reorderings (it is
+//! position-weighted). Both sums are wrapping, so partial digests combine —
+//! which is also what lets the Pallas kernel tile the reduction.
+
+/// A two-word object digest `[A, B]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Digest {
+    pub a: u32,
+    pub b: u32,
+}
+
+impl Digest {
+    pub fn as_u64(self) -> u64 {
+        ((self.b as u64) << 32) | self.a as u64
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        Digest { a: v as u32, b: (v >> 32) as u32 }
+    }
+}
+
+/// Digest a byte buffer. The buffer is interpreted as little-endian u32
+/// words; a trailing partial word is zero-padded (same convention the rust
+/// coordinator uses when padding an object to the artifact's W).
+pub fn digest_bytes(data: &[u8]) -> Digest {
+    let w = (data.len() + 3) / 4;
+    let mut a = 0u32;
+    let mut b = 0u32;
+    let chunks = data.chunks_exact(4);
+    let rem = chunks.remainder();
+    let mut i = 0u32;
+    let wt = w as u32;
+    for c in chunks {
+        let v = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        a = a.wrapping_add(v);
+        b = b.wrapping_add(wt.wrapping_sub(i).wrapping_mul(v));
+        i += 1;
+    }
+    if !rem.is_empty() {
+        let mut last = [0u8; 4];
+        last[..rem.len()].copy_from_slice(rem);
+        let v = u32::from_le_bytes(last);
+        a = a.wrapping_add(v);
+        b = b.wrapping_add(wt.wrapping_sub(i).wrapping_mul(v));
+    }
+    Digest { a, b }
+}
+
+/// Digest a u32 word slice directly (the shape the PJRT artifact sees).
+pub fn digest_words(words: &[u32]) -> Digest {
+    let wt = words.len() as u32;
+    let mut a = 0u32;
+    let mut b = 0u32;
+    for (i, &v) in words.iter().enumerate() {
+        a = a.wrapping_add(v);
+        b = b.wrapping_add(wt.wrapping_sub(i as u32).wrapping_mul(v));
+    }
+    Digest { a, b }
+}
+
+/// Digest of a buffer that was zero-padded from `len` bytes up to
+/// `padded_words` u32 words. Zero words contribute nothing to either sum,
+/// so the digest over the padded buffer equals the digest over the original
+/// bytes *computed at the padded width*. This helper computes that without
+/// materializing the padding.
+pub fn digest_bytes_padded(data: &[u8], padded_words: usize) -> Digest {
+    debug_assert!((data.len() + 3) / 4 <= padded_words);
+    let wt = padded_words as u32;
+    let mut a = 0u32;
+    let mut b = 0u32;
+    let chunks = data.chunks_exact(4);
+    let rem = chunks.remainder();
+    let mut i = 0u32;
+    for c in chunks {
+        let v = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        a = a.wrapping_add(v);
+        b = b.wrapping_add(wt.wrapping_sub(i).wrapping_mul(v));
+        i += 1;
+    }
+    if !rem.is_empty() {
+        let mut last = [0u8; 4];
+        last[..rem.len()].copy_from_slice(rem);
+        let v = u32::from_le_bytes(last);
+        a = a.wrapping_add(v);
+        b = b.wrapping_add(wt.wrapping_sub(i).wrapping_mul(v));
+    }
+    Digest { a, b }
+}
+
+/// Per-row popcount of bitmap words — the native mirror of the recovery
+/// kernel (`recovery.popcount`).
+pub fn popcount_words(words: &[u32]) -> u32 {
+    words.iter().map(|w| w.count_ones()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_zeros_is_zero() {
+        assert_eq!(digest_bytes(&[0u8; 64]), Digest { a: 0, b: 0 });
+        assert_eq!(digest_words(&[0u32; 16]), Digest { a: 0, b: 0 });
+    }
+
+    #[test]
+    fn digest_single_word() {
+        // W=1, d[0]=1: A=1, B=(1-0)*1=1.
+        assert_eq!(digest_words(&[1]), Digest { a: 1, b: 1 });
+        // W=4, d[0]=1: B = 4.
+        assert_eq!(digest_words(&[1, 0, 0, 0]), Digest { a: 1, b: 4 });
+        // W=4, d[3]=1: weight of last word is 1.
+        assert_eq!(digest_words(&[0, 0, 0, 1]), Digest { a: 1, b: 1 });
+    }
+
+    #[test]
+    fn digest_bytes_matches_words() {
+        let bytes: Vec<u8> = (0..64u8).collect();
+        let words: Vec<u32> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(digest_bytes(&bytes), digest_words(&words));
+    }
+
+    #[test]
+    fn digest_partial_word_zero_pads() {
+        // 5 bytes -> 2 words, second is [4, 0, 0, 0].
+        let d = digest_bytes(&[1, 0, 0, 0, 4]);
+        assert_eq!(d, digest_words(&[1, 4]));
+    }
+
+    #[test]
+    fn digest_detects_swap() {
+        let x = digest_words(&[5, 0, 9, 0]);
+        let y = digest_words(&[9, 0, 5, 0]);
+        assert_eq!(x.a, y.a);
+        assert_ne!(x.b, y.b);
+    }
+
+    #[test]
+    fn digest_wraps() {
+        let words = vec![u32::MAX; 1024];
+        let d = digest_words(&words);
+        // A = 1024 * (2^32 - 1) mod 2^32 = -1024 mod 2^32.
+        assert_eq!(d.a, 0u32.wrapping_sub(1024));
+    }
+
+    #[test]
+    fn padded_equals_materialized() {
+        let data: Vec<u8> = (0..999u32).map(|i| (i * 7) as u8).collect();
+        let padded_words = 512;
+        let mut full = data.clone();
+        full.resize(padded_words * 4, 0);
+        let words: Vec<u32> = full
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(digest_bytes_padded(&data, padded_words), digest_words(&words));
+    }
+
+    #[test]
+    fn digest_u64_roundtrip() {
+        let d = Digest { a: 0xdeadbeef, b: 0x12345678 };
+        assert_eq!(Digest::from_u64(d.as_u64()), d);
+    }
+
+    #[test]
+    fn popcount() {
+        assert_eq!(popcount_words(&[0]), 0);
+        assert_eq!(popcount_words(&[u32::MAX; 3]), 96);
+        assert_eq!(popcount_words(&[0b1011, 0b1]), 4);
+    }
+}

@@ -1,0 +1,36 @@
+//! FT-LADS: Fault-Tolerant Object-Logging based Big Data Transfer System
+//! using Layout-Aware Data Scheduling.
+//!
+//! Reproduction of Kasu et al., IEEE Access 2019 (CS.DC 2018),
+//! DOI 10.1109/ACCESS.2019.2905158 — see DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for the paper-vs-measured results.
+//!
+//! Architecture (three layers, python never on the request path):
+//!
+//! - **L3 (this crate)** — the LADS coordinator (master/comm/IO threads at
+//!   source and sink, per-OST work queues, congestion-aware scheduling),
+//!   the FT object-logging subsystem (File/Transaction/Universal × six
+//!   encodings), fault injection + resume, the bbcp baseline, and all
+//!   substrates (PFS simulator, CCI-like transport, metrics, config).
+//! - **L2/L1 (python/compile, build time)** — JAX integrity graphs calling
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! - **runtime** — loads those artifacts via the PJRT C API (`xla` crate)
+//!   and executes them from the sink's verify path and the source's
+//!   recovery path.
+
+pub mod baseline;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod fault;
+pub mod ftlog;
+pub mod integrity;
+pub mod metrics;
+pub mod net;
+pub mod pfs;
+pub mod runtime;
+pub mod stats;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+pub mod cli;

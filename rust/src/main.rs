@@ -1,0 +1,470 @@
+//! `ftlads` — CLI launcher for the FT-LADS reproduction.
+//!
+//! Subcommands:
+//!   transfer   run a transfer on a simulated PFS pair (one process)
+//!   bbcp       same workload through the bbcp-model baseline
+//!   sink       start a sink node listening on TCP (two-process mode)
+//!   source     run a source node against a TCP sink
+//!   recover    inspect FT logger state left by an interrupted run
+//!   doctor     environment check: PJRT client, artifacts, manifest
+//!
+//! Examples:
+//!   ftlads transfer --workload big --files 20 --file-size 4M \
+//!       --mechanism universal --method bit64 --fault 0.4
+//!   ftlads transfer --workload big --files 20 --file-size 4M --resume
+//!   ftlads doctor --artifacts artifacts
+//!
+//! Any `Config` field can be overridden with `--set key=value`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use ftlads::baseline::bbcp::{run_bbcp, BbcpConfig};
+use ftlads::cli::Args;
+use ftlads::config::{parse_bytes, Config};
+use ftlads::coordinator::{self, SimEnv, TransferSpec};
+use ftlads::fault::FaultPlan;
+use ftlads::ftlog::{self, Mechanism, Method};
+use ftlads::integrity::IntegrityMode;
+use ftlads::net::{tcp, Endpoint, FaultController, Side};
+use ftlads::pfs::disk::DiskPfs;
+use ftlads::pfs::Pfs;
+use ftlads::runtime::RuntimeService;
+use ftlads::util::{fmt_bytes, fmt_duration};
+use ftlads::workload::{self, Workload};
+
+const FLAGS: [&str; 3] = ["resume", "verbose", "json"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("ftlads: error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv, &FLAGS)?;
+    match args.subcommand.as_deref() {
+        Some("transfer") => cmd_transfer(&args),
+        Some("bbcp") => cmd_bbcp(&args),
+        Some("sink") => cmd_sink(&args),
+        Some("source") => cmd_source(&args),
+        Some("recover") => cmd_recover(&args),
+        Some("doctor") => cmd_doctor(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (see --help in README)"),
+        None => {
+            print_usage();
+            Ok(0)
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ftlads — Fault-Tolerant Layout-Aware Data Scheduler (paper reproduction)\n\
+         \n\
+         usage: ftlads <transfer|bbcp|sink|source|recover|doctor> [options]\n\
+         \n\
+         common options:\n\
+           --mechanism none|file|transaction|universal   FT logger mechanism\n\
+           --method char|int|enc|binary|bit8|bit64       FT logging method\n\
+           --integrity off|native|pjrt                   digest verification\n\
+           --workload big|small|mixed  --files N  --file-size BYTES\n\
+           --fault FRAC [--fault-side source|sink]       inject fault at FRAC\n\
+           --resume                                      resume per FT logs\n\
+           --config FILE  --set key=value                config overrides\n\
+         \n\
+         See README.md for the full reference."
+    );
+}
+
+/// Shared config assembly: defaults < --config file < --set overrides <
+/// dedicated flags.
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = Config::default();
+    if let Some(path) = args.get("config") {
+        cfg.apply_file(std::path::Path::new(path))?;
+    }
+    for kv in args.get_all("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+        cfg.apply_kv(k.trim(), v.trim())?;
+    }
+    if let Some(m) = args.get("mechanism") {
+        cfg.mechanism = Mechanism::parse(m)?;
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m)?;
+    }
+    if let Some(i) = args.get("integrity") {
+        cfg.integrity = IntegrityMode::parse(i)?;
+    }
+    if let Some(d) = args.get("ft-dir") {
+        cfg.ft_dir = d.into();
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.into();
+    }
+    if let Some(v) = args.get("io-threads") {
+        cfg.io_threads = v.parse().context("--io-threads")?;
+    }
+    if let Some(v) = args.get("object-size") {
+        cfg.object_size = parse_bytes(v)?;
+    }
+    if let Some(v) = args.get("time-scale") {
+        cfg.time_scale = v.parse().context("--time-scale")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn build_workload(args: &Args, cfg: &Config) -> Result<Workload> {
+    let kind = args.get("workload").unwrap_or("big");
+    let files: usize = args.get_parse("files", 16usize)?;
+    let default_size = match kind {
+        "small" => cfg.object_size,
+        _ => 16 * cfg.object_size,
+    };
+    let file_size = match args.get("file-size") {
+        Some(v) => parse_bytes(v)?,
+        None => default_size,
+    };
+    Ok(match kind {
+        "big" => workload::big_workload(files, file_size),
+        "small" => workload::small_workload(files, file_size),
+        "mixed" => workload::mixed_workload(files, file_size, cfg.seed),
+        other => bail!("unknown workload '{other}' (big|small|mixed)"),
+    })
+}
+
+fn build_fault(args: &Args) -> Result<FaultPlan> {
+    match args.get("fault") {
+        None => Ok(FaultPlan::none()),
+        Some(v) => {
+            let frac: f64 = v.parse().context("--fault")?;
+            let side = match args.get("fault-side").unwrap_or("source") {
+                "source" => Side::Source,
+                "sink" => Side::Sink,
+                other => bail!("--fault-side must be source|sink, got '{other}'"),
+            };
+            Ok(FaultPlan::at_fraction(frac, side))
+        }
+    }
+}
+
+fn maybe_runtime(
+    cfg: &Config,
+) -> Result<Option<(RuntimeService, ftlads::runtime::RuntimeHandle)>> {
+    if cfg.integrity != IntegrityMode::Pjrt {
+        return Ok(None);
+    }
+    let service = RuntimeService::start(&cfg.artifacts_dir).with_context(|| {
+        format!(
+            "starting PJRT runtime from {} (run `make artifacts`?)",
+            cfg.artifacts_dir.display()
+        )
+    })?;
+    let handle = service.handle();
+    Ok(Some((service, handle)))
+}
+
+fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
+    if json {
+        use ftlads::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("label".into(), Json::Str(label.into()));
+        m.insert("completed".into(), Json::Bool(out.completed));
+        m.insert(
+            "fault".into(),
+            out.fault.clone().map(Json::Str).unwrap_or(Json::Null),
+        );
+        m.insert("elapsed_s".into(), Json::Num(out.elapsed.as_secs_f64()));
+        m.insert("payload_bytes".into(), Json::Num(out.payload_bytes as f64));
+        m.insert(
+            "throughput_mbps".into(),
+            Json::Num(out.throughput_bytes_per_sec() / 1e6),
+        );
+        m.insert("objects_sent".into(), Json::Num(out.source.objects_sent as f64));
+        m.insert(
+            "objects_synced".into(),
+            Json::Num(out.source.objects_synced as f64),
+        );
+        m.insert(
+            "objects_skipped_resume".into(),
+            Json::Num(out.source.objects_skipped_resume as f64),
+        );
+        m.insert(
+            "failed_verify".into(),
+            Json::Num(out.sink.objects_failed_verify as f64),
+        );
+        m.insert("cpu_percent".into(), Json::Num(out.resources.cpu_percent));
+        m.insert(
+            "peak_rss_bytes".into(),
+            Json::Num(out.resources.peak_rss_bytes as f64),
+        );
+        m.insert(
+            "log_peak_bytes".into(),
+            Json::Num(out.log_space.peak_bytes as f64),
+        );
+        println!("{}", Json::Obj(m));
+        return;
+    }
+    println!("== {label} ==");
+    println!("  completed        : {}", out.completed);
+    if let Some(f) = &out.fault {
+        println!("  fault            : {f}");
+    }
+    println!("  elapsed          : {}", fmt_duration(out.elapsed));
+    println!(
+        "  payload          : {} ({:.1} MB/s)",
+        fmt_bytes(out.payload_bytes),
+        out.throughput_bytes_per_sec() / 1e6
+    );
+    println!(
+        "  objects          : sent {}  synced {}  skipped(resume) {}  failed-verify {}",
+        out.source.objects_sent,
+        out.source.objects_synced,
+        out.source.objects_skipped_resume,
+        out.sink.objects_failed_verify
+    );
+    println!(
+        "  files            : completed {}  skipped(resume) {}",
+        out.source.files_completed, out.source.files_skipped_resume
+    );
+    println!(
+        "  cpu              : {:.1}% of one core   rss peak {}",
+        out.resources.cpu_percent,
+        fmt_bytes(out.resources.peak_rss_bytes)
+    );
+    println!(
+        "  ft log space     : peak {}  written {}  appends {}",
+        fmt_bytes(out.log_space.peak_bytes),
+        fmt_bytes(out.log_space.bytes_written),
+        out.log_space.appends
+    );
+    println!(
+        "  rma stalls(sink) : {} ({} ms waiting)",
+        out.rma_stalls.0,
+        out.rma_stalls.1 / 1_000_000
+    );
+}
+
+fn cmd_transfer(args: &Args) -> Result<i32> {
+    let cfg = build_config(args)?;
+    let wl = build_workload(args, &cfg)?;
+    let fault = build_fault(args)?;
+    let runtime = maybe_runtime(&cfg)?;
+    println!(
+        "workload {}: {} files, {} total, {} objects @ {}",
+        wl.name,
+        wl.file_count(),
+        fmt_bytes(wl.total_bytes()),
+        wl.total_objects(cfg.object_size),
+        fmt_bytes(cfg.object_size),
+    );
+    let env = SimEnv::new(cfg, &wl);
+    let spec = TransferSpec {
+        files: env.files.clone(),
+        resume: args.flag("resume"),
+        fault,
+    };
+    let out = env.run_with_runtime(&spec, runtime.as_ref().map(|(_, h)| h.clone()))?;
+    print_outcome(
+        &format!(
+            "FT-LADS transfer [{} / {} / integrity={}]",
+            env.cfg.mechanism.as_str(),
+            env.cfg.method.as_str(),
+            env.cfg.integrity.as_str()
+        ),
+        &out,
+        args.flag("json"),
+    );
+    if out.completed {
+        env.verify_sink_complete()
+            .context("post-transfer verification")?;
+        println!("sink dataset verified: every object present and intact");
+    }
+    Ok(if out.completed { 0 } else { 2 })
+}
+
+fn cmd_bbcp(args: &Args) -> Result<i32> {
+    let cfg = build_config(args)?;
+    let wl = build_workload(args, &cfg)?;
+    let fault = build_fault(args)?;
+    let env = SimEnv::new(cfg, &wl);
+    let bcfg = BbcpConfig {
+        streams: args.get_parse("streams", 2usize)?,
+        window_bytes: parse_bytes(args.get("window").unwrap_or("8M"))?,
+        block_size: env.cfg.object_size,
+        ckpt_dir: env.cfg.ft_dir.join("bbcp"),
+    };
+    let out = run_bbcp(
+        &env.cfg,
+        &bcfg,
+        env.source.clone(),
+        env.sink.clone(),
+        &env.files,
+        fault,
+    )?;
+    print_outcome("bbcp baseline", &out, args.flag("json"));
+    Ok(if out.completed { 0 } else { 2 })
+}
+
+fn cmd_sink(args: &Args) -> Result<i32> {
+    let cfg = build_config(args)?;
+    let addr = args.get("listen").unwrap_or("127.0.0.1:7070");
+    let root = args
+        .get("root")
+        .ok_or_else(|| anyhow::anyhow!("sink requires --root DIR"))?;
+    let pfs: Arc<dyn Pfs> = Arc::new(DiskPfs::new(
+        std::path::Path::new(root),
+        cfg.layout(),
+        cfg.ost_config(),
+    )?);
+    let runtime = maybe_runtime(&cfg)?;
+    println!("sink: listening on {addr}, PFS root {root}");
+    let listener = tcp::listen(addr)?;
+    let ep = tcp::accept(&listener, cfg.wire(), FaultController::unarmed())?;
+    let ep: Arc<dyn Endpoint> = Arc::new(ep);
+    let node = coordinator::sink::spawn_sink(
+        &cfg,
+        pfs,
+        ep,
+        runtime.as_ref().map(|(_, h)| h.clone()),
+    )?;
+    let report = node.join();
+    match report.fault {
+        None => {
+            println!(
+                "sink: transfer complete ({} files)",
+                report.counters.files_completed
+            );
+            Ok(0)
+        }
+        Some(f) => {
+            println!("sink: ended with fault: {f}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_source(args: &Args) -> Result<i32> {
+    let cfg = build_config(args)?;
+    let addr = args
+        .get("connect")
+        .unwrap_or("127.0.0.1:7070")
+        .parse()
+        .context("--connect address")?;
+    let root = args
+        .get("root")
+        .ok_or_else(|| anyhow::anyhow!("source requires --root DIR"))?;
+    let pfs = DiskPfs::new(std::path::Path::new(root), cfg.layout(), cfg.ost_config())?;
+    let files = {
+        let names = args.get_all("file");
+        if names.is_empty() {
+            pfs.list()
+        } else {
+            names.into_iter().map(|s| s.to_string()).collect()
+        }
+    };
+    anyhow::ensure!(!files.is_empty(), "no files to transfer under {root}");
+    let ep = tcp::connect(addr, cfg.wire(), FaultController::unarmed())?;
+    let ep: Arc<dyn Endpoint> = Arc::new(ep);
+    let spec = TransferSpec {
+        files,
+        resume: args.flag("resume"),
+        fault: FaultPlan::none(),
+    };
+    let report = coordinator::source::run_source(&cfg, Arc::new(pfs), ep, &spec)?;
+    match report.fault {
+        None => {
+            println!(
+                "source: transfer complete ({} files, {} objects synced)",
+                report.files_done, report.counters.objects_synced
+            );
+            Ok(0)
+        }
+        Some(f) => {
+            println!("source: ended with fault: {f} — rerun with --resume");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_recover(args: &Args) -> Result<i32> {
+    let cfg = build_config(args)?;
+    let recovered = ftlog::recover::recover_all(&cfg.ft())?;
+    if recovered.is_empty() {
+        println!(
+            "no recoverable FT state under {} (mechanism {})",
+            cfg.ft_dir.display(),
+            cfg.mechanism.as_str()
+        );
+        return Ok(0);
+    }
+    println!(
+        "{} in-flight file(s) under {}:",
+        recovered.len(),
+        cfg.ft_dir.display()
+    );
+    for (name, set) in &recovered {
+        println!(
+            "  {name}: {}/{} objects durable, {} pending",
+            set.count(),
+            set.total(),
+            set.total() - set.count()
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_doctor(args: &Args) -> Result<i32> {
+    let cfg = build_config(args)?;
+    println!("ftlads doctor");
+    println!(
+        "  config           : ok ({} OSTs, {} IO threads)",
+        cfg.ost_count, cfg.io_threads
+    );
+    match ftlads::runtime::pjrt_available() {
+        Ok(p) => println!("  PJRT client      : ok (platform {p})"),
+        Err(e) => println!("  PJRT client      : FAILED ({e})"),
+    }
+    let dir = &cfg.artifacts_dir;
+    match ftlads::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!(
+                "  artifacts        : ok ({} entries, object {} x batch {})",
+                m.entries.len(),
+                fmt_bytes(m.object_bytes as u64),
+                m.digest_batch
+            );
+            match RuntimeService::start(dir) {
+                Ok(svc) => {
+                    let h = svc.handle();
+                    let graphs = h.manifest.entries.keys().cloned().collect::<Vec<_>>();
+                    println!("  compile          : ok ({})", graphs.join(", "));
+                    let b = h.manifest.digest_batch;
+                    let w = h.manifest.object_words;
+                    let out = h.execute_u32("digest", vec![vec![0u32; b * w]])?;
+                    anyhow::ensure!(
+                        out[0].iter().all(|&x| x == 0),
+                        "zero-batch digest not zero"
+                    );
+                    println!("  execute          : ok (zero-batch digest verified)");
+                }
+                Err(e) => println!("  compile          : FAILED ({e})"),
+            }
+        }
+        Err(e) => println!(
+            "  artifacts        : missing under {} ({e}) — run `make artifacts`",
+            dir.display()
+        ),
+    }
+    Ok(0)
+}

@@ -1,0 +1,197 @@
+//! Run metrics: wall time, CPU load, memory, transfer counters.
+//!
+//! Figures 5 and 6 report three axes per (mechanism, method): total
+//! transfer time, CPU load while transferring, and memory load. CPU and
+//! RSS are sampled from `/proc/self` by a background sampler thread at a
+//! fixed cadence, matching how one would measure the paper's C tool with
+//! `pidstat`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Counters a transfer session updates as it runs.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub objects_sent: AtomicU64,
+    pub objects_synced: AtomicU64,
+    pub objects_failed_verify: AtomicU64,
+    pub objects_skipped_resume: AtomicU64,
+    pub files_completed: AtomicU64,
+    pub files_skipped_resume: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub log_appends: AtomicU64,
+    pub log_bytes: AtomicU64,
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            objects_sent: self.objects_sent.load(Ordering::Relaxed),
+            objects_synced: self.objects_synced.load(Ordering::Relaxed),
+            objects_failed_verify: self.objects_failed_verify.load(Ordering::Relaxed),
+            objects_skipped_resume: self.objects_skipped_resume.load(Ordering::Relaxed),
+            files_completed: self.files_completed.load(Ordering::Relaxed),
+            files_skipped_resume: self.files_skipped_resume.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            log_appends: self.log_appends.load(Ordering::Relaxed),
+            log_bytes: self.log_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub objects_sent: u64,
+    pub objects_synced: u64,
+    pub objects_failed_verify: u64,
+    pub objects_skipped_resume: u64,
+    pub files_completed: u64,
+    pub files_skipped_resume: u64,
+    pub bytes_sent: u64,
+    pub bytes_written: u64,
+    pub log_appends: u64,
+    pub log_bytes: u64,
+}
+
+/// One `/proc/self` sample.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProcSample {
+    /// Cumulative user+sys jiffies of the process.
+    pub cpu_jiffies: u64,
+    /// Resident set size, bytes.
+    pub rss_bytes: u64,
+    pub at: f64, // seconds since sampler start
+}
+
+/// Read cumulative CPU jiffies (utime+stime) and RSS from /proc/self.
+pub fn read_proc_self() -> ProcSample {
+    let stat = std::fs::read_to_string("/proc/self/stat").unwrap_or_default();
+    // comm can contain spaces; fields after the closing paren are stable.
+    let after = stat.rsplit_once(')').map(|x| x.1).unwrap_or("");
+    let fields: Vec<&str> = after.split_whitespace().collect();
+    // fields[11]=utime, fields[12]=stime, fields[21]=rss pages
+    // (1-based stat fields 14, 15, 24 minus the 2 consumed + comm).
+    let utime: u64 = fields.get(11).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let stime: u64 = fields.get(12).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let rss_pages: u64 = fields.get(21).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let page = unsafe { libc::sysconf(libc::_SC_PAGESIZE) } as u64;
+    ProcSample { cpu_jiffies: utime + stime, rss_bytes: rss_pages * page, at: 0.0 }
+}
+
+/// Background sampler: records CPU% (of one core) and RSS over a run.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<Vec<ProcSample>>>,
+    started: Instant,
+}
+
+impl Sampler {
+    pub fn start(period: Duration) -> Sampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let started = Instant::now();
+        let handle = std::thread::Builder::new()
+            .name("metrics-sampler".into())
+            .spawn(move || {
+                let mut samples = Vec::new();
+                let t0 = Instant::now();
+                while !stop2.load(Ordering::Relaxed) {
+                    let mut s = read_proc_self();
+                    s.at = t0.elapsed().as_secs_f64();
+                    samples.push(s);
+                    std::thread::sleep(period);
+                }
+                let mut s = read_proc_self();
+                s.at = t0.elapsed().as_secs_f64();
+                samples.push(s);
+                samples
+            })
+            .expect("spawn sampler");
+        Sampler { stop, handle: Some(handle), started }
+    }
+
+    /// Stop and reduce to a [`ResourceReport`].
+    pub fn finish(mut self) -> ResourceReport {
+        self.stop.store(true, Ordering::Relaxed);
+        let samples = self
+            .handle
+            .take()
+            .unwrap()
+            .join()
+            .unwrap_or_default();
+        let wall = self.started.elapsed();
+        ResourceReport::from_samples(&samples, wall)
+    }
+}
+
+/// CPU/memory summary of one run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResourceReport {
+    pub wall: Duration,
+    /// Average CPU utilization over the run, in percent of one core
+    /// (can exceed 100 with multiple threads).
+    pub cpu_percent: f64,
+    pub peak_rss_bytes: u64,
+    pub mean_rss_bytes: u64,
+}
+
+impl ResourceReport {
+    fn from_samples(samples: &[ProcSample], wall: Duration) -> ResourceReport {
+        if samples.len() < 2 {
+            return ResourceReport { wall, ..Default::default() };
+        }
+        let first = samples.first().unwrap();
+        let last = samples.last().unwrap();
+        let jiffies = last.cpu_jiffies.saturating_sub(first.cpu_jiffies);
+        let hz = unsafe { libc::sysconf(libc::_SC_CLK_TCK) } as f64;
+        let span = (last.at - first.at).max(1e-9);
+        let cpu_percent = (jiffies as f64 / hz) / span * 100.0;
+        let peak = samples.iter().map(|s| s.rss_bytes).max().unwrap_or(0);
+        let mean =
+            samples.iter().map(|s| s.rss_bytes as u128).sum::<u128>() / samples.len() as u128;
+        ResourceReport { wall, cpu_percent, peak_rss_bytes: peak, mean_rss_bytes: mean as u64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proc_sample_reads_something() {
+        let s = read_proc_self();
+        assert!(s.rss_bytes > 0, "rss should be nonzero");
+    }
+
+    #[test]
+    fn sampler_measures_busy_loop() {
+        let sampler = Sampler::start(Duration::from_millis(10));
+        // Burn ~80ms of CPU.
+        let t0 = Instant::now();
+        let mut x = 0u64;
+        while t0.elapsed() < Duration::from_millis(80) {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+        }
+        std::hint::black_box(x);
+        let report = sampler.finish();
+        assert!(report.wall >= Duration::from_millis(75));
+        assert!(report.peak_rss_bytes > 0);
+        // A busy loop should register noticeable CPU (jiffy granularity is
+        // 10ms, so keep the bar low but nonzero).
+        assert!(report.cpu_percent > 10.0, "cpu {}%", report.cpu_percent);
+    }
+
+    #[test]
+    fn counters_snapshot() {
+        let c = Counters::default();
+        c.objects_sent.fetch_add(3, Ordering::Relaxed);
+        c.bytes_sent.fetch_add(999, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.objects_sent, 3);
+        assert_eq!(s.bytes_sent, 999);
+        assert_eq!(s.objects_synced, 0);
+    }
+}

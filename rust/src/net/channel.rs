@@ -1,0 +1,241 @@
+//! In-process transport: two endpoints joined by std mpsc channels, with
+//! a modeled wire (latency + bandwidth) and fault-controller hooks.
+//!
+//! This is the Verbs-like path: messages move as structured values with
+//! zero-copy buffer handoff (the `Vec<u8>` in NEW_BLOCK changes owner, no
+//! serialization), mirroring how CCI's RMA hands a registered buffer to
+//! the peer. The modeled wire charges serialization time proportional to
+//! payload size so bandwidth-bound behaviour is preserved.
+
+use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::message::Message;
+use super::{Endpoint, FaultController, NetError, Side, WireModel};
+
+pub struct ChannelEndpoint {
+    side: Side,
+    tx: mpsc::Sender<Message>,
+    rx: Mutex<mpsc::Receiver<Message>>,
+    wire: WireModel,
+    fault: Arc<FaultController>,
+    sent_payload: AtomicU64,
+}
+
+/// Create a connected (source, sink) endpoint pair.
+pub fn pair(
+    wire: WireModel,
+    fault: Arc<FaultController>,
+) -> (ChannelEndpoint, ChannelEndpoint) {
+    let (tx_a, rx_b) = mpsc::channel();
+    let (tx_b, rx_a) = mpsc::channel();
+    let a = ChannelEndpoint {
+        side: Side::Source,
+        tx: tx_a,
+        rx: Mutex::new(rx_a),
+        wire: wire.clone(),
+        fault: fault.clone(),
+        sent_payload: AtomicU64::new(0),
+    };
+    let b = ChannelEndpoint {
+        side: Side::Sink,
+        tx: tx_b,
+        rx: Mutex::new(rx_b),
+        wire,
+        fault,
+        sent_payload: AtomicU64::new(0),
+    };
+    (a, b)
+}
+
+impl ChannelEndpoint {
+    fn check_fault(&self) -> Result<(), NetError> {
+        if self.fault.is_tripped() {
+            Err(NetError::Fault(format!(
+                "injected fault ({} side) after {} payload bytes",
+                self.fault.side,
+                self.fault.payload_so_far()
+            )))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl Endpoint for ChannelEndpoint {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        self.check_fault()?;
+        let payload = msg.payload_len();
+        // Charge the wire before delivery (sender-side serialization).
+        let delay = self.wire.delay_for(payload);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        // Fault accounting: only data crossing source -> sink counts
+        // toward the "X% of total data transferred" fault point.
+        if self.side == Side::Source && payload > 0 {
+            self.sent_payload.fetch_add(payload as u64, Ordering::Relaxed);
+            if self.fault.account(payload as u64) {
+                return Err(NetError::Fault(format!(
+                    "injected fault ({} side) after {} payload bytes",
+                    self.fault.side,
+                    self.fault.payload_so_far()
+                )));
+            }
+        } else if payload > 0 {
+            self.sent_payload.fetch_add(payload as u64, Ordering::Relaxed);
+        }
+        self.tx.send(msg).map_err(|_| NetError::Closed)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        // Poll with a short tick so a fault trip interrupts a blocked recv
+        // (a severed link kills in-flight receives too).
+        let rx = self.rx.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            self.check_fault()?;
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(m) => return Ok(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
+            }
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let rx = self.rx.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            self.check_fault()?;
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(NetError::Timeout);
+            }
+            let tick = (deadline - now).min(Duration::from_millis(5));
+            match rx.recv_timeout(tick) {
+                Ok(m) => return Ok(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Err(NetError::Closed),
+            }
+        }
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.sent_payload.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_pair() -> (ChannelEndpoint, ChannelEndpoint) {
+        pair(WireModel::none(), FaultController::unarmed())
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let (src, sink) = fast_pair();
+        src.send(Message::Connect { max_object_size: 4, rma_slots: 1, resume: false })
+            .unwrap();
+        let m = sink.recv().unwrap();
+        assert_eq!(m.type_name(), "CONNECT");
+        sink.send(Message::ConnectAck { rma_slots: 2 }).unwrap();
+        assert_eq!(src.recv().unwrap().type_name(), "CONNECT_ACK");
+    }
+
+    #[test]
+    fn messages_preserve_order() {
+        let (src, sink) = fast_pair();
+        for i in 0..100 {
+            src.send(Message::FileClose { file_idx: i }).unwrap();
+        }
+        for i in 0..100 {
+            match sink.recv().unwrap() {
+                Message::FileClose { file_idx } => assert_eq!(file_idx, i),
+                m => panic!("unexpected {m:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let (src, _sink) = fast_pair();
+        let t0 = std::time::Instant::now();
+        assert_eq!(
+            src.recv_timeout(Duration::from_millis(30)),
+            Err(NetError::Timeout)
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn drop_peer_closes() {
+        let (src, sink) = fast_pair();
+        drop(sink);
+        assert_eq!(src.send(Message::Bye), Err(NetError::Closed));
+    }
+
+    #[test]
+    fn fault_kills_send_at_threshold() {
+        let fault = FaultController::armed(100, Side::Source);
+        let (src, sink) = pair(WireModel::none(), fault);
+        let block = |n: u32| Message::NewBlock {
+            file_idx: 0,
+            block_idx: n,
+            offset: 0,
+            digest: 0,
+            data: vec![0; 60],
+        };
+        src.send(block(0)).unwrap(); // 60 bytes: under threshold
+        assert!(matches!(src.send(block(1)), Err(NetError::Fault(_)))); // 120
+        // Both directions now dead.
+        assert!(matches!(sink.send(Message::Bye), Err(NetError::Fault(_))));
+        assert!(matches!(sink.recv(), Err(NetError::Fault(_))));
+    }
+
+    #[test]
+    fn fault_interrupts_blocked_recv() {
+        let fault = FaultController::unarmed();
+        let (src, _sink) = pair(WireModel::none(), fault.clone());
+        let h = std::thread::spawn(move || src.recv());
+        std::thread::sleep(Duration::from_millis(20));
+        fault.trip();
+        assert!(matches!(h.join().unwrap(), Err(NetError::Fault(_))));
+    }
+
+    #[test]
+    fn control_messages_do_not_count_toward_fault() {
+        let fault = FaultController::armed(10, Side::Source);
+        let (src, _sink) = pair(WireModel::none(), fault.clone());
+        for _ in 0..50 {
+            src.send(Message::BlockSync { file_idx: 0, block_idx: 0, ok: true })
+                .unwrap();
+        }
+        assert!(!fault.is_tripped());
+        assert_eq!(src.payload_sent(), 0);
+    }
+
+    #[test]
+    fn wire_model_charges_payload() {
+        let wire = WireModel {
+            latency: Duration::ZERO,
+            bandwidth: 1e6, // 1 MB/s
+            time_scale: 1.0,
+        };
+        let (src, sink) = pair(wire, FaultController::unarmed());
+        let t0 = std::time::Instant::now();
+        src.send(Message::NewBlock {
+            file_idx: 0,
+            block_idx: 0,
+            offset: 0,
+            digest: 0,
+            data: vec![0; 50_000], // 50 ms at 1 MB/s
+        })
+        .unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+        sink.recv().unwrap();
+    }
+}

@@ -1,0 +1,338 @@
+//! The FT-LADS wire protocol (paper Listing 1 + Figure 4).
+//!
+//! Message types mirror `msg_type_t`: CONNECT, NEW_FILE, FILE_ID,
+//! NEW_BLOCK, BLOCK_SYNC, FILE_CLOSE, BYE. The paper's change from stock
+//! LADS is BLOCK_DONE → BLOCK_SYNC: the sink acknowledges only after the
+//! object is *written to the PFS* (and, here, digest-verified), so a
+//! logged object is durably at rest on the sink file system.
+//!
+//! A hand-rolled binary codec (offline env has no serde): little-endian
+//! fixed-width fields, u32-length-prefixed strings/blobs, one type byte.
+//! The codec is exercised by round-trip property tests.
+
+use anyhow::{bail, Result};
+
+/// Digest carried in NEW_BLOCK headers, packed `[A | B<<32]`.
+pub type WireDigest = u64;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Message {
+    /// Connection handshake: the source advertises its RMA geometry
+    /// (paper §3.1: "sends its maximum object size, number of objects in
+    /// the RMA buffer, and the memory handle").
+    Connect { max_object_size: u64, rma_slots: u32, resume: bool },
+    /// Sink accepts; advertises its own RMA slot count.
+    ConnectAck { rma_slots: u32 },
+    /// Source → sink: begin file `file_idx` (§5.2.1). Carries the
+    /// metadata the sink uses for the resume match (§5.2.2).
+    NewFile { file_idx: u32, name: String, size: u64, start_ost: u32 },
+    /// Sink → source: file opened, here is the sink fd; or `skip` when the
+    /// resume metadata matched a committed file.
+    FileId { file_idx: u32, sink_fd: u64, skip: bool },
+    /// Source → sink: one object. Data rides along (the RMA-read emulation
+    /// hands the receiver this buffer); `digest` is the source-side
+    /// integrity digest (0 when integrity is off).
+    NewBlock {
+        file_idx: u32,
+        block_idx: u32,
+        offset: u64,
+        digest: WireDigest,
+        data: Vec<u8>,
+    },
+    /// Sink → source: object written (and verified) at the sink PFS.
+    /// `ok = false` reports a failed/corrupted write; the source must
+    /// reschedule the object and must NOT log it.
+    BlockSync { file_idx: u32, block_idx: u32, ok: bool },
+    /// Source → sink: all objects of the file synced; close + commit it.
+    FileClose { file_idx: u32 },
+    /// Sink → source: file committed (lets the source delete its FT log).
+    FileCloseAck { file_idx: u32 },
+    /// Source → sink: transfer complete, disconnect.
+    Bye,
+}
+
+const T_CONNECT: u8 = 0;
+const T_CONNECT_ACK: u8 = 1;
+const T_NEW_FILE: u8 = 2;
+const T_FILE_ID: u8 = 3;
+const T_NEW_BLOCK: u8 = 4;
+const T_BLOCK_SYNC: u8 = 5;
+const T_FILE_CLOSE: u8 = 6;
+const T_FILE_CLOSE_ACK: u8 = 7;
+const T_BYE: u8 = 8;
+
+impl Message {
+    /// Payload bytes for accounting/bandwidth purposes (object data only —
+    /// control headers are noise at MTU scale).
+    pub fn payload_len(&self) -> usize {
+        match self {
+            Message::NewBlock { data, .. } => data.len(),
+            _ => 0,
+        }
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Message::Connect { .. } => "CONNECT",
+            Message::ConnectAck { .. } => "CONNECT_ACK",
+            Message::NewFile { .. } => "NEW_FILE",
+            Message::FileId { .. } => "FILE_ID",
+            Message::NewBlock { .. } => "NEW_BLOCK",
+            Message::BlockSync { .. } => "BLOCK_SYNC",
+            Message::FileClose { .. } => "FILE_CLOSE",
+            Message::FileCloseAck { .. } => "FILE_CLOSE_ACK",
+            Message::Bye => "BYE",
+        }
+    }
+
+    /// Encode into `out` (appends; does not clear).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Message::Connect { max_object_size, rma_slots, resume } => {
+                out.push(T_CONNECT);
+                put_u64(out, *max_object_size);
+                put_u32(out, *rma_slots);
+                out.push(*resume as u8);
+            }
+            Message::ConnectAck { rma_slots } => {
+                out.push(T_CONNECT_ACK);
+                put_u32(out, *rma_slots);
+            }
+            Message::NewFile { file_idx, name, size, start_ost } => {
+                out.push(T_NEW_FILE);
+                put_u32(out, *file_idx);
+                put_str(out, name);
+                put_u64(out, *size);
+                put_u32(out, *start_ost);
+            }
+            Message::FileId { file_idx, sink_fd, skip } => {
+                out.push(T_FILE_ID);
+                put_u32(out, *file_idx);
+                put_u64(out, *sink_fd);
+                out.push(*skip as u8);
+            }
+            Message::NewBlock { file_idx, block_idx, offset, digest, data } => {
+                out.push(T_NEW_BLOCK);
+                put_u32(out, *file_idx);
+                put_u32(out, *block_idx);
+                put_u64(out, *offset);
+                put_u64(out, *digest);
+                put_u32(out, data.len() as u32);
+                out.extend_from_slice(data);
+            }
+            Message::BlockSync { file_idx, block_idx, ok } => {
+                out.push(T_BLOCK_SYNC);
+                put_u32(out, *file_idx);
+                put_u32(out, *block_idx);
+                out.push(*ok as u8);
+            }
+            Message::FileClose { file_idx } => {
+                out.push(T_FILE_CLOSE);
+                put_u32(out, *file_idx);
+            }
+            Message::FileCloseAck { file_idx } => {
+                out.push(T_FILE_CLOSE_ACK);
+                put_u32(out, *file_idx);
+            }
+            Message::Bye => out.push(T_BYE),
+        }
+    }
+
+    /// Decode one message from `buf` (must contain exactly one message).
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut r = Reader { buf, pos: 0 };
+        let msg = r.message()?;
+        if r.pos != buf.len() {
+            bail!("trailing bytes after message ({} of {})", r.pos, buf.len());
+        }
+        Ok(msg)
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("message truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > 64 * 1024 {
+            bail!("string of {len} bytes exceeds sanity cap");
+        }
+        Ok(std::str::from_utf8(self.take(len)?)?.to_string())
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("bad bool byte {b}"),
+        }
+    }
+
+    fn message(&mut self) -> Result<Message> {
+        Ok(match self.u8()? {
+            T_CONNECT => Message::Connect {
+                max_object_size: self.u64()?,
+                rma_slots: self.u32()?,
+                resume: self.bool()?,
+            },
+            T_CONNECT_ACK => Message::ConnectAck { rma_slots: self.u32()? },
+            T_NEW_FILE => Message::NewFile {
+                file_idx: self.u32()?,
+                name: self.string()?,
+                size: self.u64()?,
+                start_ost: self.u32()?,
+            },
+            T_FILE_ID => Message::FileId {
+                file_idx: self.u32()?,
+                sink_fd: self.u64()?,
+                skip: self.bool()?,
+            },
+            T_NEW_BLOCK => {
+                let file_idx = self.u32()?;
+                let block_idx = self.u32()?;
+                let offset = self.u64()?;
+                let digest = self.u64()?;
+                let len = self.u32()? as usize;
+                if len > 256 * 1024 * 1024 {
+                    bail!("block of {len} bytes exceeds sanity cap");
+                }
+                let data = self.take(len)?.to_vec();
+                Message::NewBlock { file_idx, block_idx, offset, digest, data }
+            }
+            T_BLOCK_SYNC => Message::BlockSync {
+                file_idx: self.u32()?,
+                block_idx: self.u32()?,
+                ok: self.bool()?,
+            },
+            T_FILE_CLOSE => Message::FileClose { file_idx: self.u32()? },
+            T_FILE_CLOSE_ACK => Message::FileCloseAck { file_idx: self.u32()? },
+            T_BYE => Message::Bye,
+            t => bail!("unknown message type byte {t}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        let back = Message::decode(&buf).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(Message::Connect { max_object_size: 1 << 20, rma_slots: 64, resume: true });
+        roundtrip(Message::ConnectAck { rma_slots: 8 });
+        roundtrip(Message::NewFile {
+            file_idx: 3,
+            name: "dir/file-α.bin".into(),
+            size: u64::MAX,
+            start_ost: 10,
+        });
+        roundtrip(Message::FileId { file_idx: 3, sink_fd: 77, skip: false });
+        roundtrip(Message::NewBlock {
+            file_idx: 1,
+            block_idx: 9,
+            offset: 9 << 20,
+            digest: 0xdead_beef_1234_5678,
+            data: (0..=255u8).collect(),
+        });
+        roundtrip(Message::BlockSync { file_idx: 1, block_idx: 9, ok: true });
+        roundtrip(Message::BlockSync { file_idx: 1, block_idx: 9, ok: false });
+        roundtrip(Message::FileClose { file_idx: 2 });
+        roundtrip(Message::FileCloseAck { file_idx: 2 });
+        roundtrip(Message::Bye);
+    }
+
+    #[test]
+    fn empty_block_roundtrips() {
+        roundtrip(Message::NewBlock {
+            file_idx: 0,
+            block_idx: 0,
+            offset: 0,
+            digest: 0,
+            data: vec![],
+        });
+    }
+
+    #[test]
+    fn payload_len_counts_data_only() {
+        let m = Message::NewBlock {
+            file_idx: 0,
+            block_idx: 0,
+            offset: 0,
+            digest: 0,
+            data: vec![0; 100],
+        };
+        assert_eq!(m.payload_len(), 100);
+        assert_eq!(Message::Bye.payload_len(), 0);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[99]).is_err());
+        assert!(Message::decode(&[T_CONNECT, 1, 2]).is_err()); // truncated
+        // trailing bytes rejected
+        let mut buf = Vec::new();
+        Message::Bye.encode(&mut buf);
+        buf.push(0);
+        assert!(Message::decode(&buf).is_err());
+        // bad bool byte
+        let mut buf = Vec::new();
+        Message::FileId { file_idx: 0, sink_fd: 0, skip: false }.encode(&mut buf);
+        *buf.last_mut().unwrap() = 7;
+        assert!(Message::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_oversized_string() {
+        let mut buf = vec![T_NEW_FILE];
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&(1u32 << 30).to_le_bytes()); // absurd name len
+        assert!(Message::decode(&buf).is_err());
+    }
+}

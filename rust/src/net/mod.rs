@@ -1,0 +1,207 @@
+//! CCI-like transport layer.
+//!
+//! The paper's LADS communicates over CCI (Common Communication Interface)
+//! with the Verbs transport on InfiniBand; bbcp uses IPoIB sockets. We
+//! reproduce the *interface* LADS programs against — connect handshake,
+//! active messages, RMA-read data movement, connection loss — behind the
+//! [`Endpoint`] trait, with two backends:
+//!
+//! - [`channel::ChannelTransport`] — in-process, zero-copy handoff with a
+//!   modeled wire (latency + bandwidth); the Verbs-like path.
+//! - [`tcp::TcpTransport`] — real sockets over loopback with full
+//!   serialization; the IPoIB-like path (used for the bbcp baseline so the
+//!   baseline pays socket costs, as it does in the paper).
+//!
+//! Fault injection lives here too: a [`FaultController`] trips the
+//! connection once a configured number of payload bytes has crossed the
+//! wire — the simulation environment of paper §6 ("we generate faults
+//! after transferring 20 %, 40 %, 60 %, 80 % of total data size").
+
+pub mod channel;
+pub mod message;
+pub mod rma;
+pub mod tcp;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub use message::Message;
+pub use rma::{RmaPool, RmaSlot};
+
+/// Transport errors.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum NetError {
+    /// Orderly close (peer finished and went away after BYE).
+    #[error("connection closed")]
+    Closed,
+    /// Abrupt connection loss — the injected (or real) fault.
+    #[error("connection fault: {0}")]
+    Fault(String),
+    /// recv_timeout expired with no message.
+    #[error("receive timeout")]
+    Timeout,
+}
+
+/// One side of an established connection. Send is thread-safe; recv is
+/// intended for the single comm thread that owns the endpoint.
+pub trait Endpoint: Send + Sync {
+    fn send(&self, msg: Message) -> Result<(), NetError>;
+    fn recv(&self) -> Result<Message, NetError>;
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError>;
+
+    /// Payload bytes sent so far by THIS endpoint (NEW_BLOCK data only).
+    fn payload_sent(&self) -> u64;
+}
+
+/// Which end of the transfer a component belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Source,
+    Sink,
+}
+
+impl std::fmt::Display for Side {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Side::Source => write!(f, "source"),
+            Side::Sink => write!(f, "sink"),
+        }
+    }
+}
+
+/// Shared fault state for one connection: trips when cumulative payload
+/// bytes cross `threshold`, after which every send/recv on either side
+/// fails with `NetError::Fault`.
+pub struct FaultController {
+    threshold: AtomicU64,
+    payload: AtomicU64,
+    tripped: AtomicBool,
+    /// Which side the fault is attributed to (reporting only — a severed
+    /// link kills both directions either way).
+    pub side: Side,
+}
+
+impl FaultController {
+    pub fn unarmed() -> Arc<Self> {
+        Arc::new(FaultController {
+            threshold: AtomicU64::new(u64::MAX),
+            payload: AtomicU64::new(0),
+            tripped: AtomicBool::new(false),
+            side: Side::Source,
+        })
+    }
+
+    pub fn armed(threshold_bytes: u64, side: Side) -> Arc<Self> {
+        Arc::new(FaultController {
+            threshold: AtomicU64::new(threshold_bytes),
+            payload: AtomicU64::new(0),
+            tripped: AtomicBool::new(false),
+            side,
+        })
+    }
+
+    /// Account `bytes` of payload; returns true if the connection just
+    /// tripped (or already was tripped).
+    pub fn account(&self, bytes: u64) -> bool {
+        if self.tripped.load(Ordering::SeqCst) {
+            return true;
+        }
+        let total = self.payload.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        if total >= self.threshold.load(Ordering::SeqCst) {
+            self.tripped.store(true, Ordering::SeqCst);
+            return true;
+        }
+        false
+    }
+
+    pub fn is_tripped(&self) -> bool {
+        self.tripped.load(Ordering::SeqCst)
+    }
+
+    /// Manually sever the connection (tests / CLI abort).
+    pub fn trip(&self) {
+        self.tripped.store(true, Ordering::SeqCst);
+    }
+
+    pub fn payload_so_far(&self) -> u64 {
+        self.payload.load(Ordering::SeqCst)
+    }
+}
+
+/// Wire model shared by both transports: a per-message latency plus a
+/// bandwidth-proportional serialization delay, scaled by `time_scale`
+/// (0 = no sleeping, pure logic).
+#[derive(Debug, Clone)]
+pub struct WireModel {
+    pub latency: Duration,
+    /// Bytes per second of the link (IB EDR-ish when scaled).
+    pub bandwidth: f64,
+    pub time_scale: f64,
+}
+
+impl Default for WireModel {
+    fn default() -> Self {
+        // Scaled stand-in for the paper's IB link: fast enough that the
+        // storage (OST model) is the bottleneck, per §6.1 "the network
+        // would not be the bottleneck".
+        WireModel { latency: Duration::from_micros(15), bandwidth: 6.0e9, time_scale: 1.0 }
+    }
+}
+
+impl WireModel {
+    pub fn none() -> Self {
+        WireModel { latency: Duration::ZERO, bandwidth: f64::INFINITY, time_scale: 0.0 }
+    }
+
+    pub fn delay_for(&self, payload: usize) -> Duration {
+        if self.time_scale == 0.0 {
+            return Duration::ZERO;
+        }
+        let secs = (self.latency.as_secs_f64() + payload as f64 / self.bandwidth)
+            * self.time_scale;
+        Duration::from_secs_f64(secs.max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_controller_trips_at_threshold() {
+        let f = FaultController::armed(100, Side::Source);
+        assert!(!f.account(40));
+        assert!(!f.account(40));
+        assert!(!f.is_tripped());
+        assert!(f.account(40)); // 120 >= 100
+        assert!(f.is_tripped());
+        assert!(f.account(0), "stays tripped");
+        assert_eq!(f.payload_so_far(), 120);
+    }
+
+    #[test]
+    fn unarmed_never_trips() {
+        let f = FaultController::unarmed();
+        for _ in 0..1000 {
+            assert!(!f.account(1 << 30));
+        }
+        assert!(!f.is_tripped());
+    }
+
+    #[test]
+    fn manual_trip() {
+        let f = FaultController::unarmed();
+        f.trip();
+        assert!(f.is_tripped());
+        assert!(f.account(1));
+    }
+
+    #[test]
+    fn wire_model_delay() {
+        let m = WireModel { latency: Duration::from_millis(1), bandwidth: 1e6, time_scale: 1.0 };
+        let d = m.delay_for(1_000_000);
+        assert!((d.as_secs_f64() - 1.001).abs() < 1e-9);
+        assert_eq!(WireModel::none().delay_for(1 << 20), Duration::ZERO);
+    }
+}

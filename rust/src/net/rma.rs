@@ -1,0 +1,257 @@
+//! RMA buffer pool.
+//!
+//! CCI registers a fixed DRAM region for RMA; LADS carves it into
+//! object-sized slots. A sink comm thread must *reserve* a slot before it
+//! can RMA-read an incoming object; if none is free it parks the request
+//! and the master thread sleeps on the pool's wait queue until an IO
+//! thread releases a slot after `pwrite` (paper §3.1). The paper's
+//! evaluation uses max 256 MB of RMA DRAM per side.
+//!
+//! The pool hands out real reusable `Vec<u8>` buffers (so the data path
+//! exercises actual memory traffic) and tracks reservation stalls — the
+//! back-pressure signal the figures' CPU/memory analysis cares about.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A reserved slot; returns its buffer to the pool on drop.
+pub struct RmaSlot {
+    pool: std::sync::Arc<RmaPoolInner>,
+    buf: Option<Vec<u8>>,
+    pub slot_bytes: usize,
+}
+
+impl RmaSlot {
+    pub fn buf(&mut self) -> &mut Vec<u8> {
+        self.buf.as_mut().expect("slot buffer present until drop")
+    }
+
+    pub fn data(&self) -> &[u8] {
+        self.buf.as_ref().expect("slot buffer present until drop")
+    }
+}
+
+impl Drop for RmaSlot {
+    fn drop(&mut self) {
+        if let Some(mut b) = self.buf.take() {
+            b.clear();
+            self.pool.release(b);
+        }
+    }
+}
+
+struct RmaPoolInner {
+    free: Mutex<Vec<Vec<u8>>>,
+    available: Condvar,
+    slot_bytes: usize,
+    slots: usize,
+    stalls: AtomicU64,
+    stall_ns: AtomicU64,
+}
+
+impl RmaPoolInner {
+    fn release(&self, buf: Vec<u8>) {
+        let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        free.push(buf);
+        drop(free);
+        self.available.notify_one();
+    }
+}
+
+/// Fixed-size pool of object-sized RMA buffers.
+#[derive(Clone)]
+pub struct RmaPool {
+    inner: std::sync::Arc<RmaPoolInner>,
+}
+
+impl RmaPool {
+    /// `total_bytes` of RMA DRAM carved into `slot_bytes` slots (at least 1).
+    pub fn new(total_bytes: usize, slot_bytes: usize) -> Self {
+        assert!(slot_bytes > 0);
+        let slots = (total_bytes / slot_bytes).max(1);
+        let free = (0..slots)
+            .map(|_| Vec::with_capacity(slot_bytes))
+            .collect();
+        RmaPool {
+            inner: std::sync::Arc::new(RmaPoolInner {
+                free: Mutex::new(free),
+                available: Condvar::new(),
+                slot_bytes,
+                slots,
+                stalls: AtomicU64::new(0),
+                stall_ns: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.inner.slots
+    }
+
+    pub fn slot_bytes(&self) -> usize {
+        self.inner.slot_bytes
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.inner
+            .free
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .len()
+    }
+
+    /// Non-blocking reserve (the comm thread's first attempt).
+    pub fn try_reserve(&self) -> Option<RmaSlot> {
+        let mut free = self.inner.free.lock().unwrap_or_else(|e| e.into_inner());
+        free.pop().map(|buf| RmaSlot {
+            pool: self.inner.clone(),
+            buf: Some(buf),
+            slot_bytes: self.inner.slot_bytes,
+        })
+    }
+
+    /// Blocking reserve (the master-thread path when the pool is dry).
+    pub fn reserve(&self) -> RmaSlot {
+        let start = Instant::now();
+        let mut free = self.inner.free.lock().unwrap_or_else(|e| e.into_inner());
+        let mut stalled = false;
+        while free.is_empty() {
+            stalled = true;
+            free = self
+                .inner
+                .available
+                .wait(free)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        let buf = free.pop().unwrap();
+        drop(free);
+        if stalled {
+            self.inner.stalls.fetch_add(1, Ordering::Relaxed);
+            self.inner
+                .stall_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        RmaSlot {
+            pool: self.inner.clone(),
+            buf: Some(buf),
+            slot_bytes: self.inner.slot_bytes,
+        }
+    }
+
+    /// Blocking reserve with timeout (used on shutdown paths and by the
+    /// sink master's abort-aware wait loop).
+    pub fn reserve_timeout(&self, timeout: Duration) -> Option<RmaSlot> {
+        let start = Instant::now();
+        let deadline = start + timeout;
+        let mut stalled = false;
+        let mut free = self.inner.free.lock().unwrap_or_else(|e| e.into_inner());
+        while free.is_empty() {
+            stalled = true;
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self
+                .inner
+                .available
+                .wait_timeout(free, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            free = guard;
+            if res.timed_out() && free.is_empty() {
+                return None;
+            }
+        }
+        let buf = free.pop().unwrap();
+        drop(free);
+        if stalled {
+            self.inner.stalls.fetch_add(1, Ordering::Relaxed);
+            self.inner
+                .stall_ns
+                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        Some(RmaSlot {
+            pool: self.inner.clone(),
+            buf: Some(buf),
+            slot_bytes: self.inner.slot_bytes,
+        })
+    }
+
+    /// (count, total ns) of blocking reservations that had to wait.
+    pub fn stall_stats(&self) -> (u64, u64) {
+        (
+            self.inner.stalls.load(Ordering::Relaxed),
+            self.inner.stall_ns.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_capacity() {
+        let p = RmaPool::new(1 << 20, 1 << 18);
+        assert_eq!(p.slots(), 4);
+        assert_eq!(p.free_slots(), 4);
+        assert_eq!(p.slot_bytes(), 1 << 18);
+        // Degenerate: smaller total than slot still yields one slot.
+        assert_eq!(RmaPool::new(10, 100).slots(), 1);
+    }
+
+    #[test]
+    fn reserve_release_cycle() {
+        let p = RmaPool::new(4096, 1024);
+        let s1 = p.try_reserve().unwrap();
+        let _s2 = p.try_reserve().unwrap();
+        assert_eq!(p.free_slots(), 2);
+        drop(s1);
+        assert_eq!(p.free_slots(), 3);
+    }
+
+    #[test]
+    fn try_reserve_exhausts() {
+        let p = RmaPool::new(2048, 1024);
+        let _a = p.try_reserve().unwrap();
+        let _b = p.try_reserve().unwrap();
+        assert!(p.try_reserve().is_none());
+    }
+
+    #[test]
+    fn blocking_reserve_wakes_on_release() {
+        let p = RmaPool::new(1024, 1024);
+        let slot = p.reserve();
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || {
+            let _s = p2.reserve(); // blocks until main drops
+            p2.stall_stats().0
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(slot);
+        let stalls = h.join().unwrap();
+        assert_eq!(stalls, 1);
+        assert!(p.stall_stats().1 > 0);
+    }
+
+    #[test]
+    fn reserve_timeout_expires() {
+        let p = RmaPool::new(1024, 1024);
+        let _hold = p.reserve();
+        let t0 = Instant::now();
+        assert!(p.reserve_timeout(Duration::from_millis(50)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    #[test]
+    fn slot_buffer_reusable() {
+        let p = RmaPool::new(1024, 1024);
+        {
+            let mut s = p.reserve();
+            s.buf().extend_from_slice(&[1, 2, 3]);
+            assert_eq!(s.data(), &[1, 2, 3]);
+        }
+        let mut s = p.reserve();
+        assert!(s.buf().is_empty(), "returned buffer must be cleared");
+    }
+}

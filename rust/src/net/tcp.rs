@@ -1,0 +1,271 @@
+//! TCP transport: real sockets, real serialization.
+//!
+//! The IPoIB-like path — every message is length-framed and byte-encoded
+//! through the codec in [`super::message`]. Used for the bbcp baseline
+//! (which in the paper runs over IPoIB sockets rather than Verbs) and for
+//! the two-process deployment mode of the `ftlads` CLI.
+//!
+//! The [`FaultController`] hook severs the socket (shutdown both ways)
+//! when the payload threshold trips, so connection loss manifests as real
+//! I/O errors on both ends — the same observable the paper's simulated
+//! hardware faults produce.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::message::Message;
+use super::{Endpoint, FaultController, NetError, Side, WireModel};
+
+pub struct TcpEndpoint {
+    side: Side,
+    reader: Mutex<TcpStream>,
+    writer: Mutex<TcpStream>,
+    stream: TcpStream, // kept for shutdown
+    wire: WireModel,
+    fault: Arc<FaultController>,
+    sent_payload: AtomicU64,
+}
+
+/// Listen on `addr` (use port 0 for ephemeral) and return the bound
+/// listener; `accept` completes the sink side.
+pub fn listen(addr: &str) -> Result<TcpListener> {
+    Ok(TcpListener::bind(addr)?)
+}
+
+pub fn accept(
+    listener: &TcpListener,
+    wire: WireModel,
+    fault: Arc<FaultController>,
+) -> Result<TcpEndpoint> {
+    let (stream, _) = listener.accept()?;
+    TcpEndpoint::new(Side::Sink, stream, wire, fault)
+}
+
+pub fn connect(
+    addr: SocketAddr,
+    wire: WireModel,
+    fault: Arc<FaultController>,
+) -> Result<TcpEndpoint> {
+    let stream = TcpStream::connect(addr)?;
+    TcpEndpoint::new(Side::Source, stream, wire, fault)
+}
+
+/// Convenience: a connected loopback pair (sink listener + source dial),
+/// mirroring `channel::pair`.
+pub fn loopback_pair(
+    wire: WireModel,
+    fault: Arc<FaultController>,
+) -> Result<(TcpEndpoint, TcpEndpoint)> {
+    let listener = listen("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let wire2 = wire.clone();
+    let fault2 = fault.clone();
+    let sink_thread = std::thread::spawn(move || accept(&listener, wire2, fault2));
+    let source = connect(addr, wire, fault)?;
+    let sink = sink_thread.join().expect("accept thread panicked")?;
+    Ok((source, sink))
+}
+
+impl TcpEndpoint {
+    fn new(
+        side: Side,
+        stream: TcpStream,
+        wire: WireModel,
+        fault: Arc<FaultController>,
+    ) -> Result<Self> {
+        stream.set_nodelay(true)?;
+        let reader = stream.try_clone()?;
+        let writer = stream.try_clone()?;
+        Ok(TcpEndpoint {
+            side,
+            reader: Mutex::new(reader),
+            writer: Mutex::new(writer),
+            stream,
+            wire,
+            fault,
+            sent_payload: AtomicU64::new(0),
+        })
+    }
+
+    fn fault_error(&self) -> NetError {
+        NetError::Fault(format!(
+            "injected fault ({} side) after {} payload bytes",
+            self.fault.side,
+            self.fault.payload_so_far()
+        ))
+    }
+
+    fn sever(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    fn check_fault(&self) -> Result<(), NetError> {
+        if self.fault.is_tripped() {
+            self.sever();
+            Err(self.fault_error())
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl Endpoint for TcpEndpoint {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        self.check_fault()?;
+        let payload = msg.payload_len();
+        let delay = self.wire.delay_for(payload);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        if payload > 0 {
+            self.sent_payload.fetch_add(payload as u64, Ordering::Relaxed);
+            if self.side == Side::Source && self.fault.account(payload as u64) {
+                self.sever();
+                return Err(self.fault_error());
+            }
+        }
+        let mut frame = Vec::with_capacity(16 + payload);
+        frame.extend_from_slice(&0u32.to_le_bytes()); // placeholder
+        msg.encode(&mut frame);
+        let body_len = (frame.len() - 4) as u32;
+        frame[..4].copy_from_slice(&body_len.to_le_bytes());
+        let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
+        w.write_all(&frame).map_err(|e| {
+            if self.fault.is_tripped() {
+                self.fault_error()
+            } else {
+                NetError::Fault(format!("tcp write: {e}"))
+            }
+        })
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        self.recv_inner(None)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        self.recv_inner(Some(timeout))
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.sent_payload.load(Ordering::Relaxed)
+    }
+}
+
+impl TcpEndpoint {
+    fn recv_inner(&self, timeout: Option<Duration>) -> Result<Message, NetError> {
+        self.check_fault()?;
+        let mut r = self.reader.lock().unwrap_or_else(|e| e.into_inner());
+        r.set_read_timeout(timeout).ok();
+        let mut len_buf = [0u8; 4];
+        if let Err(e) = r.read_exact(&mut len_buf) {
+            return Err(self.classify_read_err(e));
+        }
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > 512 * 1024 * 1024 {
+            return Err(NetError::Fault(format!("frame of {len} bytes exceeds cap")));
+        }
+        let mut body = vec![0u8; len];
+        if let Err(e) = r.read_exact(&mut body) {
+            return Err(self.classify_read_err(e));
+        }
+        Message::decode(&body).map_err(|e| NetError::Fault(format!("decode: {e}")))
+    }
+
+    fn classify_read_err(&self, e: std::io::Error) -> NetError {
+        if self.fault.is_tripped() {
+            return self.fault_error();
+        }
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => NetError::Timeout,
+            std::io::ErrorKind::UnexpectedEof => NetError::Closed,
+            _ => NetError::Fault(format!("tcp read: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_roundtrip() {
+        let (src, sink) = loopback_pair(WireModel::none(), FaultController::unarmed()).unwrap();
+        src.send(Message::NewFile {
+            file_idx: 1,
+            name: "x.bin".into(),
+            size: 10,
+            start_ost: 2,
+        })
+        .unwrap();
+        match sink.recv().unwrap() {
+            Message::NewFile { file_idx, name, size, start_ost } => {
+                assert_eq!((file_idx, name.as_str(), size, start_ost), (1, "x.bin", 10, 2));
+            }
+            m => panic!("unexpected {m:?}"),
+        }
+        sink.send(Message::FileId { file_idx: 1, sink_fd: 5, skip: false }).unwrap();
+        assert_eq!(src.recv().unwrap().type_name(), "FILE_ID");
+    }
+
+    #[test]
+    fn block_data_survives_serialization() {
+        let (src, sink) = loopback_pair(WireModel::none(), FaultController::unarmed()).unwrap();
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i * 31) as u8).collect();
+        src.send(Message::NewBlock {
+            file_idx: 0,
+            block_idx: 7,
+            offset: 7 << 18,
+            digest: 42,
+            data: data.clone(),
+        })
+        .unwrap();
+        match sink.recv().unwrap() {
+            Message::NewBlock { data: got, digest, .. } => {
+                assert_eq!(got, data);
+                assert_eq!(digest, 42);
+            }
+            m => panic!("unexpected {m:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let (src, _sink) = loopback_pair(WireModel::none(), FaultController::unarmed()).unwrap();
+        assert_eq!(
+            src.recv_timeout(Duration::from_millis(30)),
+            Err(NetError::Timeout)
+        );
+    }
+
+    #[test]
+    fn fault_severs_socket_both_ways() {
+        let fault = FaultController::armed(1000, Side::Source);
+        let (src, sink) = loopback_pair(WireModel::none(), fault.clone()).unwrap();
+        let block = Message::NewBlock {
+            file_idx: 0,
+            block_idx: 0,
+            offset: 0,
+            digest: 0,
+            data: vec![0; 1500],
+        };
+        assert!(matches!(src.send(block), Err(NetError::Fault(_))));
+        // The sink sees the fault as a failed read.
+        assert!(matches!(
+            sink.recv_timeout(Duration::from_millis(200)),
+            Err(NetError::Fault(_) | NetError::Closed)
+        ));
+    }
+
+    #[test]
+    fn orderly_close_reports_closed() {
+        let (src, sink) = loopback_pair(WireModel::none(), FaultController::unarmed()).unwrap();
+        drop(src);
+        assert_eq!(sink.recv(), Err(NetError::Closed));
+    }
+}

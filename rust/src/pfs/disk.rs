@@ -1,0 +1,318 @@
+//! Real-file-backed PFS: files live under `root/`, the OST service model
+//! still charges simulated per-OST time on top of the real I/O.
+//!
+//! Used by the end-to-end example (`examples/quickstart.rs` with
+//! `--backend disk`) so at least one driver moves *real bytes on a real
+//! file system*. Layout metadata (start OST, committed flag) is kept in a
+//! sidecar `.ftmeta` file per data file, mirroring what Lustre keeps in
+//! the MDS.
+
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::layout::StripeLayout;
+use super::ost::{OstConfig, OstModel};
+use super::{FileId, FileMeta, Pfs};
+
+pub struct DiskPfs {
+    root: PathBuf,
+    layout: StripeLayout,
+    osts: OstModel,
+    ids: Mutex<std::collections::BTreeMap<u64, String>>,
+    next_id: AtomicU64,
+}
+
+impl DiskPfs {
+    pub fn new(root: &Path, layout: StripeLayout, ost_cfg: OstConfig) -> Result<Self> {
+        fs::create_dir_all(root)
+            .with_context(|| format!("creating PFS root {}", root.display()))?;
+        let osts = OstModel::new(layout.ost_count, ost_cfg);
+        Ok(DiskPfs {
+            root: root.to_path_buf(),
+            layout,
+            osts,
+            ids: Mutex::new(std::collections::BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    fn data_path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    fn meta_path(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.ftmeta"))
+    }
+
+    fn read_meta(&self, name: &str) -> Option<FileMeta> {
+        let text = fs::read_to_string(self.meta_path(name)).ok()?;
+        let mut size = None;
+        let mut committed = false;
+        let mut start_ost = 0;
+        for line in text.lines() {
+            let (k, v) = line.split_once('=')?;
+            match k {
+                "size" => size = v.parse().ok(),
+                "committed" => committed = v == "1",
+                "start_ost" => start_ost = v.parse().ok()?,
+                _ => {}
+            }
+        }
+        Some(FileMeta { name: name.to_string(), size: size?, committed, start_ost })
+    }
+
+    fn write_meta(&self, meta: &FileMeta) -> Result<()> {
+        let text = format!(
+            "size={}\ncommitted={}\nstart_ost={}\n",
+            meta.size,
+            if meta.committed { 1 } else { 0 },
+            meta.start_ost
+        );
+        fs::write(self.meta_path(&meta.name), text).context("writing .ftmeta")
+    }
+
+    fn name_of(&self, id: FileId) -> Result<String> {
+        self.ids
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&id.0)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no open file id {}", id.0))
+    }
+
+    /// Register an existing file (e.g. created by a previous process) so it
+    /// gets an id in this process.
+    fn register(&self, name: &str) -> FileId {
+        let mut ids = self.ids.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((id, _)) = ids.iter().find(|(_, n)| n.as_str() == name) {
+            return FileId(*id);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        ids.insert(id, name.to_string());
+        FileId(id)
+    }
+
+    /// Import a directory of plain files as a committed dataset (source
+    /// pre-population from real data).
+    pub fn import_dir(&self, dir: &Path) -> Result<usize> {
+        let mut count = 0usize;
+        let mut entries: Vec<_> = fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().is_file())
+            .collect();
+        entries.sort_by_key(|e| e.file_name());
+        for entry in entries {
+            let name = entry.file_name().to_string_lossy().to_string();
+            if name.ends_with(".ftmeta") {
+                continue;
+            }
+            let size = entry.metadata()?.len();
+            let start = self.layout.round_robin_start(count as u64);
+            fs::copy(entry.path(), self.data_path(&name))?;
+            self.write_meta(&FileMeta {
+                name: name.clone(),
+                size,
+                committed: true,
+                start_ost: start,
+            })?;
+            self.register(&name);
+            count += 1;
+        }
+        Ok(count)
+    }
+}
+
+impl Pfs for DiskPfs {
+    fn layout(&self) -> &StripeLayout {
+        &self.layout
+    }
+
+    fn ost_model(&self) -> &OstModel {
+        &self.osts
+    }
+
+    fn lookup(&self, name: &str) -> Option<(FileId, FileMeta)> {
+        let meta = self.read_meta(name)?;
+        if !self.data_path(name).exists() {
+            return None;
+        }
+        Some((self.register(name), meta))
+    }
+
+    fn list(&self) -> Vec<String> {
+        let mut names: Vec<String> = fs::read_dir(&self.root)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.file_name().to_string_lossy().to_string())
+                    .filter(|n| !n.ends_with(".ftmeta"))
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+
+    fn create(&self, name: &str, size: u64, start_ost: u32) -> Result<FileId> {
+        let f = fs::File::create(self.data_path(name))
+            .with_context(|| format!("creating {}", name))?;
+        f.set_len(size)?;
+        self.write_meta(&FileMeta {
+            name: name.to_string(),
+            size,
+            committed: false,
+            start_ost: start_ost % self.layout.ost_count,
+        })?;
+        Ok(self.register(name))
+    }
+
+    fn read_at(&self, file: FileId, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        let name = self.name_of(file)?;
+        let meta = self
+            .read_meta(&name)
+            .ok_or_else(|| anyhow::anyhow!("no metadata for '{name}'"))?;
+        let ost = self.layout.ost_for(meta.start_ost, offset);
+        let mut f = fs::File::open(self.data_path(&name))?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut total = 0usize;
+        while total < buf.len() {
+            let n = f.read(&mut buf[total..])?;
+            if n == 0 {
+                break;
+            }
+            total += n;
+        }
+        self.osts.service(ost, total as u64, false);
+        Ok(total)
+    }
+
+    fn write_at(&self, file: FileId, offset: u64, data: &mut [u8]) -> Result<()> {
+        let name = self.name_of(file)?;
+        let meta = self
+            .read_meta(&name)
+            .ok_or_else(|| anyhow::anyhow!("no metadata for '{name}'"))?;
+        let ost = self.layout.ost_for(meta.start_ost, offset);
+        let mut f = fs::OpenOptions::new().write(true).open(self.data_path(&name))?;
+        f.seek(SeekFrom::Start(offset))?;
+        f.write_all(data)?;
+        self.osts.service(ost, data.len() as u64, true);
+        Ok(())
+    }
+
+    fn commit_file(&self, file: FileId) -> Result<()> {
+        let name = self.name_of(file)?;
+        let mut meta = self
+            .read_meta(&name)
+            .ok_or_else(|| anyhow::anyhow!("no metadata for '{name}'"))?;
+        meta.committed = true;
+        self.write_meta(&meta)
+    }
+
+    fn remove(&self, name: &str) -> Result<()> {
+        fs::remove_file(self.data_path(name))
+            .with_context(|| format!("removing {name}"))?;
+        let _ = fs::remove_file(self.meta_path(name));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> OstConfig {
+        OstConfig { time_scale: 0.0, ..Default::default() }
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ftlads-diskpfs-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn create_write_read_roundtrip() {
+        let root = tmp_root("rw");
+        let pfs = DiskPfs::new(&root, StripeLayout::paper(), fast_cfg()).unwrap();
+        let id = pfs.create("a.bin", 64, 3).unwrap();
+        pfs.write_at(id, 16, &mut [9u8; 8]).unwrap();
+        let mut buf = [0u8; 8];
+        assert_eq!(pfs.read_at(id, 16, &mut buf).unwrap(), 8);
+        assert_eq!(buf, [9u8; 8]);
+        // Holes read back as zeros (set_len preallocates sparse).
+        assert_eq!(pfs.read_at(id, 0, &mut buf).unwrap(), 8);
+        assert_eq!(buf, [0u8; 8]);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn metadata_roundtrip_and_commit() {
+        let root = tmp_root("meta");
+        let pfs = DiskPfs::new(&root, StripeLayout::paper(), fast_cfg()).unwrap();
+        let id = pfs.create("f", 100, 7).unwrap();
+        let (_, meta) = pfs.lookup("f").unwrap();
+        assert_eq!(meta.size, 100);
+        assert_eq!(meta.start_ost, 7);
+        assert!(!meta.committed);
+        pfs.commit_file(id).unwrap();
+        assert!(pfs.lookup("f").unwrap().1.committed);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn metadata_survives_new_instance() {
+        let root = tmp_root("persist");
+        {
+            let pfs = DiskPfs::new(&root, StripeLayout::paper(), fast_cfg()).unwrap();
+            let id = pfs.create("p", 10, 2).unwrap();
+            pfs.write_at(id, 0, &mut [1u8; 10]).unwrap();
+            pfs.commit_file(id).unwrap();
+        }
+        let pfs2 = DiskPfs::new(&root, StripeLayout::paper(), fast_cfg()).unwrap();
+        let (id, meta) = pfs2.lookup("p").unwrap();
+        assert!(meta.committed);
+        let mut buf = [0u8; 10];
+        assert_eq!(pfs2.read_at(id, 0, &mut buf).unwrap(), 10);
+        assert_eq!(buf, [1u8; 10]);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn list_excludes_sidecars() {
+        let root = tmp_root("list");
+        let pfs = DiskPfs::new(&root, StripeLayout::paper(), fast_cfg()).unwrap();
+        pfs.create("b", 1, 0).unwrap();
+        pfs.create("a", 1, 0).unwrap();
+        assert_eq!(pfs.list(), vec!["a".to_string(), "b".to_string()]);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn import_dir_registers_committed_files() {
+        let root = tmp_root("imp");
+        let src = tmp_root("impsrc");
+        fs::create_dir_all(&src).unwrap();
+        fs::write(src.join("x.dat"), b"hello world").unwrap();
+        fs::write(src.join("y.dat"), b"abc").unwrap();
+        let pfs = DiskPfs::new(&root, StripeLayout::paper(), fast_cfg()).unwrap();
+        assert_eq!(pfs.import_dir(&src).unwrap(), 2);
+        let (_, meta) = pfs.lookup("x.dat").unwrap();
+        assert_eq!(meta.size, 11);
+        assert!(meta.committed);
+        // Round-robin starts: x is file 0, y is file 1.
+        assert_eq!(pfs.lookup("y.dat").unwrap().1.start_ost, 1);
+        let _ = fs::remove_dir_all(&root);
+        let _ = fs::remove_dir_all(&src);
+    }
+}

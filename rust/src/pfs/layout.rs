@@ -1,0 +1,127 @@
+//! Lustre-style striping layout: which OST serves which byte of a file.
+//!
+//! A file with stripe count `c`, stripe size `s` and starting OST `o0`
+//! places byte `x` on OST `(o0 + (x / s) % c) % ost_count`. The paper's
+//! testbed uses stripe count 1 with 1 MB stripes (each file lives wholly
+//! on one OST, files round-robin across the 11 OSTs); both that and wider
+//! stripings are supported.
+
+use super::OstId;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StripeLayout {
+    /// Bytes per stripe (Lustre default and paper setting: 1 MiB).
+    pub stripe_size: u64,
+    /// OSTs a single file is striped over (paper setting: 1).
+    pub stripe_count: u32,
+    /// Total OSTs in the file system (paper setting: 11).
+    pub ost_count: u32,
+}
+
+impl StripeLayout {
+    pub fn new(stripe_size: u64, stripe_count: u32, ost_count: u32) -> Self {
+        assert!(stripe_size > 0, "stripe_size must be positive");
+        assert!(ost_count > 0, "ost_count must be positive");
+        assert!(
+            (1..=ost_count).contains(&stripe_count),
+            "stripe_count must be in 1..=ost_count"
+        );
+        StripeLayout { stripe_size, stripe_count, ost_count }
+    }
+
+    /// Paper testbed: 1 MiB stripes, count 1, 11 OSTs.
+    pub fn paper() -> Self {
+        Self::new(1 << 20, 1, 11)
+    }
+
+    /// The OST serving byte `offset` of a file whose first stripe lives on
+    /// `start_ost`.
+    pub fn ost_for(&self, start_ost: u32, offset: u64) -> OstId {
+        let stripe_idx = offset / self.stripe_size;
+        let within = (stripe_idx % self.stripe_count as u64) as u32;
+        OstId(((start_ost % self.ost_count) + within) % self.ost_count)
+    }
+
+    /// All OSTs a file of `size` bytes touches (deduplicated, ordered).
+    pub fn osts_for_file(&self, start_ost: u32, size: u64) -> Vec<OstId> {
+        let stripes = crate::util::div_ceil(size.max(1), self.stripe_size);
+        let n = stripes.min(self.stripe_count as u64) as u32;
+        (0..n)
+            .map(|i| OstId(((start_ost % self.ost_count) + i) % self.ost_count))
+            .collect()
+    }
+
+    /// Round-robin start OST assignment for the `idx`-th created file —
+    /// what Lustre's allocator does on a quiet file system, and what makes
+    /// stripe-count-1 datasets spread across OSTs.
+    pub fn round_robin_start(&self, idx: u64) -> u32 {
+        (idx % self.ost_count as u64) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripe_count_one_pins_file_to_one_ost() {
+        let l = StripeLayout::paper();
+        for off in [0u64, 1, 1 << 20, 37 << 20, (1 << 30) - 1] {
+            assert_eq!(l.ost_for(4, off), OstId(4));
+        }
+    }
+
+    #[test]
+    fn round_robin_across_stripes() {
+        let l = StripeLayout::new(1 << 20, 4, 11);
+        assert_eq!(l.ost_for(2, 0), OstId(2));
+        assert_eq!(l.ost_for(2, 1 << 20), OstId(3));
+        assert_eq!(l.ost_for(2, 2 << 20), OstId(4));
+        assert_eq!(l.ost_for(2, 3 << 20), OstId(5));
+        // wraps back to the start of the stripe group
+        assert_eq!(l.ost_for(2, 4 << 20), OstId(2));
+    }
+
+    #[test]
+    fn stripe_group_wraps_around_ost_count() {
+        let l = StripeLayout::new(1 << 20, 3, 4);
+        assert_eq!(l.ost_for(3, 0), OstId(3));
+        assert_eq!(l.ost_for(3, 1 << 20), OstId(0));
+        assert_eq!(l.ost_for(3, 2 << 20), OstId(1));
+    }
+
+    #[test]
+    fn osts_for_file_small_file_fewer_stripes() {
+        let l = StripeLayout::new(1 << 20, 4, 11);
+        // half-a-stripe file touches only its start OST
+        assert_eq!(l.osts_for_file(5, 1 << 19), vec![OstId(5)]);
+        // 2.5 stripes -> 3 OSTs
+        assert_eq!(
+            l.osts_for_file(5, (5 << 20) / 2),
+            vec![OstId(5), OstId(6), OstId(7)]
+        );
+        // big file capped at stripe_count OSTs
+        assert_eq!(l.osts_for_file(5, 100 << 20).len(), 4);
+    }
+
+    #[test]
+    fn round_robin_start_covers_all_osts() {
+        let l = StripeLayout::paper();
+        let starts: Vec<u32> = (0..22).map(|i| l.round_robin_start(i)).collect();
+        for ost in 0..11 {
+            assert_eq!(starts.iter().filter(|&&s| s == ost).count(), 2);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_stripe_size_rejected() {
+        StripeLayout::new(0, 1, 11);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stripe_count_gt_ost_count_rejected() {
+        StripeLayout::new(1 << 20, 12, 11);
+    }
+}

@@ -1,0 +1,93 @@
+//! Parallel-file-system substrate.
+//!
+//! The paper's testbed is two Lustre 2.9 file systems (1 OSS, 11 OSTs,
+//! 1 MB stripes). We reproduce the pieces LADS actually interacts with:
+//!
+//! - the **striping layout** — which OST serves which byte range of which
+//!   file ([`layout::StripeLayout`]); this is what makes scheduling
+//!   "layout-aware";
+//! - the **per-OST service behaviour** — queueing, service times,
+//!   congestion ([`ost::OstModel`]); this is what makes scheduling
+//!   "congestion-aware";
+//! - the **file namespace** — create/read/write/commit with metadata
+//!   (size + committed flag), which the resume protocol's sink-side
+//!   metadata match consults.
+//!
+//! Two implementations of the [`Pfs`] trait:
+//! - [`sim::SimPfs`] — deterministic synthetic data, in-memory state, a
+//!   per-object write ledger (digests) and fault hooks. Used by tests and
+//!   the figure benches.
+//! - [`disk::DiskPfs`] — real files under an OST-per-subdirectory root,
+//!   for the end-to-end example on a real small dataset.
+
+pub mod disk;
+pub mod layout;
+pub mod ost;
+pub mod sim;
+
+use anyhow::Result;
+
+pub use layout::StripeLayout;
+pub use ost::{OstId, OstModel, OstStats};
+
+/// Opaque per-PFS file handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FileId(pub u64);
+
+/// File metadata, the unit of the sink-side resume check (§5.2.2: "the
+/// sink checks if the file already exists and the file's metadata is
+/// matching with the source file's metadata").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileMeta {
+    pub name: String,
+    pub size: u64,
+    /// Set by `commit_file` (transfer fully completed + closed). A partial
+    /// file left behind by a fault is not committed and must not match.
+    pub committed: bool,
+    /// First OST index of the file's stripe pattern.
+    pub start_ost: u32,
+}
+
+/// The PFS interface the coordinator programs against.
+pub trait Pfs: Send + Sync {
+    /// Striping geometry (shared by layout-aware scheduling on both ends).
+    fn layout(&self) -> &StripeLayout;
+
+    /// The OST service model (congestion queries + service-time charging).
+    fn ost_model(&self) -> &OstModel;
+
+    /// Look up a file by name.
+    fn lookup(&self, name: &str) -> Option<(FileId, FileMeta)>;
+
+    /// List all file names (source-side dataset walk).
+    fn list(&self) -> Vec<String>;
+
+    /// Create (or truncate) a file of known final size; returns its id.
+    fn create(&self, name: &str, size: u64, start_ost: u32) -> Result<FileId>;
+
+    /// `pread`: read `buf.len()` bytes at `offset`, charging the serving
+    /// OST's service time. Short reads at EOF return the short length.
+    fn read_at(&self, file: FileId, offset: u64, buf: &mut [u8]) -> Result<usize>;
+
+    /// `pwrite`: write at `offset`, charging the serving OST.
+    ///
+    /// Takes `&mut` because the PFS models the DMA's view of the buffer:
+    /// an injected write corruption (see `sim::SimPfs`) mutates the bytes
+    /// *in place*, so a caller that digests the buffer after the call is
+    /// performing a faithful read-back verification — the §3.2 failure
+    /// mode stock LADS cannot detect.
+    fn write_at(&self, file: FileId, offset: u64, data: &mut [u8]) -> Result<()>;
+
+    /// Mark a file fully transferred (close + metadata barrier). After
+    /// commit, `lookup().1.committed` is true.
+    fn commit_file(&self, file: FileId) -> Result<()>;
+
+    /// Remove a file (sink-side cleanup when restarting a mismatched file).
+    fn remove(&self, name: &str) -> Result<()>;
+}
+
+/// Which OST serves byte `offset` of a file with the given start OST.
+/// Convenience wrapper over the layout.
+pub fn ost_of(layout: &StripeLayout, start_ost: u32, offset: u64) -> OstId {
+    layout.ost_for(start_ost, offset)
+}

@@ -1,0 +1,310 @@
+//! Per-OST service model: queueing, service times, congestion.
+//!
+//! Each OST is a serial(ish) device: a bounded number of in-flight
+//! requests (disk heads), a service time proportional to request size,
+//! and an *external load factor* that models other tenants hammering the
+//! shared file system (the situation LADS's congestion-aware scheduling
+//! exists for). Threads that issue I/O against a busy OST queue up; the
+//! queue depth is exported as the congestion signal the scheduler reads.
+//!
+//! Times are scaled by `time_scale` so the figure benches can run the
+//! paper's experiment *shapes* in seconds instead of hours; `time_scale =
+//! 0` disables sleeping entirely (pure logic tests).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Index of an object storage target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OstId(pub u32);
+
+impl std::fmt::Display for OstId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ost{}", self.0)
+    }
+}
+
+/// Service-model parameters (defaults roughly match a single SATA-class
+/// OST scaled for fast experiments; see DESIGN.md §Substitutions).
+#[derive(Debug, Clone)]
+pub struct OstConfig {
+    /// Sustained per-OST bandwidth, bytes/second.
+    pub bandwidth: f64,
+    /// Fixed per-request overhead.
+    pub base_latency: Duration,
+    /// Concurrent requests an OST services (1 = strictly serial device).
+    pub max_concurrent: usize,
+    /// Global multiplier on all service times (0.0 = never sleep).
+    pub time_scale: f64,
+}
+
+impl Default for OstConfig {
+    fn default() -> Self {
+        OstConfig {
+            bandwidth: 1.5e9,                      // 1.5 GB/s per OST (scaled testbed)
+            base_latency: Duration::from_micros(80),
+            max_concurrent: 1,
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// Cumulative per-OST counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OstStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Nanoseconds requests spent waiting for a service slot.
+    pub wait_ns: u64,
+    /// Nanoseconds of charged service time.
+    pub service_ns: u64,
+}
+
+struct OstState {
+    /// Service slots: (in_use, capacity) guarded by mutex + condvar.
+    slots: Mutex<usize>,
+    available: Condvar,
+    /// Requests queued or in service — the congestion signal.
+    depth: AtomicUsize,
+    /// External load multiplier ×1000 (1000 = idle, 5000 = 5× slower).
+    load_milli: AtomicU64,
+    stats: Mutex<OstStats>,
+}
+
+/// The OST fleet of one file system.
+pub struct OstModel {
+    cfg: OstConfig,
+    osts: Vec<OstState>,
+}
+
+impl OstModel {
+    pub fn new(ost_count: u32, cfg: OstConfig) -> Self {
+        assert!(ost_count > 0);
+        assert!(cfg.max_concurrent > 0);
+        let osts = (0..ost_count)
+            .map(|_| OstState {
+                slots: Mutex::new(0),
+                available: Condvar::new(),
+                depth: AtomicUsize::new(0),
+                load_milli: AtomicU64::new(1000),
+                stats: Mutex::new(OstStats::default()),
+            })
+            .collect();
+        OstModel { cfg, osts }
+    }
+
+    pub fn ost_count(&self) -> u32 {
+        self.osts.len() as u32
+    }
+
+    pub fn config(&self) -> &OstConfig {
+        &self.cfg
+    }
+
+    /// Charge one request of `bytes` against `ost`: wait for a service
+    /// slot, then hold it for the modeled service time.
+    pub fn service(&self, ost: OstId, bytes: u64, is_write: bool) {
+        let st = &self.osts[ost.0 as usize];
+        st.depth.fetch_add(1, Ordering::SeqCst);
+        let wait_start = Instant::now();
+
+        // Acquire a slot.
+        {
+            let mut in_use = st.slots.lock().unwrap_or_else(|e| e.into_inner());
+            while *in_use >= self.cfg.max_concurrent {
+                in_use = st
+                    .available
+                    .wait(in_use)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            *in_use += 1;
+        }
+        let waited = wait_start.elapsed();
+
+        // Modeled service time.
+        let load = st.load_milli.load(Ordering::Relaxed) as f64 / 1000.0;
+        let secs = (self.cfg.base_latency.as_secs_f64() + bytes as f64 / self.cfg.bandwidth)
+            * load
+            * self.cfg.time_scale;
+        let service = Duration::from_secs_f64(secs.max(0.0));
+        if !service.is_zero() {
+            std::thread::sleep(service);
+        }
+
+        // Release.
+        {
+            let mut in_use = st.slots.lock().unwrap_or_else(|e| e.into_inner());
+            *in_use -= 1;
+        }
+        st.available.notify_one();
+        st.depth.fetch_sub(1, Ordering::SeqCst);
+
+        let mut s = st.stats.lock().unwrap_or_else(|e| e.into_inner());
+        if is_write {
+            s.writes += 1;
+            s.bytes_written += bytes;
+        } else {
+            s.reads += 1;
+            s.bytes_read += bytes;
+        }
+        s.wait_ns += waited.as_nanos() as u64;
+        s.service_ns += service.as_nanos() as u64;
+    }
+
+    /// Congestion signal: requests queued or in service on `ost`.
+    pub fn queue_depth(&self, ost: OstId) -> usize {
+        self.osts[ost.0 as usize].depth.load(Ordering::SeqCst)
+    }
+
+    /// Model other tenants on a shared OST: all its service times are
+    /// multiplied by `factor` until reset (factor 1.0).
+    pub fn set_external_load(&self, ost: OstId, factor: f64) {
+        assert!(factor > 0.0);
+        self.osts[ost.0 as usize]
+            .load_milli
+            .store((factor * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn external_load(&self, ost: OstId) -> f64 {
+        self.osts[ost.0 as usize].load_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// The least-congested OST among `candidates` (ties → lowest id).
+    pub fn least_loaded(&self, candidates: &[OstId]) -> Option<OstId> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|&o| (self.queue_depth(o), o.0))
+    }
+
+    pub fn stats(&self, ost: OstId) -> OstStats {
+        *self.osts[ost.0 as usize]
+            .stats
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn total_stats(&self) -> OstStats {
+        let mut t = OstStats::default();
+        for i in 0..self.ost_count() {
+            let s = self.stats(OstId(i));
+            t.reads += s.reads;
+            t.writes += s.writes;
+            t.bytes_read += s.bytes_read;
+            t.bytes_written += s.bytes_written;
+            t.wait_ns += s.wait_ns;
+            t.service_ns += s.service_ns;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> OstConfig {
+        OstConfig { time_scale: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let m = OstModel::new(3, fast_cfg());
+        m.service(OstId(0), 1024, false);
+        m.service(OstId(0), 2048, true);
+        m.service(OstId(1), 10, false);
+        let s0 = m.stats(OstId(0));
+        assert_eq!(s0.reads, 1);
+        assert_eq!(s0.writes, 1);
+        assert_eq!(s0.bytes_read, 1024);
+        assert_eq!(s0.bytes_written, 2048);
+        assert_eq!(m.stats(OstId(2)), OstStats::default());
+        let t = m.total_stats();
+        assert_eq!(t.reads, 2);
+        assert_eq!(t.bytes_read, 1034);
+    }
+
+    #[test]
+    fn queue_depth_reflects_in_flight() {
+        let m = std::sync::Arc::new(OstModel::new(
+            1,
+            OstConfig {
+                bandwidth: 1e6,
+                base_latency: Duration::from_millis(20),
+                max_concurrent: 1,
+                time_scale: 1.0,
+            },
+        ));
+        let m2 = m.clone();
+        let h1 = std::thread::spawn(move || m2.service(OstId(0), 1000, false));
+        let m3 = m.clone();
+        let h2 = std::thread::spawn(move || m3.service(OstId(0), 1000, false));
+        // Within the first service window both requests are queued/in-service.
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(m.queue_depth(OstId(0)) >= 1);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        assert_eq!(m.queue_depth(OstId(0)), 0);
+        // Second request must have measurably waited for the slot.
+        assert!(m.stats(OstId(0)).wait_ns > 0);
+    }
+
+    #[test]
+    fn external_load_slows_service() {
+        let cfg = OstConfig {
+            bandwidth: 1e9,
+            base_latency: Duration::from_millis(5),
+            max_concurrent: 1,
+            time_scale: 1.0,
+        };
+        let m = OstModel::new(2, cfg);
+        let t0 = Instant::now();
+        m.service(OstId(0), 0, false);
+        let idle = t0.elapsed();
+        m.set_external_load(OstId(0), 8.0);
+        assert_eq!(m.external_load(OstId(0)), 8.0);
+        let t1 = Instant::now();
+        m.service(OstId(0), 0, false);
+        let loaded = t1.elapsed();
+        assert!(
+            loaded > idle * 3,
+            "loaded {loaded:?} should be much slower than idle {idle:?}"
+        );
+        m.set_external_load(OstId(0), 1.0);
+        assert_eq!(m.external_load(OstId(0)), 1.0);
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty() {
+        let m = std::sync::Arc::new(OstModel::new(
+            2,
+            OstConfig {
+                base_latency: Duration::from_millis(30),
+                max_concurrent: 1,
+                time_scale: 1.0,
+                ..Default::default()
+            },
+        ));
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || m2.service(OstId(0), 0, false));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(m.least_loaded(&[OstId(0), OstId(1)]), Some(OstId(1)));
+        h.join().unwrap();
+        // Idle: ties break to the lowest id.
+        assert_eq!(m.least_loaded(&[OstId(1), OstId(0)]), Some(OstId(0)));
+        assert_eq!(m.least_loaded(&[]), None);
+    }
+
+    #[test]
+    fn time_scale_zero_never_sleeps() {
+        let m = OstModel::new(1, fast_cfg());
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            m.service(OstId(0), 1 << 20, true);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+}

@@ -1,0 +1,452 @@
+//! In-memory simulated PFS with deterministic synthetic data.
+//!
+//! Source side: files are declared with a size; `read_at` synthesizes
+//! their bytes deterministically from `(seed, file, word index)` — O(1)
+//! random access, no RAM proportional to the dataset, and the *same*
+//! function regenerates the bytes anywhere (which is how tests verify
+//! end-to-end integrity without a second copy of the data).
+//!
+//! Sink side: `write_at` records a digest ledger entry per written range
+//! (plus optionally the raw bytes), so tests can check every object landed
+//! exactly once with exactly the right content. Write-corruption hooks
+//! flip a byte on the way down to exercise the §3.2 failure mode that
+//! motivates BLOCK_SYNC + integrity verification.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use super::layout::StripeLayout;
+use super::ost::{OstConfig, OstModel};
+use super::{FileId, FileMeta, Pfs};
+use crate::integrity::native::{digest_bytes, Digest};
+
+/// Deterministic lane generator: splitmix64 of (seed, file, 8-byte lane).
+/// One mix produces a full 8-byte lane (§Perf: the 4-byte-per-mix version
+/// made data *generation* the dominant cost of time_scale=0 transfers).
+#[inline]
+pub fn synth_lane(seed: u64, file: u64, lane_idx: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(file.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        .wrapping_add(lane_idx.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic word view (u32 half of a lane) — kept for tests.
+#[inline]
+pub fn synth_word(seed: u64, file: u64, word_idx: u64) -> u32 {
+    let lane = synth_lane(seed, file, word_idx / 2);
+    (lane >> (32 * (word_idx & 1))) as u32
+}
+
+/// Fill `buf` with the synthetic content of `file` starting at `offset`.
+pub fn synth_fill(seed: u64, file: u64, offset: u64, buf: &mut [u8]) {
+    let mut pos = 0usize;
+    let mut off = offset;
+    // Unaligned head up to an 8-byte lane boundary.
+    while pos < buf.len() && off % 8 != 0 {
+        let lane = synth_lane(seed, file, off / 8).to_le_bytes();
+        let within = (off % 8) as usize;
+        let take = (8 - within).min(buf.len() - pos);
+        buf[pos..pos + take].copy_from_slice(&lane[within..within + take]);
+        pos += take;
+        off += take as u64;
+    }
+    // Bulk: one mix per 8 bytes.
+    let mut lane_idx = off / 8;
+    let mut chunks = buf[pos..].chunks_exact_mut(8);
+    for c in &mut chunks {
+        c.copy_from_slice(&synth_lane(seed, file, lane_idx).to_le_bytes());
+        lane_idx += 1;
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        let lane = synth_lane(seed, file, lane_idx).to_le_bytes();
+        rem.copy_from_slice(&lane[..rem.len()]);
+    }
+}
+
+struct SimFile {
+    id: u64,
+    meta: FileMeta,
+    /// Sink ledger: offset -> (digest, len) of the last write there.
+    writes: BTreeMap<u64, (Digest, u32)>,
+    /// Raw stored bytes (only when `store_data`).
+    data: Option<Vec<u8>>,
+}
+
+/// One (file, offset) write to corrupt (single shot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CorruptionTarget {
+    pub file_name_hash: u64,
+    pub offset: u64,
+}
+
+pub struct SimPfs {
+    layout: StripeLayout,
+    osts: OstModel,
+    seed: u64,
+    files: Mutex<BTreeMap<String, SimFile>>,
+    ids: Mutex<BTreeMap<u64, String>>,
+    next_id: AtomicU64,
+    store_data: bool,
+    /// Pending single-shot write corruptions (§3.2 failure injection).
+    corruptions: Mutex<Vec<CorruptionTarget>>,
+    pub corrupted_writes: AtomicU64,
+}
+
+impl SimPfs {
+    pub fn new(layout: StripeLayout, ost_cfg: OstConfig, seed: u64) -> Self {
+        let osts = OstModel::new(layout.ost_count, ost_cfg);
+        SimPfs {
+            layout,
+            osts,
+            seed,
+            files: Mutex::new(BTreeMap::new()),
+            ids: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            store_data: false,
+            corruptions: Mutex::new(Vec::new()),
+            corrupted_writes: AtomicU64::new(0),
+        }
+    }
+
+    /// Keep raw written bytes (small tests only — memory grows with data).
+    pub fn with_stored_data(mut self) -> Self {
+        self.store_data = true;
+        self
+    }
+
+    /// Source-side pre-population: declare `(name, size)` files, start OSTs
+    /// assigned round-robin like a quiet Lustre allocator.
+    pub fn populate(&self, files: &[(String, u64)]) {
+        for (i, (name, size)) in files.iter().enumerate() {
+            let start = self.layout.round_robin_start(i as u64);
+            self.create(name, *size, start).expect("populate create");
+            // Pre-populated source files are complete by definition.
+            let (id, _) = self.lookup(name).unwrap();
+            self.commit_file(id).unwrap();
+        }
+    }
+
+    /// Arrange for the next write covering `(file_name, offset)` to be
+    /// corrupted (one byte flipped) before it lands.
+    pub fn inject_write_corruption(&self, file_name: &str, offset: u64) {
+        self.corruptions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(CorruptionTarget { file_name_hash: name_hash(file_name), offset });
+    }
+
+    /// Sink ledger: digest of the last write at exactly `offset`, if any.
+    pub fn written_digest(&self, name: &str, offset: u64) -> Option<(Digest, u32)> {
+        let files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+        files.get(name)?.writes.get(&offset).copied()
+    }
+
+    /// Total distinct offsets written for `name`.
+    pub fn written_ranges(&self, name: &str) -> usize {
+        let files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+        files.get(name).map(|f| f.writes.len()).unwrap_or(0)
+    }
+
+    /// Raw stored bytes (requires `with_stored_data`).
+    pub fn stored_data(&self, name: &str) -> Option<Vec<u8>> {
+        let files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+        files.get(name)?.data.clone()
+    }
+
+    /// The digest an honest source would compute for `(file, offset, len)`
+    /// of this PFS's synthetic content.
+    pub fn expected_digest(&self, name: &str, offset: u64, len: usize) -> Digest {
+        let fid_hash = name_hash(name);
+        let mut buf = vec![0u8; len];
+        synth_fill(self.seed, fid_hash, offset, &mut buf);
+        digest_bytes(&buf)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+fn name_hash(name: &str) -> u64 {
+    // FNV-1a 64.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Pfs for SimPfs {
+    fn layout(&self) -> &StripeLayout {
+        &self.layout
+    }
+
+    fn ost_model(&self) -> &OstModel {
+        &self.osts
+    }
+
+    fn lookup(&self, name: &str) -> Option<(FileId, FileMeta)> {
+        let files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+        let f = files.get(name)?;
+        Some((FileId(f.id), f.meta.clone()))
+    }
+
+    fn list(&self) -> Vec<String> {
+        self.files
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    fn create(&self, name: &str, size: u64, start_ost: u32) -> Result<FileId> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let mut files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+        files.insert(
+            name.to_string(),
+            SimFile {
+                id,
+                meta: FileMeta {
+                    name: name.to_string(),
+                    size,
+                    committed: false,
+                    start_ost: start_ost % self.layout.ost_count,
+                },
+                writes: BTreeMap::new(),
+                data: self.store_data.then(|| vec![0u8; size as usize]),
+            },
+        );
+        self.ids
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, name.to_string());
+        Ok(FileId(id))
+    }
+
+    fn read_at(&self, file: FileId, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        let (name, size, start_ost) = {
+            let ids = self.ids.lock().unwrap_or_else(|e| e.into_inner());
+            let name = ids
+                .get(&file.0)
+                .ok_or_else(|| anyhow::anyhow!("read_at: no file id {}", file.0))?
+                .clone();
+            let files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+            let f = &files[&name];
+            (name, f.meta.size, f.meta.start_ost)
+        };
+        if offset >= size {
+            return Ok(0);
+        }
+        let n = buf.len().min((size - offset) as usize);
+        // Charge the serving OST before producing data (pread semantics).
+        let ost = self.layout.ost_for(start_ost, offset);
+        self.osts.service(ost, n as u64, false);
+        synth_fill(self.seed, name_hash(&name), offset, &mut buf[..n]);
+        Ok(n)
+    }
+
+    fn write_at(&self, file: FileId, offset: u64, data: &mut [u8]) -> Result<()> {
+        let name = {
+            let ids = self.ids.lock().unwrap_or_else(|e| e.into_inner());
+            ids.get(&file.0)
+                .ok_or_else(|| anyhow::anyhow!("write_at: no file id {}", file.0))?
+                .clone()
+        };
+
+        // Apply any pending single-shot corruption for this (file, offset):
+        // the buffer is mutated IN PLACE, modeling bit rot between the
+        // caller's memory and the platters — a post-write digest of the
+        // buffer therefore sees exactly what the PFS stored.
+        {
+            let mut corr = self.corruptions.lock().unwrap_or_else(|e| e.into_inner());
+            let h = name_hash(&name);
+            if let Some(pos) = corr
+                .iter()
+                .position(|c| c.file_name_hash == h && c.offset == offset)
+            {
+                corr.remove(pos);
+                if !data.is_empty() {
+                    let mid = data.len() / 2;
+                    data[mid] ^= 0x40;
+                }
+                self.corrupted_writes.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let payload: &[u8] = data;
+
+        let mut files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+        let f = files
+            .get_mut(&name)
+            .ok_or_else(|| anyhow::anyhow!("write_at: file '{name}' removed"))?;
+        if offset + payload.len() as u64 > f.meta.size {
+            bail!(
+                "write_at: [{offset}, +{}) beyond declared size {} of '{name}'",
+                payload.len(),
+                f.meta.size
+            );
+        }
+        let ost = self.layout.ost_for(f.meta.start_ost, offset);
+        let start_ost = f.meta.start_ost;
+        let _ = start_ost;
+        f.writes.insert(offset, (digest_bytes(payload), payload.len() as u32));
+        if let Some(d) = f.data.as_mut() {
+            d[offset as usize..offset as usize + payload.len()].copy_from_slice(payload);
+        }
+        drop(files);
+        self.osts.service(ost, payload.len() as u64, true);
+        Ok(())
+    }
+
+    fn commit_file(&self, file: FileId) -> Result<()> {
+        let ids = self.ids.lock().unwrap_or_else(|e| e.into_inner());
+        let name = ids
+            .get(&file.0)
+            .ok_or_else(|| anyhow::anyhow!("commit: no file id {}", file.0))?
+            .clone();
+        drop(ids);
+        let mut files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+        files
+            .get_mut(&name)
+            .ok_or_else(|| anyhow::anyhow!("commit: file '{name}' removed"))?
+            .meta
+            .committed = true;
+        Ok(())
+    }
+
+    fn remove(&self, name: &str) -> Result<()> {
+        let mut files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+        files
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("remove: no file '{name}'"))?;
+        let mut ids = self.ids.lock().unwrap_or_else(|e| e.into_inner());
+        ids.retain(|_, n| n != name);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_pfs() -> SimPfs {
+        SimPfs::new(
+            StripeLayout::paper(),
+            OstConfig { time_scale: 0.0, ..Default::default() },
+            42,
+        )
+    }
+
+    #[test]
+    fn synth_is_deterministic_and_offset_consistent() {
+        let mut a = vec![0u8; 64];
+        synth_fill(1, 2, 0, &mut a);
+        let mut b = vec![0u8; 32];
+        synth_fill(1, 2, 32, &mut b);
+        assert_eq!(&a[32..], &b[..]);
+        // Unaligned reads agree with aligned ones.
+        let mut c = vec![0u8; 10];
+        synth_fill(1, 2, 3, &mut c);
+        assert_eq!(&a[3..13], &c[..]);
+    }
+
+    #[test]
+    fn synth_differs_by_file_and_seed() {
+        let mut a = vec![0u8; 32];
+        let mut b = vec![0u8; 32];
+        synth_fill(1, 2, 0, &mut a);
+        synth_fill(1, 3, 0, &mut b);
+        assert_ne!(a, b);
+        synth_fill(9, 2, 0, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn populate_and_read() {
+        let pfs = fast_pfs();
+        pfs.populate(&[("f0".into(), 100), ("f1".into(), 50)]);
+        let (id, meta) = pfs.lookup("f0").unwrap();
+        assert_eq!(meta.size, 100);
+        assert!(meta.committed);
+        let mut buf = vec![0u8; 64];
+        assert_eq!(pfs.read_at(id, 0, &mut buf).unwrap(), 64);
+        // Short read at EOF.
+        assert_eq!(pfs.read_at(id, 96, &mut buf).unwrap(), 4);
+        assert_eq!(pfs.read_at(id, 100, &mut buf).unwrap(), 0);
+        // Round-robin start OSTs.
+        assert_eq!(pfs.lookup("f0").unwrap().1.start_ost, 0);
+        assert_eq!(pfs.lookup("f1").unwrap().1.start_ost, 1);
+    }
+
+    #[test]
+    fn write_ledger_records_digests() {
+        let pfs = fast_pfs();
+        let id = pfs.create("out", 100, 0).unwrap();
+        pfs.write_at(id, 0, &mut [1, 2, 3, 4]).unwrap();
+        pfs.write_at(id, 50, &mut [5; 10]).unwrap();
+        let (d, len) = pfs.written_digest("out", 0).unwrap();
+        assert_eq!(len, 4);
+        assert_eq!(d, digest_bytes(&[1, 2, 3, 4]));
+        assert_eq!(pfs.written_ranges("out"), 2);
+        assert!(pfs.written_digest("out", 1).is_none());
+    }
+
+    #[test]
+    fn write_beyond_size_rejected() {
+        let pfs = fast_pfs();
+        let id = pfs.create("out", 10, 0).unwrap();
+        assert!(pfs.write_at(id, 8, &mut [0; 4]).is_err());
+    }
+
+    #[test]
+    fn commit_sets_metadata() {
+        let pfs = fast_pfs();
+        let id = pfs.create("out", 10, 0).unwrap();
+        assert!(!pfs.lookup("out").unwrap().1.committed);
+        pfs.commit_file(id).unwrap();
+        assert!(pfs.lookup("out").unwrap().1.committed);
+    }
+
+    #[test]
+    fn corruption_hook_flips_exactly_once() {
+        let pfs = fast_pfs();
+        let id = pfs.create("out", 100, 0).unwrap();
+        pfs.inject_write_corruption("out", 10);
+        let data = [7u8; 20];
+        pfs.write_at(id, 10, &mut data.clone()).unwrap();
+        let (d, _) = pfs.written_digest("out", 10).unwrap();
+        assert_ne!(d, digest_bytes(&data), "write should have been corrupted");
+        assert_eq!(pfs.corrupted_writes.load(Ordering::SeqCst), 1);
+        // Re-write is clean (single shot).
+        pfs.write_at(id, 10, &mut data.clone()).unwrap();
+        let (d2, _) = pfs.written_digest("out", 10).unwrap();
+        assert_eq!(d2, digest_bytes(&data));
+    }
+
+    #[test]
+    fn expected_digest_matches_read() {
+        let pfs = fast_pfs();
+        pfs.populate(&[("f".into(), 1000)]);
+        let (id, _) = pfs.lookup("f").unwrap();
+        let mut buf = vec![0u8; 256];
+        pfs.read_at(id, 128, &mut buf).unwrap();
+        assert_eq!(digest_bytes(&buf), pfs.expected_digest("f", 128, 256));
+    }
+
+    #[test]
+    fn remove_then_lookup_fails() {
+        let pfs = fast_pfs();
+        pfs.create("x", 1, 0).unwrap();
+        pfs.remove("x").unwrap();
+        assert!(pfs.lookup("x").is_none());
+        assert!(pfs.remove("x").is_err());
+    }
+}

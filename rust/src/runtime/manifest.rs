@@ -1,0 +1,161 @@
+//! Parser for `artifacts/manifest.json`, written by `python/compile/aot.py`.
+//!
+//! The manifest pins the static AOT shapes (object words, batch sizes) and
+//! maps each entry name to its HLO text file and I/O signature. The rust
+//! side validates every execute call against this signature — shape bugs
+//! fail loudly here instead of deep inside PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Tensor signature: dtype (currently always u32) + dims.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled computation: file + I/O signature.
+#[derive(Debug, Clone)]
+pub struct EntrySig {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// u32 words per object (the AOT `W`). Objects are zero-padded to this.
+    pub object_words: usize,
+    /// Bytes per object (`4 * object_words`) — must equal the configured MTU.
+    pub object_bytes: usize,
+    /// Objects per digest/verify batch (the AOT `B`).
+    pub digest_batch: usize,
+    /// Files per recovery batch (the AOT `F`).
+    pub recovery_files: usize,
+    /// u32 bitmap words per file in the recovery input (the AOT `WB`).
+    pub bitmap_words: usize,
+    pub entries: BTreeMap<String, EntrySig>,
+    /// Directory the manifest was loaded from (entry files are relative).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let v = Json::parse(text)?;
+        let need_u64 = |key: &str| -> anyhow::Result<u64> {
+            v.get(key)
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("manifest: missing/invalid '{key}'"))
+        };
+        let mut entries = BTreeMap::new();
+        let eobj = v
+            .get("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing 'entries'"))?;
+        for (name, e) in eobj {
+            let file = e
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("entry {name}: missing 'file'"))?;
+            let sig_list = |key: &str| -> anyhow::Result<Vec<TensorSig>> {
+                e.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("entry {name}: missing '{key}'"))?
+                    .iter()
+                    .map(|t| {
+                        let pair =
+                            t.as_arr().ok_or_else(|| anyhow::anyhow!("bad tensor sig"))?;
+                        let dtype = pair[0]
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("bad dtype"))?
+                            .to_string();
+                        let dims = pair[1]
+                            .as_arr()
+                            .ok_or_else(|| anyhow::anyhow!("bad dims"))?
+                            .iter()
+                            .map(|d| {
+                                d.as_u64()
+                                    .map(|x| x as usize)
+                                    .ok_or_else(|| anyhow::anyhow!("bad dim"))
+                            })
+                            .collect::<anyhow::Result<Vec<_>>>()?;
+                        Ok(TensorSig { dtype, dims })
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySig {
+                    file: dir.join(file),
+                    inputs: sig_list("inputs")?,
+                    outputs: sig_list("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            object_words: need_u64("object_words")? as usize,
+            object_bytes: need_u64("object_bytes")? as usize,
+            digest_batch: need_u64("digest_batch")? as usize,
+            recovery_files: need_u64("recovery_files")? as usize,
+            bitmap_words: need_u64("bitmap_words")? as usize,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "object_words": 65536, "object_bytes": 262144, "digest_batch": 8,
+      "recovery_files": 64, "bitmap_words": 128,
+      "entries": {
+        "digest": {"file": "digest.hlo.txt",
+                   "inputs": [["u32", [8, 65536]]],
+                   "outputs": [["u32", [8, 2]]]},
+        "recovery": {"file": "recovery.hlo.txt",
+                     "inputs": [["u32", [64, 128]], ["u32", [64]]],
+                     "outputs": [["u32", [64]], ["u32", [64]]]}
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.object_words, 65536);
+        assert_eq!(m.object_bytes, 262144);
+        assert_eq!(m.digest_batch, 8);
+        let d = &m.entries["digest"];
+        assert_eq!(d.file, Path::new("/tmp/a/digest.hlo.txt"));
+        assert_eq!(d.inputs[0].dims, vec![8, 65536]);
+        assert_eq!(d.inputs[0].element_count(), 8 * 65536);
+        let r = &m.entries["recovery"];
+        assert_eq!(r.inputs.len(), 2);
+        assert_eq!(r.outputs.len(), 2);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"object_words": 1}"#, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! the rust hot path.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards this module
+//! is self-contained: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute`. HLO *text* is the interchange format —
+//! the image's xla_extension 0.5.1 rejects jax≥0.5's serialized protos
+//! (64-bit instruction ids); the text parser reassigns ids.
+//!
+//! One `LoadedGraph` per model variant; executables are compiled once and
+//! reused for the life of the process (compile is ~100 ms, execute is the
+//! hot path).
+
+pub mod manifest;
+pub mod service;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{EntrySig, Manifest, TensorSig};
+pub use service::{RuntimeHandle, RuntimeService};
+
+/// A PJRT client plus every artifact from the manifest, compiled.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    graphs: std::collections::BTreeMap<String, LoadedGraph>,
+}
+
+/// One compiled computation with its validated I/O signature.
+pub struct LoadedGraph {
+    exe: xla::PjRtLoadedExecutable,
+    pub sig: EntrySig,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Load every entry in `dir/manifest.json` and compile it.
+    pub fn load_dir(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut graphs = std::collections::BTreeMap::new();
+        for (name, sig) in &manifest.entries {
+            let graph = LoadedGraph::compile(&client, name, sig)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            graphs.insert(name.clone(), graph);
+        }
+        Ok(Runtime { client, manifest, graphs })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&LoadedGraph> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact named '{name}' in manifest"))
+    }
+
+    pub fn graph_names(&self) -> Vec<&str> {
+        self.graphs.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+impl LoadedGraph {
+    fn compile(client: &xla::PjRtClient, name: &str, sig: &EntrySig) -> Result<LoadedGraph> {
+        let path = sig
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(LoadedGraph { exe, sig: sig.clone(), name: name.to_string() })
+    }
+
+    /// Execute with u32 tensors. `inputs[i]` must have exactly
+    /// `sig.inputs[i].element_count()` elements; shapes come from the
+    /// signature. Returns the untupled outputs as flat u32 vectors.
+    pub fn execute_u32(&self, inputs: &[&[u32]]) -> Result<Vec<Vec<u32>>> {
+        if inputs.len() != self.sig.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.name,
+                self.sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, tsig)) in inputs.iter().zip(&self.sig.inputs).enumerate() {
+            if data.len() != tsig.element_count() {
+                bail!(
+                    "artifact '{}' input {i}: expected {} elements ({:?}), got {}",
+                    self.name,
+                    tsig.element_count(),
+                    tsig.dims,
+                    data.len()
+                );
+            }
+            // Single-copy literal creation (vec1 + reshape would copy the
+            // buffer twice — §Perf iteration 3).
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            literals.push(
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::U32,
+                    &tsig.dims,
+                    bytes,
+                )
+                .context("create input literal")?,
+            );
+        }
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = result.to_tuple().context("untuple result")?;
+        if parts.len() != self.sig.outputs.len() {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.sig.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, tsig) in parts.into_iter().zip(&self.sig.outputs) {
+            let v: Vec<u32> = part.to_vec().context("read output literal")?;
+            if v.len() != tsig.element_count() {
+                bail!(
+                    "artifact '{}': output has {} elements, manifest says {}",
+                    self.name,
+                    v.len(),
+                    tsig.element_count()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Smoke helper used by `ftlads doctor` and tests: is PJRT usable at all?
+pub fn pjrt_available() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}

@@ -1,0 +1,122 @@
+//! Thread-confined PJRT service.
+//!
+//! The `xla` crate's client/executable handles are `!Send` (`Rc` + raw
+//! PJRT pointers), so all PJRT use is confined to one dedicated service
+//! thread that owns the [`Runtime`]; the rest of the system talks to it
+//! through a cloneable, thread-safe [`RuntimeHandle`]. One compile at
+//! startup, then request/response over channels — the request path never
+//! touches python OR re-compiles.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::Runtime;
+
+enum Request {
+    Execute {
+        graph: String,
+        inputs: Vec<Vec<u32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<u32>>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send+Sync handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    pub manifest: Arc<Manifest>,
+    pub platform: String,
+}
+
+/// Owns the service thread; dropping shuts it down.
+pub struct RuntimeService {
+    handle: RuntimeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Load `dir/manifest.json`, compile every artifact on the service
+    /// thread, and return once compilation succeeded (or failed).
+    pub fn start(dir: &Path) -> Result<RuntimeService> {
+        let dir = dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(Arc<Manifest>, String)>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let runtime = match Runtime::load_dir(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok((
+                            Arc::new(rt.manifest.clone()),
+                            rt.platform_name(),
+                        )));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { graph, inputs, reply } => {
+                            let result = runtime.graph(&graph).and_then(|g| {
+                                let refs: Vec<&[u32]> =
+                                    inputs.iter().map(|v| v.as_slice()).collect();
+                                g.execute_u32(&refs)
+                            });
+                            let _ = reply.send(result);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        let (manifest, platform) = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("PJRT service thread died during startup"))??;
+        Ok(RuntimeService {
+            handle: RuntimeHandle { tx: Arc::new(Mutex::new(tx)), manifest, platform },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        {
+            let tx = self.handle.tx.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Execute a compiled artifact; blocks until the service replies.
+    pub fn execute_u32(&self, graph: &str, inputs: Vec<Vec<u32>>) -> Result<Vec<Vec<u32>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+            tx.send(Request::Execute {
+                graph: graph.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("PJRT service thread gone"))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("PJRT service dropped reply"))?
+    }
+}

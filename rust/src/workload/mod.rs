@@ -1,0 +1,151 @@
+//! Workload generation.
+//!
+//! The paper evaluates two datasets (§6.1): "big" — 100 × 1 GB files —
+//! and "small" — 10,000 × 1 MB files, motivated by the observation that
+//! 86.76 % of files on the production Lustre system are < 1 MB while the
+//! few large files hold most of the bytes. We generate both, plus the
+//! mixed production-like distribution the intro describes, at a
+//! configurable scale factor (the default figure benches run 1/64-scale;
+//! EXPERIMENTS.md records the scaling).
+
+use crate::testutil::Pcg32;
+
+/// One file to be transferred.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileSpec {
+    pub name: String,
+    pub size: u64,
+}
+
+/// A named dataset.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub files: Vec<FileSpec>,
+}
+
+impl Workload {
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.size).sum()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Objects at the given MTU (what LADS actually schedules).
+    pub fn total_objects(&self, object_size: u64) -> u64 {
+        self.files
+            .iter()
+            .map(|f| crate::util::div_ceil(f.size.max(1), object_size))
+            .sum()
+    }
+
+    pub fn as_tuples(&self) -> Vec<(String, u64)> {
+        self.files.iter().map(|f| (f.name.clone(), f.size)).collect()
+    }
+}
+
+/// Paper's big workload: `count` files of `file_size` bytes
+/// (paper: 100 × 1 GB; scaled default in benches: 100 × 16 MB).
+pub fn big_workload(count: usize, file_size: u64) -> Workload {
+    Workload {
+        name: format!("big-{count}x{}", crate::util::fmt_bytes(file_size)),
+        files: (0..count)
+            .map(|i| FileSpec { name: format!("big/file_{i:05}.dat"), size: file_size })
+            .collect(),
+    }
+}
+
+/// Paper's small workload: `count` files of exactly one MTU
+/// (paper: 10,000 × 1 MB with 1 MB MTU — file == one object, which is why
+/// Fig 9's recovery overhead is flat; preserve that identity when scaling).
+pub fn small_workload(count: usize, file_size: u64) -> Workload {
+    Workload {
+        name: format!("small-{count}x{}", crate::util::fmt_bytes(file_size)),
+        files: (0..count)
+            .map(|i| FileSpec { name: format!("small/file_{i:05}.dat"), size: file_size })
+            .collect(),
+    }
+}
+
+/// Production-like mixed distribution (intro §6.1: 86.76 % < 1 MB,
+/// 90.35 % < 4 MB, the rest large): sizes drawn deterministically from
+/// `seed`. `unit` scales the whole distribution (unit = 1 MiB gives the
+/// paper's absolute sizes).
+pub fn mixed_workload(count: usize, unit: u64, seed: u64) -> Workload {
+    let mut rng = Pcg32::new(seed);
+    let files = (0..count)
+        .map(|i| {
+            let p = rng.f64();
+            let size = if p < 0.8676 {
+                // < 1 unit: 4 KiB-grained sizes
+                rng.range(unit / 256, unit.max(2) - 1)
+            } else if p < 0.9035 {
+                // 1..4 units
+                rng.range(unit, 4 * unit - 1)
+            } else {
+                // heavy tail: 4..64 units
+                rng.range(4 * unit, 64 * unit)
+            };
+            FileSpec { name: format!("mixed/file_{i:05}.dat"), size: size.max(1) }
+        })
+        .collect();
+    Workload { name: format!("mixed-{count}"), files }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn big_workload_shape() {
+        let w = big_workload(100, 16 << 20);
+        assert_eq!(w.file_count(), 100);
+        assert_eq!(w.total_bytes(), 100 * (16 << 20));
+        assert_eq!(w.total_objects(256 << 10), 100 * 64);
+        assert_ne!(w.files[0].name, w.files[1].name);
+    }
+
+    #[test]
+    fn small_workload_one_object_per_file() {
+        let w = small_workload(2000, 256 << 10);
+        assert_eq!(w.total_objects(256 << 10), 2000);
+    }
+
+    #[test]
+    fn odd_sizes_round_up_objects() {
+        let w = Workload {
+            name: "t".into(),
+            files: vec![
+                FileSpec { name: "a".into(), size: 1 },
+                FileSpec { name: "b".into(), size: 100 },
+                FileSpec { name: "c".into(), size: 101 },
+            ],
+        };
+        assert_eq!(w.total_objects(100), 1 + 1 + 2);
+    }
+
+    #[test]
+    fn mixed_distribution_matches_paper_fractions() {
+        let unit = 1 << 20;
+        let w = mixed_workload(20_000, unit, 7);
+        let small = w.files.iter().filter(|f| f.size < unit).count() as f64;
+        let under4 = w.files.iter().filter(|f| f.size < 4 * unit).count() as f64;
+        let n = w.file_count() as f64;
+        assert!((small / n - 0.8676).abs() < 0.01, "got {}", small / n);
+        assert!((under4 / n - 0.9035).abs() < 0.01, "got {}", under4 / n);
+        // Large files dominate the bytes (the paper's second observation).
+        let big_bytes: u64 = w.files.iter().filter(|f| f.size >= 4 * unit).map(|f| f.size).sum();
+        assert!(big_bytes as f64 / w.total_bytes() as f64 > 0.5);
+    }
+
+    #[test]
+    fn mixed_is_deterministic() {
+        let a = mixed_workload(100, 1 << 20, 3);
+        let b = mixed_workload(100, 1 << 20, 3);
+        assert_eq!(a.files, b.files);
+        let c = mixed_workload(100, 1 << 20, 4);
+        assert_ne!(a.files, c.files);
+    }
+}

@@ -1,0 +1,204 @@
+//! Launcher-level integration: drive the actual `ftlads` binary —
+//! single-process simulated transfers via the CLI, and the two-process
+//! TCP deployment (sink process + source process over loopback with
+//! DiskPfs roots), verifying real bytes on a real file system.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn ftlads() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ftlads"))
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ftlads-cli-{tag}-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn cli_transfer_completes_and_verifies() {
+    let ftdir = tmp("t1");
+    let out = ftlads()
+        .args([
+            "transfer",
+            "--workload", "big",
+            "--files", "4",
+            "--file-size", "512K",
+            "--mechanism", "universal",
+            "--method", "bit64",
+            "--ft-dir", ftdir.to_str().unwrap(),
+            "--set", "time_scale=0",
+        ])
+        .output()
+        .expect("spawn ftlads");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stdout: {stdout}\nstderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("completed        : true"), "{stdout}");
+    assert!(stdout.contains("sink dataset verified"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&ftdir);
+}
+
+#[test]
+fn cli_fault_exits_2_then_recover_shows_state() {
+    let ftdir = tmp("t2");
+    let common = [
+        "--workload", "big",
+        "--files", "6",
+        "--file-size", "512K",
+        "--mechanism", "file",
+        "--method", "bit8",
+        "--set", "time_scale=0",
+    ];
+    let out = ftlads()
+        .args(["transfer"])
+        .args(common)
+        .args(["--ft-dir", ftdir.to_str().unwrap(), "--fault", "0.5"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "fault run must exit 2");
+
+    // recover subcommand sees the in-flight state.
+    let out = ftlads()
+        .args([
+            "recover",
+            "--mechanism", "file",
+            "--method", "bit8",
+            "--ft-dir", ftdir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("in-flight file(s)"), "{stdout}");
+    assert!(stdout.contains("pending"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&ftdir);
+}
+
+#[test]
+fn cli_json_output_parses() {
+    let ftdir = tmp("t3");
+    let out = ftlads()
+        .args([
+            "transfer",
+            "--workload", "small",
+            "--files", "8",
+            "--json",
+            "--ft-dir", ftdir.to_str().unwrap(),
+            "--set", "time_scale=0",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let json_line = stdout
+        .lines()
+        .find(|l| l.starts_with('{'))
+        .expect("json line present");
+    let v = ftlads::util::json::Json::parse(json_line).expect("valid json");
+    assert_eq!(v.get("completed"), &ftlads::util::json::Json::Bool(true));
+    assert!(v.get("objects_synced").as_u64().unwrap() >= 8);
+    let _ = std::fs::remove_dir_all(&ftdir);
+}
+
+#[test]
+fn cli_doctor_reports_pjrt() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping doctor test: artifacts not built");
+        return;
+    }
+    let out = ftlads()
+        .args(["doctor", "--artifacts", artifacts.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("PJRT client      : ok"), "{stdout}");
+    assert!(stdout.contains("execute          : ok"), "{stdout}");
+}
+
+#[test]
+fn two_process_tcp_transfer_with_disk_pfs() {
+    // Real sockets, real files, two OS processes.
+    let root = tmp("twoproc");
+    let src_root = root.join("src");
+    let sink_root = root.join("sink");
+    std::fs::create_dir_all(&src_root).unwrap();
+
+    // Stage a small real dataset (deterministic contents).
+    let staging = root.join("staging");
+    std::fs::create_dir_all(&staging).unwrap();
+    let mut rng = ftlads::testutil::Pcg32::new(99);
+    for i in 0..5 {
+        let mut data = vec![0u8; 200_000 + i * 17];
+        rng.fill_bytes(&mut data);
+        std::fs::write(staging.join(format!("f{i}.bin")), data).unwrap();
+    }
+    {
+        use ftlads::pfs::{disk::DiskPfs, StripeLayout};
+        let pfs = DiskPfs::new(
+            &src_root,
+            StripeLayout::paper(),
+            ftlads::pfs::ost::OstConfig { time_scale: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(pfs.import_dir(&staging).unwrap(), 5);
+    }
+
+    // Pick a free port by binding and releasing.
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+
+    let mut sink = ftlads()
+        .args([
+            "sink",
+            "--listen", &addr,
+            "--root", sink_root.to_str().unwrap(),
+            "--set", "time_scale=0",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn sink");
+    std::thread::sleep(std::time::Duration::from_millis(400));
+
+    let ftdir = root.join("ftlog");
+    let out = ftlads()
+        .args([
+            "source",
+            "--connect", &addr,
+            "--root", src_root.to_str().unwrap(),
+            "--mechanism", "universal",
+            "--method", "bit64",
+            "--ft-dir", ftdir.to_str().unwrap(),
+            "--set", "time_scale=0",
+        ])
+        .output()
+        .expect("run source");
+    let src_out = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "source failed: {src_out}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(src_out.contains("transfer complete"), "{src_out}");
+
+    let status = sink.wait().expect("sink exit");
+    assert!(status.success(), "sink failed");
+
+    // Byte-for-byte comparison.
+    for i in 0..5 {
+        let name = format!("f{i}.bin");
+        let a = std::fs::read(staging.join(&name)).unwrap();
+        let b = std::fs::read(sink_root.join(&name)).unwrap();
+        assert_eq!(a, b, "content mismatch in {name}");
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}

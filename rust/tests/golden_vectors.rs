@@ -1,0 +1,82 @@
+//! Cross-language golden vectors: `integrity::native` must reproduce
+//! tests/golden/digest_vectors.json (generated from python ref.py), the
+//! same file python/tests/test_golden.py asserts. This pins the
+//! rust-native / jnp-ref / Pallas-kernel / PJRT-artifact quadrangle to a
+//! committed ground truth.
+
+use ftlads::integrity::native::{digest_words, popcount_words};
+use ftlads::util::json::Json;
+
+fn load() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/digest_vectors.json");
+    let text = std::fs::read_to_string(path).expect("golden vectors present");
+    Json::parse(&text).expect("golden vectors parse")
+}
+
+fn words_of(case: &Json) -> Vec<u32> {
+    case.get("words")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap() as u32)
+        .collect()
+}
+
+#[test]
+fn native_digest_matches_golden() {
+    let data = load();
+    let cases = data.get("digest").as_arr().unwrap();
+    assert!(cases.len() >= 8, "golden file incomplete");
+    for (i, case) in cases.iter().enumerate() {
+        let words = words_of(case);
+        let d = digest_words(&words);
+        assert_eq!(d.a as u64, case.get("a").as_u64().unwrap(), "case {i}: A");
+        assert_eq!(d.b as u64, case.get("b").as_u64().unwrap(), "case {i}: B");
+    }
+}
+
+#[test]
+fn native_popcount_matches_golden() {
+    let data = load();
+    for (i, case) in data.get("popcount").as_arr().unwrap().iter().enumerate() {
+        let words = words_of(case);
+        assert_eq!(
+            popcount_words(&words) as u64,
+            case.get("popcount").as_u64().unwrap(),
+            "case {i}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_artifact_matches_golden() {
+    // Skipped when artifacts are absent.
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let service = ftlads::runtime::RuntimeService::start(&dir).unwrap();
+    let handle = service.handle();
+    let w = handle.manifest.object_words;
+    let b = handle.manifest.digest_batch;
+    let data = load();
+    for (i, case) in data.get("digest").as_arr().unwrap().iter().enumerate() {
+        let words = words_of(case);
+        if words.len() > w {
+            continue;
+        }
+        // Zero-padding to the artifact width W changes the position
+        // weights, so recompute the expected digest natively at width W —
+        // the *native* path is already pinned to the golden file above;
+        // here we pin PJRT == native at the artifact shape.
+        let mut padded = words.clone();
+        padded.resize(w, 0);
+        let expect = digest_words(&padded);
+        let mut batch = vec![0u32; b * w];
+        batch[..w].copy_from_slice(&padded);
+        let out = handle.execute_u32("digest", vec![batch]).unwrap();
+        assert_eq!(out[0][0], expect.a, "case {i}: A via PJRT");
+        assert_eq!(out[0][1], expect.b, "case {i}: B via PJRT");
+    }
+}

@@ -1,0 +1,194 @@
+//! Cross-layer integration: the AOT artifacts (Pallas kernels lowered by
+//! jax) loaded and executed via PJRT from rust, checked bit-for-bit
+//! against the native rust implementation (which is itself checked
+//! against ref.py by pytest — closing the three-layer loop).
+//!
+//! Requires `make artifacts`; tests are skipped (not failed) if the
+//! artifacts directory is absent so `cargo test` works standalone.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ftlads::config::Config;
+use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::integrity::{self, Digest, DigestEngine, IntegrityMode, NativeEngine, PjrtEngine};
+use ftlads::runtime::RuntimeService;
+use ftlads::testutil::Pcg32;
+use ftlads::workload;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn pjrt_digest_matches_native() {
+    let dir = need_artifacts!();
+    let service = RuntimeService::start(&dir).unwrap();
+    let handle = service.handle();
+    let words = handle.manifest.object_words;
+    let engine = PjrtEngine::new(handle).unwrap();
+
+    let mut rng = Pcg32::new(7);
+    // Full object, partial object, tiny object, empty-ish object.
+    let sizes = [words * 4, words * 4 - 5, 1024, 4];
+    let objects: Vec<Vec<u8>> = sizes
+        .iter()
+        .map(|&n| {
+            let mut v = vec![0u8; n];
+            rng.fill_bytes(&mut v);
+            v
+        })
+        .collect();
+    let refs: Vec<&[u8]> = objects.iter().map(|v| v.as_slice()).collect();
+
+    let pjrt = engine.digest_batch(&refs, words).unwrap();
+    let native = NativeEngine.digest_batch(&refs, words).unwrap();
+    assert_eq!(pjrt, native, "PJRT kernel digest != native digest");
+    // And non-trivial.
+    assert_ne!(pjrt[0], Digest { a: 0, b: 0 });
+}
+
+#[test]
+fn pjrt_digest_batches_larger_than_b() {
+    let dir = need_artifacts!();
+    let service = RuntimeService::start(&dir).unwrap();
+    let handle = service.handle();
+    let words = handle.manifest.object_words;
+    let b = handle.manifest.digest_batch;
+    let engine = PjrtEngine::new(handle).unwrap();
+
+    let mut rng = Pcg32::new(8);
+    let objects: Vec<Vec<u8>> = (0..(2 * b + 3))
+        .map(|_| {
+            let mut v = vec![0u8; 2048];
+            rng.fill_bytes(&mut v);
+            v
+        })
+        .collect();
+    let refs: Vec<&[u8]> = objects.iter().map(|v| v.as_slice()).collect();
+    let pjrt = engine.digest_batch(&refs, words).unwrap();
+    let native = NativeEngine.digest_batch(&refs, words).unwrap();
+    assert_eq!(pjrt, native);
+    assert_eq!(pjrt.len(), 2 * b + 3);
+}
+
+#[test]
+fn pjrt_recovery_summary_matches_native_popcount() {
+    let dir = need_artifacts!();
+    let service = RuntimeService::start(&dir).unwrap();
+    let handle = service.handle();
+    let wb = handle.manifest.bitmap_words;
+    let f = handle.manifest.recovery_files;
+
+    let mut rng = Pcg32::new(9);
+    // More files than one artifact batch to exercise chunking.
+    let n = f + 5;
+    let bitmaps: Vec<Vec<u32>> = (0..n)
+        .map(|_| (0..wb).map(|_| rng.next_u32()).collect())
+        .collect();
+    let totals: Vec<u32> = bitmaps
+        .iter()
+        .map(|bm| {
+            // total >= popcount for half, < popcount (clamping) for half.
+            let pop = integrity::popcount_words(bm);
+            if rng.bool(0.5) {
+                pop + rng.below(100)
+            } else {
+                pop / 2
+            }
+        })
+        .collect();
+
+    let (completed, pending) =
+        integrity::pjrt_recovery_summary(&handle, &bitmaps, &totals).unwrap();
+    assert_eq!(completed.len(), n);
+    for i in 0..n {
+        let pop = integrity::popcount_words(&bitmaps[i]);
+        let expect_completed = pop.min(totals[i]);
+        assert_eq!(completed[i], expect_completed, "row {i}");
+        assert_eq!(pending[i], totals[i] - expect_completed, "row {i}");
+    }
+}
+
+#[test]
+fn transfer_with_pjrt_integrity_end_to_end() {
+    let dir = need_artifacts!();
+    let service = RuntimeService::start(&dir).unwrap();
+    let handle = service.handle();
+
+    let mut cfg = Config::for_tests("pjrt-e2e");
+    cfg.integrity = IntegrityMode::Pjrt;
+    cfg.object_size = handle.manifest.object_bytes as u64;
+    cfg.rma_bytes = 16 * cfg.object_size as usize;
+
+    let wl = workload::big_workload(3, 4 * cfg.object_size); // 12 objects
+    let env = SimEnv::new(cfg, &wl);
+    let out = env
+        .run_with_runtime(&TransferSpec::fresh(env.files.clone()), Some(handle))
+        .unwrap();
+    assert!(out.completed, "fault: {:?}", out.fault);
+    assert_eq!(out.source.objects_synced, 12);
+    env.verify_sink_complete().unwrap();
+}
+
+#[test]
+fn pjrt_detects_corrupted_write_on_hot_path() {
+    let dir = need_artifacts!();
+    let service = RuntimeService::start(&dir).unwrap();
+    let handle = service.handle();
+
+    let mut cfg = Config::for_tests("pjrt-corrupt");
+    cfg.integrity = IntegrityMode::Pjrt;
+    cfg.object_size = handle.manifest.object_bytes as u64;
+    cfg.rma_bytes = 16 * cfg.object_size as usize;
+
+    let wl = workload::big_workload(2, 2 * cfg.object_size);
+    let env = SimEnv::new(cfg, &wl);
+    env.sink
+        .inject_write_corruption(&env.files[1], env.cfg.object_size);
+    let out = env
+        .run_with_runtime(&TransferSpec::fresh(env.files.clone()), Some(handle))
+        .unwrap();
+    assert!(out.completed, "fault: {:?}", out.fault);
+    assert_eq!(out.sink.objects_failed_verify, 1, "kernel must catch the flip");
+    env.verify_sink_complete().unwrap();
+}
+
+#[test]
+fn recovered_counts_via_pjrt_match_sets() {
+    let dir = need_artifacts!();
+    let service = RuntimeService::start(&dir).unwrap();
+    let handle = service.handle();
+
+    use ftlads::ftlog::{recover, CompletedSet};
+    let mut sets = std::collections::BTreeMap::new();
+    let mut rng = Pcg32::new(11);
+    for i in 0..10 {
+        let total = 64 + rng.below(512);
+        let mut s = CompletedSet::new(total);
+        for _ in 0..rng.below(total) {
+            s.insert(rng.below(total));
+        }
+        sets.insert(format!("f{i}"), s);
+    }
+    let counts = recover::recovered_counts_pjrt(&handle, &sets).unwrap();
+    for (name, set) in &sets {
+        let (c, p) = counts[name];
+        assert_eq!(c, set.count(), "{name}");
+        assert_eq!(p, set.total() - set.count(), "{name}");
+    }
+    let _ = Arc::new(()); // silence unused Arc import if cfg changes
+}

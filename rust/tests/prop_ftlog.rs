@@ -1,0 +1,282 @@
+//! Property-based tests for the FT logging subsystem (testutil::forall
+//! drives deterministic PCG-seeded cases; see DESIGN.md §8 for why this
+//! replaces proptest offline).
+//!
+//! Core invariant — **log/recover round-trip**: for any mechanism, any
+//! method, any file set, any out-of-order completion order (with
+//! duplicates), and any crash point, `recover_all` returns exactly the
+//! set of completions logged before the crash for non-completed files,
+//! and nothing for completed files.
+
+use std::collections::BTreeMap;
+
+use ftlads::ftlog::{
+    self, codec::Method, recover, CompletedSet, FtConfig, Mechanism,
+};
+use ftlads::testutil::{forall, Pcg32};
+use ftlads::{prop_assert, prop_assert_eq};
+
+fn tmp_dir(tag: &str, case: u64) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "ftlads-prop-{tag}-{case}-{}",
+        std::process::id()
+    ))
+}
+
+fn random_mechanism(rng: &mut Pcg32) -> Mechanism {
+    *rng.choose(&Mechanism::ALL_FT)
+}
+
+fn random_method(rng: &mut Pcg32) -> Method {
+    *rng.choose(&Method::ALL)
+}
+
+#[test]
+fn prop_log_recover_roundtrip() {
+    let mut case_id = 0u64;
+    forall("log_recover_roundtrip", 60, |rng| {
+        case_id += 1;
+        let dir = tmp_dir("rt", case_id);
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = FtConfig {
+            mechanism: random_mechanism(rng),
+            method: random_method(rng),
+            dir: dir.clone(),
+            txn_size: rng.range(1, 6) as usize,
+        };
+        let mut logger = ftlog::create_logger(&cfg).map_err(|e| e.to_string())?;
+
+        let nfiles = rng.range(1, 8) as usize;
+        let mut expected: BTreeMap<String, CompletedSet> = BTreeMap::new();
+        let mut keys = Vec::new();
+        let mut totals = Vec::new();
+        for f in 0..nfiles {
+            let total = rng.range(1, 200) as u32;
+            let name = format!("d/f{f}");
+            let key = logger
+                .register_file(&name, total)
+                .map_err(|e| e.to_string())?;
+            keys.push((name.clone(), key));
+            totals.push(total);
+            expected.insert(name, CompletedSet::new(total));
+        }
+
+        // Random interleaved completions with duplicates.
+        let ops = rng.range(0, 400);
+        for _ in 0..ops {
+            let fi = rng.below(nfiles as u32) as usize;
+            let (name, key) = &keys[fi];
+            let block = rng.below(totals[fi]);
+            logger.log_block(*key, block).map_err(|e| e.to_string())?;
+            expected.get_mut(name).unwrap().insert(block);
+        }
+
+        // Randomly complete some files whose sets we then expect absent.
+        for fi in 0..nfiles {
+            if rng.bool(0.3) {
+                let (name, key) = &keys[fi];
+                logger.complete_file(*key).map_err(|e| e.to_string())?;
+                expected.remove(name);
+            }
+        }
+        drop(logger); // crash point: whatever is on disk is what recovery sees
+
+        let recovered = recover::recover_all(&cfg).map_err(|e| e.to_string())?;
+        // Files with zero logged blocks may legitimately have no log file
+        // (light-weight logging) — drop empty sets from expectation.
+        let expected: BTreeMap<_, _> = expected
+            .into_iter()
+            .filter(|(_, s)| s.count() > 0)
+            .collect();
+        let recovered: BTreeMap<_, _> = recovered
+            .into_iter()
+            .filter(|(_, s)| s.count() > 0)
+            .collect();
+        prop_assert_eq!(recovered, expected);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_completed_set_semantics_match_btreeset() {
+    forall("completed_set_model", 200, |rng| {
+        let total = rng.range(1, 500) as u32;
+        let mut set = CompletedSet::new(total);
+        let mut model = std::collections::BTreeSet::new();
+        for _ in 0..rng.range(0, 600) {
+            let b = rng.below(total);
+            prop_assert_eq!(set.insert(b), model.insert(b));
+        }
+        prop_assert_eq!(set.count() as usize, model.len());
+        prop_assert_eq!(
+            set.iter_completed().collect::<Vec<_>>(),
+            model.iter().copied().collect::<Vec<_>>()
+        );
+        let pending = set.pending();
+        prop_assert_eq!(pending.len() + model.len(), total as usize);
+        for b in pending {
+            prop_assert!(!model.contains(&b));
+        }
+        prop_assert_eq!(set.is_complete(), model.len() == total as usize);
+        // u32-word bitmap popcount agrees.
+        let pop: u32 = set.to_u32_words().iter().map(|w| w.count_ones()).sum();
+        prop_assert_eq!(pop, set.count());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_record_codecs_roundtrip() {
+    forall("record_codec", 200, |rng| {
+        let method = *rng.choose(&[Method::Char, Method::Int, Method::Enc, Method::Binary]);
+        let n = rng.range(0, 200) as usize;
+        let blocks: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let mut buf = Vec::new();
+        for &b in &blocks {
+            method.encode_record(b, &mut buf);
+        }
+        prop_assert_eq!(method.decode_stream(&buf), blocks);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_torn_tail_loses_at_most_last_record() {
+    forall("torn_tail", 150, |rng| {
+        let method = *rng.choose(&[Method::Int, Method::Enc, Method::Binary]);
+        let n = rng.range(2, 50) as usize;
+        let blocks: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let mut buf = Vec::new();
+        for &b in &blocks {
+            method.encode_record(b, &mut buf);
+        }
+        // Tear 1..record_len-1 bytes off the end.
+        let cut = rng.range(1, 3) as usize;
+        if buf.len() <= cut {
+            return Ok(());
+        }
+        buf.truncate(buf.len() - cut);
+        let got = method.decode_stream(&buf);
+        // All but the last record must survive intact.
+        prop_assert!(got.len() >= n - 1, "lost more than the torn record");
+        prop_assert_eq!(got[..n - 1].to_vec(), blocks[..n - 1].to_vec());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vld_varint_roundtrip_and_ordering() {
+    forall("vld", 300, |rng| {
+        let v = rng.next_u32();
+        let mut buf = Vec::new();
+        let n = ftlog::vld::encode_u32(v, &mut buf);
+        prop_assert_eq!(n, ftlog::vld::encoded_len(v));
+        let (back, used) = ftlog::vld::decode_u32(&buf).ok_or("decode failed")?;
+        prop_assert_eq!(back, v);
+        prop_assert_eq!(used, n);
+        // Monotone length: longer values never encode shorter.
+        let w = rng.next_u32();
+        let (small, large) = if v <= w { (v, w) } else { (w, v) };
+        prop_assert!(ftlog::vld::encoded_len(small) <= ftlog::vld::encoded_len(large));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitmap_region_equals_set_bits() {
+    // For bitmap methods, the bytes in the log region must equal the
+    // in-memory set exactly (Algorithm 1 word updates must not clobber
+    // neighbours).
+    let mut case_id = 0u64;
+    forall("bitmap_region", 60, |rng| {
+        case_id += 1;
+        let method = *rng.choose(&[Method::Bit8, Method::Bit64]);
+        let dir = tmp_dir("bm", case_id);
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = FtConfig {
+            mechanism: Mechanism::File,
+            method,
+            dir: dir.clone(),
+            txn_size: 4,
+        };
+        let total = rng.range(1, 300) as u32;
+        let mut logger = ftlog::create_logger(&cfg).map_err(|e| e.to_string())?;
+        let key = logger.register_file("f", total).map_err(|e| e.to_string())?;
+        let mut model = CompletedSet::new(total);
+        for _ in 0..rng.range(1, 400) {
+            let b = rng.below(total);
+            logger.log_block(key, b).map_err(|e| e.to_string())?;
+            model.insert(b);
+        }
+        drop(logger);
+        let rec = recover::recover_all(&cfg).map_err(|e| e.to_string())?;
+        prop_assert_eq!(rec.get("f").cloned().ok_or("missing f")?, model);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_escape_name_injective_roundtrip() {
+    forall("escape", 300, |rng| {
+        // Random byte-ish strings incl. separators and UTF-8.
+        let pool = [
+            "a", "B", "9", ".", "_", "-", "/", " ", "%", "\n", "α", "試", "%2f", "..",
+        ];
+        let n = rng.range(0, 12) as usize;
+        let name: String = (0..n).map(|_| *rng.choose(&pool)).collect();
+        let esc = ftlog::escape_name(&name);
+        prop_assert!(esc
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-' || b == b'%'));
+        prop_assert_eq!(ftlog::unescape_name(&esc).ok_or("unescape failed")?, name);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_region_logger_space_bounded_by_live_files() {
+    // Universal logger with serial complete: space must stay O(one file),
+    // not O(dataset) — the region-reuse invariant behind Fig 7.
+    let mut case_id = 0u64;
+    forall("region_space", 20, |rng| {
+        case_id += 1;
+        let dir = tmp_dir("space", case_id);
+        let _ = std::fs::remove_dir_all(&dir);
+        let method = random_method(rng);
+        let cfg = FtConfig {
+            mechanism: Mechanism::Universal,
+            method,
+            dir: dir.clone(),
+            txn_size: 4,
+        };
+        let total = rng.range(8, 64) as u32;
+        let mut logger = ftlog::create_logger(&cfg).map_err(|e| e.to_string())?;
+        let files = rng.range(10, 30) as usize;
+        for f in 0..files {
+            let key = logger
+                .register_file(&format!("f{f}"), total)
+                .map_err(|e| e.to_string())?;
+            for b in 0..total {
+                logger.log_block(key, b).map_err(|e| e.to_string())?;
+            }
+            logger.complete_file(key).map_err(|e| e.to_string())?;
+        }
+        let region = method.region_bytes(total) as u64;
+        let space = logger.space();
+        // Log bytes (excluding the append-only index) bounded by ~2 regions.
+        let log_bytes = ftlog::dir_bytes(&dir).saturating_sub(
+            std::fs::metadata(dir.join("index.tidx"))
+                .map(|m| m.len())
+                .unwrap_or(0),
+        );
+        prop_assert!(
+            log_bytes <= 2 * region,
+            "log grew to {log_bytes} for region {region} over {files} serial files"
+        );
+        prop_assert!(space.peak_bytes > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}

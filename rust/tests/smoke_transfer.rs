@@ -1,0 +1,49 @@
+use ftlads::config::Config;
+use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::workload;
+
+#[test]
+fn basic_transfer_completes() {
+    let cfg = Config::for_tests("smoke1");
+    let wl = workload::big_workload(4, 512 << 10); // 4 files x 512KiB, 8 objects each
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "fault: {:?}", out.fault);
+    assert_eq!(out.source.objects_synced, 32);
+    env.verify_sink_complete().unwrap();
+}
+
+#[test]
+fn fault_then_resume_completes() {
+    use ftlads::fault::FaultPlan;
+    use ftlads::net::Side;
+    let cfg = Config::for_tests("smoke2");
+    let wl = workload::big_workload(6, 512 << 10);
+    let env = SimEnv::new(cfg, &wl);
+    let out = env
+        .run(&TransferSpec::fresh(env.files.clone()).with_fault(FaultPlan::at_fraction(0.4, Side::Source)))
+        .unwrap();
+    assert!(!out.completed);
+    assert!(out.fault.is_some());
+    let sent_before = out.source.objects_sent;
+    assert!(sent_before > 0 && sent_before < 48);
+    // Resume: must transfer only the remainder.
+    let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+    assert!(out2.completed, "resume fault: {:?}", out2.fault);
+    let skipped = out2.source.objects_skipped_resume;
+    assert!(skipped > 0, "resume should skip logged objects");
+    env.verify_sink_complete().unwrap();
+}
+
+#[test]
+fn corruption_is_detected_and_retransmitted() {
+    let cfg = Config::for_tests("smoke3");
+    let wl = workload::big_workload(2, 256 << 10);
+    let env = SimEnv::new(cfg, &wl);
+    env.sink.inject_write_corruption(&env.files[0], 0);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "fault: {:?}", out.fault);
+    assert_eq!(out.sink.objects_failed_verify, 1);
+    assert_eq!(out.source.objects_failed_verify, 1);
+    env.verify_sink_complete().unwrap();
+}

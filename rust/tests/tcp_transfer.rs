@@ -1,0 +1,144 @@
+//! Transfer over the TCP transport: the two-process deployment path
+//! (source and sink nodes joined by real loopback sockets with full
+//! message serialization), exercised in-process.
+
+use std::sync::Arc;
+
+use ftlads::config::Config;
+use ftlads::coordinator::{self, TransferSpec};
+use ftlads::fault::FaultPlan;
+use ftlads::ftlog::{Mechanism, Method};
+use ftlads::net::{tcp, Endpoint, FaultController, Side, WireModel};
+use ftlads::pfs::sim::SimPfs;
+use ftlads::pfs::Pfs;
+use ftlads::workload;
+
+struct TcpEnv {
+    cfg: Config,
+    source: Arc<SimPfs>,
+    sink: Arc<SimPfs>,
+    files: Vec<String>,
+}
+
+impl TcpEnv {
+    fn new(tag: &str, nfiles: usize, size: u64) -> TcpEnv {
+        let mut cfg = Config::for_tests(tag);
+        cfg.mechanism = Mechanism::Universal;
+        cfg.method = Method::Bit64;
+        let wl = workload::big_workload(nfiles, size);
+        let source = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), cfg.seed));
+        source.populate(&wl.as_tuples());
+        let sink = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), cfg.seed));
+        let files = wl.files.iter().map(|f| f.name.clone()).collect();
+        TcpEnv { cfg, source, sink, files }
+    }
+
+    fn run(&self, fault: FaultPlan, resume: bool) -> coordinator::TransferOutcome {
+        let total: u64 = self
+            .files
+            .iter()
+            .map(|n| self.source.lookup(n).unwrap().1.size)
+            .sum();
+        let ctl = fault.arm(total);
+        let (src_ep, sink_ep) =
+            tcp::loopback_pair(WireModel::none(), ctl).expect("tcp pair");
+        let src_ep: Arc<dyn Endpoint> = Arc::new(src_ep);
+        let sink_ep: Arc<dyn Endpoint> = Arc::new(sink_ep);
+
+        let sink_node = coordinator::sink::spawn_sink(
+            &self.cfg,
+            self.sink.clone() as Arc<dyn Pfs>,
+            sink_ep,
+            None,
+        )
+        .expect("spawn sink");
+        let spec = TransferSpec { files: self.files.clone(), resume, fault: FaultPlan::none() };
+        let src_report = coordinator::source::run_source(
+            &self.cfg,
+            self.source.clone() as Arc<dyn Pfs>,
+            src_ep.clone(),
+            &spec,
+        )
+        .expect("run source");
+        let sink_report = sink_node.join();
+        let fault_msg = src_report.fault.clone().or(sink_report.fault);
+        coordinator::TransferOutcome {
+            completed: fault_msg.is_none()
+                && src_report.files_done as usize == self.files.len(),
+            fault: fault_msg,
+            elapsed: std::time::Duration::ZERO,
+            source: src_report.counters,
+            sink: sink_report.counters,
+            log_space: src_report.log_space,
+            resources: Default::default(),
+            payload_bytes: src_ep.payload_sent(),
+            rma_stalls: sink_report.rma_stalls,
+        }
+    }
+
+    fn verify(&self) {
+        for name in &self.files {
+            let (_, meta) = self.sink.lookup(name).expect("file at sink");
+            assert!(meta.committed, "{name} not committed");
+            let objects =
+                (meta.size + self.cfg.object_size - 1) / self.cfg.object_size;
+            for b in 0..objects {
+                let offset = b * self.cfg.object_size;
+                let len = (meta.size - offset).min(self.cfg.object_size) as usize;
+                let (got, _) = self
+                    .sink
+                    .written_digest(name, offset)
+                    .unwrap_or_else(|| panic!("{name} block {b} missing"));
+                assert_eq!(got, self.source.expected_digest(name, offset, len));
+            }
+        }
+    }
+}
+
+#[test]
+fn tcp_full_transfer() {
+    let env = TcpEnv::new("tcp1", 5, 512 << 10);
+    let out = env.run(FaultPlan::none(), false);
+    assert!(out.completed, "{:?}", out.fault);
+    assert_eq!(out.source.objects_synced, 5 * 8);
+    env.verify();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn tcp_fault_then_resume() {
+    let env = TcpEnv::new("tcp2", 6, 512 << 10);
+    let out = env.run(FaultPlan::at_fraction(0.5, Side::Source), false);
+    assert!(!out.completed, "fault should trigger over TCP too");
+    let out2 = env.run(FaultPlan::none(), true);
+    assert!(out2.completed, "{:?}", out2.fault);
+    assert!(
+        out2.source.objects_skipped_resume + out2.source.files_skipped_resume > 0,
+        "resume should reuse progress"
+    );
+    env.verify();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn tcp_serialization_preserves_large_objects() {
+    // One object larger than typical socket buffers (1 MiB) to force
+    // multi-read frames.
+    let mut cfgd = Config::for_tests("tcp3");
+    cfgd.object_size = 1 << 20;
+    cfgd.rma_bytes = 8 << 20;
+    let env = TcpEnv {
+        cfg: cfgd.clone(),
+        source: {
+            let p = Arc::new(SimPfs::new(cfgd.layout(), cfgd.ost_config(), 1));
+            p.populate(&[("big.bin".to_string(), (1 << 20) + 12345)]);
+            p
+        },
+        sink: Arc::new(SimPfs::new(cfgd.layout(), cfgd.ost_config(), 1)),
+        files: vec!["big.bin".to_string()],
+    };
+    let out = env.run(FaultPlan::none(), false);
+    assert!(out.completed, "{:?}", out.fault);
+    env.verify();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
