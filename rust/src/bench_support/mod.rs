@@ -19,6 +19,9 @@ use crate::coordinator::{SimEnv, TransferOutcome, TransferSpec};
 use crate::fault::FaultPlan;
 use crate::ftlog::{Mechanism, Method};
 use crate::net::Side;
+use crate::pfs::ost::OstId;
+use crate::pfs::Pfs;
+use crate::sched::SchedPolicy;
 use crate::workload::{big_workload, small_workload, Workload};
 
 /// Workload + iteration scaling for a figure run.
@@ -154,6 +157,43 @@ pub fn run_case(scale: &BenchScale, wl: &Workload, case: Case, tag: &str) -> Tra
         .run(&TransferSpec::fresh(env.files.clone()))
         .expect("bench transfer failed");
     assert!(out.completed, "bench case {} did not complete: {:?}", case.label(), out.fault);
+    cleanup(&env);
+    out
+}
+
+/// The source-side OSTs the scheduler ablation congests.
+pub const CONGESTED_OSTS: [u32; 3] = [1, 4, 7];
+
+/// Run one complete transfer under `policy` with OSTs
+/// [`CONGESTED_OSTS`] externally loaded `load`× at the source — the
+/// congested-OST workload the scheduler-policy axis (`benches/ablation.rs`
+/// A6) sweeps across every [`SchedPolicy`].
+pub fn run_sched_case(
+    scale: &BenchScale,
+    wl: &Workload,
+    policy: SchedPolicy,
+    load: f64,
+    tag: &str,
+) -> TransferOutcome {
+    let mut cfg = scale.base_config(tag);
+    cfg.mechanism = Mechanism::Universal;
+    cfg.scheduler = policy;
+    cfg.time_scale = scale.time_scale.max(0.5); // congestion needs real service times
+    let env = SimEnv::new(cfg, wl);
+    for ost in CONGESTED_OSTS {
+        if ost < env.cfg.ost_count {
+            Pfs::ost_model(&*env.source).set_external_load(OstId(ost), load);
+        }
+    }
+    let out = env
+        .run(&TransferSpec::fresh(env.files.clone()))
+        .expect("sched bench transfer failed");
+    assert!(
+        out.completed,
+        "sched case {} did not complete: {:?}",
+        policy.as_str(),
+        out.fault
+    );
     cleanup(&env);
     out
 }

@@ -119,4 +119,35 @@ mod tests {
     fn double_positional_rejected() {
         assert!(Args::parse(&argv(&["a", "b"]), &[]).is_err());
     }
+
+    #[test]
+    fn scheduler_flag_roundtrips_into_config() {
+        use crate::config::Config;
+        use crate::sched::SchedPolicy;
+        // Both flag spellings land in Config the way main.rs wires them.
+        let a = Args::parse(
+            &argv(&["transfer", "--scheduler", "fifo_file", "--sink-scheduler=rr"]),
+            &[],
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.apply_kv("scheduler", a.get("scheduler").unwrap()).unwrap();
+        cfg.apply_kv("sink_scheduler", a.get("sink-scheduler").unwrap())
+            .unwrap();
+        assert_eq!(cfg.scheduler, SchedPolicy::FifoFile);
+        assert_eq!(cfg.sink_sched(), SchedPolicy::RoundRobin);
+        assert_eq!(cfg.scheduler.as_str(), "fifo_file");
+    }
+
+    #[test]
+    fn scheduler_typo_error_lists_valid_policies() {
+        use crate::sched::SchedPolicy;
+        let a = Args::parse(&argv(&["transfer", "--scheduler", "speedy"]), &[]).unwrap();
+        let err = SchedPolicy::parse(a.get("scheduler").unwrap())
+            .unwrap_err()
+            .to_string();
+        for name in ["congestion", "round_robin", "fifo_file", "straggler"] {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+    }
 }

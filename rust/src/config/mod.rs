@@ -18,6 +18,7 @@ use crate::integrity::IntegrityMode;
 use crate::net::WireModel;
 use crate::pfs::layout::StripeLayout;
 use crate::pfs::ost::OstConfig;
+use crate::sched::SchedPolicy;
 
 pub use toml_lite::TomlLite;
 
@@ -43,6 +44,12 @@ pub struct Config {
     pub logging: LoggingMode,
     /// Integrity verification backend.
     pub integrity: IntegrityMode,
+    /// OST dequeue policy for the source's IO threads (§2.1; see
+    /// [`crate::sched`] for the built-in policies).
+    pub scheduler: SchedPolicy,
+    /// Sink-side override: the sink's write queues may run a different
+    /// policy than the source's read queues. `None` = same as `scheduler`.
+    pub sink_scheduler: Option<SchedPolicy>,
     /// Artifacts directory for the PJRT runtime (integrity = pjrt).
     pub artifacts_dir: PathBuf,
     /// PFS geometry + service model (both ends).
@@ -74,6 +81,8 @@ impl Default for Config {
             ft_dir: default_ft_dir(),
             logging: LoggingMode::Sync,
             integrity: IntegrityMode::Native,
+            scheduler: SchedPolicy::CongestionAware,
+            sink_scheduler: None,
             artifacts_dir: PathBuf::from("artifacts"),
             stripe_size: 1 << 20,
             stripe_count: 1,
@@ -120,6 +129,12 @@ impl Config {
         }
     }
 
+    /// The policy the sink's IO threads run: the explicit sink override,
+    /// or the session-wide `scheduler` when none is set.
+    pub fn sink_sched(&self) -> SchedPolicy {
+        self.sink_scheduler.unwrap_or(self.scheduler)
+    }
+
     pub fn ft(&self) -> FtConfig {
         FtConfig {
             mechanism: self.mechanism,
@@ -161,6 +176,14 @@ impl Config {
             "ft_dir" => self.ft_dir = PathBuf::from(value),
             "logging" => self.logging = LoggingMode::parse(value)?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
+            "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
+            "sink_scheduler" => {
+                // `default` clears the override (sink follows `scheduler`).
+                self.sink_scheduler = match value {
+                    "default" | "same" => None,
+                    _ => Some(SchedPolicy::parse(value)?),
+                }
+            }
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
             "stripe_size" => self.stripe_size = parse_bytes(value)?,
             "stripe_count" => self.stripe_count = value.parse()?,
@@ -265,6 +288,43 @@ mod tests {
         assert_eq!(c.integrity, IntegrityMode::Pjrt);
         assert!(c.apply_kv("nonsense", "1").is_err());
         assert!(c.apply_kv("io_threads", "lots").is_err());
+    }
+
+    #[test]
+    fn scheduler_kv_and_sink_override() {
+        let mut c = Config::default();
+        assert_eq!(c.scheduler, SchedPolicy::CongestionAware);
+        assert_eq!(c.sink_sched(), SchedPolicy::CongestionAware);
+        c.apply_kv("scheduler", "round_robin").unwrap();
+        assert_eq!(c.scheduler, SchedPolicy::RoundRobin);
+        // Sink follows the session policy until explicitly overridden.
+        assert_eq!(c.sink_sched(), SchedPolicy::RoundRobin);
+        c.apply_kv("sink_scheduler", "straggler").unwrap();
+        assert_eq!(c.sink_sched(), SchedPolicy::StragglerAware);
+        assert_eq!(c.scheduler, SchedPolicy::RoundRobin);
+        c.apply_kv("sink_scheduler", "default").unwrap();
+        assert_eq!(c.sink_sched(), SchedPolicy::RoundRobin);
+        // A typo produces an error listing every valid policy name.
+        let err = c.apply_kv("scheduler", "fastest").unwrap_err().to_string();
+        for name in ["congestion", "round_robin", "fifo_file", "straggler"] {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn scheduler_toml_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ftlads-sched-cfg-{}.toml", std::process::id()));
+        std::fs::write(
+            &path,
+            "scheduler = \"fifo_file\"\n[coordinator]\nsink_scheduler = \"congestion\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.scheduler, SchedPolicy::FifoFile);
+        assert_eq!(c.sink_sched(), SchedPolicy::CongestionAware);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

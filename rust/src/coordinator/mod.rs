@@ -2,6 +2,11 @@
 //! paper's thread structure (one master, one comm, N IO threads over
 //! per-OST work queues), the BLOCK_SYNC protocol, FT logging and resume.
 //!
+//! Which OST queue an IO thread drains next is a pluggable policy
+//! ([`crate::sched`]): the source runs `cfg.scheduler`, the sink runs
+//! `cfg.sink_scheduler` (defaulting to the same policy), so asymmetric
+//! source/sink scheduling experiments need no code changes.
+//!
 //! Entry point: [`run_transfer`] wires a source and a sink over an
 //! in-process channel transport (the Verbs-like path), runs the transfer
 //! to completion or injected fault, and reports timing/counters/space.

@@ -1,16 +1,19 @@
-//! Per-OST work queues + the layout/congestion-aware dequeue policy.
+//! Per-OST work queues, policy-parametric dequeue.
 //!
 //! LADS's core scheduling idea (§2.1): requests are queued *per OST*, and
-//! an IO thread picks its next request from the least-congested OST that
-//! has work. If one OST is slow (external load, deep queue), threads
-//! naturally drain the others — "the N−1 threads are free to issue new
-//! requests to other OSTs".
+//! an IO thread picks its next request from whichever OST the configured
+//! [`Scheduler`] policy chooses (see [`crate::sched`] for the policy
+//! layer). The default, [`CongestionAware`], is the paper's behavior: the
+//! least-congested OST that has work, so if one OST is slow (external
+//! load, deep queue), threads naturally drain the others — "the N−1
+//! threads are free to issue new requests to other OSTs".
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::pfs::ost::{OstId, OstModel};
+use crate::sched::{CongestionAware, QueueView, Scheduler};
 
 /// Work queues for one side's IO threads. `T` is the request type
 /// (source: block reads; sink: block writes).
@@ -20,9 +23,16 @@ pub struct OstQueues<T> {
 }
 
 struct Inner<T> {
-    queues: Vec<VecDeque<T>>,
+    /// Per-OST FIFO of (global arrival sequence, request).
+    queues: Vec<VecDeque<(u64, T)>>,
     queued: usize,
+    /// Next arrival sequence number (strictly increasing across pushes).
+    next_seq: u64,
     closed: bool,
+    /// Reusable [`QueueView`] backing stores (rebuilt under the lock on
+    /// every pick — no per-pop allocation on the hot path).
+    len_scratch: Vec<usize>,
+    seq_scratch: Vec<u64>,
 }
 
 impl<T> OstQueues<T> {
@@ -31,7 +41,10 @@ impl<T> OstQueues<T> {
             inner: Mutex::new(Inner {
                 queues: (0..ost_count).map(|_| VecDeque::new()).collect(),
                 queued: 0,
+                next_seq: 0,
                 closed: false,
+                len_scratch: vec![0; ost_count as usize],
+                seq_scratch: vec![u64::MAX; ost_count as usize],
             }),
             cv: Condvar::new(),
         }
@@ -40,33 +53,71 @@ impl<T> OstQueues<T> {
     /// Enqueue a request for `ost` and wake one IO thread.
     pub fn push(&self, ost: OstId, item: T) {
         let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        g.queues[ost.0 as usize].push_back(item);
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        g.queues[ost.0 as usize].push_back((seq, item));
         g.queued += 1;
         drop(g);
         self.cv.notify_one();
     }
 
-    /// Dequeue from the least-congested non-empty OST (congestion signal =
-    /// the OST model's in-service depth; ties by queue length then id).
-    /// Blocks until work arrives or the queues are closed (returns None).
-    pub fn pop_least_congested(&self, osts: &OstModel) -> Option<(OstId, T)> {
+    /// Enqueue a whole batch — e.g. every pending object of a file at
+    /// admission — under a single lock acquisition, then wake *all* IO
+    /// threads. One `notify_all` after the batch (instead of one
+    /// `notify_one` per item) means no wakeup can be lost to a thread
+    /// that is mid-pop and not yet waiting: any thread that misses the
+    /// broadcast finds `queued > 0` when it next takes the lock. Returns
+    /// the number of requests enqueued.
+    pub fn push_batch(&self, items: impl IntoIterator<Item = (OstId, T)>) -> usize {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut n = 0usize;
+        for (ost, item) in items {
+            let seq = g.next_seq;
+            g.next_seq += 1;
+            g.queues[ost.0 as usize].push_back((seq, item));
+            n += 1;
+        }
+        g.queued += n;
+        drop(g);
+        if n > 0 {
+            self.cv.notify_all();
+        }
+        n
+    }
+
+    /// Dequeue from whichever non-empty OST `sched` picks. Blocks until
+    /// work arrives or the queues are closed (returns None once drained).
+    ///
+    /// The policy is consulted under the queue lock with a fresh
+    /// [`QueueView`]; a policy that returns `None` or an empty/
+    /// out-of-range OST falls back to the lowest-id non-empty queue, so
+    /// progress never depends on policy correctness.
+    pub fn pop_next(&self, sched: &dyn Scheduler, osts: &OstModel) -> Option<(OstId, T)> {
         let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if g.queued > 0 {
-                let pick = g
-                    .queues
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, q)| !q.is_empty())
-                    .min_by_key(|(i, q)| {
-                        (osts.queue_depth(OstId(*i as u32)), usize::MAX - q.len(), *i)
-                    })
-                    .map(|(i, _)| i);
-                if let Some(i) = pick {
-                    let item = g.queues[i].pop_front().unwrap();
-                    g.queued -= 1;
-                    return Some((OstId(i as u32), item));
+                let n = g.queues.len();
+                for i in 0..n {
+                    let len = g.queues[i].len();
+                    let seq = g.queues[i].front().map(|(s, _)| *s).unwrap_or(u64::MAX);
+                    g.len_scratch[i] = len;
+                    g.seq_scratch[i] = seq;
                 }
+                let view = QueueView { len: &g.len_scratch, head_seq: &g.seq_scratch };
+                let picked = sched.pick(&view, osts);
+                let idx = match picked {
+                    Some(o) if (o.0 as usize) < n && !g.queues[o.0 as usize].is_empty() => {
+                        o.0 as usize
+                    }
+                    _ => g
+                        .queues
+                        .iter()
+                        .position(|q| !q.is_empty())
+                        .expect("queued > 0 implies a non-empty queue"),
+                };
+                let (_, item) = g.queues[idx].pop_front().unwrap();
+                g.queued -= 1;
+                return Some((OstId(idx as u32), item));
             }
             if g.closed {
                 return None;
@@ -79,6 +130,13 @@ impl<T> OstQueues<T> {
                 .unwrap_or_else(|e| e.into_inner());
             g = guard;
         }
+    }
+
+    /// Seed-compatible entry point: dequeue with the paper's
+    /// congestion-aware policy (depth, then queue length, then OstId).
+    /// Equivalent to `pop_next(&CongestionAware, osts)`.
+    pub fn pop_least_congested(&self, osts: &OstModel) -> Option<(OstId, T)> {
+        self.pop_next(&CongestionAware, osts)
     }
 
     /// Close the queues: blocked and future pops return None once drained.
@@ -114,6 +172,7 @@ impl<T> OstQueues<T> {
 mod tests {
     use super::*;
     use crate::pfs::ost::OstConfig;
+    use crate::sched::{FifoFile, RoundRobin};
     use std::sync::Arc;
 
     fn model(n: u32) -> OstModel {
@@ -229,5 +288,87 @@ mod tests {
         q.close();
         let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
         assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn push_batch_enqueues_everything_in_order() {
+        let q: OstQueues<u32> = OstQueues::new(3);
+        let m = model(3);
+        let n = q.push_batch([(OstId(0), 1u32), (OstId(2), 2), (OstId(0), 3)]);
+        assert_eq!(n, 3);
+        assert_eq!(q.len(), 3);
+        // Global arrival order is preserved across push and push_batch.
+        assert_eq!(q.pop_next(&FifoFile, &m), Some((OstId(0), 1)));
+        assert_eq!(q.pop_next(&FifoFile, &m), Some((OstId(2), 2)));
+        assert_eq!(q.pop_next(&FifoFile, &m), Some((OstId(0), 3)));
+        assert_eq!(q.push_batch(std::iter::empty()), 0);
+    }
+
+    #[test]
+    fn push_batch_wakes_all_blocked_consumers() {
+        let q: Arc<OstQueues<u32>> = Arc::new(OstQueues::new(4));
+        let m = Arc::new(model(4));
+        let mut consumers = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            let m = m.clone();
+            consumers.push(std::thread::spawn(move || q.pop_least_congested(&m)));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        q.push_batch((0..4u32).map(|i| (OstId(i), i)));
+        let mut got: Vec<Option<(OstId, u32)>> =
+            consumers.into_iter().map(|c| c.join().unwrap()).collect();
+        got.sort();
+        let items: Vec<u32> = got.into_iter().map(|o| o.unwrap().1).collect();
+        assert_eq!(items, vec![0, 1, 2, 3]);
+        q.close();
+    }
+
+    #[test]
+    fn pop_next_round_robin_cycles() {
+        let q: OstQueues<u32> = OstQueues::new(3);
+        let m = model(3);
+        let rr = RoundRobin::new();
+        q.push_batch([
+            (OstId(0), 0u32),
+            (OstId(0), 1),
+            (OstId(1), 2),
+            (OstId(2), 3),
+        ]);
+        assert_eq!(q.pop_next(&rr, &m), Some((OstId(0), 0)));
+        assert_eq!(q.pop_next(&rr, &m), Some((OstId(1), 2)));
+        assert_eq!(q.pop_next(&rr, &m), Some((OstId(2), 3)));
+        assert_eq!(q.pop_next(&rr, &m), Some((OstId(0), 1)));
+    }
+
+    #[test]
+    fn pop_next_falls_back_when_policy_misbehaves() {
+        struct Bogus;
+        impl Scheduler for Bogus {
+            fn name(&self) -> &'static str {
+                "bogus"
+            }
+            fn pick(&self, _view: &QueueView<'_>, _osts: &OstModel) -> Option<OstId> {
+                Some(OstId(999)) // out of range
+            }
+        }
+        let q: OstQueues<u32> = OstQueues::new(2);
+        let m = model(2);
+        q.push(OstId(1), 5);
+        // Progress guaranteed: falls back to the lowest-id non-empty queue.
+        assert_eq!(q.pop_next(&Bogus, &m), Some((OstId(1), 5)));
+    }
+
+    #[test]
+    fn pop_next_close_unblocks_all_policies() {
+        let q: Arc<OstQueues<u32>> = Arc::new(OstQueues::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let m = model(2);
+            q2.pop_next(&FifoFile, &m)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
     }
 }

@@ -7,9 +7,11 @@
 //!   FILE_CLOSE (commit + ack).
 //! - **master** sleeps on the RMA pool and requeues parked blocks once a
 //!   slot frees up — the paper's buffer-wait path.
-//! - **IO threads** pull the least-congested OST write queue, `pwrite`
-//!   the object (charging the OST model), verify the digest, release the
-//!   slot, and send BLOCK_SYNC.
+//! - **IO threads** pull the OST write queue picked by the sink's
+//!   scheduling policy (`cfg.sink_scheduler`/`cfg.scheduler`, default:
+//!   least-congested — see [`crate::sched`]), `pwrite` the object
+//!   (charging the OST model), verify the digest, release the slot, and
+//!   send BLOCK_SYNC.
 //! - **verifier** (integrity = pjrt): IO threads hand written objects
 //!   over; it batches them into the compiled Pallas digest artifact's
 //!   fixed (B, W) shape, executes it via the PJRT service, and emits the
@@ -29,6 +31,7 @@ use crate::metrics::{Counters, CounterSnapshot};
 use crate::net::{Endpoint, Message, NetError, RmaPool, RmaSlot};
 use crate::pfs::{FileId, Pfs};
 use crate::runtime::RuntimeHandle;
+use crate::sched::Scheduler;
 
 /// One received object awaiting pwrite (+ its RMA slot).
 struct WriteReq {
@@ -50,6 +53,9 @@ struct Shared {
     pfs: Arc<dyn Pfs>,
     ep: Arc<dyn Endpoint>,
     queues: OstQueues<WriteReq>,
+    /// The sink's OST dequeue policy (`cfg.sink_scheduler`, falling back
+    /// to the session-wide `cfg.scheduler`).
+    sched: Box<dyn Scheduler>,
     rma: RmaPool,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SnkFile>>,
@@ -103,6 +109,7 @@ pub fn spawn_sink(
         pfs,
         ep,
         queues: OstQueues::new(cfg.ost_count),
+        sched: cfg.sink_sched().build(cfg.ost_count),
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
@@ -322,6 +329,7 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, mut slot: RmaSlot) {
     buf.clear();
     buf.extend_from_slice(&data);
     let ost = shared.pfs.layout().ost_for(start_ost, offset);
+    shared.sched.on_enqueue(ost);
     shared.queues.push(
         ost,
         WriteReq { file_idx, block_idx, fid, offset, len: data.len(), digest, slot },
@@ -355,10 +363,11 @@ fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<Message>) {
     }
 }
 
-/// IO thread: pwrite + verify + BLOCK_SYNC (or hand to the verifier).
+/// IO thread: policy-picked dequeue + pwrite + verify + BLOCK_SYNC (or
+/// hand to the verifier).
 fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
     let osts = shared.pfs.ost_model();
-    while let Some((_ost, mut req)) = shared.queues.pop_least_congested(osts) {
+    while let Some((ost, mut req)) = shared.queues.pop_next(&*shared.sched, osts) {
         if shared.is_aborted() {
             break;
         }
@@ -366,10 +375,12 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
         let buf = req.slot.buf();
         // pwrite: the PFS may observe/corrupt the buffer like a DMA would;
         // verification below digests the post-write buffer.
+        let io_started = std::time::Instant::now();
         if let Err(e) = shared.pfs.write_at(req.fid, req.offset, &mut buf[..len]) {
             shared.abort_with(format!("pwrite failed: {e}"));
             break;
         }
+        shared.sched.on_complete(ost, io_started.elapsed());
         shared
             .counters
             .bytes_written

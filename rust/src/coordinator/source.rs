@@ -4,9 +4,11 @@
 //!   handshake, and on FILE_ID splits the file into objects, excluding
 //!   anything the FT log proved durable (resume, §5.2.2), and enqueues
 //!   the rest on the per-OST work queues.
-//! - **IO threads** pull from the least-congested OST queue, reserve an
-//!   RMA slot, `pread` the object from the PFS (charging the OST model),
-//!   digest it, and hand it to the wire as NEW_BLOCK.
+//! - **IO threads** pull from the OST queue the configured scheduling
+//!   policy picks (`cfg.scheduler`, default: least-congested — see
+//!   [`crate::sched`]), reserve an RMA slot, `pread` the object from the
+//!   PFS (charging the OST model), digest it, and hand it to the wire as
+//!   NEW_BLOCK.
 //! - **comm** owns the receive side: routes FILE_ID / FILE_CLOSE_ACK to
 //!   the master and handles BLOCK_SYNC — *synchronous logging* in the
 //!   comm thread's context (§5.1), FILE_CLOSE when a file's last object
@@ -27,6 +29,7 @@ use crate::integrity::{self, IntegrityMode};
 use crate::metrics::{Counters, CounterSnapshot};
 use crate::net::{Endpoint, Message, NetError, RmaPool};
 use crate::pfs::{FileId, Pfs};
+use crate::sched::Scheduler;
 
 /// One object read+send request.
 #[derive(Debug, Clone)]
@@ -61,6 +64,8 @@ struct Shared {
     pfs: Arc<dyn Pfs>,
     ep: Arc<dyn Endpoint>,
     queues: OstQueues<BlockReq>,
+    /// The configured OST dequeue policy (`cfg.scheduler`).
+    sched: Box<dyn Scheduler>,
     rma: RmaPool,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SrcFile>>,
@@ -112,6 +117,7 @@ pub fn run_source(
         pfs,
         ep,
         queues: OstQueues::new(cfg.ost_count),
+        sched: cfg.scheduler.build(cfg.ost_count),
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
@@ -366,23 +372,27 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
         return;
     }
 
+    // Whole-file admission is the batch enqueue path: take the queue lock
+    // once for every pending object and broadcast a single wakeup.
     let layout = shared.pfs.layout();
+    let mut batch = Vec::with_capacity(pending.len());
     for b in pending {
         let offset = b as u64 * shared.object_size;
         let len = (f.size - offset).min(shared.object_size) as u32;
         let ost = layout.ost_for(f.start_ost, offset);
-        shared.queues.push(
-            ost,
-            BlockReq { file_idx, block_idx: b, fid: f.fid, offset, len },
-        );
+        batch.push((ost, BlockReq { file_idx, block_idx: b, fid: f.fid, offset, len }));
     }
+    for (ost, _) in &batch {
+        shared.sched.on_enqueue(*ost);
+    }
+    shared.queues.push_batch(batch);
 }
 
-/// IO thread: least-congested-OST dequeue → RMA reserve → pread → digest
+/// IO thread: policy-picked OST dequeue → RMA reserve → pread → digest
 /// → NEW_BLOCK.
 fn io_thread(shared: &Arc<Shared>) {
     let osts = shared.pfs.ost_model();
-    while let Some((_ost, req)) = shared.queues.pop_least_congested(osts) {
+    while let Some((ost, req)) = shared.queues.pop_next(&*shared.sched, osts) {
         if shared.is_aborted() {
             break;
         }
@@ -400,8 +410,13 @@ fn io_thread(shared: &Arc<Shared>) {
 
         let buf = slot.buf();
         buf.resize(req.len as usize, 0);
+        let io_started = std::time::Instant::now();
         match shared.pfs.read_at(req.fid, req.offset, buf) {
-            Ok(n) if n == req.len as usize => {}
+            Ok(n) if n == req.len as usize => {
+                // Feed the measured storage service time back to stateful
+                // policies (e.g. straggler-aware EWMA).
+                shared.sched.on_complete(ost, io_started.elapsed());
+            }
             Ok(n) => {
                 shared.abort_with(format!(
                     "short read: file {} block {} got {n} of {}",
@@ -509,6 +524,7 @@ fn handle_block_sync(shared: &Arc<Shared>, file_idx: u32, block_idx: u32, ok: bo
             let offset = block_idx as u64 * shared.object_size;
             let len = (f.size - offset).min(shared.object_size) as u32;
             let ost = shared.pfs.layout().ost_for(f.start_ost, offset);
+            shared.sched.on_enqueue(ost);
             shared.queues.push(
                 ost,
                 BlockReq { file_idx, block_idx, fid: f.fid, offset, len },

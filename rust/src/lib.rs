@@ -29,6 +29,7 @@ pub mod metrics;
 pub mod net;
 pub mod pfs;
 pub mod runtime;
+pub mod sched;
 pub mod stats;
 pub mod testutil;
 pub mod util;

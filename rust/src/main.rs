@@ -31,6 +31,7 @@ use ftlads::net::{tcp, Endpoint, FaultController, Side};
 use ftlads::pfs::disk::DiskPfs;
 use ftlads::pfs::Pfs;
 use ftlads::runtime::RuntimeService;
+use ftlads::sched::SchedPolicy;
 use ftlads::util::{fmt_bytes, fmt_duration};
 use ftlads::workload::{self, Workload};
 
@@ -74,6 +75,9 @@ fn print_usage() {
            --mechanism none|file|transaction|universal   FT logger mechanism\n\
            --method char|int|enc|binary|bit8|bit64       FT logging method\n\
            --integrity off|native|pjrt                   digest verification\n\
+           --scheduler congestion|round_robin|fifo_file|straggler\n\
+                                                         OST dequeue policy\n\
+           --sink-scheduler POLICY                       sink-side override\n\
            --workload big|small|mixed  --files N  --file-size BYTES\n\
            --fault FRAC [--fault-side source|sink]       inject fault at FRAC\n\
            --resume                                      resume per FT logs\n\
@@ -104,6 +108,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(i) = args.get("integrity") {
         cfg.integrity = IntegrityMode::parse(i)?;
+    }
+    if let Some(s) = args.get("scheduler") {
+        cfg.scheduler = SchedPolicy::parse(s)?;
+    }
+    if let Some(s) = args.get("sink-scheduler") {
+        cfg.sink_scheduler = Some(SchedPolicy::parse(s)?);
     }
     if let Some(d) = args.get("ft-dir") {
         cfg.ft_dir = d.into();
@@ -277,10 +287,11 @@ fn cmd_transfer(args: &Args) -> Result<i32> {
     let out = env.run_with_runtime(&spec, runtime.as_ref().map(|(_, h)| h.clone()))?;
     print_outcome(
         &format!(
-            "FT-LADS transfer [{} / {} / integrity={}]",
+            "FT-LADS transfer [{} / {} / integrity={} / sched={}]",
             env.cfg.mechanism.as_str(),
             env.cfg.method.as_str(),
-            env.cfg.integrity.as_str()
+            env.cfg.integrity.as_str(),
+            env.cfg.scheduler.as_str()
         ),
         &out,
         args.flag("json"),

@@ -1,0 +1,25 @@
+//! Global-FIFO dequeue: drain requests in arrival order, which — because
+//! the source master enqueues files front to back — drains *files in
+//! order*, the bbcp-like logical-order baseline LADS argues against
+//! (§2.1: logical order ignores the physical layout).
+
+use crate::pfs::ost::{OstId, OstModel};
+
+use super::{pick_min_by, QueueView, Scheduler};
+
+/// Pick the OST whose head request arrived earliest (lowest global
+/// sequence number). Empty queues report `u64::MAX` heads and are never
+/// chosen; ties (impossible between distinct live sequence numbers, but
+/// the contract demands it) fall back to the shared chain.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FifoFile;
+
+impl Scheduler for FifoFile {
+    fn name(&self) -> &'static str {
+        "fifo_file"
+    }
+
+    fn pick(&self, view: &QueueView<'_>, osts: &OstModel) -> Option<OstId> {
+        pick_min_by(view, osts, |o| view.head_seq[o.0 as usize])
+    }
+}

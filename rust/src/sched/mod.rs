@@ -1,0 +1,309 @@
+//! Pluggable OST scheduling: the policy layer behind the per-OST work
+//! queues ([`crate::coordinator::queues::OstQueues`]).
+//!
+//! LADS's core idea (§2.1) is that *which OST queue an IO thread drains
+//! next* is a policy decision, and a good policy routes around congested
+//! storage targets. The seed hardcoded one policy; this module turns the
+//! choice into the system's primary experimentation surface. A policy is
+//! anything implementing [`Scheduler`]; IO threads call
+//! `OstQueues::pop_next(&*sched, osts)` and the queue layer consults the
+//! policy under its lock.
+//!
+//! ## Built-in policies and the paper sections they model
+//!
+//! | policy | config name | models |
+//! |---|---|---|
+//! | [`CongestionAware`] | `congestion` | LADS §2.1/§5.1 layout- and congestion-aware dequeue — the seed behavior, extracted verbatim |
+//! | [`RoundRobin`] | `round_robin` | uniform spread across OSTs; the ablation control with no congestion signal |
+//! | [`FifoFile`] | `fifo_file` | bbcp-like logical-order drain (§2.1's "files in order" baseline) |
+//! | [`StragglerAware`] | `straggler` | EWMA of per-OST service time with a slow-OST penalty, after Tavakoli et al. 2018 (client-side straggler-aware scheduling for object-based PFS) |
+//!
+//! ## Ordering contract (reproducibility)
+//!
+//! Every policy must be deterministic: given the same [`QueueView`], the
+//! same [`OstModel`] readings, and the same internal state, `pick` must
+//! return the same OST. Whenever a policy's primary score ties, it must
+//! break the tie with the shared chain implemented by [`pick_min_by`]:
+//! lower in-service congestion depth first, then the *deeper* backlog
+//! (drain pressure), then the lowest [`OstId`]. This is exactly the seed
+//! scheduler's ordering, so `CongestionAware` (whose primary score *is*
+//! the congestion depth) reproduces the seed's pick sequence bit for bit.
+//!
+//! ## Adding a policy
+//!
+//! 1. Add a unit (or stateful, with interior mutability — `pick` runs
+//!    under the queue lock, hooks run outside it) struct implementing
+//!    [`Scheduler`]. Use [`pick_min_by`] for the tie-break chain.
+//! 2. Add a variant to [`SchedPolicy`], wire `parse`/`as_str`/`build`,
+//!    and append it to [`SchedPolicy::ALL`] so the config/CLI layers, the
+//!    `benches/ablation.rs` policy axis, and the integration tests pick
+//!    it up automatically.
+//! 3. Document which paper (section) the policy models in the table
+//!    above.
+
+pub mod congestion;
+pub mod fifo_file;
+pub mod round_robin;
+pub mod straggler;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::pfs::ost::{OstId, OstModel};
+
+pub use congestion::CongestionAware;
+pub use fifo_file::FifoFile;
+pub use round_robin::RoundRobin;
+pub use straggler::StragglerAware;
+
+/// A read-only snapshot of the per-OST queues, taken under the queue lock
+/// right before `pick` is consulted. Indices are OST ids.
+pub struct QueueView<'a> {
+    /// `len[i]` — requests queued on OST `i`.
+    pub len: &'a [usize],
+    /// `head_seq[i]` — global arrival sequence number of OST `i`'s head
+    /// request (`u64::MAX` when the queue is empty). Sequence numbers are
+    /// assigned at enqueue time and strictly increase, so comparing heads
+    /// recovers the global FIFO order.
+    pub head_seq: &'a [u64],
+}
+
+impl QueueView<'_> {
+    pub fn ost_count(&self) -> u32 {
+        self.len.len() as u32
+    }
+
+    pub fn is_empty(&self, ost: OstId) -> bool {
+        self.len
+            .get(ost.0 as usize)
+            .map(|&l| l == 0)
+            .unwrap_or(true)
+    }
+
+    /// OSTs with at least one queued request, in id order.
+    pub fn non_empty(&self) -> impl Iterator<Item = OstId> + '_ {
+        self.len
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l > 0)
+            .map(|(i, _)| OstId(i as u32))
+    }
+}
+
+/// An OST dequeue policy. See the module docs for the ordering contract.
+pub trait Scheduler: Send + Sync {
+    /// Canonical policy name (matches [`SchedPolicy::as_str`]).
+    fn name(&self) -> &'static str;
+
+    /// Choose the OST whose queue the calling IO thread should drain
+    /// next. Called under the queue lock with at least one non-empty
+    /// queue; returning `None` or an empty/out-of-range OST makes the
+    /// queue layer fall back to the lowest-id non-empty queue (progress
+    /// is guaranteed regardless of the policy).
+    fn pick(&self, view: &QueueView<'_>, osts: &OstModel) -> Option<OstId>;
+
+    /// Hook: a request was handed to `ost`'s queue. Called outside the
+    /// queue lock by the enqueuing thread; stateful policies may update
+    /// arrival accounting here.
+    fn on_enqueue(&self, _ost: OstId) {}
+
+    /// Hook: a request dequeued from `ost` finished its storage service,
+    /// taking `service` wall time. Called by IO threads after the
+    /// pread/pwrite; stateful policies (e.g. [`StragglerAware`]) update
+    /// their per-OST service-time estimates here.
+    fn on_complete(&self, _ost: OstId, _service: Duration) {}
+}
+
+/// Shared deterministic selection: the non-empty OST minimizing
+/// `(key(ost), congestion depth, deeper-backlog-first, OstId)`.
+///
+/// Every built-in policy routes its primary score through this helper so
+/// ties resolve identically across policies and runs (the module-level
+/// ordering contract).
+pub fn pick_min_by<K: Ord>(
+    view: &QueueView<'_>,
+    osts: &OstModel,
+    mut key: impl FnMut(OstId) -> K,
+) -> Option<OstId> {
+    view.non_empty().min_by_key(|&o| {
+        (
+            key(o),
+            osts.queue_depth(o),
+            usize::MAX - view.len[o.0 as usize],
+            o.0,
+        )
+    })
+}
+
+/// The policy selector threaded through `Config`, the `--scheduler` CLI
+/// flag, and the bench axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    CongestionAware,
+    RoundRobin,
+    FifoFile,
+    StragglerAware,
+}
+
+impl SchedPolicy {
+    /// Every built-in policy — the sweep axis for `benches/ablation.rs`
+    /// and the integration tests.
+    pub const ALL: [SchedPolicy; 4] = [
+        SchedPolicy::CongestionAware,
+        SchedPolicy::RoundRobin,
+        SchedPolicy::FifoFile,
+        SchedPolicy::StragglerAware,
+    ];
+
+    pub fn parse(s: &str) -> Result<SchedPolicy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "congestion" | "congestion_aware" | "lads" => SchedPolicy::CongestionAware,
+            "round_robin" | "rr" => SchedPolicy::RoundRobin,
+            "fifo_file" | "fifo" | "bbcp" => SchedPolicy::FifoFile,
+            "straggler" | "straggler_aware" | "ewma" => SchedPolicy::StragglerAware,
+            _ => anyhow::bail!(
+                "unknown scheduler '{s}' (congestion|round_robin|fifo_file|straggler)"
+            ),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedPolicy::CongestionAware => "congestion",
+            SchedPolicy::RoundRobin => "round_robin",
+            SchedPolicy::FifoFile => "fifo_file",
+            SchedPolicy::StragglerAware => "straggler",
+        }
+    }
+
+    /// Instantiate the policy for a fleet of `ost_count` OSTs.
+    pub fn build(&self, ost_count: u32) -> Box<dyn Scheduler> {
+        match self {
+            SchedPolicy::CongestionAware => Box::new(CongestionAware),
+            SchedPolicy::RoundRobin => Box::new(RoundRobin::new()),
+            SchedPolicy::FifoFile => Box::new(FifoFile),
+            SchedPolicy::StragglerAware => Box::new(StragglerAware::new(ost_count)),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pfs::ost::OstConfig;
+
+    fn idle_model(n: u32) -> OstModel {
+        OstModel::new(n, OstConfig { time_scale: 0.0, ..Default::default() })
+    }
+
+    fn view<'a>(len: &'a [usize], head_seq: &'a [u64]) -> QueueView<'a> {
+        QueueView { len, head_seq }
+    }
+
+    #[test]
+    fn parse_roundtrips_and_aliases() {
+        for p in SchedPolicy::ALL {
+            assert_eq!(SchedPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(SchedPolicy::parse("LADS").unwrap(), SchedPolicy::CongestionAware);
+        assert_eq!(SchedPolicy::parse("rr").unwrap(), SchedPolicy::RoundRobin);
+        assert_eq!(SchedPolicy::parse("bbcp").unwrap(), SchedPolicy::FifoFile);
+        assert_eq!(SchedPolicy::parse("ewma").unwrap(), SchedPolicy::StragglerAware);
+        let err = SchedPolicy::parse("fastest").unwrap_err().to_string();
+        for name in ["congestion", "round_robin", "fifo_file", "straggler"] {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn build_names_match_policy() {
+        for p in SchedPolicy::ALL {
+            assert_eq!(p.build(4).name(), p.as_str());
+        }
+    }
+
+    #[test]
+    fn pick_min_by_tie_break_chain() {
+        let m = idle_model(4);
+        // Equal key everywhere: deeper backlog wins, then lowest id.
+        let len = [1usize, 3, 3, 0];
+        let seq = [0u64, 1, 2, u64::MAX];
+        let v = view(&len, &seq);
+        assert_eq!(pick_min_by(&v, &m, |_| 0u64), Some(OstId(1)));
+        // Empty view picks nothing.
+        let len = [0usize; 4];
+        let seq = [u64::MAX; 4];
+        let v = view(&len, &seq);
+        assert_eq!(pick_min_by(&v, &m, |_| 0u64), None);
+    }
+
+    #[test]
+    fn congestion_aware_orders_like_seed() {
+        // Idle model: (depth, MAX-len, id) collapses to deeper backlog
+        // first, ties by lowest id — the seed scheduler's exact order.
+        let m = idle_model(5);
+        let len = [2usize, 1, 3, 0, 3];
+        let seq = [0u64, 4, 1, u64::MAX, 3];
+        let v = view(&len, &seq);
+        assert_eq!(CongestionAware.pick(&v, &m), Some(OstId(2)));
+    }
+
+    #[test]
+    fn fifo_file_drains_global_arrival_order() {
+        let m = idle_model(3);
+        let len = [1usize, 2, 1];
+        let seq = [7u64, 3, 5];
+        let v = view(&len, &seq);
+        assert_eq!(FifoFile.pick(&v, &m), Some(OstId(1)));
+    }
+
+    #[test]
+    fn round_robin_cycles_non_empty_queues() {
+        let m = idle_model(4);
+        let rr = RoundRobin::new();
+        let len = [1usize, 0, 1, 1];
+        let seq = [0u64, u64::MAX, 1, 2];
+        let v = view(&len, &seq);
+        assert_eq!(rr.pick(&v, &m), Some(OstId(0)));
+        assert_eq!(rr.pick(&v, &m), Some(OstId(2)));
+        assert_eq!(rr.pick(&v, &m), Some(OstId(3)));
+        assert_eq!(rr.pick(&v, &m), Some(OstId(0)));
+    }
+
+    #[test]
+    fn straggler_penalizes_slow_ost() {
+        let m = idle_model(2);
+        let s = StragglerAware::new(2);
+        // OST 0 is 10x slower than OST 1.
+        for _ in 0..8 {
+            s.on_complete(OstId(0), Duration::from_millis(10));
+            s.on_complete(OstId(1), Duration::from_millis(1));
+        }
+        let len = [4usize, 1];
+        let seq = [0u64, 1];
+        let v = view(&len, &seq);
+        // Despite OST 0's deeper backlog, the slow-OST penalty steers the
+        // thread to OST 1.
+        assert_eq!(s.pick(&v, &m), Some(OstId(1)));
+    }
+
+    #[test]
+    fn straggler_with_no_samples_matches_congestion_order() {
+        let m = idle_model(3);
+        let s = StragglerAware::new(3);
+        let len = [1usize, 2, 1];
+        let seq = [0u64, 1, 2];
+        let v = view(&len, &seq);
+        // No service history: every estimate ties, the shared tie-break
+        // chain decides (deepest backlog, OST 1) — same as CongestionAware.
+        assert_eq!(s.pick(&v, &m), CongestionAware.pick(&v, &m));
+        assert_eq!(s.pick(&v, &m), Some(OstId(1)));
+    }
+}

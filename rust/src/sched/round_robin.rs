@@ -1,0 +1,56 @@
+//! Round-robin dequeue: uniform spread with no congestion signal — the
+//! ablation control for the layout-aware policies.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::pfs::ost::{OstId, OstModel};
+
+use super::{QueueView, Scheduler};
+
+/// Cycle through the OSTs, draining the next non-empty queue after the
+/// previously picked one. Deterministic: the pick sequence is a pure
+/// function of the enqueue history (the cursor advances only on picks).
+///
+/// Stateful: the cursor lives behind an atomic because `pick` takes
+/// `&self`; calls are serialized by the queue lock, so plain
+/// load/store ordering suffices.
+#[derive(Debug)]
+pub struct RoundRobin {
+    /// Last picked OST id; `u32::MAX` before the first pick so the scan
+    /// starts at OST 0.
+    cursor: AtomicU32,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { cursor: AtomicU32::new(u32::MAX) }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn pick(&self, view: &QueueView<'_>, _osts: &OstModel) -> Option<OstId> {
+        let n = view.ost_count();
+        if n == 0 {
+            return None;
+        }
+        let start = self.cursor.load(Ordering::Relaxed).wrapping_add(1);
+        for k in 0..n {
+            let i = start.wrapping_add(k) % n;
+            if view.len[i as usize] > 0 {
+                self.cursor.store(i, Ordering::Relaxed);
+                return Some(OstId(i));
+            }
+        }
+        None
+    }
+}

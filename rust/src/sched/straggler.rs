@@ -1,0 +1,91 @@
+//! Straggler-aware dequeue: EWMA of per-OST service time with a slow-OST
+//! penalty, after Tavakoli et al. 2018 (client-side straggler-aware
+//! scheduling for object-based parallel file systems).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::pfs::ost::{OstId, OstModel};
+
+use super::{pick_min_by, QueueView, Scheduler};
+
+/// EWMA weight: `new = (3*old + sample) / 4` (α = 1/4).
+const EWMA_OLD_WEIGHT: u64 = 3;
+const EWMA_DIV: u64 = 4;
+/// An OST whose estimate exceeds twice the fleet's fastest estimate is a
+/// straggler; its score is multiplied by this penalty so IO threads only
+/// feed it when everything else is drained or deeply congested.
+const STRAGGLER_FACTOR: u64 = 2;
+const STRAGGLER_PENALTY: u64 = 4;
+
+/// Score each OST by its expected wait — `(in-service depth + 1) ×
+/// EWMA(service time)` — and penalize stragglers. OSTs with no service
+/// history yet borrow the fleet's fastest estimate so they are tried
+/// early. With no history anywhere, every score ties and the shared
+/// tie-break chain reduces this policy to [`super::CongestionAware`].
+///
+/// State updates ([`Scheduler::on_complete`]) use relaxed atomics: IO
+/// threads race on the estimate, and a lost update only skews the EWMA by
+/// one sample — acceptable for a scheduling heuristic, and the pick
+/// itself stays deterministic for any given state.
+#[derive(Debug)]
+pub struct StragglerAware {
+    /// Per-OST EWMA of service wall time, nanoseconds. 0 = no sample yet.
+    ewma_ns: Vec<AtomicU64>,
+}
+
+impl StragglerAware {
+    pub fn new(ost_count: u32) -> StragglerAware {
+        StragglerAware {
+            ewma_ns: (0..ost_count).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Current estimate for `ost` (0 = no sample yet). Exposed for tests
+    /// and debugging.
+    pub fn estimate_ns(&self, ost: OstId) -> u64 {
+        self.ewma_ns
+            .get(ost.0 as usize)
+            .map(|a| a.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+}
+
+impl Scheduler for StragglerAware {
+    fn name(&self) -> &'static str {
+        "straggler"
+    }
+
+    fn pick(&self, view: &QueueView<'_>, osts: &OstModel) -> Option<OstId> {
+        // Fastest known estimate — the baseline for both unknown OSTs and
+        // the straggler threshold.
+        let min_ewma = self
+            .ewma_ns
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .filter(|&e| e > 0)
+            .min()
+            .unwrap_or(0);
+        pick_min_by(view, osts, |o| {
+            let e = self.estimate_ns(o);
+            let est = if e == 0 { min_ewma } else { e };
+            let mut score = (osts.queue_depth(o) as u64 + 1).saturating_mul(est.max(1));
+            if min_ewma > 0 && est > STRAGGLER_FACTOR * min_ewma {
+                score = score.saturating_mul(STRAGGLER_PENALTY);
+            }
+            score
+        })
+    }
+
+    fn on_complete(&self, ost: OstId, service: Duration) {
+        let Some(cell) = self.ewma_ns.get(ost.0 as usize) else { return };
+        let sample = (service.as_nanos() as u64).max(1);
+        let old = cell.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            sample // first sample seeds the estimate directly
+        } else {
+            (EWMA_OLD_WEIGHT * old + sample) / EWMA_DIV
+        };
+        cell.store(new, Ordering::Relaxed);
+    }
+}

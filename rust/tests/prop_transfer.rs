@@ -8,6 +8,7 @@ use ftlads::coordinator::{SimEnv, TransferSpec};
 use ftlads::fault::FaultPlan;
 use ftlads::ftlog::{Mechanism, Method};
 use ftlads::net::Side;
+use ftlads::sched::SchedPolicy;
 use ftlads::testutil::{forall, Pcg32};
 use ftlads::pfs::Pfs;
 use ftlads::workload::{FileSpec, Workload};
@@ -38,6 +39,9 @@ fn random_config(rng: &mut Pcg32, tag: &str) -> Config {
     cfg.file_window = rng.range(1, 10) as usize;
     cfg.ost_count = rng.range(1, 12) as u32;
     cfg.stripe_count = rng.range(1, cfg.ost_count as u64) as u32;
+    // Any dequeue policy must preserve the transfer/resume invariants.
+    cfg.scheduler = *rng.choose(&SchedPolicy::ALL);
+    cfg.sink_scheduler = Some(*rng.choose(&SchedPolicy::ALL));
     // Small RMA pools exercise back-pressure paths.
     cfg.rma_bytes = (rng.range(2, 16) * cfg.object_size) as usize;
     cfg.seed = rng.next_u64();

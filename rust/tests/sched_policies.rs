@@ -1,0 +1,184 @@
+//! Integration tests for the pluggable OST scheduling layer
+//! (`ftlads::sched`): every policy drives a full transfer to a verified
+//! sink, source and sink can run different policies, and the extracted
+//! `CongestionAware` policy is pick-for-pick identical to the seed's
+//! hardcoded `pop_least_congested` scheduler.
+
+use ftlads::config::Config;
+use ftlads::coordinator::queues::OstQueues;
+use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::pfs::ost::{OstConfig, OstId, OstModel};
+use ftlads::sched::{CongestionAware, SchedPolicy};
+use ftlads::workload;
+
+fn idle_model(n: u32) -> OstModel {
+    OstModel::new(n, OstConfig { time_scale: 0.0, ..Default::default() })
+}
+
+fn cleanup(env: &SimEnv) {
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn every_policy_completes_and_verifies() {
+    for policy in SchedPolicy::ALL {
+        let mut cfg = Config::for_tests(&format!("sched-{}", policy.as_str()));
+        cfg.scheduler = policy;
+        cfg.sink_scheduler = Some(policy);
+        let wl = workload::big_workload(4, 512 << 10); // 32 objects @ 64 KiB
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        assert!(out.completed, "{}: {:?}", policy.as_str(), out.fault);
+        assert_eq!(out.source.objects_synced, 32, "policy {}", policy.as_str());
+        env.verify_sink_complete().unwrap();
+        cleanup(&env);
+    }
+}
+
+#[test]
+fn mixed_source_sink_policies_complete() {
+    // Asymmetric setup: congestion-aware reads, round-robin writes.
+    let mut cfg = Config::for_tests("sched-mixed");
+    cfg.scheduler = SchedPolicy::CongestionAware;
+    cfg.sink_scheduler = Some(SchedPolicy::RoundRobin);
+    let wl = workload::mixed_workload(6, 256 << 10, cfg.seed);
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    env.verify_sink_complete().unwrap();
+    cleanup(&env);
+}
+
+#[test]
+fn every_policy_survives_fault_and_resume() {
+    use ftlads::fault::FaultPlan;
+    use ftlads::net::Side;
+    for policy in SchedPolicy::ALL {
+        let mut cfg = Config::for_tests(&format!("sched-rec-{}", policy.as_str()));
+        cfg.scheduler = policy;
+        let wl = workload::big_workload(6, 512 << 10);
+        let env = SimEnv::new(cfg, &wl);
+        let out = env
+            .run(
+                &TransferSpec::fresh(env.files.clone())
+                    .with_fault(FaultPlan::at_fraction(0.4, Side::Source)),
+            )
+            .unwrap();
+        assert!(!out.completed, "policy {}", policy.as_str());
+        let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+        assert!(out2.completed, "{}: {:?}", policy.as_str(), out2.fault);
+        env.verify_sink_complete().unwrap();
+        cleanup(&env);
+    }
+}
+
+#[test]
+fn congestion_aware_matches_seed_pick_sequence() {
+    // Fixed synthetic workload over 5 OSTs against an idle model: the
+    // extracted CongestionAware policy must dequeue in exactly the order
+    // the seed's hardcoded pop_least_congested produced. The reference
+    // sequence comes from an inline reimplementation of the seed's
+    // selection — `min_by_key((queue_depth, usize::MAX - len, id))` over
+    // non-empty queues, verbatim from the pre-refactor queues.rs — NOT
+    // from the (now wrapper) pop_least_congested, so a regression in the
+    // extracted policy cannot hide by shifting both sequences together.
+    use std::collections::VecDeque;
+    let m = idle_model(5);
+    let arrivals: [(u32, u32); 8] =
+        [(0, 0), (2, 1), (2, 2), (4, 3), (1, 4), (2, 5), (0, 6), (4, 7)];
+
+    let mut seed_queues: Vec<VecDeque<u32>> = vec![VecDeque::new(); 5];
+    for (ost, item) in arrivals {
+        seed_queues[ost as usize].push_back(item);
+    }
+    let mut seed_seq = Vec::new();
+    loop {
+        let pick = seed_queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|(i, q)| {
+                (m.queue_depth(OstId(*i as u32)), usize::MAX - q.len(), *i)
+            })
+            .map(|(i, _)| i);
+        let Some(i) = pick else { break };
+        let item = seed_queues[i].pop_front().unwrap();
+        seed_seq.push((OstId(i as u32), item));
+    }
+
+    let policy_path: OstQueues<u32> = OstQueues::new(5);
+    for (ost, item) in arrivals {
+        policy_path.push(OstId(ost), item);
+    }
+    policy_path.close();
+    let mut policy_seq = Vec::new();
+    while let Some(x) = policy_path.pop_next(&CongestionAware, &m) {
+        policy_seq.push(x);
+    }
+
+    assert_eq!(policy_seq, seed_seq);
+    // Sanity-pin the reference itself: on an idle fleet the seed order is
+    // deeper backlog first, ties by lowest OST id.
+    let expect = vec![
+        (OstId(2), 1),
+        (OstId(0), 0),
+        (OstId(2), 2),
+        (OstId(4), 3),
+        (OstId(0), 6),
+        (OstId(1), 4),
+        (OstId(2), 5),
+        (OstId(4), 7),
+    ];
+    assert_eq!(seed_seq, expect);
+
+    // And the seed-compatible wrapper delegates to the same policy.
+    let wrapper_path: OstQueues<u32> = OstQueues::new(5);
+    for (ost, item) in arrivals {
+        wrapper_path.push(OstId(ost), item);
+    }
+    wrapper_path.close();
+    let mut wrapper_seq = Vec::new();
+    while let Some(x) = wrapper_path.pop_least_congested(&m) {
+        wrapper_seq.push(x);
+    }
+    assert_eq!(wrapper_seq, seed_seq);
+}
+
+#[test]
+fn congestion_aware_outcome_matches_seed_counters() {
+    // The default config runs CongestionAware; on the smoke-test workload
+    // the transfer outcome must be exactly what the seed produced: all 32
+    // objects sent and synced once, 4 files completed, nothing failing
+    // verification or skipped.
+    let cfg = Config::for_tests("sched-seedeq");
+    assert_eq!(cfg.scheduler, SchedPolicy::CongestionAware);
+    let wl = workload::big_workload(4, 512 << 10);
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    assert_eq!(out.source.objects_sent, 32);
+    assert_eq!(out.source.objects_synced, 32);
+    assert_eq!(out.source.files_completed, 4);
+    assert_eq!(out.source.objects_skipped_resume, 0);
+    assert_eq!(out.sink.objects_failed_verify, 0);
+    env.verify_sink_complete().unwrap();
+    cleanup(&env);
+}
+
+#[test]
+fn straggler_policy_avoids_loaded_ost_under_congestion() {
+    use ftlads::pfs::Pfs;
+    // With a heavily loaded OST and real (scaled) service times, the
+    // straggler-aware source must still complete and verify — the EWMA
+    // path (on_complete feedback) is exercised end to end.
+    let mut cfg = Config::for_tests("sched-strag");
+    cfg.scheduler = SchedPolicy::StragglerAware;
+    cfg.time_scale = 0.2;
+    let wl = workload::big_workload(6, 256 << 10);
+    let env = SimEnv::new(cfg, &wl);
+    Pfs::ost_model(&*env.source).set_external_load(OstId(1), 8.0);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    env.verify_sink_complete().unwrap();
+    cleanup(&env);
+}
