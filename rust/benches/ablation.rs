@@ -14,6 +14,11 @@
 //!      round_robin, fifo_file, straggler) on the same congested-OST
 //!      workload — one invocation compares all four (§2.1 / Tavakoli et
 //!      al. 2018).
+//!   A7 ack-batch axis: `ack_batch` ∈ {1, 2, 8, 32} on the big workload —
+//!      wire BLOCK_SYNC messages and group-committed logger writes per
+//!      batch size, plus a fault+resume at every size to show recovery
+//!      stays paper-correct (a fault mid-window retransmits at most the
+//!      un-flushed acks, which block re-write tolerates).
 //!
 //! Run: `cargo bench --bench ablation`
 
@@ -37,6 +42,7 @@ fn main() {
     a4_rma_pool(&scale);
     a5_layout_aware_value(&scale);
     a6_scheduler_policies(&scale);
+    a7_ack_batch(&scale);
 }
 
 /// A1: txn_size=1 ≈ file logger; txn_size=max ≈ universal logger.
@@ -258,4 +264,70 @@ fn a6_scheduler_policies(scale: &BenchScale) {
         &rows,
     );
     println!("claim (§2.1): congestion-aware dequeue beats order-preserving policies under load");
+}
+
+/// A7: the ack-batch axis — per-object vs coalesced BLOCK_SYNC acks and
+/// group-committed FT logging, with fault/resume correctness at every
+/// batch size.
+fn a7_ack_batch(scale: &BenchScale) {
+    let wl = scale.big();
+    let total = wl.total_objects(scale.small_file_size);
+    let mut rows = Vec::new();
+    for batch in [1u32, 2, 8, 32] {
+        // Clean run: the steady-state message/write counts.
+        let mut cfg = scale.base_config(&format!("a7-{batch}"));
+        cfg.mechanism = Mechanism::Universal;
+        cfg.method = Method::Bit64;
+        cfg.ack_batch = batch;
+        cfg.ack_flush_us = 20_000;
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        assert!(out.completed, "a7 batch={batch}: {:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+
+        // Fault at 50% + resume: batched acks must stay recoverable.
+        let mut cfg2 = scale.base_config(&format!("a7f-{batch}"));
+        cfg2.mechanism = Mechanism::Universal;
+        cfg2.method = Method::Bit64;
+        cfg2.ack_batch = batch;
+        cfg2.ack_flush_us = 20_000;
+        let env2 = SimEnv::new(cfg2, &wl);
+        let faulted = env2
+            .run(
+                &TransferSpec::fresh(env2.files.clone())
+                    .with_fault(FaultPlan::at_fraction(0.5, Side::Source)),
+            )
+            .unwrap();
+        assert!(!faulted.completed, "a7 batch={batch}: fault did not fire");
+        let logged: u64 = ftlads::ftlog::recover::recover_all(&env2.cfg.ft())
+            .unwrap()
+            .values()
+            .map(|s| s.count() as u64)
+            .sum();
+        let resumed = env2.run(&TransferSpec::resuming(env2.files.clone())).unwrap();
+        assert!(resumed.completed, "a7 batch={batch}: {:?}", resumed.fault);
+        env2.verify_sink_complete().unwrap();
+        // Every group-committed object is skipped on resume; only the
+        // un-acked tail (at most the in-flight flush windows) re-sends.
+        assert!(
+            resumed.source.objects_sent <= total - logged,
+            "a7 batch={batch}: resume re-sent logged objects"
+        );
+        let _ = std::fs::remove_dir_all(&env2.cfg.ft_dir);
+
+        rows.push(vec![
+            format!("{batch}"),
+            format!("{}", out.sink.ack_messages),
+            format!("{}", out.source.log_writes),
+            format!("{}", resumed.source.objects_sent),
+            format!("{:.3}", out.elapsed.as_secs_f64()),
+        ]);
+    }
+    print_table(
+        &format!("A7: ack batch size ({total} objects, universal/bit64)"),
+        &["ack_batch", "wire acks", "log writes", "resent@resume", "time (s)"],
+        &rows,
+    );
+    println!("claim: batching amortizes the per-object ack/log fixed cost; batch=1 == paper");
 }

@@ -1,23 +1,29 @@
 //! Hot-path micro-benchmarks (no paper figure — the §Perf inputs):
 //!
 //!   log-append      per-object FT logging cost, every mechanism × method
+//!   log-batch       group-committed log_blocks vs per-block appends
 //!   recovery-parse  log-dir -> CompletedSets throughput
 //!   digest          native digest GB/s vs PJRT batched digest GB/s
 //!   scheduler       OST queue push/pop throughput
 //!   codec           NEW_BLOCK encode/decode round-trip
+//!   ack-batch       end-to-end wire-ack / logger-write counts per
+//!                   `ack_batch` (the batched BLOCK_SYNC path)
 //!
 //! Plain timing mains (no criterion offline); each reports mean ± 99 % CI
 //! over fixed iteration counts with warmup.
 
 
 use ftlads::bench_support::print_table;
+use ftlads::config::Config;
 use ftlads::coordinator::queues::OstQueues;
+use ftlads::coordinator::{SimEnv, TransferSpec};
 use ftlads::ftlog::{self, codec::Method, CompletedSet, FtConfig, Mechanism};
 use ftlads::integrity::{DigestEngine, NativeEngine};
 use ftlads::net::Message;
 use ftlads::pfs::ost::{OstConfig, OstId, OstModel};
 use ftlads::stats::bench_seconds;
 use ftlads::testutil::Pcg32;
+use ftlads::workload;
 
 fn tmp_dir(tag: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!(
@@ -68,6 +74,104 @@ fn bench_log_append() {
         }
     }
     print_table("log-append cost (µs/object)", &["mechanism/method", "µs"], &rows);
+}
+
+/// Group-commit gain at the logger layer: the same shuffled completion
+/// stream written via per-block `log_block` vs `log_blocks` batches.
+fn bench_log_batch() {
+    let blocks_per_file = 256u32;
+    let mut rows = Vec::new();
+    for mech in Mechanism::ALL_FT {
+        for batch in [1usize, 8, 32] {
+            let dir = tmp_dir(&format!("lgb-{}-{batch}", mech.as_str()));
+            let cfg = FtConfig {
+                mechanism: mech,
+                method: Method::Bit64,
+                dir: dir.clone(),
+                txn_size: 4,
+            };
+            let mut rng = Pcg32::new(7);
+            let mut order: Vec<u32> = (0..blocks_per_file).collect();
+            rng.shuffle(&mut order);
+            let mut write_ops = 0u64;
+            let s = bench_seconds(1, 5, || {
+                let mut logger = ftlog::create_logger(&cfg).unwrap();
+                let key = logger.register_file("f", blocks_per_file).unwrap();
+                for chunk in order.chunks(batch) {
+                    logger.log_blocks(key, chunk).unwrap();
+                }
+                write_ops = logger.space().write_ops;
+                logger.finish_dataset().unwrap();
+            });
+            let per_append = s.mean / blocks_per_file as f64 * 1e6;
+            rows.push(vec![
+                format!("{}/bit64 x{batch}", mech.as_str()),
+                format!("{per_append:.2}"),
+                format!("{write_ops}"),
+            ]);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    print_table(
+        "group-commit log_blocks (256 objects)",
+        &["mechanism x batch", "µs/object", "writes"],
+        &rows,
+    );
+}
+
+/// End-to-end ack batching: wire BLOCK_SYNC messages and source logger
+/// writes per `ack_batch`, same 64-object workload. Pins the headline
+/// claim: both counts drop ≥ 4× at `ack_batch = 8`.
+fn bench_ack_batching() {
+    let mut rows = Vec::new();
+    let mut baseline: Option<(u64, u64)> = None;
+    for batch in [1u32, 4, 8, 16] {
+        let mut cfg = Config::for_tests(&format!("micro-ack-{batch}"));
+        cfg.mechanism = Mechanism::Universal;
+        cfg.method = Method::Bit64;
+        cfg.ack_batch = batch;
+        // Generous straggler bound so flushes are count-driven, not
+        // timer-driven, and the ratio is deterministic even on a loaded
+        // machine.
+        cfg.ack_flush_us = 200_000;
+        let wl = workload::big_workload(4, 16 * cfg.object_size); // 64 objects
+        let env = SimEnv::new(cfg, &wl);
+        let started = std::time::Instant::now();
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        let elapsed = started.elapsed();
+        assert!(out.completed, "ack_batch={batch}: {:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        let acks = out.sink.ack_messages;
+        let log_writes = out.source.log_writes;
+        if batch == 1 {
+            assert_eq!(acks, 64, "ack_batch=1 must ack per object");
+            assert_eq!(log_writes, 64, "ack_batch=1 must log per object");
+            baseline = Some((acks, log_writes));
+        }
+        if batch == 8 {
+            let (a1, l1) = baseline.expect("batch=1 runs first");
+            assert!(
+                acks * 4 <= a1,
+                "wire acks must drop >= 4x at ack_batch=8: {acks} vs {a1}"
+            );
+            assert!(
+                log_writes * 4 <= l1,
+                "logger writes must drop >= 4x at ack_batch=8: {log_writes} vs {l1}"
+            );
+        }
+        rows.push(vec![
+            format!("{batch}"),
+            format!("{acks}"),
+            format!("{log_writes}"),
+            format!("{:.1}", elapsed.as_secs_f64() * 1e3),
+        ]);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    print_table(
+        "ack batching (64 objects, universal/bit64)",
+        &["ack_batch", "wire acks", "log writes", "ms"],
+        &rows,
+    );
 }
 
 fn bench_recovery_parse() {
@@ -232,5 +336,7 @@ fn main() {
     bench_scheduler();
     bench_completed_set();
     bench_log_append();
+    bench_log_batch();
+    bench_ack_batching();
     bench_recovery_parse();
 }

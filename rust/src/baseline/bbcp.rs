@@ -186,6 +186,8 @@ pub fn run_bbcp(
         resources,
         payload_bytes: src_ep.payload_sent(),
         rma_stalls: (0, 0),
+        source_sched: Default::default(),
+        sink_sched: Default::default(),
     })
 }
 
@@ -199,7 +201,7 @@ fn bbcp_sink(pfs: &dyn Pfs, ep: &dyn Endpoint, ctr: &Counters) {
         };
         match msg {
             Message::Connect { .. } => {
-                let _ = ep.send(Message::ConnectAck { rma_slots: 0 });
+                let _ = ep.send(Message::ConnectAck { rma_slots: 0, ack_batch: 1 });
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
                 // bbcp resume: attributes identical -> assume completed.
@@ -255,6 +257,7 @@ fn bbcp_source(
         max_object_size: bcfg.block_size,
         rma_slots: 0,
         resume: false,
+        ack_batch: 1,
     })
     .map_err(|e| anyhow::anyhow!("connect: {e}"))?;
     match ep.recv_timeout(Duration::from_secs(10)) {

@@ -42,6 +42,14 @@ pub struct Config {
     /// Synchronous (comm-thread context) or asynchronous (logger thread)
     /// FT logging (§5.1).
     pub logging: LoggingMode,
+    /// Max BLOCK_SYNC acknowledgements the sink coalesces into one wire
+    /// message (and the source group-commits as one logger write). 1 =
+    /// the paper's per-object ack path, reproduced exactly. Negotiated
+    /// down to the peer's advertised value at CONNECT.
+    pub ack_batch: u32,
+    /// Straggler bound for a partially-filled ack batch: the sink flushes
+    /// a batch once its oldest pending ack is this many microseconds old.
+    pub ack_flush_us: u64,
     /// Integrity verification backend.
     pub integrity: IntegrityMode,
     /// OST dequeue policy for the source's IO threads (§2.1; see
@@ -80,6 +88,8 @@ impl Default for Config {
             txn_size: 4,
             ft_dir: default_ft_dir(),
             logging: LoggingMode::Sync,
+            ack_batch: 1,
+            ack_flush_us: 1000,
             integrity: IntegrityMode::Native,
             scheduler: SchedPolicy::CongestionAware,
             sink_scheduler: None,
@@ -175,6 +185,8 @@ impl Config {
             "txn_size" => self.txn_size = value.parse()?,
             "ft_dir" => self.ft_dir = PathBuf::from(value),
             "logging" => self.logging = LoggingMode::parse(value)?,
+            "ack_batch" => self.ack_batch = value.parse()?,
+            "ack_flush_us" => self.ack_flush_us = value.parse()?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
             "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
             "sink_scheduler" => {
@@ -222,6 +234,10 @@ impl Config {
         );
         anyhow::ensure!(self.file_window >= 1, "file_window must be >= 1");
         anyhow::ensure!(self.txn_size >= 1, "txn_size must be >= 1");
+        anyhow::ensure!(
+            (1..=1u32 << 16).contains(&self.ack_batch),
+            "ack_batch must be in 1..=65536 (wire sanity cap)"
+        );
         anyhow::ensure!(
             (1..=self.ost_count).contains(&self.stripe_count),
             "stripe_count must be in 1..=ost_count"
@@ -288,6 +304,27 @@ mod tests {
         assert_eq!(c.integrity, IntegrityMode::Pjrt);
         assert!(c.apply_kv("nonsense", "1").is_err());
         assert!(c.apply_kv("io_threads", "lots").is_err());
+    }
+
+    #[test]
+    fn ack_batch_kv_defaults_and_validation() {
+        let mut c = Config::default();
+        // Default is the paper's per-object ack path.
+        assert_eq!(c.ack_batch, 1);
+        assert!(c.ack_flush_us > 0);
+        c.apply_kv("ack_batch", "8").unwrap();
+        c.apply_kv("ack_flush_us", "500").unwrap();
+        assert_eq!(c.ack_batch, 8);
+        assert_eq!(c.ack_flush_us, 500);
+        assert!(c.validate().is_ok());
+        c.ack_batch = 0;
+        assert!(c.validate().is_err());
+        c.ack_batch = (1 << 16) + 1;
+        assert!(c.validate().is_err(), "ack_batch above the wire cap rejected");
+        c.ack_batch = 1 << 16;
+        assert!(c.validate().is_ok());
+        let mut c = Config::default();
+        assert!(c.apply_kv("ack_batch", "lots").is_err());
     }
 
     #[test]

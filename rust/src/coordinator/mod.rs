@@ -29,6 +29,7 @@ use crate::metrics::{CounterSnapshot, ResourceReport, Sampler};
 use crate::net::{channel, Endpoint};
 use crate::pfs::Pfs;
 use crate::runtime::RuntimeHandle;
+use crate::sched::SchedSnapshot;
 
 /// What to transfer.
 #[derive(Debug, Clone)]
@@ -74,6 +75,10 @@ pub struct TransferOutcome {
     pub payload_bytes: u64,
     /// RMA reservation stalls at the sink (back-pressure signal).
     pub rma_stalls: (u64, u64),
+    /// Source read-queue scheduling counters (`cfg.scheduler`).
+    pub source_sched: SchedSnapshot,
+    /// Sink write-queue scheduling counters (`cfg.sink_scheduler`).
+    pub sink_sched: SchedSnapshot,
 }
 
 impl TransferOutcome {
@@ -146,6 +151,8 @@ pub fn run_transfer(
         resources,
         payload_bytes: src_ep.payload_sent(),
         rma_stalls: sink_report.rma_stalls,
+        source_sched: source_report.sched,
+        sink_sched: sink_report.sched,
     })
 }
 

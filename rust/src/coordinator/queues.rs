@@ -13,7 +13,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::pfs::ost::{OstId, OstModel};
-use crate::sched::{CongestionAware, QueueView, Scheduler};
+use crate::sched::{CongestionAware, QueueView, SchedStats, Scheduler};
 
 /// Work queues for one side's IO threads. `T` is the request type
 /// (source: block reads; sink: block writes).
@@ -93,6 +93,27 @@ impl<T> OstQueues<T> {
     /// out-of-range OST falls back to the lowest-id non-empty queue, so
     /// progress never depends on policy correctness.
     pub fn pop_next(&self, sched: &dyn Scheduler, osts: &OstModel) -> Option<(OstId, T)> {
+        self.pop_next_inner(sched, osts, None)
+    }
+
+    /// [`pop_next`](Self::pop_next) that also records pick count, pick
+    /// latency, and fallback picks into `stats` — the coordinator entry
+    /// point behind the per-policy counters in `TransferOutcome`.
+    pub fn pop_next_timed(
+        &self,
+        sched: &dyn Scheduler,
+        osts: &OstModel,
+        stats: &SchedStats,
+    ) -> Option<(OstId, T)> {
+        self.pop_next_inner(sched, osts, Some(stats))
+    }
+
+    fn pop_next_inner(
+        &self,
+        sched: &dyn Scheduler,
+        osts: &OstModel,
+        stats: Option<&SchedStats>,
+    ) -> Option<(OstId, T)> {
         let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if g.queued > 0 {
@@ -104,17 +125,23 @@ impl<T> OstQueues<T> {
                     g.seq_scratch[i] = seq;
                 }
                 let view = QueueView { len: &g.len_scratch, head_seq: &g.seq_scratch };
+                let pick_started = stats.map(|_| std::time::Instant::now());
                 let picked = sched.pick(&view, osts);
-                let idx = match picked {
+                let (idx, fallback) = match picked {
                     Some(o) if (o.0 as usize) < n && !g.queues[o.0 as usize].is_empty() => {
-                        o.0 as usize
+                        (o.0 as usize, false)
                     }
-                    _ => g
-                        .queues
-                        .iter()
-                        .position(|q| !q.is_empty())
-                        .expect("queued > 0 implies a non-empty queue"),
+                    _ => (
+                        g.queues
+                            .iter()
+                            .position(|q| !q.is_empty())
+                            .expect("queued > 0 implies a non-empty queue"),
+                        true,
+                    ),
                 };
+                if let (Some(stats), Some(t0)) = (stats, pick_started) {
+                    stats.record_pick(t0.elapsed(), fallback);
+                }
                 let (_, item) = g.queues[idx].pop_front().unwrap();
                 g.queued -= 1;
                 return Some((OstId(idx as u32), item));
@@ -357,6 +384,27 @@ mod tests {
         q.push(OstId(1), 5);
         // Progress guaranteed: falls back to the lowest-id non-empty queue.
         assert_eq!(q.pop_next(&Bogus, &m), Some((OstId(1), 5)));
+        // And the timed variant counts the fallback.
+        q.push(OstId(0), 6);
+        let stats = SchedStats::default();
+        assert_eq!(q.pop_next_timed(&Bogus, &m, &stats), Some((OstId(0), 6)));
+        let snap = stats.snapshot();
+        assert_eq!(snap.picks, 1);
+        assert_eq!(snap.fallback_picks, 1);
+    }
+
+    #[test]
+    fn pop_next_timed_records_pick_counters() {
+        let q: OstQueues<u32> = OstQueues::new(3);
+        let m = model(3);
+        let stats = SchedStats::default();
+        q.push_batch([(OstId(0), 1u32), (OstId(1), 2), (OstId(2), 3)]);
+        for _ in 0..3 {
+            assert!(q.pop_next_timed(&CongestionAware, &m, &stats).is_some());
+        }
+        let snap = stats.snapshot();
+        assert_eq!(snap.picks, 3);
+        assert_eq!(snap.fallback_picks, 0);
     }
 
     #[test]

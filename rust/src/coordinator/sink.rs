@@ -11,16 +11,21 @@
 //!   scheduling policy (`cfg.sink_scheduler`/`cfg.scheduler`, default:
 //!   least-congested — see [`crate::sched`]), `pwrite` the object
 //!   (charging the OST model), verify the digest, release the slot, and
-//!   send BLOCK_SYNC.
+//!   send BLOCK_SYNC — directly when `ack_batch = 1` (the paper's
+//!   per-object path), or through the **ack coalescer**, which folds up
+//!   to `ack_batch` acknowledgements of a file into one
+//!   BLOCK_SYNC_BATCH, flushing on a full batch, on a failed write
+//!   (prompt retransmission), on FILE_CLOSE, or when a dedicated flusher
+//!   thread notices the batch's oldest entry aged past `ack_flush_us`.
 //! - **verifier** (integrity = pjrt): IO threads hand written objects
 //!   over; it batches them into the compiled Pallas digest artifact's
 //!   fixed (B, W) shape, executes it via the PJRT service, and emits the
 //!   BLOCK_SYNCs. This is the L1/L2 integration point on the hot path.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -31,7 +36,7 @@ use crate::metrics::{Counters, CounterSnapshot};
 use crate::net::{Endpoint, Message, NetError, RmaPool, RmaSlot};
 use crate::pfs::{FileId, Pfs};
 use crate::runtime::RuntimeHandle;
-use crate::sched::Scheduler;
+use crate::sched::{SchedSnapshot, SchedStats, Scheduler};
 
 /// One received object awaiting pwrite (+ its RMA slot).
 struct WriteReq {
@@ -49,6 +54,27 @@ struct SnkFile {
     start_ost: u32,
 }
 
+/// Per-file acknowledgements waiting to be coalesced into one
+/// BLOCK_SYNC_BATCH.
+struct PendingAcks {
+    /// When the oldest entry was queued — the flush-window clock.
+    oldest: Instant,
+    blocks: Vec<(u32, bool)>,
+}
+
+/// The ack coalescer's shared state. `batch <= 1` bypasses coalescing
+/// entirely, reproducing the seed's one-BLOCK_SYNC-per-object wire
+/// behavior exactly.
+struct AckCoalescer {
+    /// Effective batch size: the sink's configured `ack_batch`,
+    /// negotiated down to the peer's CONNECT advertisement.
+    batch: AtomicU32,
+    /// Straggler bound: flush a partial batch once its oldest entry is
+    /// this old.
+    window: Duration,
+    pending: Mutex<BTreeMap<u32, PendingAcks>>,
+}
+
 struct Shared {
     pfs: Arc<dyn Pfs>,
     ep: Arc<dyn Endpoint>,
@@ -56,6 +82,8 @@ struct Shared {
     /// The sink's OST dequeue policy (`cfg.sink_scheduler`, falling back
     /// to the session-wide `cfg.scheduler`).
     sched: Box<dyn Scheduler>,
+    sched_stats: SchedStats,
+    acks: AckCoalescer,
     rma: RmaPool,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SnkFile>>,
@@ -84,12 +112,88 @@ impl Shared {
     fn is_aborted(&self) -> bool {
         self.aborted.load(Ordering::SeqCst)
     }
+
+    /// Queue one object acknowledgement. With `ack_batch <= 1` this sends
+    /// the seed's single BLOCK_SYNC immediately; otherwise the ack joins
+    /// the file's pending batch, which flushes when full or when the
+    /// write failed (so retransmission is never delayed by coalescing).
+    fn push_ack(&self, file_idx: u32, block_idx: u32, ok: bool) {
+        let batch = self.acks.batch.load(Ordering::SeqCst) as usize;
+        if batch <= 1 {
+            self.counters.ack_messages.fetch_add(1, Ordering::Relaxed);
+            let _ = self.ep.send(Message::BlockSync { file_idx, block_idx, ok });
+            return;
+        }
+        let full = {
+            let mut pending = self.acks.pending.lock().unwrap_or_else(|e| e.into_inner());
+            let entry = pending.entry(file_idx).or_insert_with(|| PendingAcks {
+                oldest: Instant::now(),
+                // Cap the eager reservation: huge negotiated batches must
+                // not preallocate huge buffers per file.
+                blocks: Vec::with_capacity(batch.min(1024)),
+            });
+            entry.blocks.push((block_idx, ok));
+            if !ok || entry.blocks.len() >= batch {
+                pending.remove(&file_idx)
+            } else {
+                None
+            }
+        };
+        if let Some(p) = full {
+            self.send_ack_batch(file_idx, p.blocks);
+        }
+    }
+
+    /// Emit one coalesced ack message (called outside the pending lock).
+    fn send_ack_batch(&self, file_idx: u32, blocks: Vec<(u32, bool)>) {
+        if blocks.is_empty() {
+            return;
+        }
+        self.counters.ack_messages.fetch_add(1, Ordering::Relaxed);
+        let _ = self.ep.send(Message::BlockSyncBatch { file_idx, blocks });
+    }
+
+    /// Flush one file's pending acks (FILE_CLOSE hygiene: nothing of the
+    /// file may linger once it commits).
+    fn flush_acks_for(&self, file_idx: u32) {
+        let p = {
+            let mut pending = self.acks.pending.lock().unwrap_or_else(|e| e.into_inner());
+            pending.remove(&file_idx)
+        };
+        if let Some(p) = p {
+            self.send_ack_batch(file_idx, p.blocks);
+        }
+    }
+
+    /// Flush every batch whose oldest entry aged past the flush window —
+    /// or everything when `all` (shutdown path).
+    fn flush_expired_acks(&self, all: bool) {
+        let expired: Vec<(u32, PendingAcks)> = {
+            let mut pending = self.acks.pending.lock().unwrap_or_else(|e| e.into_inner());
+            let keys: Vec<u32> = pending
+                .iter()
+                .filter(|(_, p)| all || p.oldest.elapsed() >= self.acks.window)
+                .map(|(&k, _)| k)
+                .collect();
+            keys.into_iter()
+                .map(|k| {
+                    let p = pending.remove(&k).expect("key collected under this lock");
+                    (k, p)
+                })
+                .collect()
+        };
+        for (file_idx, p) in expired {
+            self.send_ack_batch(file_idx, p.blocks);
+        }
+    }
 }
 
 pub struct SinkReport {
     pub fault: Option<String>,
     pub counters: CounterSnapshot,
     pub rma_stalls: (u64, u64),
+    /// Write-queue scheduling counters (picks, pick latency, service).
+    pub sched: SchedSnapshot,
 }
 
 /// Handle to the running sink node.
@@ -110,6 +214,12 @@ pub fn spawn_sink(
         ep,
         queues: OstQueues::new(cfg.ost_count),
         sched: cfg.sink_sched().build(cfg.ost_count),
+        sched_stats: SchedStats::default(),
+        acks: AckCoalescer {
+            batch: AtomicU32::new(cfg.ack_batch.max(1)),
+            window: Duration::from_micros(cfg.ack_flush_us.max(1)),
+            pending: Mutex::new(BTreeMap::new()),
+        },
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
@@ -164,6 +274,16 @@ pub fn spawn_sink(
         );
     }
 
+    // Ack flusher (only when coalescing can leave partial batches behind).
+    if cfg.ack_batch > 1 {
+        let sh = shared.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name("snk-ack-flush".into())
+                .spawn(move || ack_flusher_thread(&sh))?,
+        );
+    }
+
     // Comm (receive loop).
     {
         let sh = shared.clone();
@@ -192,6 +312,7 @@ impl SinkNode {
                 .clone(),
             counters: self.shared.counters.snapshot(),
             rma_stalls: self.shared.rma.stall_stats(),
+            sched: self.shared.sched_stats.snapshot(),
         }
     }
 }
@@ -216,7 +337,7 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
             }
         };
         match msg {
-            Message::Connect { max_object_size, resume, .. } => {
+            Message::Connect { max_object_size, resume, ack_batch, .. } => {
                 shared.resume.store(resume, Ordering::SeqCst);
                 if max_object_size as usize > shared.rma.slot_bytes() {
                     shared.abort_with(format!(
@@ -226,9 +347,15 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
                     ));
                     break;
                 }
-                let _ = shared
-                    .ep
-                    .send(Message::ConnectAck { rma_slots: shared.rma.slots() as u32 });
+                // Negotiate the ack batch down to what the peer can
+                // consume (1 for legacy single-BLOCK_SYNC sources).
+                let ours = shared.acks.batch.load(Ordering::SeqCst);
+                let negotiated = ours.min(ack_batch.max(1));
+                shared.acks.batch.store(negotiated, Ordering::SeqCst);
+                let _ = shared.ep.send(Message::ConnectAck {
+                    rma_slots: shared.rma.slots() as u32,
+                    ack_batch: negotiated,
+                });
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
                 handle_new_file(shared, file_idx, &name, size, start_ost);
@@ -242,6 +369,10 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
                 }
             }
             Message::FileClose { file_idx } => {
+                // Nothing of the file may linger in the coalescer once it
+                // commits (defensive: the source only closes after every
+                // ack arrived, so this is normally a no-op).
+                shared.flush_acks_for(file_idx);
                 let fid = {
                     let files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
                     files.get(&file_idx).map(|f| f.fid)
@@ -336,6 +467,30 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, mut slot: RmaSlot) {
     );
 }
 
+/// Ack flusher: ticks at a fraction of the flush window and pushes out
+/// any partially-filled batch whose oldest acknowledgement aged past
+/// `ack_flush_us` — the straggler bound that keeps coalescing from ever
+/// stalling the source's logging/close path.
+fn ack_flusher_thread(shared: &Arc<Shared>) {
+    // Tick at a fraction of the window, but capped so shutdown (join)
+    // never stalls behind a huge configured window.
+    let tick = (shared.acks.window / 4)
+        .max(Duration::from_micros(100))
+        .min(Duration::from_millis(50));
+    loop {
+        std::thread::sleep(tick);
+        if shared.is_aborted() {
+            break;
+        }
+        if shared.done.load(Ordering::SeqCst) {
+            // BYE seen: defensively push out anything still pending.
+            shared.flush_expired_acks(true);
+            break;
+        }
+        shared.flush_expired_acks(false);
+    }
+}
+
 /// Master: the RMA buffer wait queue (§3.1's "master thread will sleep on
 /// the RMA buffer's wait queue until a buffer is released").
 fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<Message>) {
@@ -367,7 +522,11 @@ fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<Message>) {
 /// hand to the verifier).
 fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
     let osts = shared.pfs.ost_model();
-    while let Some((ost, mut req)) = shared.queues.pop_next(&*shared.sched, osts) {
+    while let Some((ost, mut req)) =
+        shared
+            .queues
+            .pop_next_timed(&*shared.sched, osts, &shared.sched_stats)
+    {
         if shared.is_aborted() {
             break;
         }
@@ -380,7 +539,9 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
             shared.abort_with(format!("pwrite failed: {e}"));
             break;
         }
-        shared.sched.on_complete(ost, io_started.elapsed());
+        let service = io_started.elapsed();
+        shared.sched.on_complete(ost, service);
+        shared.sched_stats.record_complete(service);
         shared
             .counters
             .bytes_written
@@ -423,11 +584,7 @@ fn finish_block(shared: &Arc<Shared>, req: &WriteReq, ok: bool) {
             .objects_failed_verify
             .fetch_add(1, Ordering::Relaxed);
     }
-    let _ = shared.ep.send(Message::BlockSync {
-        file_idx: req.file_idx,
-        block_idx: req.block_idx,
-        ok,
-    });
+    shared.push_ack(req.file_idx, req.block_idx, ok);
 }
 
 /// Verifier thread: batch written objects into the compiled digest

@@ -10,9 +10,12 @@
 //!   PFS (charging the OST model), digest it, and hand it to the wire as
 //!   NEW_BLOCK.
 //! - **comm** owns the receive side: routes FILE_ID / FILE_CLOSE_ACK to
-//!   the master and handles BLOCK_SYNC — *synchronous logging* in the
-//!   comm thread's context (§5.1), FILE_CLOSE when a file's last object
-//!   is synced, retransmission when the sink reports a failed write.
+//!   the master and handles BLOCK_SYNC / BLOCK_SYNC_BATCH — *synchronous
+//!   logging* in the comm thread's context (§5.1), group-committed when
+//!   the sink coalesced several acks into one batch (one `log_blocks`
+//!   logger write per wire message), FILE_CLOSE when a file's last
+//!   object is synced, retransmission when the sink reports a failed
+//!   write.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -28,8 +31,9 @@ use crate::ftlog::{self, CompletedSet, FileKey, FtLogger, SpaceStats};
 use crate::integrity::{self, IntegrityMode};
 use crate::metrics::{Counters, CounterSnapshot};
 use crate::net::{Endpoint, Message, NetError, RmaPool};
+use crate::pfs::ost::OstId;
 use crate::pfs::{FileId, Pfs};
-use crate::sched::Scheduler;
+use crate::sched::{SchedSnapshot, SchedStats, Scheduler};
 
 /// One object read+send request.
 #[derive(Debug, Clone)]
@@ -66,6 +70,7 @@ struct Shared {
     queues: OstQueues<BlockReq>,
     /// The configured OST dequeue policy (`cfg.scheduler`).
     sched: Box<dyn Scheduler>,
+    sched_stats: SchedStats,
     rma: RmaPool,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SrcFile>>,
@@ -101,6 +106,8 @@ pub struct SourceReport {
     pub log_space: SpaceStats,
     /// Files fully accounted for (committed at sink or skipped by resume).
     pub files_done: u64,
+    /// Read-queue scheduling counters (picks, pick latency, service).
+    pub sched: SchedSnapshot,
 }
 
 /// Run the source node to completion/fault. Blocks the calling thread
@@ -118,6 +125,7 @@ pub fn run_source(
         ep,
         queues: OstQueues::new(cfg.ost_count),
         sched: cfg.scheduler.build(cfg.ost_count),
+        sched_stats: SchedStats::default(),
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
@@ -136,6 +144,9 @@ pub fn run_source(
         max_object_size: cfg.object_size,
         rma_slots,
         resume: spec.resume,
+        // Advertise the largest ack batch we are willing to consume; the
+        // sink answers with the negotiated (min) value it will use.
+        ack_batch: cfg.ack_batch.max(1),
     }) {
         return Ok(report_with_fault(&shared, format!("connect: {e}"), 0));
     }
@@ -185,6 +196,7 @@ pub fn run_source(
         counters: shared.counters.snapshot(),
         log_space,
         files_done,
+        sched: shared.sched_stats.snapshot(),
     })
 }
 
@@ -195,6 +207,7 @@ fn report_with_fault(shared: &Shared, msg: String, files_done: u64) -> SourceRep
         counters: shared.counters.snapshot(),
         log_space: shared.logger.lock().unwrap_or_else(|e| e.into_inner()).space(),
         files_done,
+        sched: shared.sched_stats.snapshot(),
     }
 }
 
@@ -335,15 +348,15 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
     let Some(f) = files.get_mut(&file_idx) else { return };
 
     // Register with the logger, seeding already-durable blocks so a second
-    // fault cannot lose pre-first-fault progress.
+    // fault cannot lose pre-first-fault progress. The seed is one
+    // group-committed write, not a per-block append storm.
     {
         let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
         match logger.register_file(&f.name, f.total_blocks) {
             Ok(key) => {
                 f.log_key = Some(key);
-                for b in f.synced.iter_completed() {
-                    let _ = logger.log_block(key, b);
-                }
+                let durable: Vec<u32> = f.synced.iter_completed().collect();
+                let _ = logger.log_blocks(key, &durable);
             }
             Err(e) => {
                 drop(logger);
@@ -392,7 +405,11 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
 /// → NEW_BLOCK.
 fn io_thread(shared: &Arc<Shared>) {
     let osts = shared.pfs.ost_model();
-    while let Some((ost, req)) = shared.queues.pop_next(&*shared.sched, osts) {
+    while let Some((ost, req)) =
+        shared
+            .queues
+            .pop_next_timed(&*shared.sched, osts, &shared.sched_stats)
+    {
         if shared.is_aborted() {
             break;
         }
@@ -414,8 +431,10 @@ fn io_thread(shared: &Arc<Shared>) {
         match shared.pfs.read_at(req.fid, req.offset, buf) {
             Ok(n) if n == req.len as usize => {
                 // Feed the measured storage service time back to stateful
-                // policies (e.g. straggler-aware EWMA).
-                shared.sched.on_complete(ost, io_started.elapsed());
+                // policies (e.g. straggler-aware EWMA) and the counters.
+                let service = io_started.elapsed();
+                shared.sched.on_complete(ost, service);
+                shared.sched_stats.record_complete(service);
             }
             Ok(n) => {
                 shared.abort_with(format!(
@@ -494,7 +513,10 @@ fn comm_thread(shared: &Arc<Shared>, master_tx: mpsc::Sender<MasterEvent>) {
                 let _ = master_tx.send(MasterEvent::FileId { file_idx, skip });
             }
             Message::BlockSync { file_idx, block_idx, ok } => {
-                handle_block_sync(shared, file_idx, block_idx, ok);
+                handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
+            }
+            Message::BlockSyncBatch { file_idx, blocks } => {
+                handle_block_syncs(shared, file_idx, &blocks);
             }
             Message::FileCloseAck { file_idx } => {
                 let _ = master_tx.send(MasterEvent::CloseAck { file_idx });
@@ -511,55 +533,83 @@ fn comm_thread(shared: &Arc<Shared>, master_tx: mpsc::Sender<MasterEvent>) {
     }
 }
 
-fn handle_block_sync(shared: &Arc<Shared>, file_idx: u32, block_idx: u32, ok: bool) {
-    if !ok {
-        // Sink write/verify failed: reschedule the object (§3.2 — without
-        // this, the corruption would go unnoticed).
-        shared
-            .counters
-            .objects_failed_verify
-            .fetch_add(1, Ordering::Relaxed);
-        let files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
-        if let Some(f) = files.get(&file_idx) {
-            let offset = block_idx as u64 * shared.object_size;
-            let len = (f.size - offset).min(shared.object_size) as u32;
-            let ost = shared.pfs.layout().ost_for(f.start_ost, offset);
-            shared.sched.on_enqueue(ost);
-            shared.queues.push(
-                ost,
-                BlockReq { file_idx, block_idx, fid: f.fid, offset, len },
-            );
+/// Apply one wire acknowledgement message — a single BLOCK_SYNC arrives
+/// as a one-element slice, a BLOCK_SYNC_BATCH as the whole batch. Failed
+/// writes are rescheduled (§3.2); fresh syncs are group-committed to the
+/// FT logger in ONE `log_blocks` write per wire message — the §5.1
+/// synchronous logging, amortized over the negotiated ack batch.
+fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)]) {
+    let mut resched: Vec<(OstId, BlockReq)> = Vec::new();
+    let mut log_err: Option<String> = None;
+    let mut close = false;
+    {
+        let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(f) = files.get_mut(&file_idx) else { return };
+        let mut fresh: Vec<u32> = Vec::with_capacity(acks.len());
+        for &(block_idx, ok) in acks {
+            if !ok {
+                // Sink write/verify failed: reschedule the object (§3.2 —
+                // without this, the corruption would go unnoticed).
+                shared
+                    .counters
+                    .objects_failed_verify
+                    .fetch_add(1, Ordering::Relaxed);
+                let offset = block_idx as u64 * shared.object_size;
+                let len = (f.size - offset).min(shared.object_size) as u32;
+                let ost = shared.pfs.layout().ost_for(f.start_ost, offset);
+                resched.push((
+                    ost,
+                    BlockReq { file_idx, block_idx, fid: f.fid, offset, len },
+                ));
+                continue;
+            }
+            if !f.synced.insert(block_idx) {
+                continue; // duplicate sync (batch retransmit after resume)
+            }
+            shared.counters.objects_synced.fetch_add(1, Ordering::Relaxed);
+            fresh.push(block_idx);
         }
+
+        // Synchronous logging (§5.1): log in the comm thread's context,
+        // one group commit for the whole message.
+        if !fresh.is_empty() {
+            if let Some(key) = f.log_key {
+                let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
+                match logger.log_blocks(key, &fresh) {
+                    Ok(()) => {
+                        shared
+                            .counters
+                            .log_appends
+                            .fetch_add(fresh.len() as u64, Ordering::Relaxed);
+                        shared.counters.log_writes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => log_err = Some(e.to_string()),
+                }
+            }
+        }
+
+        if log_err.is_none() && f.synced.is_complete() && !f.close_sent {
+            f.close_sent = true;
+            // §5.2.1: all objects synced -> delete the file's log entry
+            // and tell the sink to commit.
+            if let Some(key) = f.log_key {
+                let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
+                let _ = logger.complete_file(key);
+            }
+            close = true;
+        }
+    }
+    if let Some(e) = log_err {
+        shared.abort_with(format!("FT logging failed: {e}"));
         return;
     }
-
-    let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
-    let Some(f) = files.get_mut(&file_idx) else { return };
-    if !f.synced.insert(block_idx) {
-        return; // duplicate sync
-    }
-    shared.counters.objects_synced.fetch_add(1, Ordering::Relaxed);
-
-    // Synchronous logging (§5.1): log in the comm thread's context.
-    if let Some(key) = f.log_key {
-        let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
-        if let Err(e) = logger.log_block(key, block_idx) {
-            drop(logger);
-            drop(files);
-            shared.abort_with(format!("FT logging failed: {e}"));
-            return;
+    if !resched.is_empty() {
+        for (ost, _) in &resched {
+            shared.sched.on_enqueue(*ost);
         }
-        shared.counters.log_appends.fetch_add(1, Ordering::Relaxed);
+        shared.queues.push_batch(resched);
     }
-
-    if f.synced.is_complete() && !f.close_sent {
-        f.close_sent = true;
-        // §5.2.1: all objects synced -> delete the file's log entry and
-        // tell the sink to commit.
-        if let Some(key) = f.log_key {
-            let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
-            let _ = logger.complete_file(key);
-        }
+    if close {
         let _ = shared.ep.send(Message::FileClose { file_idx });
     }
 }

@@ -105,8 +105,12 @@ pub struct SpaceStats {
     pub peak_bytes: u64,
     /// Total bytes ever written to logger files.
     pub bytes_written: u64,
-    /// log_block invocations.
+    /// Logical appends: blocks recorded via `log_block`/`log_blocks`.
     pub appends: u64,
+    /// Physical logger write invocations: one per `log_block`, one per
+    /// group-committed `log_blocks` batch — the denominator the batched
+    /// ack path shrinks.
+    pub write_ops: u64,
     /// Live logger bytes measured in allocated 4 KiB file-system blocks
     /// (what `du` would report — each live log file costs at least one
     /// block). This is the measure under which the paper's "universal has
@@ -137,6 +141,20 @@ pub trait FtLogger: Send {
 
     /// Record that `block` of `key` was synced at the sink PFS.
     fn log_block(&mut self, key: FileKey, block: u32) -> Result<()>;
+
+    /// Record several synced blocks of `key` at once — the group-commit
+    /// entry point the batched BLOCK_SYNC path drives. Implementations
+    /// SHOULD perform one seek+write for the whole batch; the default
+    /// falls back to per-block `log_block` appends so custom loggers stay
+    /// correct without changes. Must be equivalent to calling `log_block`
+    /// for each entry in order (and, for a one-element batch, exactly
+    /// that).
+    fn log_blocks(&mut self, key: FileKey, blocks: &[u32]) -> Result<()> {
+        for &b in blocks {
+            self.log_block(key, b)?;
+        }
+        Ok(())
+    }
 
     /// All blocks synced: delete the file's log entry (§5.2.1 "if all the
     /// objects are successfully transferred, then the FT log entry
@@ -249,13 +267,20 @@ pub fn dir_bytes(dir: &std::path::Path) -> u64 {
 /// always safe as single space-separated index tokens AND as flat file
 /// names, including non-ASCII input).
 pub fn escape_name(name: &str) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
     let mut out = String::with_capacity(name.len());
     for b in name.bytes() {
         match b {
             b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'.' | b'_' | b'-' => {
                 out.push(b as char)
             }
-            _ => out.push_str(&format!("%{b:02x}")),
+            // Direct nibble pushes: this runs per index line, so no
+            // per-byte format! allocation on the hot path.
+            _ => {
+                out.push('%');
+                out.push(HEX[(b >> 4) as usize] as char);
+                out.push(HEX[(b & 0x0f) as usize] as char);
+            }
         }
     }
     out
@@ -322,6 +347,17 @@ mod tests {
             assert!(!esc.contains(' ') && !esc.contains('\n') && !esc.contains('/'));
             assert_eq!(unescape_name(&esc).unwrap(), name, "escaped: {esc}");
         }
+    }
+
+    #[test]
+    fn escape_emits_lowercase_two_digit_hex() {
+        // Pin the exact encoding the old format!("%{b:02x}") produced so
+        // logs written before the hot-path rewrite still unescape.
+        assert_eq!(escape_name("a b"), "a%20b");
+        assert_eq!(escape_name("100%"), "100%25");
+        assert_eq!(escape_name("α"), "%ce%b1");
+        assert_eq!(escape_name("x/y"), "x%2fy");
+        assert_eq!(escape_name("\n"), "%0a");
     }
 
     #[test]

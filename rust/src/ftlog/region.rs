@@ -290,6 +290,64 @@ impl RegionLogger {
         }
         Ok(())
     }
+
+    /// Rewrite the file's region for a whole batch in ONE write — the
+    /// group-commit path for multi-block batches. Bitmaps write only the
+    /// word span covering the batch's blocks (from the in-memory set, no
+    /// file read needed); stream regions are count-prefixed sorted
+    /// rewrites, which are whole-region by format.
+    fn write_region_batch(&mut self, key: FileKey, blocks: &[u32]) -> Result<()> {
+        let region = self.files[key.0 as usize]
+            .region
+            .clone()
+            .expect("region allocated");
+        if self.method.is_bitmap() {
+            let mut lo = usize::MAX;
+            let mut hi = 0usize;
+            for &b in blocks {
+                let r = self.method.word_range(b);
+                lo = lo.min(r.start);
+                hi = hi.max(r.end);
+            }
+            let st = &self.files[key.0 as usize];
+            let mut span = vec![0u8; hi - lo];
+            for (i, byte) in span.iter_mut().enumerate() {
+                let base = ((lo + i) * 8) as u32;
+                for bit in 0..8u32 {
+                    let b = base + bit;
+                    if b < st.total_blocks && st.set.contains(b) {
+                        *byte |= 1 << bit;
+                    }
+                }
+            }
+            let log = self.logs.get_mut(&region.log_name).unwrap();
+            log.file.seek(SeekFrom::Start(region.offset + lo as u64))?;
+            log.file.write_all(&span)?;
+            self.charge(0, span.len() as u64);
+        } else {
+            // Count-prefixed, sorted rewrite (§6.2) — same bytes the
+            // per-block path produces after its last append.
+            self.scratch.clear();
+            let st = &self.files[key.0 as usize];
+            self.scratch.extend_from_slice(&st.set.count().to_le_bytes());
+            for b in st.set.iter_completed() {
+                self.method.encode_record(b, &mut self.scratch);
+            }
+            anyhow::ensure!(
+                self.scratch.len() <= region.len,
+                "region overflow for '{}': {} > {}",
+                st.name,
+                self.scratch.len(),
+                region.len
+            );
+            let written = self.scratch.len() as u64;
+            let log = self.logs.get_mut(&region.log_name).unwrap();
+            log.file.seek(SeekFrom::Start(region.offset))?;
+            log.file.write_all(&self.scratch)?;
+            self.charge(0, written);
+        }
+        Ok(())
+    }
 }
 
 impl FtLogger for RegionLogger {
@@ -321,6 +379,41 @@ impl FtLogger for RegionLogger {
         self.ensure_region(key)?;
         self.write_region(key, block)?;
         self.stats.appends += 1;
+        self.stats.write_ops += 1;
+        Ok(())
+    }
+
+    fn log_blocks(&mut self, key: FileKey, blocks: &[u32]) -> Result<()> {
+        match blocks {
+            [] => return Ok(()),
+            [b] => return self.log_block(key, *b),
+            _ => {}
+        }
+        let fresh = {
+            let st = &mut self.files[key.0 as usize];
+            for &b in blocks {
+                anyhow::ensure!(
+                    b < st.total_blocks,
+                    "block {b} out of range for '{}' ({} blocks)",
+                    st.name,
+                    st.total_blocks
+                );
+            }
+            let mut fresh = 0u64;
+            for &b in blocks {
+                if st.set.insert(b) {
+                    fresh += 1;
+                }
+            }
+            fresh
+        };
+        if fresh == 0 {
+            return Ok(()); // whole batch was duplicate retransmits
+        }
+        self.ensure_region(key)?;
+        self.write_region_batch(key, blocks)?;
+        self.stats.appends += fresh;
+        self.stats.write_ops += 1;
         Ok(())
     }
 
@@ -505,6 +598,36 @@ mod tests {
                 }
                 let sb = &rec["b"];
                 assert_eq!(sb.iter_completed().collect::<Vec<_>>(), vec![1, 6]);
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+
+    #[test]
+    fn log_blocks_group_commit_equals_sequential() {
+        for mech in [Mechanism::Transaction, Mechanism::Universal] {
+            for method in Method::ALL {
+                let dir = tmp_dir(&format!("grp-{}-{}", mech.as_str(), method.as_str()));
+                let c = cfg(&dir, mech, method, 3);
+                let mut l = match mech {
+                    Mechanism::Transaction => RegionLogger::transaction(&c).unwrap(),
+                    _ => RegionLogger::universal(&c).unwrap(),
+                };
+                let k = l.register_file("g", 64).unwrap();
+                l.log_blocks(k, &[9u32, 0, 63, 20, 9 /* dup */]).unwrap();
+                l.log_blocks(k, &[1u32, 2]).unwrap();
+                let s = l.space();
+                assert_eq!(s.write_ops, 2, "{mech:?}/{method:?}");
+                assert_eq!(s.appends, 6, "{mech:?}/{method:?}");
+                // An all-duplicate batch writes nothing.
+                l.log_blocks(k, &[0u32, 1]).unwrap();
+                assert_eq!(l.space().write_ops, 2, "{mech:?}/{method:?}");
+                let rec = recover::recover_all(&c).unwrap();
+                assert_eq!(
+                    rec["g"].iter_completed().collect::<Vec<_>>(),
+                    vec![0, 1, 2, 9, 20, 63],
+                    "{mech:?}/{method:?}"
+                );
                 let _ = std::fs::remove_dir_all(&dir);
             }
         }

@@ -78,6 +78,10 @@ fn print_usage() {
            --scheduler congestion|round_robin|fifo_file|straggler\n\
                                                          OST dequeue policy\n\
            --sink-scheduler POLICY                       sink-side override\n\
+           --ack-batch N                                 coalesce N BLOCK_SYNCs per\n\
+                                                         wire msg / logger write (1 =\n\
+                                                         paper's per-object path)\n\
+           --ack-flush-us USEC                           partial-batch flush window\n\
            --workload big|small|mixed  --files N  --file-size BYTES\n\
            --fault FRAC [--fault-side source|sink]       inject fault at FRAC\n\
            --resume                                      resume per FT logs\n\
@@ -123,6 +127,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(v) = args.get("io-threads") {
         cfg.io_threads = v.parse().context("--io-threads")?;
+    }
+    if let Some(v) = args.get("ack-batch") {
+        cfg.ack_batch = v.parse().context("--ack-batch")?;
+    }
+    if let Some(v) = args.get("ack-flush-us") {
+        cfg.ack_flush_us = v.parse().context("--ack-flush-us")?;
     }
     if let Some(v) = args.get("object-size") {
         cfg.object_size = parse_bytes(v)?;
@@ -222,6 +232,24 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
             "log_peak_bytes".into(),
             Json::Num(out.log_space.peak_bytes as f64),
         );
+        m.insert("ack_messages".into(), Json::Num(out.sink.ack_messages as f64));
+        m.insert("log_writes".into(), Json::Num(out.source.log_writes as f64));
+        m.insert(
+            "sched_picks_source".into(),
+            Json::Num(out.source_sched.picks as f64),
+        );
+        m.insert(
+            "sched_avg_pick_ns_source".into(),
+            Json::Num(out.source_sched.avg_pick_ns()),
+        );
+        m.insert(
+            "sched_picks_sink".into(),
+            Json::Num(out.sink_sched.picks as f64),
+        );
+        m.insert(
+            "sched_avg_pick_ns_sink".into(),
+            Json::Num(out.sink_sched.avg_pick_ns()),
+        );
         println!("{}", Json::Obj(m));
         return;
     }
@@ -253,10 +281,29 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         fmt_bytes(out.resources.peak_rss_bytes)
     );
     println!(
-        "  ft log space     : peak {}  written {}  appends {}",
+        "  ft log space     : peak {}  written {}  appends {}  writes {}",
         fmt_bytes(out.log_space.peak_bytes),
         fmt_bytes(out.log_space.bytes_written),
-        out.log_space.appends
+        out.log_space.appends,
+        out.log_space.write_ops
+    );
+    println!(
+        "  ack path         : {} wire acks  {} logger writes (batched BLOCK_SYNC)",
+        out.sink.ack_messages, out.source.log_writes
+    );
+    println!(
+        "  sched (source)   : {} picks ({} fallback)  avg pick {:.0} ns  avg service {:.1} µs",
+        out.source_sched.picks,
+        out.source_sched.fallback_picks,
+        out.source_sched.avg_pick_ns(),
+        out.source_sched.avg_service_us()
+    );
+    println!(
+        "  sched (sink)     : {} picks ({} fallback)  avg pick {:.0} ns  avg service {:.1} µs",
+        out.sink_sched.picks,
+        out.sink_sched.fallback_picks,
+        out.sink_sched.avg_pick_ns(),
+        out.sink_sched.avg_service_us()
     );
     println!(
         "  rma stalls(sink) : {} ({} ms waiting)",

@@ -23,6 +23,12 @@ pub struct Counters {
     pub bytes_written: AtomicU64,
     pub log_appends: AtomicU64,
     pub log_bytes: AtomicU64,
+    /// BLOCK_SYNC wire messages actually sent (sink side): one per object
+    /// when `ack_batch = 1`, one per coalesced batch otherwise.
+    pub ack_messages: AtomicU64,
+    /// FT-logger write invocations (source side): one per `log_block` at
+    /// `ack_batch = 1`, one group commit per ack batch otherwise.
+    pub log_writes: AtomicU64,
 }
 
 impl Counters {
@@ -38,6 +44,8 @@ impl Counters {
             bytes_written: self.bytes_written.load(Ordering::Relaxed),
             log_appends: self.log_appends.load(Ordering::Relaxed),
             log_bytes: self.log_bytes.load(Ordering::Relaxed),
+            ack_messages: self.ack_messages.load(Ordering::Relaxed),
+            log_writes: self.log_writes.load(Ordering::Relaxed),
         }
     }
 }
@@ -54,6 +62,8 @@ pub struct CounterSnapshot {
     pub bytes_written: u64,
     pub log_appends: u64,
     pub log_bytes: u64,
+    pub ack_messages: u64,
+    pub log_writes: u64,
 }
 
 /// One `/proc/self` sample.

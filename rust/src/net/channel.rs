@@ -138,11 +138,16 @@ mod tests {
     #[test]
     fn send_recv_roundtrip() {
         let (src, sink) = fast_pair();
-        src.send(Message::Connect { max_object_size: 4, rma_slots: 1, resume: false })
-            .unwrap();
+        src.send(Message::Connect {
+            max_object_size: 4,
+            rma_slots: 1,
+            resume: false,
+            ack_batch: 1,
+        })
+        .unwrap();
         let m = sink.recv().unwrap();
         assert_eq!(m.type_name(), "CONNECT");
-        sink.send(Message::ConnectAck { rma_slots: 2 }).unwrap();
+        sink.send(Message::ConnectAck { rma_slots: 2, ack_batch: 1 }).unwrap();
         assert_eq!(src.recv().unwrap().type_name(), "CONNECT_ACK");
     }
 

@@ -19,10 +19,16 @@ pub type WireDigest = u64;
 pub enum Message {
     /// Connection handshake: the source advertises its RMA geometry
     /// (paper §3.1: "sends its maximum object size, number of objects in
-    /// the RMA buffer, and the memory handle").
-    Connect { max_object_size: u64, rma_slots: u32, resume: bool },
-    /// Sink accepts; advertises its own RMA slot count.
-    ConnectAck { rma_slots: u32 },
+    /// the RMA buffer, and the memory handle") plus the largest
+    /// BLOCK_SYNC batch it is willing to consume (`ack_batch`; 1 = the
+    /// paper's per-object acknowledgements). The field is optional on the
+    /// wire: a legacy CONNECT without it decodes as `ack_batch = 1`, so
+    /// old single-`BlockSync` peers interoperate unchanged.
+    Connect { max_object_size: u64, rma_slots: u32, resume: bool, ack_batch: u32 },
+    /// Sink accepts; advertises its own RMA slot count and the ack batch
+    /// size it will actually use (min of both sides' `ack_batch`; also
+    /// optional on the wire, defaulting to 1 for legacy peers).
+    ConnectAck { rma_slots: u32, ack_batch: u32 },
     /// Source → sink: begin file `file_idx` (§5.2.1). Carries the
     /// metadata the sink uses for the resume match (§5.2.2).
     NewFile { file_idx: u32, name: String, size: u64, start_ost: u32 },
@@ -43,6 +49,12 @@ pub enum Message {
     /// `ok = false` reports a failed/corrupted write; the source must
     /// reschedule the object and must NOT log it.
     BlockSync { file_idx: u32, block_idx: u32, ok: bool },
+    /// Sink → source: several objects of one file acknowledged at once —
+    /// the coalesced form of `BlockSync`, sent only when the CONNECT
+    /// handshake negotiated `ack_batch > 1`. Semantically identical to
+    /// the same `BlockSync`s in sequence; amortizes one wire message (and
+    /// one group-committed logger write at the source) over the batch.
+    BlockSyncBatch { file_idx: u32, blocks: Vec<(u32, bool)> },
     /// Source → sink: all objects of the file synced; close + commit it.
     FileClose { file_idx: u32 },
     /// Sink → source: file committed (lets the source delete its FT log).
@@ -60,6 +72,7 @@ const T_BLOCK_SYNC: u8 = 5;
 const T_FILE_CLOSE: u8 = 6;
 const T_FILE_CLOSE_ACK: u8 = 7;
 const T_BYE: u8 = 8;
+const T_BLOCK_SYNC_BATCH: u8 = 9;
 
 impl Message {
     /// Payload bytes for accounting/bandwidth purposes (object data only —
@@ -79,6 +92,7 @@ impl Message {
             Message::FileId { .. } => "FILE_ID",
             Message::NewBlock { .. } => "NEW_BLOCK",
             Message::BlockSync { .. } => "BLOCK_SYNC",
+            Message::BlockSyncBatch { .. } => "BLOCK_SYNC_BATCH",
             Message::FileClose { .. } => "FILE_CLOSE",
             Message::FileCloseAck { .. } => "FILE_CLOSE_ACK",
             Message::Bye => "BYE",
@@ -88,15 +102,17 @@ impl Message {
     /// Encode into `out` (appends; does not clear).
     pub fn encode(&self, out: &mut Vec<u8>) {
         match self {
-            Message::Connect { max_object_size, rma_slots, resume } => {
+            Message::Connect { max_object_size, rma_slots, resume, ack_batch } => {
                 out.push(T_CONNECT);
                 put_u64(out, *max_object_size);
                 put_u32(out, *rma_slots);
                 out.push(*resume as u8);
+                put_u32(out, *ack_batch);
             }
-            Message::ConnectAck { rma_slots } => {
+            Message::ConnectAck { rma_slots, ack_batch } => {
                 out.push(T_CONNECT_ACK);
                 put_u32(out, *rma_slots);
+                put_u32(out, *ack_batch);
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
                 out.push(T_NEW_FILE);
@@ -125,6 +141,15 @@ impl Message {
                 put_u32(out, *file_idx);
                 put_u32(out, *block_idx);
                 out.push(*ok as u8);
+            }
+            Message::BlockSyncBatch { file_idx, blocks } => {
+                out.push(T_BLOCK_SYNC_BATCH);
+                put_u32(out, *file_idx);
+                put_u32(out, blocks.len() as u32);
+                for (block_idx, ok) in blocks {
+                    put_u32(out, *block_idx);
+                    out.push(*ok as u8);
+                }
             }
             Message::FileClose { file_idx } => {
                 out.push(T_FILE_CLOSE);
@@ -168,6 +193,10 @@ struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             bail!("message truncated at byte {}", self.pos);
@@ -213,8 +242,14 @@ impl<'a> Reader<'a> {
                 max_object_size: self.u64()?,
                 rma_slots: self.u32()?,
                 resume: self.bool()?,
+                // Optional trailing field: a legacy peer's CONNECT stops
+                // here and means "one BLOCK_SYNC per object".
+                ack_batch: if self.remaining() > 0 { self.u32()? } else { 1 },
             },
-            T_CONNECT_ACK => Message::ConnectAck { rma_slots: self.u32()? },
+            T_CONNECT_ACK => Message::ConnectAck {
+                rma_slots: self.u32()?,
+                ack_batch: if self.remaining() > 0 { self.u32()? } else { 1 },
+            },
             T_NEW_FILE => Message::NewFile {
                 file_idx: self.u32()?,
                 name: self.string()?,
@@ -243,6 +278,18 @@ impl<'a> Reader<'a> {
                 block_idx: self.u32()?,
                 ok: self.bool()?,
             },
+            T_BLOCK_SYNC_BATCH => {
+                let file_idx = self.u32()?;
+                let count = self.u32()? as usize;
+                if count > 1 << 20 {
+                    bail!("ack batch of {count} entries exceeds sanity cap");
+                }
+                let mut blocks = Vec::with_capacity(count);
+                for _ in 0..count {
+                    blocks.push((self.u32()?, self.bool()?));
+                }
+                Message::BlockSyncBatch { file_idx, blocks }
+            }
             T_FILE_CLOSE => Message::FileClose { file_idx: self.u32()? },
             T_FILE_CLOSE_ACK => Message::FileCloseAck { file_idx: self.u32()? },
             T_BYE => Message::Bye,
@@ -264,8 +311,13 @@ mod tests {
 
     #[test]
     fn roundtrip_all_variants() {
-        roundtrip(Message::Connect { max_object_size: 1 << 20, rma_slots: 64, resume: true });
-        roundtrip(Message::ConnectAck { rma_slots: 8 });
+        roundtrip(Message::Connect {
+            max_object_size: 1 << 20,
+            rma_slots: 64,
+            resume: true,
+            ack_batch: 8,
+        });
+        roundtrip(Message::ConnectAck { rma_slots: 8, ack_batch: 1 });
         roundtrip(Message::NewFile {
             file_idx: 3,
             name: "dir/file-α.bin".into(),
@@ -282,6 +334,11 @@ mod tests {
         });
         roundtrip(Message::BlockSync { file_idx: 1, block_idx: 9, ok: true });
         roundtrip(Message::BlockSync { file_idx: 1, block_idx: 9, ok: false });
+        roundtrip(Message::BlockSyncBatch { file_idx: 1, blocks: vec![] });
+        roundtrip(Message::BlockSyncBatch {
+            file_idx: 7,
+            blocks: vec![(0, true), (9, false), (u32::MAX, true)],
+        });
         roundtrip(Message::FileClose { file_idx: 2 });
         roundtrip(Message::FileCloseAck { file_idx: 2 });
         roundtrip(Message::Bye);
@@ -325,6 +382,39 @@ mod tests {
         let mut buf = Vec::new();
         Message::FileId { file_idx: 0, sink_fd: 0, skip: false }.encode(&mut buf);
         *buf.last_mut().unwrap() = 7;
+        assert!(Message::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn legacy_handshake_without_ack_batch_decodes_as_one() {
+        // A pre-batching peer's CONNECT: type byte + u64 + u32 + bool,
+        // no trailing ack_batch field.
+        let mut buf = vec![T_CONNECT];
+        buf.extend_from_slice(&(1u64 << 20).to_le_bytes());
+        buf.extend_from_slice(&64u32.to_le_bytes());
+        buf.push(1);
+        assert_eq!(
+            Message::decode(&buf).unwrap(),
+            Message::Connect {
+                max_object_size: 1 << 20,
+                rma_slots: 64,
+                resume: true,
+                ack_batch: 1,
+            }
+        );
+        let mut buf = vec![T_CONNECT_ACK];
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&buf).unwrap(),
+            Message::ConnectAck { rma_slots: 8, ack_batch: 1 }
+        );
+    }
+
+    #[test]
+    fn decode_rejects_oversized_ack_batch() {
+        let mut buf = vec![T_BLOCK_SYNC_BATCH];
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&(1u32 << 30).to_le_bytes()); // absurd count
         assert!(Message::decode(&buf).is_err());
     }
 

@@ -46,6 +46,7 @@ pub mod fifo_file;
 pub mod round_robin;
 pub mod straggler;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -136,6 +137,84 @@ pub fn pick_min_by<K: Ord>(
     })
 }
 
+/// Per-side scheduling counters: how often the policy was consulted, how
+/// long each `pick` took, and the storage service times it was fed back.
+/// One instance lives in each coordinator side's shared state; IO threads
+/// update it through [`crate::coordinator::queues::OstQueues::pop_next_timed`]
+/// and their `on_complete` call sites, and the snapshot lands in
+/// `TransferOutcome` / the CLI summary.
+#[derive(Debug, Default)]
+pub struct SchedStats {
+    pub picks: AtomicU64,
+    /// Picks where the policy returned `None`/an invalid OST and the
+    /// queue layer fell back to the lowest-id non-empty queue.
+    pub fallback_picks: AtomicU64,
+    /// Total nanoseconds spent inside `Scheduler::pick` (under the queue
+    /// lock — the policy's direct hot-path cost).
+    pub pick_ns: AtomicU64,
+    pub completes: AtomicU64,
+    /// Total nanoseconds of storage service time reported to
+    /// `on_complete`.
+    pub service_ns: AtomicU64,
+}
+
+impl SchedStats {
+    pub fn record_pick(&self, elapsed: Duration, fallback: bool) {
+        self.picks.fetch_add(1, Ordering::Relaxed);
+        self.pick_ns
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        if fallback {
+            self.fallback_picks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_complete(&self, service: Duration) {
+        self.completes.fetch_add(1, Ordering::Relaxed);
+        self.service_ns
+            .fetch_add(service.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> SchedSnapshot {
+        SchedSnapshot {
+            picks: self.picks.load(Ordering::Relaxed),
+            fallback_picks: self.fallback_picks.load(Ordering::Relaxed),
+            pick_ns: self.pick_ns.load(Ordering::Relaxed),
+            completes: self.completes.load(Ordering::Relaxed),
+            service_ns: self.service_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Copyable summary of one side's [`SchedStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedSnapshot {
+    pub picks: u64,
+    pub fallback_picks: u64,
+    pub pick_ns: u64,
+    pub completes: u64,
+    pub service_ns: u64,
+}
+
+impl SchedSnapshot {
+    /// Mean time spent inside `pick`, nanoseconds.
+    pub fn avg_pick_ns(&self) -> f64 {
+        if self.picks == 0 {
+            0.0
+        } else {
+            self.pick_ns as f64 / self.picks as f64
+        }
+    }
+
+    /// Mean storage service time per completed request, microseconds.
+    pub fn avg_service_us(&self) -> f64 {
+        if self.completes == 0 {
+            0.0
+        } else {
+            self.service_ns as f64 / self.completes as f64 / 1_000.0
+        }
+    }
+}
+
 /// The policy selector threaded through `Config`, the `--scheduler` CLI
 /// flag, and the bench axes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -220,6 +299,24 @@ mod tests {
         for name in ["congestion", "round_robin", "fifo_file", "straggler"] {
             assert!(err.contains(name), "error should list '{name}': {err}");
         }
+    }
+
+    #[test]
+    fn sched_stats_snapshot_and_averages() {
+        let s = SchedStats::default();
+        assert_eq!(s.snapshot(), SchedSnapshot::default());
+        assert_eq!(s.snapshot().avg_pick_ns(), 0.0);
+        assert_eq!(s.snapshot().avg_service_us(), 0.0);
+        s.record_pick(Duration::from_nanos(100), false);
+        s.record_pick(Duration::from_nanos(300), true);
+        s.record_complete(Duration::from_micros(5));
+        let snap = s.snapshot();
+        assert_eq!(snap.picks, 2);
+        assert_eq!(snap.fallback_picks, 1);
+        assert_eq!(snap.pick_ns, 400);
+        assert_eq!(snap.avg_pick_ns(), 200.0);
+        assert_eq!(snap.completes, 1);
+        assert_eq!(snap.avg_service_us(), 5.0);
     }
 
     #[test]

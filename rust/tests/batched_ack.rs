@@ -1,0 +1,193 @@
+//! Batched BLOCK_SYNC acknowledgements: seed equivalence at
+//! `ack_batch = 1`, wire-level message shapes, CONNECT negotiation with
+//! mixed-config (and legacy) peers, and the coalescing win itself.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ftlads::config::Config;
+use ftlads::coordinator::sink::{spawn_sink, SinkReport};
+use ftlads::coordinator::source::{run_source, SourceReport};
+use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
+use ftlads::workload;
+
+/// Endpoint wrapper that records the type of every message sent through
+/// it (used on the sink side to observe the ack wire shapes).
+struct Tap {
+    inner: channel::ChannelEndpoint,
+    sent_types: Arc<Mutex<Vec<&'static str>>>,
+}
+
+impl Endpoint for Tap {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        self.sent_types
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(msg.type_name());
+        self.inner.send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+/// Run one transfer with *independent* source and sink configs (the
+/// in-process `run_transfer` shares one config, so negotiation tests
+/// wire the nodes together manually), tapping the sink's send side.
+fn run_split(
+    src_cfg: &Config,
+    sink_cfg: &Config,
+    env: &SimEnv,
+) -> (SourceReport, SinkReport, Vec<&'static str>) {
+    let (src_ep, sink_ep) = channel::pair(src_cfg.wire(), FaultController::unarmed());
+    let sent_types = Arc::new(Mutex::new(Vec::new()));
+    let tap = Tap { inner: sink_ep, sent_types: sent_types.clone() };
+
+    let sink_node = spawn_sink(sink_cfg, env.sink.clone(), Arc::new(tap), None).unwrap();
+    let spec = TransferSpec::fresh(env.files.clone());
+    let src_report =
+        run_source(src_cfg, env.source.clone(), Arc::new(src_ep), &spec).unwrap();
+    let sink_report = sink_node.join();
+    let types = sent_types.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    (src_report, sink_report, types)
+}
+
+fn count(types: &[&'static str], name: &str) -> usize {
+    types.iter().filter(|t| **t == name).count()
+}
+
+#[test]
+fn ack_batch_1_reproduces_seed_single_block_sync_exactly() {
+    // The acceptance pin: at ack_batch = 1 the wire carries one single
+    // BLOCK_SYNC per object — never a BLOCK_SYNC_BATCH — and the seed's
+    // counter profile is reproduced exactly (one logger write per ack).
+    let cfg = Config::for_tests("ackb-seed-eq");
+    assert_eq!(cfg.ack_batch, 1, "default must be the seed path");
+    let wl = workload::big_workload(4, 512 << 10); // 32 objects @ 64 KiB
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let (src, snk, types) = run_split(&cfg, &cfg, &env);
+
+    assert!(src.fault.is_none(), "{:?}", src.fault);
+    assert!(snk.fault.is_none(), "{:?}", snk.fault);
+    assert_eq!(count(&types, "BLOCK_SYNC"), 32);
+    assert_eq!(count(&types, "BLOCK_SYNC_BATCH"), 0);
+    assert_eq!(src.counters.objects_synced, 32);
+    assert_eq!(snk.counters.ack_messages, 32);
+    assert_eq!(src.counters.log_appends, 32);
+    assert_eq!(src.counters.log_writes, 32, "one logger write per ack");
+    assert_eq!(src.files_done, 4);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn negotiated_batching_coalesces_wire_acks_and_log_writes() {
+    let mut cfg = Config::for_tests("ackb-coalesce");
+    cfg.ack_batch = 8;
+    cfg.ack_flush_us = 100_000; // count-driven flushes only
+    let wl = workload::big_workload(4, 512 << 10); // 4 files x 8 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let (src, snk, types) = run_split(&cfg, &cfg, &env);
+
+    assert!(src.fault.is_none(), "{:?}", src.fault);
+    assert_eq!(src.counters.objects_synced, 32);
+    // 8 objects per file, batch 8: exactly one batch message per file.
+    assert_eq!(count(&types, "BLOCK_SYNC"), 0, "batch>1 never sends singles");
+    assert_eq!(count(&types, "BLOCK_SYNC_BATCH"), 4);
+    assert_eq!(snk.counters.ack_messages, 4);
+    assert_eq!(src.counters.log_appends, 32, "every object still logged");
+    assert_eq!(src.counters.log_writes, 4, "one group commit per batch");
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn connect_negotiation_takes_the_min_of_both_sides() {
+    // A batching sink facing a legacy-style source (ack_batch = 1) must
+    // fall back to singles; a batching source facing an ack_batch = 1
+    // sink gets singles too.
+    for (src_batch, sink_batch) in [(1u32, 8u32), (8, 1)] {
+        let mut src_cfg = Config::for_tests(&format!("ackb-neg-{src_batch}-{sink_batch}"));
+        src_cfg.ack_batch = src_batch;
+        let mut sink_cfg = src_cfg.clone();
+        sink_cfg.ack_batch = sink_batch;
+        let wl = workload::big_workload(2, 512 << 10); // 16 objects
+        let env = SimEnv::new(src_cfg.clone(), &wl);
+        let (src, snk, types) = run_split(&src_cfg, &sink_cfg, &env);
+        assert!(src.fault.is_none(), "{:?}", src.fault);
+        assert_eq!(
+            count(&types, "BLOCK_SYNC"),
+            16,
+            "min(ack_batch)=1 must produce per-object acks ({src_batch}/{sink_batch})"
+        );
+        assert_eq!(count(&types, "BLOCK_SYNC_BATCH"), 0);
+        assert_eq!(snk.counters.ack_messages, 16);
+        env.verify_sink_complete().unwrap();
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+}
+
+#[test]
+fn batched_outcome_matches_per_object_outcome() {
+    // Same workload, same seed: batch = 8 must land byte-identical data
+    // and identical object accounting to batch = 1 — only the wire-
+    // message and logger-write counts differ.
+    let mut outcomes = Vec::new();
+    for batch in [1u32, 8] {
+        let mut cfg = Config::for_tests(&format!("ackb-outcome-{batch}"));
+        cfg.ack_batch = batch;
+        cfg.ack_flush_us = 100_000; // count-driven flushes only
+        let wl = workload::mixed_workload(6, 256 << 10, cfg.seed);
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        assert!(out.completed, "batch={batch}: {:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        outcomes.push(out);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    let (single, batched) = (&outcomes[0], &outcomes[1]);
+    assert_eq!(single.source.objects_sent, batched.source.objects_sent);
+    assert_eq!(single.source.objects_synced, batched.source.objects_synced);
+    assert_eq!(single.source.bytes_sent, batched.source.bytes_sent);
+    assert_eq!(single.source.files_completed, batched.source.files_completed);
+    assert_eq!(single.source.log_appends, batched.source.log_appends);
+    assert!(
+        batched.sink.ack_messages < single.sink.ack_messages,
+        "batching must reduce wire acks: {} vs {}",
+        batched.sink.ack_messages,
+        single.sink.ack_messages
+    );
+    assert!(
+        batched.source.log_writes < single.source.log_writes,
+        "batching must reduce logger writes: {} vs {}",
+        batched.source.log_writes,
+        single.source.log_writes
+    );
+}
+
+#[test]
+fn sched_counters_populated_in_outcome() {
+    // The per-policy pick/latency counters ride along in TransferOutcome.
+    let cfg = Config::for_tests("ackb-schedctr");
+    let wl = workload::big_workload(4, 512 << 10); // 32 objects
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    // Every object is picked once per side (no retransmits here).
+    assert_eq!(out.source_sched.picks, 32);
+    assert_eq!(out.sink_sched.picks, 32);
+    assert_eq!(out.source_sched.completes, 32);
+    assert_eq!(out.sink_sched.completes, 32);
+    assert_eq!(out.source_sched.fallback_picks, 0);
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}

@@ -48,6 +48,38 @@ fn cli_transfer_completes_and_verifies() {
 }
 
 #[test]
+fn cli_ack_batch_flag_coalesces_and_reports() {
+    let ftdir = tmp("t1b");
+    let out = ftlads()
+        .args([
+            "transfer",
+            "--workload", "big",
+            "--files", "4",
+            "--file-size", "512K",
+            "--mechanism", "universal",
+            "--method", "bit64",
+            "--ack-batch", "8",
+            "--ack-flush-us", "100000",
+            "--ft-dir", ftdir.to_str().unwrap(),
+            "--set", "time_scale=0",
+        ])
+        .output()
+        .expect("spawn ftlads");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "stdout: {stdout}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("completed        : true"), "{stdout}");
+    // 512K files / 256K default MTU = 2 objects per file: with batch 8
+    // the window flush coalesces each file's acks into one message.
+    assert!(stdout.contains("ack path         : 4 wire acks  4 logger writes"), "{stdout}");
+    assert!(stdout.contains("sched (source)"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&ftdir);
+}
+
+#[test]
 fn cli_fault_exits_2_then_recover_shows_state() {
     let ftdir = tmp("t2");
     let common = [

@@ -90,6 +90,116 @@ matrix! {
 }
 
 #[test]
+fn batched_acks_fault_mid_window_every_mechanism() {
+    // The batched-ack pipeline: for every FT mechanism and several
+    // ack_batch sizes, kill the connection mid-transfer (hence mid-flush-
+    // window), resume, and require (a) completion + byte-verified sink,
+    // (b) no acked-and-logged object is ever retransmitted — the resume
+    // re-sends at most the un-acked tail (the in-flight flush windows),
+    // which block re-write tolerates, and (c) no logs survive completion.
+    for mech in Mechanism::ALL_FT {
+        for batch in [2u32, 8, 64] {
+            let mut cfg = Config::for_tests(&format!("matrix-ackb-{}-{batch}", mech.as_str()));
+            cfg.mechanism = mech;
+            cfg.method = Method::Bit64;
+            cfg.ack_batch = batch;
+            cfg.ack_flush_us = 500;
+            let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+            let total = wl.total_objects(cfg.object_size);
+            let env = SimEnv::new(cfg, &wl);
+            let out = env
+                .run(
+                    &TransferSpec::fresh(env.files.clone())
+                        .with_fault(FaultPlan::at_fraction(0.5, Side::Source)),
+                )
+                .unwrap();
+            assert!(!out.completed, "{mech:?} batch={batch}: fault did not fire");
+            // What the group-committed logs actually captured before the
+            // fault: every one of those objects must be skipped, never
+            // retransmitted, on resume.
+            let logged: u64 = recover::recover_all(&env.cfg.ft())
+                .unwrap()
+                .values()
+                .map(|s| s.count() as u64)
+                .sum();
+            let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+            assert!(
+                out2.completed,
+                "{mech:?} batch={batch}: resume failed: {:?}",
+                out2.fault
+            );
+            assert!(
+                out2.source.objects_skipped_resume >= logged,
+                "{mech:?} batch={batch}: logged objects not skipped \
+                 ({} skipped, {logged} logged)",
+                out2.source.objects_skipped_resume
+            );
+            assert!(
+                out2.source.objects_sent <= total - logged,
+                "{mech:?} batch={batch}: resume retransmitted logged objects \
+                 ({} sent, {logged} logged of {total})",
+                out2.source.objects_sent
+            );
+            env.verify_sink_complete()
+                .unwrap_or_else(|e| panic!("{mech:?} batch={batch}: {e}"));
+            let left = recover::recover_all(&env.cfg.ft()).unwrap();
+            assert!(
+                left.is_empty(),
+                "{mech:?} batch={batch}: logs left after completion"
+            );
+            let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        }
+    }
+}
+
+#[test]
+fn batched_acks_with_corruption_retransmit_promptly() {
+    // ok=false acks flush their batch immediately; corrupted writes are
+    // retransmitted and the dataset still verifies with batching on.
+    let mut cfg = Config::for_tests("matrix-ackb-corrupt");
+    cfg.mechanism = Mechanism::Universal;
+    cfg.method = Method::Bit64;
+    cfg.ack_batch = 8;
+    let wl = workload::big_workload(3, 4 * cfg.object_size);
+    let env = SimEnv::new(cfg, &wl);
+    for (f, b) in [(0usize, 0u64), (1, 1), (2, 3)] {
+        env.sink
+            .inject_write_corruption(&env.files[f], b * env.cfg.object_size);
+    }
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    assert_eq!(out.sink.objects_failed_verify, 3);
+    assert_eq!(out.source.objects_failed_verify, 3);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn huge_ack_batch_relies_on_window_flush() {
+    // ack_batch far above the per-file object count: the count trigger
+    // never fires, so completion depends entirely on the flusher thread's
+    // ack_flush_us straggler bound.
+    let mut cfg = Config::for_tests("matrix-ackb-window");
+    cfg.mechanism = Mechanism::File;
+    cfg.method = Method::Bit64;
+    cfg.ack_batch = 1024;
+    cfg.ack_flush_us = 2000;
+    let wl = workload::big_workload(3, 4 * cfg.object_size); // 12 objects
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    // Far fewer ack messages than objects: coalescing really happened.
+    assert!(
+        out.sink.ack_messages < out.source.objects_synced,
+        "expected coalesced acks: {} msgs for {} objects",
+        out.sink.ack_messages,
+        out.source.objects_synced
+    );
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
 fn lads_without_ft_restarts_from_scratch() {
     let cfg = Config::for_tests("matrix-lads");
     // mechanism defaults to File; force None

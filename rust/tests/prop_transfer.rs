@@ -44,6 +44,10 @@ fn random_config(rng: &mut Pcg32, tag: &str) -> Config {
     cfg.sink_scheduler = Some(*rng.choose(&SchedPolicy::ALL));
     // Small RMA pools exercise back-pressure paths.
     cfg.rma_bytes = (rng.range(2, 16) * cfg.object_size) as usize;
+    // The batched-ack pipeline must preserve every invariant at any
+    // batch size / flush window, including the seed-exact batch of 1.
+    cfg.ack_batch = rng.range(1, 17) as u32;
+    cfg.ack_flush_us = rng.range(200, 3000);
     cfg.seed = rng.next_u64();
     cfg
 }
@@ -168,16 +172,88 @@ fn prop_double_fault_progress_monotone() {
 }
 
 #[test]
+fn prop_batched_ack_fault_mid_window_never_resends_acked() {
+    // Sync logging invariant under batched acks: everything the source
+    // acked (and therefore group-committed) before the fault is skipped
+    // on resume; only the un-acked tail of each in-flight flush window is
+    // retransmitted, and the verified output matches.
+    forall("ack_batch_bound", 15, |rng| {
+        let mut cfg = random_config(rng, "prop-ackb");
+        cfg.ack_batch = *rng.choose(&[2u32, 4, 8, 16]);
+        cfg.ack_flush_us = 500;
+        let wl = Workload {
+            name: "ackb".into(),
+            files: (0..6)
+                .map(|i| FileSpec {
+                    name: format!("ab/f{i}"),
+                    size: 6 * cfg.object_size,
+                })
+                .collect(),
+        };
+        let total = wl.total_objects(cfg.object_size);
+        let frac = 0.2 + rng.f64() * 0.6;
+        let env = SimEnv::new(cfg, &wl);
+        let out = env
+            .run(
+                &TransferSpec::fresh(env.files.clone())
+                    .with_fault(FaultPlan::at_fraction(frac, Side::Source)),
+            )
+            .map_err(|e| e.to_string())?;
+        if !out.completed {
+            // Every object the source group-committed before the fault
+            // must be skipped on resume, never retransmitted.
+            let logged: u64 = ftlads::ftlog::recover::recover_all(&env.cfg.ft())
+                .map_err(|e| e.to_string())?
+                .values()
+                .map(|s| s.count() as u64)
+                .sum();
+            let out2 = env
+                .run(&TransferSpec::resuming(env.files.clone()))
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                out2.completed,
+                "resume failed: {:?} ({:?}/{:?} batch {})",
+                out2.fault,
+                env.cfg.mechanism,
+                env.cfg.method,
+                env.cfg.ack_batch
+            );
+            prop_assert!(
+                out2.source.objects_sent <= total - logged,
+                "logged objects retransmitted: resent {} with {} logged of {}",
+                out2.source.objects_sent,
+                logged,
+                total
+            );
+        }
+        env.verify_sink_complete().map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_message_codec_roundtrips_random() {
     use ftlads::net::Message;
     forall("msg_codec", 300, |rng| {
-        let msg = match rng.below(9) {
+        let msg = match rng.below(10) {
             0 => Message::Connect {
                 max_object_size: rng.next_u64(),
                 rma_slots: rng.next_u32(),
                 resume: rng.bool(0.5),
+                ack_batch: rng.next_u32(),
             },
-            1 => Message::ConnectAck { rma_slots: rng.next_u32() },
+            1 => Message::ConnectAck {
+                rma_slots: rng.next_u32(),
+                ack_batch: rng.next_u32(),
+            },
+            9 => {
+                let len = rng.range(0, 64) as usize;
+                let blocks = (0..len)
+                    .map(|_| (rng.next_u32(), rng.bool(0.5)))
+                    .collect();
+                Message::BlockSyncBatch { file_idx: rng.next_u32(), blocks }
+            }
             2 => {
                 let len = rng.range(0, 40) as usize;
                 let name: String = (0..len)

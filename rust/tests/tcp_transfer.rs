@@ -73,6 +73,8 @@ impl TcpEnv {
             resources: Default::default(),
             payload_bytes: src_ep.payload_sent(),
             rma_stalls: sink_report.rma_stalls,
+            source_sched: src_report.sched,
+            sink_sched: sink_report.sched,
         }
     }
 
@@ -118,6 +120,37 @@ fn tcp_fault_then_resume() {
     );
     env.verify();
     let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn tcp_batched_acks_roundtrip_the_codec() {
+    // BLOCK_SYNC_BATCH serialized through the real wire codec over
+    // loopback sockets: coalescing survives the byte-level path, and a
+    // mid-transfer fault still resumes to a verified dataset.
+    let mut env = TcpEnv::new("tcp4", 5, 512 << 10);
+    env.cfg.ack_batch = 8;
+    env.cfg.ack_flush_us = 100_000;
+    let out = env.run(FaultPlan::none(), false);
+    assert!(out.completed, "{:?}", out.fault);
+    assert_eq!(out.source.objects_synced, 5 * 8);
+    // 8 objects per file, batch 8: one wire ack per file.
+    assert_eq!(out.sink.ack_messages, 5);
+    assert_eq!(out.source.log_writes, 5);
+    env.verify();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+
+    let env2 = {
+        let mut e = TcpEnv::new("tcp5", 6, 512 << 10);
+        e.cfg.ack_batch = 4;
+        e.cfg.ack_flush_us = 500;
+        e
+    };
+    let out = env2.run(FaultPlan::at_fraction(0.5, Side::Source), false);
+    assert!(!out.completed, "fault should trigger over TCP too");
+    let out2 = env2.run(FaultPlan::none(), true);
+    assert!(out2.completed, "{:?}", out2.fault);
+    env2.verify();
+    let _ = std::fs::remove_dir_all(&env2.cfg.ft_dir);
 }
 
 #[test]
