@@ -20,7 +20,9 @@ fn main() {
     let t0 = Instant::now();
     for _ in 0..20 {
         let mut st = vec![0u32; b*w];
-        for (i, c) in bytes.chunks_exact(4).enumerate() { st[i] = u32::from_le_bytes([c[0],c[1],c[2],c[3]]); }
+        for (i, c) in bytes.chunks_exact(4).enumerate() {
+            st[i] = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
         std::hint::black_box(&st);
     }
     println!("staging fill loop: {:.3} ms", t0.elapsed().as_secs_f64()/20.0*1e3);

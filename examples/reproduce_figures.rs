@@ -86,8 +86,14 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for mech in Mechanism::ALL_FT {
         let mut row = vec![mech.as_str().to_string()];
-        for m in [Method::Char, Method::Int, Method::Enc, Method::Binary, Method::Bit8, Method::Bit64]
-        {
+        for m in [
+            Method::Char,
+            Method::Int,
+            Method::Enc,
+            Method::Binary,
+            Method::Bit8,
+            Method::Bit64,
+        ] {
             let out = run_case(
                 &scale,
                 &wl_big,

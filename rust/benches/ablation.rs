@@ -19,8 +19,14 @@
 //!      batch size, plus a fault+resume at every size to show recovery
 //!      stays paper-correct (a fault mid-window retransmits at most the
 //!      un-flushed acks, which block re-write tolerates).
+//!   A8 send-window axis: `send_window` ∈ {1, 2, 8, 32} (credit-based
+//!      NEW_BLOCK pipelining) on a wire-bound workload — issue-loop slot
+//!      stalls, credit waits and transfer time per window, an adaptive-
+//!      ack row, and a fault+resume at the widest window to show the
+//!      log-based retransmit bound holds with a full window in flight.
 //!
-//! Run: `cargo bench --bench ablation`
+//! Run: `cargo bench --bench ablation` (set `FTLADS_BENCH_JSON_DIR` to
+//! also emit the tables as a JSON summary — the CI artifact).
 
 use ftlads::bench_support::{print_table, run_sched_case, BenchScale, Case, CONGESTED_OSTS};
 use ftlads::sched::SchedPolicy;
@@ -43,6 +49,8 @@ fn main() {
     a5_layout_aware_value(&scale);
     a6_scheduler_policies(&scale);
     a7_ack_batch(&scale);
+    a8_send_window(&scale);
+    let _ = ftlads::bench_support::write_json_summary("ablation");
 }
 
 /// A1: txn_size=1 ≈ file logger; txn_size=max ≈ universal logger.
@@ -330,4 +338,102 @@ fn a7_ack_batch(scale: &BenchScale) {
         &rows,
     );
     println!("claim: batching amortizes the per-object ack/log fixed cost; batch=1 == paper");
+}
+
+/// A8: the send-window axis — credit-based NEW_BLOCK pipelining on a
+/// wire-bound workload (slow modeled link, free storage, 2 RMA slots, so
+/// the lockstep path pins its slots across the wire serialization), plus
+/// one adaptive-ack row and a fault+resume at the widest window.
+fn a8_send_window(scale: &BenchScale) {
+    let wl = scale.big();
+    let total = wl.total_objects(scale.small_file_size);
+    let wire_bound = |tag: &str| {
+        let mut cfg = scale.base_config(tag);
+        cfg.mechanism = Mechanism::Universal;
+        cfg.method = Method::Bit64;
+        cfg.ack_batch = 8;
+        // Tight flush bound: at quick scale the per-file batches never
+        // fill on count, and a wide window must not serialize behind
+        // lazy ack flushes.
+        cfg.ack_flush_us = 2_000;
+        cfg.io_threads = 4;
+        cfg.rma_bytes = 2 * cfg.object_size as usize;
+        cfg.time_scale = 1.0;
+        cfg.net_bandwidth = 4.0e8;
+        cfg.net_latency_us = 5;
+        cfg.ost_bandwidth = f64::INFINITY;
+        cfg.ost_latency_us = 0;
+        cfg
+    };
+    let mut rows = Vec::new();
+    for window in [1u32, 2, 8, 32] {
+        let mut cfg = wire_bound(&format!("a8-{window}"));
+        cfg.send_window = window;
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        assert!(out.completed, "a8 window={window}: {:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        rows.push(vec![
+            format!("{window}"),
+            format!("{}", out.source.send_stalls),
+            format!("{}", out.source.credit_waits),
+            format!("{}", out.ack_batch_effective),
+            format!("{:.3}", out.elapsed.as_secs_f64()),
+        ]);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+
+    // Adaptive-ack row at the widest window: the effective batch is
+    // earned from flush feedback instead of pinned to the cap.
+    let mut cfg = wire_bound("a8-adaptive");
+    cfg.send_window = 32;
+    cfg.ack_adaptive = true;
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "a8 adaptive: {:?}", out.fault);
+    env.verify_sink_complete().unwrap();
+    rows.push(vec![
+        "32+adaptive".into(),
+        format!("{}", out.source.send_stalls),
+        format!("{}", out.source.credit_waits),
+        format!("{}", out.ack_batch_effective),
+        format!("{:.3}", out.elapsed.as_secs_f64()),
+    ]);
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+
+    // Fault at 50% with a full 32-wide window in flight, then resume:
+    // the log-based retransmit bound must hold.
+    let mut cfg = wire_bound("a8f-32");
+    cfg.send_window = 32;
+    let env = SimEnv::new(cfg, &wl);
+    let faulted = env
+        .run(
+            &TransferSpec::fresh(env.files.clone())
+                .with_fault(FaultPlan::at_fraction(0.5, Side::Source)),
+        )
+        .unwrap();
+    assert!(!faulted.completed, "a8 fault did not fire");
+    let logged: u64 = ftlads::ftlog::recover::recover_all(&env.cfg.ft())
+        .unwrap()
+        .values()
+        .map(|s| s.count() as u64)
+        .sum();
+    let resumed = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+    assert!(resumed.completed, "a8 resume: {:?}", resumed.fault);
+    env.verify_sink_complete().unwrap();
+    assert!(
+        resumed.source.objects_sent <= total - logged,
+        "a8: resume re-sent logged objects with a full window in flight"
+    );
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+
+    print_table(
+        &format!("A8: send window ({total} objects, wire-bound, 2 RMA slots, ack_batch 8)"),
+        &["send_window", "slot stalls", "credit waits", "eff ack batch", "time (s)"],
+        &rows,
+    );
+    println!(
+        "claim: windowed issue unpins RMA slots from the wire and removes \
+         the send side's per-object stall; window=1 == PR 2 lockstep"
+    );
 }

@@ -8,9 +8,13 @@
 //!   codec           NEW_BLOCK encode/decode round-trip
 //!   ack-batch       end-to-end wire-ack / logger-write counts per
 //!                   `ack_batch` (the batched BLOCK_SYNC path)
+//!   send-window     source issue-loop RMA-slot stalls per `send_window`
+//!                   on a wire-bound workload (the credit-based
+//!                   NEW_BLOCK pipelining path)
 //!
 //! Plain timing mains (no criterion offline); each reports mean ± 99 % CI
-//! over fixed iteration counts with warmup.
+//! over fixed iteration counts with warmup. With `FTLADS_BENCH_JSON_DIR`
+//! set, the tables are also written as a JSON summary (CI artifact).
 
 
 use ftlads::bench_support::print_table;
@@ -174,12 +178,79 @@ fn bench_ack_batching() {
     );
 }
 
+/// End-to-end send-window pipelining: source issue-loop stalls on the
+/// RMA slot pool per `send_window`, on a workload where the wire (not
+/// the storage) is the bottleneck — a slow modeled link, instant OSTs,
+/// and a 2-slot RMA pool. At `send_window = 1` every slot is pinned
+/// across the ~330 µs wire serialization, so issue attempts pile up on
+/// the dry pool; at `send_window = 8` the slot frees after the pread and
+/// the stalls collapse. Pins the headline claim: ≥ 2× fewer source
+/// issue-loop stalls at `send_window = 8`.
+fn bench_send_window() {
+    let mut rows = Vec::new();
+    let mut stalls_at: Vec<(u32, u64)> = Vec::new();
+    for window in [1u32, 2, 8] {
+        let mut cfg = Config::for_tests(&format!("micro-swin-{window}"));
+        cfg.send_window = window;
+        cfg.io_threads = 4;
+        // 2 RMA slots: slot occupancy is the contended resource.
+        cfg.rma_bytes = 2 * cfg.object_size as usize;
+        // Wire-bound: ~330 µs to serialize one 64 KiB object...
+        cfg.time_scale = 1.0;
+        cfg.net_bandwidth = 2.0e8;
+        cfg.net_latency_us = 5;
+        // ...with free storage on both ends (zero modeled service, so
+        // the slot hold time is pread+digest work only).
+        cfg.ost_bandwidth = f64::INFINITY;
+        cfg.ost_latency_us = 0;
+        cfg.ost_concurrent = 8;
+        let wl = workload::big_workload(6, 16 * cfg.object_size); // 96 objects
+        let env = SimEnv::new(cfg, &wl);
+        let started = std::time::Instant::now();
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        let elapsed = started.elapsed();
+        assert!(out.completed, "send_window={window}: {:?}", out.fault);
+        assert_eq!(out.send_window, window);
+        env.verify_sink_complete().unwrap();
+        stalls_at.push((window, out.source.send_stalls));
+        rows.push(vec![
+            format!("{window}"),
+            format!("{}", out.source.send_stalls),
+            format!("{}", out.source.credit_waits),
+            format!("{:.1}", elapsed.as_secs_f64() * 1e3),
+        ]);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    let s1 = stalls_at.iter().find(|(w, _)| *w == 1).unwrap().1;
+    let s8 = stalls_at.iter().find(|(w, _)| *w == 8).unwrap().1;
+    assert!(
+        s1 >= 16,
+        "lockstep issue on a wire-bound 2-slot pool must stall the issue loop: {s1}"
+    );
+    assert!(
+        s1 >= 2 * s8.max(1),
+        "issue-loop stalls must drop >= 2x at send_window=8: {s8} vs {s1}"
+    );
+    print_table(
+        "send window (96 objects, wire-bound, 2 RMA slots)",
+        &["send_window", "slot stalls", "credit waits", "ms"],
+        &rows,
+    );
+}
+
 fn bench_recovery_parse() {
     let blocks_per_file = 256u32;
     let files = 64usize;
     let mut rows = Vec::new();
     for mech in Mechanism::ALL_FT {
-        for method in [Method::Char, Method::Int, Method::Enc, Method::Binary, Method::Bit8, Method::Bit64] {
+        for method in [
+            Method::Char,
+            Method::Int,
+            Method::Enc,
+            Method::Binary,
+            Method::Bit8,
+            Method::Bit64,
+        ] {
             let dir = tmp_dir(&format!("rec-{}-{}", mech.as_str(), method.as_str()));
             let cfg = FtConfig {
                 mechanism: mech,
@@ -338,5 +409,7 @@ fn main() {
     bench_log_append();
     bench_log_batch();
     bench_ack_batching();
+    bench_send_window();
     bench_recovery_parse();
+    let _ = ftlads::bench_support::write_json_summary("micro_hotpath");
 }

@@ -188,6 +188,8 @@ pub fn run_bbcp(
         rma_stalls: (0, 0),
         source_sched: Default::default(),
         sink_sched: Default::default(),
+        send_window: 1,
+        ack_batch_effective: 1,
     })
 }
 
@@ -201,7 +203,11 @@ fn bbcp_sink(pfs: &dyn Pfs, ep: &dyn Endpoint, ctr: &Counters) {
         };
         match msg {
             Message::Connect { .. } => {
-                let _ = ep.send(Message::ConnectAck { rma_slots: 0, ack_batch: 1 });
+                let _ = ep.send(Message::ConnectAck {
+                    rma_slots: 0,
+                    ack_batch: 1,
+                    send_window: 1,
+                });
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
                 // bbcp resume: attributes identical -> assume completed.
@@ -258,6 +264,7 @@ fn bbcp_source(
         rma_slots: 0,
         resume: false,
         ack_batch: 1,
+        send_window: 1,
     })
     .map_err(|e| anyhow::anyhow!("connect: {e}"))?;
     match ep.recv_timeout(Duration::from_secs(10)) {

@@ -320,12 +320,94 @@ pub fn cleanup(env: &SimEnv) {
 }
 
 // ---------------------------------------------------------------------------
-// table printing
+// table printing + JSON summaries
 // ---------------------------------------------------------------------------
 
+/// One table as recorded for the machine-readable bench summary.
+#[derive(Debug, Clone)]
+struct RecordedTable {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+fn recorded_tables() -> &'static std::sync::Mutex<Vec<RecordedTable>> {
+    static TABLES: std::sync::OnceLock<std::sync::Mutex<Vec<RecordedTable>>> =
+        std::sync::OnceLock::new();
+    TABLES.get_or_init(|| std::sync::Mutex::new(Vec::new()))
+}
+
+/// Write every table printed so far to `<dir>/<bench>.json` — the
+/// artifact the CI `bench-smoke` job uploads. The shape is
+/// `{"bench": ..., "tables": [{"title", "headers", "rows"}]}`.
+pub fn write_json_summary_to(
+    dir: &std::path::Path,
+    bench: &str,
+) -> anyhow::Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let tables = recorded_tables()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone();
+    let json_tables: Vec<Json> = tables
+        .iter()
+        .map(|t| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("title".into(), Json::Str(t.title.clone()));
+            m.insert(
+                "headers".into(),
+                Json::Arr(t.headers.iter().cloned().map(Json::Str).collect()),
+            );
+            m.insert(
+                "rows".into(),
+                Json::Arr(
+                    t.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().cloned().map(Json::Str).collect()))
+                        .collect(),
+                ),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("bench".into(), Json::Str(bench.to_string()));
+    root.insert("tables".into(), Json::Arr(json_tables));
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{bench}.json"));
+    std::fs::write(&path, format!("{}\n", Json::Obj(root)))?;
+    Ok(path)
+}
+
+/// Env-gated summary hook for bench mains: when `FTLADS_BENCH_JSON_DIR`
+/// is set, dump the recorded tables there and report the path on stdout.
+pub fn write_json_summary(bench: &str) -> Option<std::path::PathBuf> {
+    let dir = std::env::var_os("FTLADS_BENCH_JSON_DIR")?;
+    match write_json_summary_to(std::path::Path::new(&dir), bench) {
+        Ok(path) => {
+            println!("\njson summary: {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("bench summary write failed: {e:#}");
+            None
+        }
+    }
+}
+
 /// Print a fixed-width table: `headers` then `rows` (first column left-
-/// aligned, the rest right-aligned) — the shape the paper's figures report.
+/// aligned, the rest right-aligned) — the shape the paper's figures
+/// report. Every printed table is also recorded for
+/// [`write_json_summary`].
 pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    recorded_tables()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .push(RecordedTable {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: rows.to_vec(),
+        });
     println!("\n### {title}");
     let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
     for row in rows {
@@ -386,6 +468,26 @@ mod tests {
             "universal/bit64"
         );
         assert_eq!(Case::all_ft().len(), 18);
+    }
+
+    #[test]
+    fn json_summary_captures_printed_tables() {
+        print_table(
+            "bs-json-test table",
+            &["k", "v"],
+            &[vec!["a".into(), "1".into()]],
+        );
+        let dir = std::env::temp_dir().join(format!("ftlads-bsjson-{}", std::process::id()));
+        let path = write_json_summary_to(&dir, "bs-json-test").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("bs-json-test"));
+        let tables = parsed.get("tables").as_arr().unwrap();
+        assert!(tables.iter().any(|t| {
+            t.get("title").as_str() == Some("bs-json-test table")
+                && t.get("rows").as_arr().is_some_and(|r| !r.is_empty())
+        }));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

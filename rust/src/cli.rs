@@ -140,6 +140,33 @@ mod tests {
     }
 
     #[test]
+    fn send_window_and_ack_adaptive_flags_roundtrip_into_config() {
+        use crate::config::Config;
+        // The way main.rs wires them: --send-window takes a value,
+        // --ack-adaptive is a bare flag, and both exist as --set keys.
+        let a = Args::parse(
+            &argv(&["transfer", "--send-window", "8", "--ack-adaptive", "--ack-batch=16"]),
+            &["ack-adaptive"],
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.send_window = a.get_parse("send-window", 1u32).unwrap();
+        cfg.ack_batch = a.get_parse("ack-batch", 1u32).unwrap();
+        cfg.ack_adaptive = a.flag("ack-adaptive");
+        assert_eq!(cfg.send_window, 8);
+        assert!(cfg.ack_adaptive);
+        assert!(cfg.validate().is_ok());
+
+        let mut cfg = Config::default();
+        cfg.apply_kv("send_window", "32").unwrap();
+        cfg.apply_kv("ack_adaptive", "true").unwrap();
+        cfg.apply_kv("ack_batch", "8").unwrap();
+        assert_eq!(cfg.send_window, 32);
+        assert!(cfg.ack_adaptive);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
     fn scheduler_typo_error_lists_valid_policies() {
         use crate::sched::SchedPolicy;
         let a = Args::parse(&argv(&["transfer", "--scheduler", "speedy"]), &[]).unwrap();

@@ -50,6 +50,18 @@ pub struct Config {
     /// Straggler bound for a partially-filled ack batch: the sink flushes
     /// a batch once its oldest pending ack is this many microseconds old.
     pub ack_flush_us: u64,
+    /// Adaptive ack coalescing: when true, the sink's applied batch size
+    /// floats between 1 and the negotiated `ack_batch` cap — growing on
+    /// count-driven flushes, shrinking when the `ack_flush_us` window
+    /// keeps firing. False (default) pins the batch to the negotiated
+    /// value, reproducing the fixed-batch behavior exactly.
+    pub ack_adaptive: bool,
+    /// Credit-based NEW_BLOCK send window: how many un-acknowledged
+    /// objects the source keeps in flight per connection. 1 (default) is
+    /// the lockstep issue-and-wait path, reproduced exactly; negotiated
+    /// to min(src, sink) at CONNECT, and legacy peers without the field
+    /// read as 1.
+    pub send_window: u32,
     /// Integrity verification backend.
     pub integrity: IntegrityMode,
     /// OST dequeue policy for the source's IO threads (§2.1; see
@@ -90,6 +102,8 @@ impl Default for Config {
             logging: LoggingMode::Sync,
             ack_batch: 1,
             ack_flush_us: 1000,
+            ack_adaptive: false,
+            send_window: 1,
             integrity: IntegrityMode::Native,
             scheduler: SchedPolicy::CongestionAware,
             sink_scheduler: None,
@@ -187,6 +201,8 @@ impl Config {
             "logging" => self.logging = LoggingMode::parse(value)?,
             "ack_batch" => self.ack_batch = value.parse()?,
             "ack_flush_us" => self.ack_flush_us = value.parse()?,
+            "ack_adaptive" => self.ack_adaptive = parse_bool(value)?,
+            "send_window" => self.send_window = value.parse()?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
             "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
             "sink_scheduler" => {
@@ -239,10 +255,27 @@ impl Config {
             "ack_batch must be in 1..=65536 (wire sanity cap)"
         );
         anyhow::ensure!(
+            (1..=1u32 << 16).contains(&self.send_window),
+            "send_window must be in 1..=65536 (wire sanity cap)"
+        );
+        anyhow::ensure!(
+            !self.ack_adaptive || self.ack_batch > 1,
+            "ack_adaptive needs an ack_batch cap > 1 to adapt within"
+        );
+        anyhow::ensure!(
             (1..=self.ost_count).contains(&self.stripe_count),
             "stripe_count must be in 1..=ost_count"
         );
         Ok(())
+    }
+}
+
+/// Parse a boolean config value ("true"/"false", "1"/"0", "on"/"off").
+pub fn parse_bool(s: &str) -> Result<bool> {
+    match s.trim() {
+        "true" | "1" | "on" | "yes" => Ok(true),
+        "false" | "0" | "off" | "no" => Ok(false),
+        other => anyhow::bail!("bad boolean '{other}' (true|false|1|0|on|off|yes|no)"),
     }
 }
 
@@ -325,6 +358,52 @@ mod tests {
         assert!(c.validate().is_ok());
         let mut c = Config::default();
         assert!(c.apply_kv("ack_batch", "lots").is_err());
+    }
+
+    #[test]
+    fn send_window_kv_defaults_and_validation() {
+        let mut c = Config::default();
+        // Default is the lockstep issue path — the PR 2 equivalence pin.
+        assert_eq!(c.send_window, 1);
+        assert!(!c.ack_adaptive);
+        c.apply_kv("send_window", "8").unwrap();
+        assert_eq!(c.send_window, 8);
+        assert!(c.validate().is_ok());
+        c.send_window = 0;
+        assert!(c.validate().is_err(), "send_window 0 rejected");
+        c.send_window = (1 << 16) + 1;
+        assert!(c.validate().is_err(), "send_window above the wire cap rejected");
+        c.send_window = 1 << 16;
+        assert!(c.validate().is_ok());
+        let mut c = Config::default();
+        assert!(c.apply_kv("send_window", "lots").is_err());
+    }
+
+    #[test]
+    fn ack_adaptive_kv_and_validation() {
+        let mut c = Config::default();
+        c.apply_kv("ack_adaptive", "true").unwrap();
+        assert!(c.ack_adaptive);
+        // Adaptation needs headroom: a cap of 1 leaves nothing to adapt.
+        assert!(c.validate().is_err());
+        c.apply_kv("ack_batch", "16").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply_kv("ack_adaptive", "off").unwrap();
+        assert!(!c.ack_adaptive);
+        c.apply_kv("ack_adaptive", "1").unwrap();
+        assert!(c.ack_adaptive);
+        assert!(c.apply_kv("ack_adaptive", "maybe").is_err());
+    }
+
+    #[test]
+    fn parse_bool_spellings() {
+        for t in ["true", "1", "on", "yes"] {
+            assert!(parse_bool(t).unwrap(), "{t}");
+        }
+        for f in ["false", "0", "off", "no"] {
+            assert!(!parse_bool(f).unwrap(), "{f}");
+        }
+        assert!(parse_bool("2").is_err());
     }
 
     #[test]

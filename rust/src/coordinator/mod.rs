@@ -79,6 +79,13 @@ pub struct TransferOutcome {
     pub source_sched: SchedSnapshot,
     /// Sink write-queue scheduling counters (`cfg.sink_scheduler`).
     pub sink_sched: SchedSnapshot,
+    /// The NEW_BLOCK send window negotiated at CONNECT (1 = lockstep
+    /// issue, the seed/PR 2 path).
+    pub send_window: u32,
+    /// The sink's effective ack batch at session end — equal to the
+    /// negotiated `ack_batch` in fixed mode, wherever the grow/shrink
+    /// feedback settled in `ack_adaptive` mode.
+    pub ack_batch_effective: u32,
 }
 
 impl TransferOutcome {
@@ -153,6 +160,8 @@ pub fn run_transfer(
         rma_stalls: sink_report.rma_stalls,
         source_sched: source_report.sched,
         sink_sched: sink_report.sched,
+        send_window: source_report.send_window,
+        ack_batch_effective: sink_report.ack_batch_effective,
     })
 }
 

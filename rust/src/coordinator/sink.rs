@@ -17,6 +17,9 @@
 //!   BLOCK_SYNC_BATCH, flushing on a full batch, on a failed write
 //!   (prompt retransmission), on FILE_CLOSE, or when a dedicated flusher
 //!   thread notices the batch's oldest entry aged past `ack_flush_us`.
+//!   With `ack_adaptive` on, the applied batch size floats between 1 and
+//!   the negotiated cap: count-driven flushes grow it, timer-driven
+//!   flushes shrink it (see `AckCoalescer`).
 //! - **verifier** (integrity = pjrt): IO threads hand written objects
 //!   over; it batches them into the compiled Pallas digest artifact's
 //!   fixed (B, W) shape, executes it via the PJRT service, and emits the
@@ -65,14 +68,65 @@ struct PendingAcks {
 /// The ack coalescer's shared state. `batch <= 1` bypasses coalescing
 /// entirely, reproducing the seed's one-BLOCK_SYNC-per-object wire
 /// behavior exactly.
+///
+/// With `adaptive` on, `batch` is only the *cap*: the effective batch
+/// (`eff`) starts at 1, doubles toward the cap every time a batch fills
+/// on count (the wire is keeping up, coalesce harder), and halves every
+/// time the `ack_flush_us` straggler window fires on a partial batch
+/// (coalescing is adding latency without amortizing anything, back off).
 struct AckCoalescer {
-    /// Effective batch size: the sink's configured `ack_batch`,
-    /// negotiated down to the peer's CONNECT advertisement.
+    /// Batch-size cap: the sink's configured `ack_batch`, negotiated
+    /// down to the peer's CONNECT advertisement.
     batch: AtomicU32,
+    /// Effective batch size actually applied per ack (== `batch` when
+    /// adaptation is off).
+    eff: AtomicU32,
+    /// Grow/shrink `eff` from flush feedback (`Config::ack_adaptive`).
+    adaptive: bool,
     /// Straggler bound: flush a partial batch once its oldest entry is
     /// this old.
     window: Duration,
     pending: Mutex<BTreeMap<u32, PendingAcks>>,
+}
+
+impl AckCoalescer {
+    /// A batch filled on count: the coalescer can afford a bigger one.
+    /// Atomic read-modify-write: IO threads (grow) and the flusher
+    /// (shrink) race on `eff`, and a lost update would silently erase a
+    /// feedback step.
+    fn feedback_grow(&self, counters: &Counters) {
+        if !self.adaptive {
+            return;
+        }
+        let cap = self.batch.load(Ordering::SeqCst);
+        let grown = self.eff.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |eff| {
+            if eff < cap {
+                Some(eff.saturating_mul(2).min(cap))
+            } else {
+                None
+            }
+        });
+        if grown.is_ok() {
+            counters.ack_batch_grows.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The flush window fired on a partial batch: back off.
+    fn feedback_shrink(&self, counters: &Counters) {
+        if !self.adaptive {
+            return;
+        }
+        let shrunk = self.eff.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |eff| {
+            if eff > 1 {
+                Some((eff / 2).max(1))
+            } else {
+                None
+            }
+        });
+        if shrunk.is_ok() {
+            counters.ack_batch_shrinks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 struct Shared {
@@ -84,6 +138,9 @@ struct Shared {
     sched: Box<dyn Scheduler>,
     sched_stats: SchedStats,
     acks: AckCoalescer,
+    /// The sink's configured NEW_BLOCK send-window cap; the CONNECT
+    /// handshake replies with `min(this, peer's advertisement)`.
+    send_window: AtomicU32,
     rma: RmaPool,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SnkFile>>,
@@ -113,18 +170,25 @@ impl Shared {
         self.aborted.load(Ordering::SeqCst)
     }
 
-    /// Queue one object acknowledgement. With `ack_batch <= 1` this sends
-    /// the seed's single BLOCK_SYNC immediately; otherwise the ack joins
-    /// the file's pending batch, which flushes when full or when the
-    /// write failed (so retransmission is never delayed by coalescing).
+    /// Queue one object acknowledgement. With an effective batch `<= 1`
+    /// this sends the seed's single BLOCK_SYNC immediately; otherwise the
+    /// ack joins the file's pending batch, which flushes when full or
+    /// when the write failed (so retransmission is never delayed by
+    /// coalescing). Count-driven flushes feed the adaptive coalescer's
+    /// grow signal.
     fn push_ack(&self, file_idx: u32, block_idx: u32, ok: bool) {
-        let batch = self.acks.batch.load(Ordering::SeqCst) as usize;
+        let batch = self.acks.eff.load(Ordering::SeqCst) as usize;
         if batch <= 1 {
             self.counters.ack_messages.fetch_add(1, Ordering::Relaxed);
             let _ = self.ep.send(Message::BlockSync { file_idx, block_idx, ok });
+            if ok {
+                // An adaptive coalescer ramps off the floor from here: a
+                // one-ack "batch" trivially filled on count.
+                self.acks.feedback_grow(&self.counters);
+            }
             return;
         }
-        let full = {
+        let (full, filled) = {
             let mut pending = self.acks.pending.lock().unwrap_or_else(|e| e.into_inner());
             let entry = pending.entry(file_idx).or_insert_with(|| PendingAcks {
                 oldest: Instant::now(),
@@ -133,12 +197,16 @@ impl Shared {
                 blocks: Vec::with_capacity(batch.min(1024)),
             });
             entry.blocks.push((block_idx, ok));
-            if !ok || entry.blocks.len() >= batch {
-                pending.remove(&file_idx)
+            let filled = entry.blocks.len() >= batch;
+            if !ok || filled {
+                (pending.remove(&file_idx), filled && ok)
             } else {
-                None
+                (None, false)
             }
         };
+        if filled {
+            self.acks.feedback_grow(&self.counters);
+        }
         if let Some(p) = full {
             self.send_ack_batch(file_idx, p.blocks);
         }
@@ -166,7 +234,10 @@ impl Shared {
     }
 
     /// Flush every batch whose oldest entry aged past the flush window —
-    /// or everything when `all` (shutdown path).
+    /// or everything when `all` (shutdown path). A timer-driven flush of
+    /// a partial batch is the adaptive coalescer's shrink signal (one
+    /// step per sweep, not per file, so a multi-file burst does not
+    /// collapse the window to 1 in one tick).
     fn flush_expired_acks(&self, all: bool) {
         let expired: Vec<(u32, PendingAcks)> = {
             let mut pending = self.acks.pending.lock().unwrap_or_else(|e| e.into_inner());
@@ -182,6 +253,9 @@ impl Shared {
                 })
                 .collect()
         };
+        if !all && !expired.is_empty() {
+            self.acks.feedback_shrink(&self.counters);
+        }
         for (file_idx, p) in expired {
             self.send_ack_batch(file_idx, p.blocks);
         }
@@ -194,6 +268,12 @@ pub struct SinkReport {
     pub rma_stalls: (u64, u64),
     /// Write-queue scheduling counters (picks, pick latency, service).
     pub sched: SchedSnapshot,
+    /// The effective ack batch at session end: the negotiated cap in
+    /// fixed mode, wherever the grow/shrink feedback left it in adaptive
+    /// mode.
+    pub ack_batch_effective: u32,
+    /// The NEW_BLOCK send window granted to the peer at CONNECT.
+    pub send_window: u32,
 }
 
 /// Handle to the running sink node.
@@ -217,9 +297,14 @@ pub fn spawn_sink(
         sched_stats: SchedStats::default(),
         acks: AckCoalescer {
             batch: AtomicU32::new(cfg.ack_batch.max(1)),
+            // Adaptive coalescing starts at the seed's per-object floor
+            // and earns its way up; fixed mode pins eff to the cap.
+            eff: AtomicU32::new(if cfg.ack_adaptive { 1 } else { cfg.ack_batch.max(1) }),
+            adaptive: cfg.ack_adaptive,
             window: Duration::from_micros(cfg.ack_flush_us.max(1)),
             pending: Mutex::new(BTreeMap::new()),
         },
+        send_window: AtomicU32::new(cfg.send_window.max(1)),
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
@@ -313,6 +398,8 @@ impl SinkNode {
             counters: self.shared.counters.snapshot(),
             rma_stalls: self.shared.rma.stall_stats(),
             sched: self.shared.sched_stats.snapshot(),
+            ack_batch_effective: self.shared.acks.eff.load(Ordering::SeqCst),
+            send_window: self.shared.send_window.load(Ordering::SeqCst),
         }
     }
 }
@@ -337,7 +424,7 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
             }
         };
         match msg {
-            Message::Connect { max_object_size, resume, ack_batch, .. } => {
+            Message::Connect { max_object_size, resume, ack_batch, send_window, .. } => {
                 shared.resume.store(resume, Ordering::SeqCst);
                 if max_object_size as usize > shared.rma.slot_bytes() {
                     shared.abort_with(format!(
@@ -352,9 +439,22 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
                 let ours = shared.acks.batch.load(Ordering::SeqCst);
                 let negotiated = ours.min(ack_batch.max(1));
                 shared.acks.batch.store(negotiated, Ordering::SeqCst);
+                // The effective batch can never exceed the new cap; in
+                // fixed mode it IS the cap.
+                let eff = shared.acks.eff.load(Ordering::SeqCst);
+                shared.acks.eff.store(
+                    if shared.acks.adaptive { eff.min(negotiated).max(1) } else { negotiated },
+                    Ordering::SeqCst,
+                );
+                // Grant the peer a NEW_BLOCK send window: its ask, capped
+                // by our configured bound (1 for legacy lockstep peers).
+                let win_ours = shared.send_window.load(Ordering::SeqCst);
+                let win = win_ours.min(send_window.max(1));
+                shared.send_window.store(win, Ordering::SeqCst);
                 let _ = shared.ep.send(Message::ConnectAck {
                     rma_slots: shared.rma.slots() as u32,
                     ack_batch: negotiated,
+                    send_window: win,
                 });
             }
             Message::NewFile { file_idx, name, size, start_ost } => {

@@ -8,7 +8,13 @@
 //!   policy picks (`cfg.scheduler`, default: least-congested — see
 //!   [`crate::sched`]), reserve an RMA slot, `pread` the object from the
 //!   PFS (charging the OST model), digest it, and hand it to the wire as
-//!   NEW_BLOCK.
+//!   NEW_BLOCK. With a negotiated `send_window > 1` the issue loop is
+//!   *credit-based* (`SendWindow`): the slot is released before the
+//!   wire serialization and up to `send_window` un-acknowledged
+//!   NEW_BLOCKs ride per connection, credits replenished as
+//!   BLOCK_SYNC/BLOCK_SYNC_BATCH acks arrive; `send_window = 1` (the
+//!   default, and the legacy/PR 2 negotiation fallback) keeps the exact
+//!   lockstep issue-and-wait path around the RMA slot pool.
 //! - **comm** owns the receive side: routes FILE_ID / FILE_CLOSE_ACK to
 //!   the master and handles BLOCK_SYNC / BLOCK_SYNC_BATCH — *synchronous
 //!   logging* in the comm thread's context (§5.1), group-committed when
@@ -18,8 +24,8 @@
 //!   write.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -64,6 +70,101 @@ enum MasterEvent {
     Abort,
 }
 
+/// Credit-based NEW_BLOCK send window (one per connection).
+///
+/// Armed once after the CONNECT handshake with the negotiated window.
+/// `max <= 1` disables the gate entirely — the legacy lockstep path is
+/// taken and no credit accounting happens. Otherwise each NEW_BLOCK
+/// consumes one credit before it goes on the wire and the comm thread
+/// returns credits as BLOCK_SYNC / BLOCK_SYNC_BATCH acknowledgements
+/// arrive (capped at `max`, so duplicate acks after a resume can never
+/// overfill the window).
+struct SendWindow {
+    /// Negotiated window size; read once by the IO threads after arming.
+    max: AtomicU32,
+    credits: Mutex<u32>,
+    available: Condvar,
+}
+
+impl SendWindow {
+    fn new() -> SendWindow {
+        SendWindow {
+            max: AtomicU32::new(1),
+            credits: Mutex::new(1),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Set the negotiated window and grant the full credit line. Called
+    /// between the handshake and the IO-thread spawn, so every issue-loop
+    /// thread observes the final value.
+    fn arm(&self, window: u32) {
+        let window = window.max(1);
+        self.max.store(window, Ordering::SeqCst);
+        let mut credits = self.credits.lock().unwrap_or_else(|e| e.into_inner());
+        *credits = window;
+        drop(credits);
+        self.available.notify_all();
+    }
+
+    fn window(&self) -> u32 {
+        self.max.load(Ordering::SeqCst)
+    }
+
+    /// Windowing is a no-op at `send_window = 1`: the issue loop runs the
+    /// exact lockstep path and never touches the credit state.
+    fn enabled(&self) -> bool {
+        self.window() > 1
+    }
+
+    /// Take one credit without blocking; false when the window is full of
+    /// un-acknowledged blocks.
+    fn try_acquire(&self) -> bool {
+        let mut credits = self.credits.lock().unwrap_or_else(|e| e.into_inner());
+        if *credits > 0 {
+            *credits -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Wait up to `timeout` for a credit (the stall path; callers loop
+    /// with a short tick so aborts interrupt the wait).
+    fn acquire_timeout(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut credits = self.credits.lock().unwrap_or_else(|e| e.into_inner());
+        while *credits == 0 {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, res) = self
+                .available
+                .wait_timeout(credits, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            credits = guard;
+            if res.timed_out() && *credits == 0 {
+                return false;
+            }
+        }
+        *credits -= 1;
+        true
+    }
+
+    /// Return `n` credits (acks arrived), saturating at the window size.
+    fn release(&self, n: u32) {
+        if n == 0 || !self.enabled() {
+            return;
+        }
+        let max = self.window();
+        let mut credits = self.credits.lock().unwrap_or_else(|e| e.into_inner());
+        *credits = credits.saturating_add(n).min(max);
+        drop(credits);
+        self.available.notify_all();
+    }
+}
+
 struct Shared {
     pfs: Arc<dyn Pfs>,
     ep: Arc<dyn Endpoint>,
@@ -72,6 +173,8 @@ struct Shared {
     sched: Box<dyn Scheduler>,
     sched_stats: SchedStats,
     rma: RmaPool,
+    /// Credit gate for in-flight NEW_BLOCKs (disabled at window 1).
+    window: SendWindow,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SrcFile>>,
     logger: Mutex<Box<dyn FtLogger>>,
@@ -108,6 +211,9 @@ pub struct SourceReport {
     pub files_done: u64,
     /// Read-queue scheduling counters (picks, pick latency, service).
     pub sched: SchedSnapshot,
+    /// The NEW_BLOCK send window actually negotiated at CONNECT (1 = the
+    /// lockstep issue path; also the legacy-peer fallback).
+    pub send_window: u32,
 }
 
 /// Run the source node to completion/fault. Blocks the calling thread
@@ -127,6 +233,7 @@ pub fn run_source(
         sched: cfg.scheduler.build(cfg.ost_count),
         sched_stats: SchedStats::default(),
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
+        window: SendWindow::new(),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
         logger: Mutex::new(logger),
@@ -144,14 +251,21 @@ pub fn run_source(
         max_object_size: cfg.object_size,
         rma_slots,
         resume: spec.resume,
-        // Advertise the largest ack batch we are willing to consume; the
-        // sink answers with the negotiated (min) value it will use.
+        // Advertise the largest ack batch we are willing to consume and
+        // the NEW_BLOCK send window we would like to run; the sink
+        // answers with the negotiated (min) values it will use.
         ack_batch: cfg.ack_batch.max(1),
+        send_window: cfg.send_window.max(1),
     }) {
         return Ok(report_with_fault(&shared, format!("connect: {e}"), 0));
     }
     match shared.ep.recv_timeout(Duration::from_secs(10)) {
-        Ok(Message::ConnectAck { .. }) => {}
+        Ok(Message::ConnectAck { send_window, .. }) => {
+            // Honor the sink's negotiated window, but never exceed our own
+            // configured advertisement (defensive against a bad peer). A
+            // legacy field-less CONNECT_ACK decodes as 1 = lockstep.
+            shared.window.arm(send_window.max(1).min(cfg.send_window.max(1)));
+        }
         Ok(m) => anyhow::bail!("handshake: unexpected {}", m.type_name()),
         Err(e) => return Ok(report_with_fault(&shared, format!("connect ack: {e}"), 0)),
     }
@@ -197,6 +311,7 @@ pub fn run_source(
         log_space,
         files_done,
         sched: shared.sched_stats.snapshot(),
+        send_window: shared.window.window(),
     })
 }
 
@@ -208,6 +323,7 @@ fn report_with_fault(shared: &Shared, msg: String, files_done: u64) -> SourceRep
         log_space: shared.logger.lock().unwrap_or_else(|e| e.into_inner()).space(),
         files_done,
         sched: shared.sched_stats.snapshot(),
+        send_window: shared.window.window(),
     }
 }
 
@@ -403,8 +519,24 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
 
 /// IO thread: policy-picked OST dequeue → RMA reserve → pread → digest
 /// → NEW_BLOCK.
+///
+/// Two issue disciplines, selected by the negotiated send window:
+///
+/// - **lockstep** (`send_window = 1`, the PR 2/legacy path, reproduced
+///   exactly): the RMA slot is held across the wire serialization and
+///   released only after the send returns.
+/// - **windowed** (`send_window > 1`): the payload is copied into the
+///   NEW_BLOCK before the send, so the slot is released as soon as the
+///   read+digest finish and the next pread can stage while this block
+///   serializes; the send itself is gated on a [`SendWindow`] credit,
+///   bounding un-acknowledged blocks in flight per connection.
+///
+/// A failed *first* slot reservation counts as one issue-loop stall in
+/// `Counters::send_stalls`; a failed first credit grab counts in
+/// `Counters::credit_waits` (back-pressure, not slot starvation).
 fn io_thread(shared: &Arc<Shared>) {
     let osts = shared.pfs.ost_model();
+    let windowed = shared.window.enabled();
     while let Some((ost, req)) =
         shared
             .queues
@@ -414,18 +546,26 @@ fn io_thread(shared: &Arc<Shared>) {
             break;
         }
         // Reserve an RMA slot (bounded buffer registration), abort-aware.
-        let mut slot = loop {
-            match shared.rma.reserve_timeout(Duration::from_millis(50)) {
-                Some(s) => break Some(s),
-                None if shared.is_aborted() || shared.done.load(Ordering::SeqCst) => {
-                    break None
+        let mut slot = match shared.rma.try_reserve() {
+            Some(s) => Some(s),
+            None => {
+                shared.counters.send_stalls.fetch_add(1, Ordering::Relaxed);
+                loop {
+                    match shared.rma.reserve_timeout(Duration::from_millis(50)) {
+                        Some(s) => break Some(s),
+                        None if shared.is_aborted()
+                            || shared.done.load(Ordering::SeqCst) =>
+                        {
+                            break None
+                        }
+                        None => continue,
+                    }
                 }
-                None => continue,
             }
         };
-        let Some(slot) = slot.as_mut() else { break };
+        let Some(slot_ref) = slot.as_mut() else { break };
 
-        let buf = slot.buf();
+        let buf = slot_ref.buf();
         buf.resize(req.len as usize, 0);
         let io_started = std::time::Instant::now();
         match shared.pfs.read_at(req.fid, req.offset, buf) {
@@ -454,7 +594,8 @@ fn io_thread(shared: &Arc<Shared>) {
             // Send-side digests are always computed natively — they must
             // exist *before* the object leaves the node; the sink side is
             // where the batched PJRT verify runs (see sink::verifier).
-            _ => integrity::digest_bytes_padded(slot.data(), shared.padded_words).as_u64(),
+            _ => integrity::digest_bytes_padded(slot_ref.data(), shared.padded_words)
+                .as_u64(),
         };
 
         let msg = Message::NewBlock {
@@ -462,8 +603,27 @@ fn io_thread(shared: &Arc<Shared>) {
             block_idx: req.block_idx,
             offset: req.offset,
             digest,
-            data: slot.data().to_vec(),
+            data: slot_ref.data().to_vec(),
         };
+        if windowed {
+            // Pipelined issue: the payload is already copied out, so free
+            // the RMA slot for the next pread before this block pays the
+            // wire serialization, and gate the send on a window credit.
+            drop(slot.take());
+            if !shared.window.try_acquire() {
+                shared.counters.credit_waits.fetch_add(1, Ordering::Relaxed);
+                let mut granted = false;
+                while !shared.is_aborted() && !shared.done.load(Ordering::SeqCst) {
+                    if shared.window.acquire_timeout(Duration::from_millis(50)) {
+                        granted = true;
+                        break;
+                    }
+                }
+                if !granted {
+                    break;
+                }
+            }
+        }
         match shared.ep.send(msg) {
             Ok(()) => {
                 shared.counters.objects_sent.fetch_add(1, Ordering::Relaxed);
@@ -481,7 +641,8 @@ fn io_thread(shared: &Arc<Shared>) {
                 break;
             }
         }
-        // Slot drops here -> released for the next read.
+        // Lockstep path: the slot drops here -> released for the next
+        // read (the windowed path already released it pre-send).
     }
 }
 
@@ -513,9 +674,14 @@ fn comm_thread(shared: &Arc<Shared>, master_tx: mpsc::Sender<MasterEvent>) {
                 let _ = master_tx.send(MasterEvent::FileId { file_idx, skip });
             }
             Message::BlockSync { file_idx, block_idx, ok } => {
+                // Every acknowledged block returns one send credit —
+                // failed writes too: the object left the window and its
+                // retransmit will take a fresh credit.
+                shared.window.release(1);
                 handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
             }
             Message::BlockSyncBatch { file_idx, blocks } => {
+                shared.window.release(blocks.len() as u32);
                 handle_block_syncs(shared, file_idx, &blocks);
             }
             Message::FileCloseAck { file_idx } => {
@@ -541,12 +707,26 @@ fn comm_thread(shared: &Arc<Shared>, master_tx: mpsc::Sender<MasterEvent>) {
 fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)]) {
     let mut resched: Vec<(OstId, BlockReq)> = Vec::new();
     let mut log_err: Option<String> = None;
+    let mut proto_err: Option<String> = None;
     let mut close = false;
     {
         let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
         let Some(f) = files.get_mut(&file_idx) else { return };
         let mut fresh: Vec<u32> = Vec::with_capacity(acks.len());
         for &(block_idx, ok) in acks {
+            if block_idx >= f.total_blocks {
+                // Never trust wire-supplied indices: a correct sink can
+                // only ack blocks we sent, and an out-of-range index
+                // would underflow the `f.size - offset` length math on
+                // the reschedule path below. Treat it as a severed/
+                // corrupt connection instead.
+                proto_err = Some(format!(
+                    "protocol violation: ack for out-of-range block {block_idx} \
+                     of file {file_idx} ({} blocks)",
+                    f.total_blocks
+                ));
+                break;
+            }
             if !ok {
                 // Sink write/verify failed: reschedule the object (§3.2 —
                 // without this, the corruption would go unnoticed).
@@ -572,7 +752,7 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
 
         // Synchronous logging (§5.1): log in the comm thread's context,
         // one group commit for the whole message.
-        if !fresh.is_empty() {
+        if proto_err.is_none() && !fresh.is_empty() {
             if let Some(key) = f.log_key {
                 let mut logger = shared.logger.lock().unwrap_or_else(|e| e.into_inner());
                 match logger.log_blocks(key, &fresh) {
@@ -588,7 +768,7 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
             }
         }
 
-        if log_err.is_none() && f.synced.is_complete() && !f.close_sent {
+        if proto_err.is_none() && log_err.is_none() && f.synced.is_complete() && !f.close_sent {
             f.close_sent = true;
             // §5.2.1: all objects synced -> delete the file's log entry
             // and tell the sink to commit.
@@ -598,6 +778,10 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
             }
             close = true;
         }
+    }
+    if let Some(e) = proto_err {
+        shared.abort_with(e);
+        return;
     }
     if let Some(e) = log_err {
         shared.abort_with(format!("FT logging failed: {e}"));

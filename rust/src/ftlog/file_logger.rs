@@ -52,7 +52,12 @@ impl FileLogger {
     pub fn new(cfg: &FtConfig) -> Result<FileLogger> {
         std::fs::create_dir_all(&cfg.dir)
             .with_context(|| format!("creating FT log dir {}", cfg.dir.display()))?;
-        Ok(FileLogger { dir: cfg.dir.clone(), method: cfg.method, files: Vec::new(), stats: SpaceStats::default() })
+        Ok(FileLogger {
+            dir: cfg.dir.clone(),
+            method: cfg.method,
+            files: Vec::new(),
+            stats: SpaceStats::default(),
+        })
     }
 
     fn charge_write(&mut self, bytes: u64) {

@@ -9,7 +9,7 @@
 //!
 //! Two interchangeable backends:
 //! - [`native`]: pure-rust, bit-identical to `ref.py` (always available).
-//! - [`PjrtVerifier`]: batches objects and runs the AOT-compiled Pallas
+//! - [`PjrtEngine`]: batches objects and runs the AOT-compiled Pallas
 //!   digest artifact via PJRT (the L1/L2 path; one executable per variant,
 //!   compiled once at startup).
 //!

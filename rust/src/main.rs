@@ -35,7 +35,7 @@ use ftlads::sched::SchedPolicy;
 use ftlads::util::{fmt_bytes, fmt_duration};
 use ftlads::workload::{self, Workload};
 
-const FLAGS: [&str; 3] = ["resume", "verbose", "json"];
+const FLAGS: [&str; 4] = ["resume", "verbose", "json", "ack-adaptive"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -82,6 +82,11 @@ fn print_usage() {
                                                          wire msg / logger write (1 =\n\
                                                          paper's per-object path)\n\
            --ack-flush-us USEC                           partial-batch flush window\n\
+           --ack-adaptive                                let the sink float the\n\
+                                                         applied batch in 1..=ack_batch\n\
+           --send-window N                               un-acked NEW_BLOCKs kept in\n\
+                                                         flight per connection (1 =\n\
+                                                         lockstep issue-and-wait)\n\
            --workload big|small|mixed  --files N  --file-size BYTES\n\
            --fault FRAC [--fault-side source|sink]       inject fault at FRAC\n\
            --resume                                      resume per FT logs\n\
@@ -133,6 +138,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(v) = args.get("ack-flush-us") {
         cfg.ack_flush_us = v.parse().context("--ack-flush-us")?;
+    }
+    if args.flag("ack-adaptive") {
+        cfg.ack_adaptive = true;
+    }
+    if let Some(v) = args.get("send-window") {
+        cfg.send_window = v.parse().context("--send-window")?;
     }
     if let Some(v) = args.get("object-size") {
         cfg.object_size = parse_bytes(v)?;
@@ -234,6 +245,13 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         );
         m.insert("ack_messages".into(), Json::Num(out.sink.ack_messages as f64));
         m.insert("log_writes".into(), Json::Num(out.source.log_writes as f64));
+        m.insert("send_window".into(), Json::Num(out.send_window as f64));
+        m.insert("send_stalls".into(), Json::Num(out.source.send_stalls as f64));
+        m.insert("credit_waits".into(), Json::Num(out.source.credit_waits as f64));
+        m.insert(
+            "ack_batch_effective".into(),
+            Json::Num(out.ack_batch_effective as f64),
+        );
         m.insert(
             "sched_picks_source".into(),
             Json::Num(out.source_sched.picks as f64),
@@ -290,6 +308,16 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
     println!(
         "  ack path         : {} wire acks  {} logger writes (batched BLOCK_SYNC)",
         out.sink.ack_messages, out.source.log_writes
+    );
+    println!(
+        "  send path        : window {}  {} slot stalls  {} credit waits  \
+         eff ack batch {} ({}+ {}-)",
+        out.send_window,
+        out.source.send_stalls,
+        out.source.credit_waits,
+        out.ack_batch_effective,
+        out.sink.ack_batch_grows,
+        out.sink.ack_batch_shrinks
     );
     println!(
         "  sched (source)   : {} picks ({} fallback)  avg pick {:.0} ns  avg service {:.1} µs",

@@ -29,6 +29,21 @@ pub struct Counters {
     /// FT-logger write invocations (source side): one per `log_block` at
     /// `ack_batch = 1`, one group commit per ack batch otherwise.
     pub log_writes: AtomicU64,
+    /// Source issue-loop stalls: times an IO thread found the RMA slot
+    /// pool dry and had to wait before it could stage the next pread. On
+    /// the lockstep path slots are held across the wire serialization,
+    /// so this is the send side's fixed-overhead bottleneck; the windowed
+    /// path releases the slot pre-send and mostly eliminates these.
+    pub send_stalls: AtomicU64,
+    /// Times an IO thread had to wait for a send credit (`send_window`
+    /// full of un-acked blocks) — intentional back-pressure, counted
+    /// separately from `send_stalls`; always 0 on the lockstep path.
+    pub credit_waits: AtomicU64,
+    /// Adaptive ack coalescing (sink side): effective-batch growth steps
+    /// (a batch filled on count) and shrink steps (the flush window
+    /// fired on a partial batch).
+    pub ack_batch_grows: AtomicU64,
+    pub ack_batch_shrinks: AtomicU64,
 }
 
 impl Counters {
@@ -46,6 +61,10 @@ impl Counters {
             log_bytes: self.log_bytes.load(Ordering::Relaxed),
             ack_messages: self.ack_messages.load(Ordering::Relaxed),
             log_writes: self.log_writes.load(Ordering::Relaxed),
+            send_stalls: self.send_stalls.load(Ordering::Relaxed),
+            credit_waits: self.credit_waits.load(Ordering::Relaxed),
+            ack_batch_grows: self.ack_batch_grows.load(Ordering::Relaxed),
+            ack_batch_shrinks: self.ack_batch_shrinks.load(Ordering::Relaxed),
         }
     }
 }
@@ -64,6 +83,10 @@ pub struct CounterSnapshot {
     pub log_bytes: u64,
     pub ack_messages: u64,
     pub log_writes: u64,
+    pub send_stalls: u64,
+    pub credit_waits: u64,
+    pub ack_batch_grows: u64,
+    pub ack_batch_shrinks: u64,
 }
 
 /// One `/proc/self` sample.

@@ -143,11 +143,13 @@ mod tests {
             rma_slots: 1,
             resume: false,
             ack_batch: 1,
+            send_window: 1,
         })
         .unwrap();
         let m = sink.recv().unwrap();
         assert_eq!(m.type_name(), "CONNECT");
-        sink.send(Message::ConnectAck { rma_slots: 2, ack_batch: 1 }).unwrap();
+        sink.send(Message::ConnectAck { rma_slots: 2, ack_batch: 1, send_window: 1 })
+            .unwrap();
         assert_eq!(src.recv().unwrap().type_name(), "CONNECT_ACK");
     }
 

@@ -21,14 +21,30 @@ pub enum Message {
     /// (paper §3.1: "sends its maximum object size, number of objects in
     /// the RMA buffer, and the memory handle") plus the largest
     /// BLOCK_SYNC batch it is willing to consume (`ack_batch`; 1 = the
-    /// paper's per-object acknowledgements). The field is optional on the
-    /// wire: a legacy CONNECT without it decodes as `ack_batch = 1`, so
-    /// old single-`BlockSync` peers interoperate unchanged.
-    Connect { max_object_size: u64, rma_slots: u32, resume: bool, ack_batch: u32 },
-    /// Sink accepts; advertises its own RMA slot count and the ack batch
-    /// size it will actually use (min of both sides' `ack_batch`; also
-    /// optional on the wire, defaulting to 1 for legacy peers).
-    ConnectAck { rma_slots: u32, ack_batch: u32 },
+    /// paper's per-object acknowledgements) and the NEW_BLOCK send window
+    /// it would like to run (`send_window`; 1 = the lockstep
+    /// issue-and-wait path). Both fields are optional on the wire — and
+    /// `send_window` is only encoded when it is not 1 — so a field-less
+    /// legacy CONNECT decodes as `ack_batch = 1` / `send_window = 1`, and
+    /// a default-configured handshake stays byte-identical to the PR 2
+    /// shape. Note the asymmetry (same as `ack_batch` had): an *old*
+    /// decoder rejects trailing bytes, so asking a pre-`send_window` peer
+    /// for a window > 1 fails the handshake rather than degrading —
+    /// non-default windows assume both ends speak this revision.
+    Connect {
+        max_object_size: u64,
+        rma_slots: u32,
+        resume: bool,
+        ack_batch: u32,
+        send_window: u32,
+    },
+    /// Sink accepts; advertises its own RMA slot count, the ack batch
+    /// size it will actually use (min of both sides' `ack_batch`), and
+    /// the negotiated NEW_BLOCK send window the source must honor (min of
+    /// both sides' `send_window`). Both trailing fields are optional on
+    /// the wire, defaulting to 1 for legacy peers, and `send_window` is
+    /// only encoded when it is not 1.
+    ConnectAck { rma_slots: u32, ack_batch: u32, send_window: u32 },
     /// Source → sink: begin file `file_idx` (§5.2.1). Carries the
     /// metadata the sink uses for the resume match (§5.2.2).
     NewFile { file_idx: u32, name: String, size: u64, start_ost: u32 },
@@ -102,17 +118,25 @@ impl Message {
     /// Encode into `out` (appends; does not clear).
     pub fn encode(&self, out: &mut Vec<u8>) {
         match self {
-            Message::Connect { max_object_size, rma_slots, resume, ack_batch } => {
+            Message::Connect { max_object_size, rma_slots, resume, ack_batch, send_window } => {
                 out.push(T_CONNECT);
                 put_u64(out, *max_object_size);
                 put_u32(out, *rma_slots);
                 out.push(*resume as u8);
                 put_u32(out, *ack_batch);
+                // Optional trailing field, omitted at the default so the
+                // PR 2-era wire bytes are reproduced exactly.
+                if *send_window != 1 {
+                    put_u32(out, *send_window);
+                }
             }
-            Message::ConnectAck { rma_slots, ack_batch } => {
+            Message::ConnectAck { rma_slots, ack_batch, send_window } => {
                 out.push(T_CONNECT_ACK);
                 put_u32(out, *rma_slots);
                 put_u32(out, *ack_batch);
+                if *send_window != 1 {
+                    put_u32(out, *send_window);
+                }
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
                 out.push(T_NEW_FILE);
@@ -242,13 +266,19 @@ impl<'a> Reader<'a> {
                 max_object_size: self.u64()?,
                 rma_slots: self.u32()?,
                 resume: self.bool()?,
-                // Optional trailing field: a legacy peer's CONNECT stops
-                // here and means "one BLOCK_SYNC per object".
+                // Optional trailing fields: a legacy peer's CONNECT stops
+                // here and means "one BLOCK_SYNC per object", and a PR 2-
+                // era peer stops after `ack_batch` and means "lockstep
+                // NEW_BLOCK issue" (`send_window = 1`). This covers the
+                // old-to-new direction only; an old decoder rejects the
+                // extra field (see the `Connect` doc).
                 ack_batch: if self.remaining() > 0 { self.u32()? } else { 1 },
+                send_window: if self.remaining() > 0 { self.u32()? } else { 1 },
             },
             T_CONNECT_ACK => Message::ConnectAck {
                 rma_slots: self.u32()?,
                 ack_batch: if self.remaining() > 0 { self.u32()? } else { 1 },
+                send_window: if self.remaining() > 0 { self.u32()? } else { 1 },
             },
             T_NEW_FILE => Message::NewFile {
                 file_idx: self.u32()?,
@@ -316,8 +346,17 @@ mod tests {
             rma_slots: 64,
             resume: true,
             ack_batch: 8,
+            send_window: 1,
         });
-        roundtrip(Message::ConnectAck { rma_slots: 8, ack_batch: 1 });
+        roundtrip(Message::Connect {
+            max_object_size: 1 << 20,
+            rma_slots: 64,
+            resume: false,
+            ack_batch: 8,
+            send_window: 32,
+        });
+        roundtrip(Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1 });
+        roundtrip(Message::ConnectAck { rma_slots: 8, ack_batch: 4, send_window: 16 });
         roundtrip(Message::NewFile {
             file_idx: 3,
             name: "dir/file-α.bin".into(),
@@ -400,14 +439,63 @@ mod tests {
                 rma_slots: 64,
                 resume: true,
                 ack_batch: 1,
+                send_window: 1,
             }
         );
         let mut buf = vec![T_CONNECT_ACK];
         buf.extend_from_slice(&8u32.to_le_bytes());
         assert_eq!(
             Message::decode(&buf).unwrap(),
-            Message::ConnectAck { rma_slots: 8, ack_batch: 1 }
+            Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1 }
         );
+    }
+
+    #[test]
+    fn pr2_handshake_without_send_window_decodes_as_one() {
+        // A PR 2-era peer's CONNECT: the ack_batch field present, no
+        // trailing send_window — the lockstep issue path.
+        let mut buf = vec![T_CONNECT];
+        buf.extend_from_slice(&(1u64 << 20).to_le_bytes());
+        buf.extend_from_slice(&64u32.to_le_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&buf).unwrap(),
+            Message::Connect {
+                max_object_size: 1 << 20,
+                rma_slots: 64,
+                resume: false,
+                ack_batch: 8,
+                send_window: 1,
+            }
+        );
+        let mut buf = vec![T_CONNECT_ACK];
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&4u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&buf).unwrap(),
+            Message::ConnectAck { rma_slots: 8, ack_batch: 4, send_window: 1 }
+        );
+    }
+
+    #[test]
+    fn default_send_window_keeps_pr2_wire_bytes() {
+        // The equivalence pin at the codec layer: `send_window = 1` must
+        // encode to exactly the PR 2 byte shape (no trailing field), so a
+        // default-configured handshake is byte-identical on the wire.
+        let mut buf = Vec::new();
+        Message::Connect {
+            max_object_size: 1 << 20,
+            rma_slots: 64,
+            resume: false,
+            ack_batch: 1,
+            send_window: 1,
+        }
+        .encode(&mut buf);
+        assert_eq!(buf.len(), 1 + 8 + 4 + 1 + 4, "CONNECT grew beyond the PR 2 shape");
+        let mut buf = Vec::new();
+        Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1 }.encode(&mut buf);
+        assert_eq!(buf.len(), 1 + 4 + 4, "CONNECT_ACK grew beyond the PR 2 shape");
     }
 
     #[test]

@@ -6,9 +6,9 @@
 //! active messages, RMA-read data movement, connection loss — behind the
 //! [`Endpoint`] trait, with two backends:
 //!
-//! - [`channel::ChannelTransport`] — in-process, zero-copy handoff with a
+//! - [`channel::ChannelEndpoint`] — in-process, zero-copy handoff with a
 //!   modeled wire (latency + bandwidth); the Verbs-like path.
-//! - [`tcp::TcpTransport`] — real sockets over loopback with full
+//! - [`tcp::TcpEndpoint`] — real sockets over loopback with full
 //!   serialization; the IPoIB-like path (used for the bbcp baseline so the
 //!   baseline pays socket costs, as it does in the paper).
 //!

@@ -120,7 +120,11 @@ pub fn forall<F: FnMut(&mut Pcg32) -> Result<(), String>>(name: &str, cases: u32
 }
 
 /// Re-run a single failing case by seed.
-pub fn forall_seeded<F: FnMut(&mut Pcg32) -> Result<(), String>>(name: &str, seed: u64, mut prop: F) {
+pub fn forall_seeded<F: FnMut(&mut Pcg32) -> Result<(), String>>(
+    name: &str,
+    seed: u64,
+    mut prop: F,
+) {
     let mut rng = Pcg32::new(seed);
     if let Err(msg) = prop(&mut rng) {
         panic!("property '{name}' failed (seed {seed:#x}): {msg}");

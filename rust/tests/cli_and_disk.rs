@@ -41,7 +41,11 @@ fn cli_transfer_completes_and_verifies() {
         .output()
         .expect("spawn ftlads");
     let stdout = String::from_utf8_lossy(&out.stdout);
-    assert!(out.status.success(), "stdout: {stdout}\nstderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        out.status.success(),
+        "stdout: {stdout}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
     assert!(stdout.contains("completed        : true"), "{stdout}");
     assert!(stdout.contains("sink dataset verified"), "{stdout}");
     let _ = std::fs::remove_dir_all(&ftdir);
@@ -219,7 +223,11 @@ fn two_process_tcp_transfer_with_disk_pfs() {
         .output()
         .expect("run source");
     let src_out = String::from_utf8_lossy(&out.stdout);
-    assert!(out.status.success(), "source failed: {src_out}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        out.status.success(),
+        "source failed: {src_out}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
     assert!(src_out.contains("transfer complete"), "{src_out}");
 
     let status = sink.wait().expect("sink exit");

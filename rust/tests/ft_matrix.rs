@@ -153,6 +153,104 @@ fn batched_acks_fault_mid_window_every_mechanism() {
 }
 
 #[test]
+fn send_window_full_fault_every_mechanism() {
+    // The windowed-issue pipeline: for every FT mechanism and
+    // send_window ∈ {1, 4, 32}, sever the connection mid-transfer — with
+    // a full credit window of un-acked NEW_BLOCKs in flight at the crash
+    // — then resume and require the log-based retransmit bound: every
+    // group-committed (logged) object is skipped, so the resume re-sends
+    // at most `total - logged` objects (the un-acked window plus any
+    // un-flushed ack batches), which block re-write tolerates. Sink
+    // contents byte-verify and no logs survive completion.
+    for mech in Mechanism::ALL_FT {
+        for window in [1u32, 4, 32] {
+            let mut cfg =
+                Config::for_tests(&format!("matrix-swin-{}-{window}", mech.as_str()));
+            cfg.mechanism = mech;
+            cfg.method = Method::Bit64;
+            cfg.send_window = window;
+            cfg.ack_batch = 4;
+            cfg.ack_flush_us = 500;
+            let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+            let total = wl.total_objects(cfg.object_size);
+            let env = SimEnv::new(cfg, &wl);
+            let out = env
+                .run(
+                    &TransferSpec::fresh(env.files.clone())
+                        .with_fault(FaultPlan::at_fraction(0.5, Side::Source)),
+                )
+                .unwrap();
+            assert!(!out.completed, "{mech:?} window={window}: fault did not fire");
+            assert_eq!(out.send_window, window, "negotiation must land the full window");
+            let logged: u64 = recover::recover_all(&env.cfg.ft())
+                .unwrap()
+                .values()
+                .map(|s| s.count() as u64)
+                .sum();
+            let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+            assert!(
+                out2.completed,
+                "{mech:?} window={window}: resume failed: {:?}",
+                out2.fault
+            );
+            assert!(
+                out2.source.objects_skipped_resume >= logged,
+                "{mech:?} window={window}: logged objects not skipped \
+                 ({} skipped, {logged} logged)",
+                out2.source.objects_skipped_resume
+            );
+            assert!(
+                out2.source.objects_sent <= total - logged,
+                "{mech:?} window={window}: resume retransmitted logged objects \
+                 ({} sent, {logged} logged of {total})",
+                out2.source.objects_sent
+            );
+            env.verify_sink_complete()
+                .unwrap_or_else(|e| panic!("{mech:?} window={window}: {e}"));
+            let left = recover::recover_all(&env.cfg.ft()).unwrap();
+            assert!(
+                left.is_empty(),
+                "{mech:?} window={window}: logs left after completion"
+            );
+            let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        }
+    }
+}
+
+#[test]
+fn adaptive_acks_survive_mid_transfer_fault() {
+    // ack_adaptive mid-flight: a crash while the effective batch floats
+    // must lose at most the un-flushed acks, like the fixed-batch path.
+    let mut cfg = Config::for_tests("matrix-adaptive-fault");
+    cfg.mechanism = Mechanism::Universal;
+    cfg.method = Method::Bit64;
+    cfg.ack_batch = 8;
+    cfg.ack_adaptive = true;
+    cfg.ack_flush_us = 500;
+    cfg.send_window = 8;
+    let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+    let total = wl.total_objects(cfg.object_size);
+    let env = SimEnv::new(cfg, &wl);
+    let out = env
+        .run(
+            &TransferSpec::fresh(env.files.clone())
+                .with_fault(FaultPlan::at_fraction(0.5, Side::Source)),
+        )
+        .unwrap();
+    assert!(!out.completed, "fault did not fire");
+    let logged: u64 = recover::recover_all(&env.cfg.ft())
+        .unwrap()
+        .values()
+        .map(|s| s.count() as u64)
+        .sum();
+    let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+    assert!(out2.completed, "resume failed: {:?}", out2.fault);
+    assert!(out2.source.objects_sent <= total - logged);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
 fn batched_acks_with_corruption_retransmit_promptly() {
     // ok=false acks flush their batch immediately; corrupted writes are
     // retransmitted and the dataset still verifies with batching on.

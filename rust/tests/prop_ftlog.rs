@@ -227,9 +227,9 @@ fn prop_escape_name_injective_roundtrip() {
         let n = rng.range(0, 12) as usize;
         let name: String = (0..n).map(|_| *rng.choose(&pool)).collect();
         let esc = ftlog::escape_name(&name);
-        prop_assert!(esc
-            .bytes()
-            .all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-' || b == b'%'));
+        prop_assert!(esc.bytes().all(|b| {
+            b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-' || b == b'%'
+        }));
         prop_assert_eq!(ftlog::unescape_name(&esc).ok_or("unescape failed")?, name);
         Ok(())
     });

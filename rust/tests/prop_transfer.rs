@@ -242,10 +242,12 @@ fn prop_message_codec_roundtrips_random() {
                 rma_slots: rng.next_u32(),
                 resume: rng.bool(0.5),
                 ack_batch: rng.next_u32(),
+                send_window: if rng.bool(0.5) { 1 } else { rng.next_u32() },
             },
             1 => Message::ConnectAck {
                 rma_slots: rng.next_u32(),
                 ack_batch: rng.next_u32(),
+                send_window: if rng.bool(0.5) { 1 } else { rng.next_u32() },
             },
             9 => {
                 let len = rng.range(0, 64) as usize;

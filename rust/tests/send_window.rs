@@ -1,0 +1,401 @@
+//! Source-side NEW_BLOCK pipelining (credit-based `send_window`):
+//! PR 2 equivalence at the defaults (byte-identical wire traces, same
+//! logger write counts), CONNECT negotiation incl. legacy fallback, the
+//! in-flight bound itself, and the adaptive ack coalescer's feedback.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ftlads::config::Config;
+use ftlads::coordinator::sink::{spawn_sink, SinkReport};
+use ftlads::coordinator::source::{run_source, SourceReport};
+use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
+use ftlads::workload;
+
+/// Endpoint wrapper recording the exact encoded bytes of every message
+/// sent through it, plus the NEW_BLOCK in-flight high-water mark
+/// (sends minus acknowledgements seen by the receive side).
+struct ByteTap {
+    inner: channel::ChannelEndpoint,
+    sent: Arc<Mutex<Vec<Vec<u8>>>>,
+    inflight: Arc<AtomicI64>,
+    max_inflight: Arc<AtomicI64>,
+}
+
+impl ByteTap {
+    fn new(inner: channel::ChannelEndpoint) -> (ByteTap, Arc<Mutex<Vec<Vec<u8>>>>, Arc<AtomicI64>) {
+        let sent = Arc::new(Mutex::new(Vec::new()));
+        let max_inflight = Arc::new(AtomicI64::new(0));
+        let tap = ByteTap {
+            inner,
+            sent: sent.clone(),
+            inflight: Arc::new(AtomicI64::new(0)),
+            max_inflight: max_inflight.clone(),
+        };
+        (tap, sent, max_inflight)
+    }
+
+    fn track(&self, delta: i64) {
+        let now = self.inflight.fetch_add(delta, Ordering::SeqCst) + delta;
+        self.max_inflight.fetch_max(now, Ordering::SeqCst);
+    }
+}
+
+impl Endpoint for ByteTap {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        let mut bytes = Vec::new();
+        msg.encode(&mut bytes);
+        self.sent.lock().unwrap_or_else(|e| e.into_inner()).push(bytes);
+        if matches!(msg, Message::NewBlock { .. }) {
+            self.track(1);
+        }
+        self.inner.send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        let msg = self.inner.recv()?;
+        self.on_recv(&msg);
+        Ok(msg)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        let msg = self.inner.recv_timeout(timeout)?;
+        self.on_recv(&msg);
+        Ok(msg)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+impl ByteTap {
+    fn on_recv(&self, msg: &Message) {
+        match msg {
+            Message::BlockSync { .. } => self.track(-1),
+            Message::BlockSyncBatch { blocks, .. } => self.track(-(blocks.len() as i64)),
+            _ => {}
+        }
+    }
+}
+
+struct SplitRun {
+    src: SourceReport,
+    snk: SinkReport,
+    /// Encoded bytes of every source-side send, in send order.
+    src_sent: Vec<Vec<u8>>,
+    /// Encoded bytes of every sink-side send, in send order.
+    snk_sent: Vec<Vec<u8>>,
+    /// High-water mark of un-acknowledged NEW_BLOCKs on the wire.
+    max_inflight: i64,
+}
+
+/// Run one transfer with independent source/sink configs, byte-tapping
+/// both endpoints.
+fn run_split(src_cfg: &Config, sink_cfg: &Config, env: &SimEnv) -> SplitRun {
+    let (src_ep, sink_ep) = channel::pair(src_cfg.wire(), FaultController::unarmed());
+    let (src_tap, src_sent, max_inflight) = ByteTap::new(src_ep);
+    let (snk_tap, snk_sent, _) = ByteTap::new(sink_ep);
+
+    let sink_node = spawn_sink(sink_cfg, env.sink.clone(), Arc::new(snk_tap), None).unwrap();
+    let spec = TransferSpec::fresh(env.files.clone());
+    let src = run_source(src_cfg, env.source.clone(), Arc::new(src_tap), &spec).unwrap();
+    let snk = sink_node.join();
+    SplitRun {
+        src,
+        snk,
+        src_sent: src_sent.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        snk_sent: snk_sent.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        max_inflight: max_inflight.load(Ordering::SeqCst),
+    }
+}
+
+/// Sorted copy — IO threads race, so cross-run comparison is by multiset.
+fn sorted(trace: &[Vec<u8>]) -> Vec<Vec<u8>> {
+    let mut t = trace.to_vec();
+    t.sort();
+    t
+}
+
+#[test]
+fn defaults_produce_byte_identical_pr2_wire_trace() {
+    // The acceptance pin: `send_window = 1` + `ack_adaptive = false`
+    // (the defaults) must put exactly the PR 2 bytes on the wire — the
+    // handshake carries no trailing send_window field, and the whole
+    // trace is the same multiset of encoded messages as an explicitly
+    // PR 2-configured run, with the same logger write count.
+    let cfg = Config::for_tests("swin-pr2-eq");
+    assert_eq!(cfg.send_window, 1, "default must be the lockstep path");
+    assert!(!cfg.ack_adaptive, "default must be the fixed-batch path");
+    let wl = workload::big_workload(4, 512 << 10); // 32 objects @ 64 KiB
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let run_a = run_split(&cfg, &cfg, &env);
+    assert!(run_a.src.fault.is_none(), "{:?}", run_a.src.fault);
+    env.verify_sink_complete().unwrap();
+
+    // The handshake bytes, hand-built to the PR 2 layout (no trailing
+    // send_window field on either message).
+    let mut connect = vec![0u8]; // T_CONNECT
+    connect.extend_from_slice(&cfg.object_size.to_le_bytes());
+    connect.extend_from_slice(&8u32.to_le_bytes()); // 8 RMA slots in tests
+    connect.push(0); // resume = false
+    connect.extend_from_slice(&1u32.to_le_bytes()); // ack_batch = 1
+    assert_eq!(run_a.src_sent[0], connect, "CONNECT grew beyond the PR 2 bytes");
+    let mut connect_ack = vec![1u8]; // T_CONNECT_ACK
+    connect_ack.extend_from_slice(&8u32.to_le_bytes());
+    connect_ack.extend_from_slice(&1u32.to_le_bytes()); // negotiated ack_batch
+    assert_eq!(run_a.snk_sent[0], connect_ack, "CONNECT_ACK grew beyond the PR 2 bytes");
+
+    // A second run with the knobs set explicitly is the same wire trace
+    // (multiset — IO threads race on ordering) and the same write counts.
+    let mut explicit = cfg.clone();
+    explicit.send_window = 1;
+    explicit.ack_adaptive = false;
+    let env_b = SimEnv::new(explicit.clone(), &wl);
+    let run_b = run_split(&explicit, &explicit, &env_b);
+    assert!(run_b.src.fault.is_none(), "{:?}", run_b.src.fault);
+    assert_eq!(sorted(&run_a.src_sent), sorted(&run_b.src_sent));
+    assert_eq!(sorted(&run_a.snk_sent), sorted(&run_b.snk_sent));
+    assert_eq!(run_a.src.counters.log_writes, 32, "one logger write per object");
+    assert_eq!(run_a.src.counters.log_writes, run_b.src.counters.log_writes);
+    assert_eq!(run_a.snk.counters.ack_messages, run_b.snk.counters.ack_messages);
+    assert_eq!(run_a.src.send_window, 1);
+    assert_eq!(run_a.snk.ack_batch_effective, 1);
+    assert_eq!(run_a.src.counters.credit_waits, 0, "lockstep never takes credits");
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    let _ = std::fs::remove_dir_all(&env_b.cfg.ft_dir);
+}
+
+#[test]
+fn windowed_run_lands_identical_data_with_bounded_inflight() {
+    // Pipelining changes only message timing: object/byte accounting and
+    // sink contents must match the lockstep run, and the wire never
+    // carries more than `send_window` un-acked NEW_BLOCKs.
+    let mut outcomes = Vec::new();
+    for window in [1u32, 4] {
+        let mut cfg = Config::for_tests(&format!("swin-eq-{window}"));
+        cfg.send_window = window;
+        let wl = workload::mixed_workload(6, 256 << 10, cfg.seed);
+        let env = SimEnv::new(cfg.clone(), &wl);
+        let run = run_split(&cfg, &cfg, &env);
+        assert!(run.src.fault.is_none(), "window={window}: {:?}", run.src.fault);
+        assert!(run.snk.fault.is_none(), "window={window}: {:?}", run.snk.fault);
+        env.verify_sink_complete().unwrap();
+        assert_eq!(run.src.send_window, window);
+        assert_eq!(run.snk.send_window, window);
+        if window > 1 {
+            assert!(
+                run.max_inflight <= window as i64,
+                "window={window}: {} un-acked NEW_BLOCKs in flight",
+                run.max_inflight
+            );
+        }
+        outcomes.push(run);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    let (lockstep, windowed) = (&outcomes[0], &outcomes[1]);
+    assert_eq!(
+        lockstep.src.counters.objects_sent,
+        windowed.src.counters.objects_sent
+    );
+    assert_eq!(
+        lockstep.src.counters.objects_synced,
+        windowed.src.counters.objects_synced
+    );
+    assert_eq!(lockstep.src.counters.bytes_sent, windowed.src.counters.bytes_sent);
+    assert_eq!(
+        lockstep.src.counters.log_appends,
+        windowed.src.counters.log_appends
+    );
+    assert_eq!(lockstep.src.files_done, windowed.src.files_done);
+}
+
+#[test]
+fn connect_negotiation_takes_min_window_and_legacy_falls_back_to_lockstep() {
+    for (src_win, sink_win, expect) in [(8u32, 2u32, 2u32), (2, 8, 2), (8, 1, 1), (1, 8, 1)] {
+        let mut src_cfg = Config::for_tests(&format!("swin-neg-{src_win}-{sink_win}"));
+        src_cfg.send_window = src_win;
+        let mut sink_cfg = src_cfg.clone();
+        sink_cfg.send_window = sink_win;
+        let wl = workload::big_workload(2, 512 << 10); // 16 objects
+        let env = SimEnv::new(src_cfg.clone(), &wl);
+        let run = run_split(&src_cfg, &sink_cfg, &env);
+        assert!(run.src.fault.is_none(), "{src_win}/{sink_win}: {:?}", run.src.fault);
+        assert_eq!(
+            run.src.send_window, expect,
+            "source must honor min({src_win}, {sink_win})"
+        );
+        assert_eq!(run.snk.send_window, expect);
+        if expect == 1 {
+            assert_eq!(
+                run.src.counters.credit_waits, 0,
+                "negotiated lockstep must never touch the credit gate"
+            );
+        } else {
+            assert!(run.max_inflight <= expect as i64);
+        }
+        env.verify_sink_complete().unwrap();
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+}
+
+#[test]
+fn tiny_window_on_big_file_still_completes() {
+    // send_window = 2 against a 32-object file: the credit gate cycles
+    // dozens of times; everything must still arrive and verify.
+    let mut cfg = Config::for_tests("swin-tiny");
+    cfg.send_window = 2;
+    cfg.io_threads = 4;
+    let wl = workload::big_workload(1, 32 * cfg.object_size);
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let run = run_split(&cfg, &cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert_eq!(run.src.counters.objects_synced, 32);
+    assert!(run.max_inflight <= 2);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn windowed_batched_acks_compose() {
+    // Both knobs on at once: window 8 + ack_batch 8 over ONE 32-object
+    // file, so the window and the coalescer are phase-locked — each full
+    // window of NEW_BLOCKs produces exactly one count-driven
+    // BLOCK_SYNC_BATCH, whose arrival refills all 8 credits at once.
+    let mut cfg = Config::for_tests("swin-compose");
+    cfg.send_window = 8;
+    cfg.ack_batch = 8;
+    cfg.ack_flush_us = 100_000; // count-driven flushes only
+    let wl = workload::big_workload(1, 32 * cfg.object_size); // 32 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let run = run_split(&cfg, &cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert_eq!(run.src.counters.objects_synced, 32);
+    assert_eq!(run.snk.counters.ack_messages, 4, "one batch per credit window");
+    assert_eq!(run.src.counters.log_writes, 4, "one group commit per batch");
+    assert!(run.max_inflight <= 8);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn adaptive_ack_batch_grows_under_load_and_shrinks_on_partial_flushes() {
+    // 13 objects against an adaptive cap of 8, one IO thread per side so
+    // the ack sequence is strictly ordered: the effective batch must
+    // grow off the floor (ack #1 is a trivially-filled one-ack batch,
+    // then count-driven flushes double it: 1 + 2 + 4 = 7 acks) and the
+    // un-divisible 6-object tail must be pushed out by the flush window,
+    // shrinking it back — both movements observable in the counters and
+    // the final effective value.
+    let mut cfg = Config::for_tests("swin-adaptive");
+    cfg.io_threads = 1;
+    cfg.ack_batch = 8;
+    cfg.ack_adaptive = true;
+    cfg.ack_flush_us = 2_000;
+    let wl = workload::big_workload(1, 13 * cfg.object_size); // 13 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let run = run_split(&cfg, &cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert_eq!(run.src.counters.objects_synced, 13);
+    assert!(
+        run.snk.counters.ack_batch_grows >= 2,
+        "count-driven flushes must grow the effective batch (got {})",
+        run.snk.counters.ack_batch_grows
+    );
+    assert!(
+        run.snk.counters.ack_batch_shrinks >= 1,
+        "the partial tail must fire the window and shrink the batch"
+    );
+    assert!(
+        (1..=8).contains(&run.snk.ack_batch_effective),
+        "effective batch {} escaped [1, cap]",
+        run.snk.ack_batch_effective
+    );
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn out_of_range_ack_faults_cleanly_instead_of_panicking() {
+    // A corrupt/malicious sink acks a block index far outside the file:
+    // the source must treat it as a protocol violation (clean fault) —
+    // the failed-write reschedule path would otherwise underflow the
+    // `size - offset` length math on the wire-supplied index.
+    let cfg = Config::for_tests("swin-rogue-ack");
+    let wl = workload::big_workload(1, 4 * cfg.object_size); // 4 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let (src_ep, sink_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+
+    // Scripted rogue sink: handshake + FILE_ID normally, then answer the
+    // first NEW_BLOCK with an absurd index and keep draining until the
+    // source hangs up.
+    let rogue = std::thread::spawn(move || {
+        let mut acked = false;
+        loop {
+            match sink_ep.recv_timeout(Duration::from_millis(100)) {
+                Ok(Message::Connect { ack_batch, send_window, .. }) => {
+                    let _ = sink_ep.send(Message::ConnectAck {
+                        rma_slots: 8,
+                        ack_batch,
+                        send_window,
+                    });
+                }
+                Ok(Message::NewFile { file_idx, .. }) => {
+                    let _ = sink_ep.send(Message::FileId {
+                        file_idx,
+                        sink_fd: 0,
+                        skip: false,
+                    });
+                }
+                Ok(Message::NewBlock { file_idx, .. }) if !acked => {
+                    acked = true;
+                    let _ = sink_ep.send(Message::BlockSync {
+                        file_idx,
+                        block_idx: u32::MAX,
+                        ok: false,
+                    });
+                }
+                Ok(_) => {}
+                Err(NetError::Timeout) => continue,
+                Err(_) => break, // source dropped its endpoint
+            }
+        }
+    });
+
+    let report = run_source(
+        &cfg,
+        env.source.clone(),
+        Arc::new(src_ep),
+        &TransferSpec::fresh(env.files.clone()),
+    )
+    .unwrap();
+    let fault = report.fault.expect("rogue ack must fault the source");
+    assert!(
+        fault.contains("out-of-range block"),
+        "expected a protocol-violation fault, got: {fault}"
+    );
+    rogue.join().unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
+
+#[test]
+fn adaptive_against_legacy_peer_stays_per_object() {
+    // An adaptive sink negotiated down to ack_batch = 1 must behave
+    // exactly like the seed: singles only, no growth possible.
+    let mut src_cfg = Config::for_tests("swin-adaptive-legacy");
+    src_cfg.ack_batch = 1;
+    let mut sink_cfg = src_cfg.clone();
+    sink_cfg.ack_batch = 8;
+    sink_cfg.ack_adaptive = true;
+    let wl = workload::big_workload(2, 512 << 10); // 16 objects
+    let env = SimEnv::new(src_cfg.clone(), &wl);
+    let run = run_split(&src_cfg, &sink_cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert_eq!(run.snk.counters.ack_messages, 16, "per-object acks only");
+    assert_eq!(run.snk.ack_batch_effective, 1);
+    assert_eq!(run.snk.counters.ack_batch_grows, 0);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}

@@ -21,7 +21,10 @@ fn fault_then_resume_completes() {
     let wl = workload::big_workload(6, 512 << 10);
     let env = SimEnv::new(cfg, &wl);
     let out = env
-        .run(&TransferSpec::fresh(env.files.clone()).with_fault(FaultPlan::at_fraction(0.4, Side::Source)))
+        .run(
+            &TransferSpec::fresh(env.files.clone())
+                .with_fault(FaultPlan::at_fraction(0.4, Side::Source)),
+        )
         .unwrap();
     assert!(!out.completed);
     assert!(out.fault.is_some());

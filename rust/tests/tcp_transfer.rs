@@ -75,6 +75,8 @@ impl TcpEnv {
             rma_stalls: sink_report.rma_stalls,
             source_sched: src_report.sched,
             sink_sched: sink_report.sched,
+            send_window: src_report.send_window,
+            ack_batch_effective: sink_report.ack_batch_effective,
         }
     }
 
