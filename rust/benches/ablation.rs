@@ -173,8 +173,8 @@ fn a4_rma_pool(scale: &BenchScale) {
         rows.push(vec![
             format!("{slots}"),
             format!("{:.3}", out.elapsed.as_secs_f64()),
-            format!("{}", out.rma_stalls.0),
-            format!("{:.1}", out.rma_stalls.1 as f64 / 1e6),
+            format!("{}", out.rma_stalls_snk.0),
+            format!("{:.1}", out.rma_stalls_snk.1 as f64 / 1e6),
         ]);
         let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
     }
@@ -260,7 +260,7 @@ fn a6_scheduler_policies(scale: &BenchScale) {
             policy.as_str().to_string(),
             format!("{:.3}", out.elapsed.as_secs_f64()),
             format!("{:.1}", out.throughput_bytes_per_sec() / 1e6),
-            format!("{}", out.rma_stalls.0),
+            format!("{}", out.rma_stalls_snk.0),
         ]);
     }
     print_table(
@@ -394,6 +394,26 @@ fn a8_send_window(scale: &BenchScale) {
     env.verify_sink_complete().unwrap();
     rows.push(vec![
         "32+adaptive".into(),
+        format!("{}", out.source.send_stalls),
+        format!("{}", out.source.credit_waits),
+        format!("{}", out.ack_batch_effective),
+        format!("{:.3}", out.elapsed.as_secs_f64()),
+    ]);
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+
+    // Autotuned-window row: the applied window floats in 1..=32 from
+    // stall/credit-wait feedback instead of pinning to the cap — on this
+    // 2-slot pool the zero-copy pinned buffers should drag it well below
+    // the negotiated 32.
+    let mut cfg = wire_bound("a8-awin");
+    cfg.send_window = 32;
+    cfg.send_window_adaptive = true;
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "a8 adaptive window: {:?}", out.fault);
+    env.verify_sink_complete().unwrap();
+    rows.push(vec![
+        format!("32+adaptive-window (eff {})", out.send_window_effective),
         format!("{}", out.source.send_stalls),
         format!("{}", out.source.credit_waits),
         format!("{}", out.ack_batch_effective),

@@ -8,9 +8,17 @@
 //!   codec           NEW_BLOCK encode/decode round-trip
 //!   ack-batch       end-to-end wire-ack / logger-write counts per
 //!                   `ack_batch` (the batched BLOCK_SYNC path)
-//!   send-window     source issue-loop RMA-slot stalls per `send_window`
-//!                   on a wire-bound workload (the credit-based
-//!                   NEW_BLOCK pipelining path)
+//!   send-window     source issue-loop RMA-slot stalls per
+//!                   (`send_window`, pool size) on a wire-bound workload:
+//!                   zero-copy pins a payload buffer from pread until the
+//!                   sink releases it, so the POOL axis (not the window
+//!                   axis) governs slot stalls — provision slots ≥
+//!                   in-flight
+//!   zero-copy       payload copies per object on the end-to-end data
+//!                   path (counter-instrumented; asserts ≤ 1 — the
+//!                   unavoidable pread into the RMA slot) and the codec's
+//!                   per-message allocation cost (frame-alloc encode vs
+//!                   header-scratch + gathered payload)
 //!
 //! Plain timing mains (no criterion offline); each reports mean ± 99 % CI
 //! over fixed iteration counts with warmup. With `FTLADS_BENCH_JSON_DIR`
@@ -178,29 +186,36 @@ fn bench_ack_batching() {
     );
 }
 
-/// End-to-end send-window pipelining: source issue-loop stalls on the
-/// RMA slot pool per `send_window`, on a workload where the wire (not
-/// the storage) is the bottleneck — a slow modeled link, instant OSTs,
-/// and a 2-slot RMA pool. At `send_window = 1` every slot is pinned
-/// across the ~330 µs wire serialization, so issue attempts pile up on
-/// the dry pool; at `send_window = 8` the slot frees after the pread and
-/// the stalls collapse. Pins the headline claim: ≥ 2× fewer source
-/// issue-loop stalls at `send_window = 8`.
+/// End-to-end send-window × RMA-pool sweep on a workload where the wire
+/// (not the storage) is the bottleneck — a slow modeled link and instant
+/// OSTs. With the zero-copy path a payload buffer is pinned from its
+/// pread until the *sink* releases the last `Bytes` ref (like a real
+/// registered RMA region), so slot residency spans the wire
+/// serialization in BOTH issue disciplines and the POOL axis is what
+/// governs issue-loop stalls: a 2-slot pool stalls the issue loop under
+/// any window, an 8-slot pool absorbs the in-flight window and the
+/// stalls collapse. Pins that claim: ≥ 2× fewer stalls at
+/// (window 8, 8 slots) vs (window 8, 2 slots).
+///
+/// (Before zero-copy, the windowed path *copied* the payload and
+/// released the slot pre-send, so the window axis alone moved the stall
+/// count; that copy is exactly what this PR deletes — see the zero-copy
+/// table for the copies-per-object pin.)
 fn bench_send_window() {
     let mut rows = Vec::new();
-    let mut stalls_at: Vec<(u32, u64)> = Vec::new();
-    for window in [1u32, 2, 8] {
-        let mut cfg = Config::for_tests(&format!("micro-swin-{window}"));
+    let mut stalls_at: Vec<(u32, usize, u64)> = Vec::new();
+    for (window, slots) in [(1u32, 2usize), (8, 2), (8, 8)] {
+        let mut cfg = Config::for_tests(&format!("micro-swin-{window}-{slots}"));
         cfg.send_window = window;
         cfg.io_threads = 4;
-        // 2 RMA slots: slot occupancy is the contended resource.
-        cfg.rma_bytes = 2 * cfg.object_size as usize;
+        // The pool axis: slot occupancy is the contended resource.
+        cfg.rma_bytes = slots * cfg.object_size as usize;
         // Wire-bound: ~330 µs to serialize one 64 KiB object...
         cfg.time_scale = 1.0;
         cfg.net_bandwidth = 2.0e8;
         cfg.net_latency_us = 5;
         // ...with free storage on both ends (zero modeled service, so
-        // the slot hold time is pread+digest work only).
+        // buffers pin for wire serialization + sink release only).
         cfg.ost_bandwidth = f64::INFINITY;
         cfg.ost_latency_us = 0;
         cfg.ost_concurrent = 8;
@@ -209,32 +224,149 @@ fn bench_send_window() {
         let started = std::time::Instant::now();
         let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
         let elapsed = started.elapsed();
-        assert!(out.completed, "send_window={window}: {:?}", out.fault);
+        assert!(out.completed, "send_window={window}/{slots}: {:?}", out.fault);
         assert_eq!(out.send_window, window);
+        if window == 1 {
+            assert_eq!(
+                out.source.credit_waits, 0,
+                "lockstep never touches the credit gate"
+            );
+        }
         env.verify_sink_complete().unwrap();
-        stalls_at.push((window, out.source.send_stalls));
+        stalls_at.push((window, slots, out.source.send_stalls));
         rows.push(vec![
-            format!("{window}"),
+            format!("{window}/{slots}"),
             format!("{}", out.source.send_stalls),
             format!("{}", out.source.credit_waits),
             format!("{:.1}", elapsed.as_secs_f64() * 1e3),
         ]);
         let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
     }
-    let s1 = stalls_at.iter().find(|(w, _)| *w == 1).unwrap().1;
-    let s8 = stalls_at.iter().find(|(w, _)| *w == 8).unwrap().1;
+    let find = |w: u32, s: usize| {
+        stalls_at.iter().find(|&&(fw, fs, _)| fw == w && fs == s).unwrap().2
+    };
+    let tight = find(8, 2);
+    let roomy = find(8, 8);
     assert!(
-        s1 >= 16,
-        "lockstep issue on a wire-bound 2-slot pool must stall the issue loop: {s1}"
+        find(1, 2) >= 16,
+        "wire-bound issue on a 2-slot pool must stall the issue loop: {}",
+        find(1, 2)
     );
     assert!(
-        s1 >= 2 * s8.max(1),
-        "issue-loop stalls must drop >= 2x at send_window=8: {s8} vs {s1}"
+        tight >= 2 * roomy.max(1),
+        "slot stalls must drop >= 2x when the pool covers the window: \
+         {roomy} (8 slots) vs {tight} (2 slots)"
     );
     print_table(
-        "send window (96 objects, wire-bound, 2 RMA slots)",
-        &["send_window", "slot stalls", "credit waits", "ms"],
+        "send window x RMA pool (96 objects, wire-bound, zero-copy)",
+        &["window/slots", "slot stalls", "credit waits", "ms"],
         &rows,
+    );
+}
+
+/// §A9 headline table: payload memcpys per object on the end-to-end data
+/// path, counter-instrumented (`payload_copies`/`bytes_copied`). The
+/// zero-copy pipeline performs exactly ONE per object — the `pread` that
+/// stages it into the RMA slot; the freeze → wire → sink `pwrite` chain
+/// adds zero. Before this change the same transfer cost ≥ 3 (slot →
+/// NEW_BLOCK Vec at the source, payload → frame on serializing
+/// transports, wire → sink slot), all deleted at once. Asserted hard:
+/// copies-per-object ≤ 1 on every swept configuration.
+fn bench_zero_copy() {
+    let mut rows = Vec::new();
+    for (label, window, ack_batch) in
+        [("lockstep", 1u32, 1u32), ("window 8", 8, 1), ("window 8 + ack 8", 8, 8)]
+    {
+        let mut cfg = Config::for_tests(&format!("micro-zc-{window}-{ack_batch}"));
+        cfg.send_window = window;
+        cfg.ack_batch = ack_batch;
+        cfg.ack_flush_us = 200_000;
+        let wl = workload::big_workload(4, 16 * cfg.object_size); // 64 objects
+        let total_bytes = wl.total_bytes();
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        assert!(out.completed, "zero-copy {label}: {:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        let objects = out.source.objects_sent;
+        let copies = out.payload_copies();
+        assert!(objects > 0);
+        assert!(
+            copies <= objects,
+            "{label}: {copies} payload copies for {objects} objects — \
+             a memcpy crept back onto the data path"
+        );
+        assert_eq!(
+            out.bytes_copied(),
+            total_bytes,
+            "{label}: copied bytes must equal the staged pread bytes exactly"
+        );
+        rows.push(vec![
+            label.to_string(),
+            format!("{objects}"),
+            format!("{copies}"),
+            format!("{:.2}", copies as f64 / objects as f64),
+            format!("{}", out.bytes_copied()),
+        ]);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    print_table(
+        "payload copies per object (zero-copy path, 64 objects)",
+        &["config", "objects", "copies", "copies/object", "bytes copied"],
+        &rows,
+    );
+
+    // Codec allocation shape: the old path allocated (and filled) one
+    // contiguous frame per message; the new path reuses a header scratch
+    // and gathers the payload by reference. Timed on a 256 KiB payload.
+    let mut rng = Pcg32::new(6);
+    let mut payload = vec![0u8; 256 << 10];
+    rng.fill_bytes(&mut payload);
+    let msg = Message::NewBlock {
+        file_idx: 1,
+        block_idx: 2,
+        offset: 3 << 18,
+        digest: 0xabcd,
+        data: payload.into(),
+    };
+    let s_frame = bench_seconds(3, 30, || {
+        // Per-message frame: fresh allocation + full payload memcpy.
+        let mut frame = Vec::with_capacity(16 + msg.payload_len());
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        msg.encode(&mut frame);
+        std::hint::black_box(&frame);
+    });
+    let mut scratch = Vec::with_capacity(64);
+    let s_scratch = bench_seconds(3, 30, || {
+        // Header scratch reuse: no allocation, payload passed by ref.
+        scratch.clear();
+        scratch.extend_from_slice(&0u32.to_le_bytes());
+        let body = msg.encode_header(&mut scratch);
+        std::hint::black_box((&scratch, body.map(|b| b.len())));
+    });
+    assert!(
+        s_scratch.mean < s_frame.mean,
+        "header-scratch encode must beat per-message frame allocation: \
+         {:.1} µs vs {:.1} µs",
+        s_scratch.mean * 1e6,
+        s_frame.mean * 1e6
+    );
+    print_table(
+        "NEW_BLOCK send-side encode (256 KiB payload)",
+        &["mode", "µs/msg", "allocs/msg", "payload memcpy"],
+        &[
+            vec![
+                "frame alloc (pre-PR)".into(),
+                format!("{:.2}", s_frame.mean * 1e6),
+                "1".into(),
+                "yes".into(),
+            ],
+            vec![
+                "header scratch + gather".into(),
+                format!("{:.2}", s_scratch.mean * 1e6),
+                "0".into(),
+                "no".into(),
+            ],
+        ],
     );
 }
 
@@ -364,7 +496,7 @@ fn bench_codec() {
         block_idx: 77,
         offset: 77 << 18,
         digest: 0x1234_5678_9abc_def0,
-        data,
+        data: data.into(),
     };
     let mut buf = Vec::with_capacity(300 << 10);
     let s = bench_seconds(3, 30, || {
@@ -410,6 +542,7 @@ fn main() {
     bench_log_batch();
     bench_ack_batching();
     bench_send_window();
+    bench_zero_copy();
     bench_recovery_parse();
     let _ = ftlads::bench_support::write_json_summary("micro_hotpath");
 }

@@ -185,10 +185,12 @@ pub fn run_bbcp(
         log_space,
         resources,
         payload_bytes: src_ep.payload_sent(),
-        rma_stalls: (0, 0),
+        rma_stalls_src: (0, 0),
+        rma_stalls_snk: (0, 0),
         source_sched: Default::default(),
         sink_sched: Default::default(),
         send_window: 1,
+        send_window_effective: 1,
         ack_batch_effective: 1,
     })
 }
@@ -231,7 +233,7 @@ fn bbcp_sink(pfs: &dyn Pfs, ep: &dyn Endpoint, ctr: &Counters) {
             Message::NewBlock { file_idx, block_idx, offset, mut data, .. } => {
                 let Some(fid) = current else { break };
                 let len = data.len() as u64;
-                if pfs.write_at(fid, offset, &mut data).is_err() {
+                if pfs.write_at(fid, offset, data.to_mut()).is_err() {
                     break;
                 }
                 ctr.bytes_written.fetch_add(len, Ordering::Relaxed);
@@ -402,7 +404,7 @@ fn transfer_file_streams(
                             block_idx,
                             offset,
                             digest: 0, // bbcp has no object integrity digest
-                            data: buf,
+                            data: buf.into(),
                         }) {
                             Ok(()) => {
                                 ctr.objects_sent.fetch_add(1, Ordering::Relaxed);

@@ -167,6 +167,29 @@ mod tests {
     }
 
     #[test]
+    fn send_window_adaptive_flag_roundtrips_into_config() {
+        use crate::config::Config;
+        // The way main.rs wires it: --send-window-adaptive is a bare
+        // flag, and the same knob exists as a --set key.
+        let a = Args::parse(
+            &argv(&["transfer", "--send-window", "8", "--send-window-adaptive"]),
+            &["send-window-adaptive"],
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.send_window = a.get_parse("send-window", 1u32).unwrap();
+        cfg.send_window_adaptive = a.flag("send-window-adaptive");
+        assert!(cfg.send_window_adaptive);
+        assert!(cfg.validate().is_ok());
+
+        let mut cfg = Config::default();
+        cfg.apply_kv("send_window_adaptive", "true").unwrap();
+        cfg.apply_kv("send_window", "4").unwrap();
+        assert!(cfg.send_window_adaptive);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
     fn scheduler_typo_error_lists_valid_policies() {
         use crate::sched::SchedPolicy;
         let a = Args::parse(&argv(&["transfer", "--scheduler", "speedy"]), &[]).unwrap();

@@ -62,6 +62,15 @@ pub struct Config {
     /// to min(src, sink) at CONNECT, and legacy peers without the field
     /// read as 1.
     pub send_window: u32,
+    /// Send-window autotuner: when true, the source floats the *applied*
+    /// window in 1..=the negotiated `send_window` — growing when issues
+    /// wait on credits (the window binds), shrinking when the RMA pool
+    /// runs dry (zero-copy pins payload buffers while in flight, so an
+    /// oversized window starves the issue loop's preads). False
+    /// (default) pins the applied window to the negotiated value. The
+    /// wire handshake always carries the cap; adaptation is local to the
+    /// source's issue discipline.
+    pub send_window_adaptive: bool,
     /// Integrity verification backend.
     pub integrity: IntegrityMode,
     /// OST dequeue policy for the source's IO threads (§2.1; see
@@ -104,6 +113,7 @@ impl Default for Config {
             ack_flush_us: 1000,
             ack_adaptive: false,
             send_window: 1,
+            send_window_adaptive: false,
             integrity: IntegrityMode::Native,
             scheduler: SchedPolicy::CongestionAware,
             sink_scheduler: None,
@@ -203,6 +213,7 @@ impl Config {
             "ack_flush_us" => self.ack_flush_us = value.parse()?,
             "ack_adaptive" => self.ack_adaptive = parse_bool(value)?,
             "send_window" => self.send_window = value.parse()?,
+            "send_window_adaptive" => self.send_window_adaptive = parse_bool(value)?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
             "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
             "sink_scheduler" => {
@@ -261,6 +272,10 @@ impl Config {
         anyhow::ensure!(
             !self.ack_adaptive || self.ack_batch > 1,
             "ack_adaptive needs an ack_batch cap > 1 to adapt within"
+        );
+        anyhow::ensure!(
+            !self.send_window_adaptive || self.send_window > 1,
+            "send_window_adaptive needs a send_window cap > 1 to adapt within"
         );
         anyhow::ensure!(
             (1..=self.ost_count).contains(&self.stripe_count),
@@ -377,6 +392,21 @@ mod tests {
         assert!(c.validate().is_ok());
         let mut c = Config::default();
         assert!(c.apply_kv("send_window", "lots").is_err());
+    }
+
+    #[test]
+    fn send_window_adaptive_kv_and_validation() {
+        let mut c = Config::default();
+        assert!(!c.send_window_adaptive, "autotuning must be opt-in");
+        c.apply_kv("send_window_adaptive", "true").unwrap();
+        assert!(c.send_window_adaptive);
+        // Adaptation needs headroom: a cap of 1 leaves nothing to float.
+        assert!(c.validate().is_err());
+        c.apply_kv("send_window", "8").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply_kv("send_window_adaptive", "off").unwrap();
+        assert!(!c.send_window_adaptive);
+        assert!(c.apply_kv("send_window_adaptive", "maybe").is_err());
     }
 
     #[test]

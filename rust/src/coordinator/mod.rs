@@ -73,8 +73,14 @@ pub struct TransferOutcome {
     pub resources: ResourceReport,
     /// Payload bytes that crossed the wire.
     pub payload_bytes: u64,
-    /// RMA reservation stalls at the sink (back-pressure signal).
-    pub rma_stalls: (u64, u64),
+    /// RMA reservation stalls at the source — (count, total ns) of times
+    /// the issue loop found the slot pool dry. With the zero-copy path a
+    /// slot buffer stays pinned until the sink releases the payload, so
+    /// this is the send side's back-pressure signal.
+    pub rma_stalls_src: (u64, u64),
+    /// RMA reservation stalls at the sink — (count, total ns); the §3.1
+    /// buffer-wait back-pressure signal.
+    pub rma_stalls_snk: (u64, u64),
     /// Source read-queue scheduling counters (`cfg.scheduler`).
     pub source_sched: SchedSnapshot,
     /// Sink write-queue scheduling counters (`cfg.sink_scheduler`).
@@ -82,6 +88,10 @@ pub struct TransferOutcome {
     /// The NEW_BLOCK send window negotiated at CONNECT (1 = lockstep
     /// issue, the seed/PR 2 path).
     pub send_window: u32,
+    /// The source's applied send window at session end — equal to the
+    /// negotiated `send_window` in fixed mode, wherever the autotuner's
+    /// grow/shrink feedback settled in `send_window_adaptive` mode.
+    pub send_window_effective: u32,
     /// The sink's effective ack batch at session end — equal to the
     /// negotiated `ack_batch` in fixed mode, wherever the grow/shrink
     /// feedback settled in `ack_adaptive` mode.
@@ -91,6 +101,19 @@ pub struct TransferOutcome {
 impl TransferOutcome {
     pub fn throughput_bytes_per_sec(&self) -> f64 {
         self.payload_bytes as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Total payload memcpys across both sides. The zero-copy data path
+    /// performs exactly one per transferred object (the source `pread`
+    /// into the RMA slot); anything above `objects_sent` means a copy
+    /// crept back onto the hot path.
+    pub fn payload_copies(&self) -> u64 {
+        self.source.payload_copies + self.sink.payload_copies
+    }
+
+    /// Total bytes moved by those copies.
+    pub fn bytes_copied(&self) -> u64 {
+        self.source.bytes_copied + self.sink.bytes_copied
     }
 }
 
@@ -157,10 +180,12 @@ pub fn run_transfer(
         log_space: source_report.log_space,
         resources,
         payload_bytes: src_ep.payload_sent(),
-        rma_stalls: sink_report.rma_stalls,
+        rma_stalls_src: source_report.rma_stalls,
+        rma_stalls_snk: sink_report.rma_stalls,
         source_sched: source_report.sched,
         sink_sched: sink_report.sched,
         send_window: source_report.send_window,
+        send_window_effective: source_report.send_window_effective,
         ack_batch_effective: sink_report.ack_batch_effective,
     })
 }

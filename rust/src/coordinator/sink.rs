@@ -2,15 +2,17 @@
 //! (paper §3.1/Fig 4 with the §5.1 BLOCK_SYNC change).
 //!
 //! - **comm** receives NEW_FILE (running the §5.2.2 metadata match),
-//!   NEW_BLOCK (reserving an RMA slot and "RMA-reading" the payload into
-//!   it; if the pool is dry the request parks with the master), and
-//!   FILE_CLOSE (commit + ack).
+//!   NEW_BLOCK (reserving an RMA slot — the §3.1 bounded-buffer credit;
+//!   if the pool is dry the request parks with the master; the payload
+//!   itself stays refcounted off the transport and is never copied into
+//!   the slot), and FILE_CLOSE (commit + ack).
 //! - **master** sleeps on the RMA pool and requeues parked blocks once a
 //!   slot frees up — the paper's buffer-wait path.
 //! - **IO threads** pull the OST write queue picked by the sink's
 //!   scheduling policy (`cfg.sink_scheduler`/`cfg.scheduler`, default:
 //!   least-congested — see [`crate::sched`]), `pwrite` the object
-//!   (charging the OST model), verify the digest, release the slot, and
+//!   straight from the refcounted payload (zero-copy; charging the OST
+//!   model), verify the digest, release the slot, and
 //!   send BLOCK_SYNC — directly when `ack_batch = 1` (the paper's
 //!   per-object path), or through the **ack coalescer**, which folds up
 //!   to `ack_batch` acknowledgements of a file into one
@@ -40,16 +42,22 @@ use crate::net::{Endpoint, Message, NetError, RmaPool, RmaSlot};
 use crate::pfs::{FileId, Pfs};
 use crate::runtime::RuntimeHandle;
 use crate::sched::{SchedSnapshot, SchedStats, Scheduler};
+use crate::util::bytes::Bytes;
 
-/// One received object awaiting pwrite (+ its RMA slot).
+/// One received object awaiting pwrite.
 struct WriteReq {
     file_idx: u32,
     block_idx: u32,
     fid: FileId,
     offset: u64,
-    len: usize,
     digest: u64,
-    slot: RmaSlot,
+    /// The object payload, refcounted straight off the transport —
+    /// `pwrite` runs from this view, no copy into the slot buffer.
+    payload: Bytes,
+    /// Held for pool accounting only: the §3.1 bounded-buffer credit
+    /// (back-pressure + park/wake path); released on drop after the
+    /// write finishes.
+    _slot: RmaSlot,
 }
 
 struct SnkFile {
@@ -539,10 +547,12 @@ fn handle_new_file(shared: &Arc<Shared>, file_idx: u32, name: &str, size: u64, s
         .send(Message::FileId { file_idx, sink_fd: fid.0, skip: false });
 }
 
-/// Copy the payload into the RMA slot ("RMA read") and queue the write on
-/// the object's OST (§5.1: "determines the appropriate OST by the
-/// object's file offset and queues it on the OST's work queue").
-fn enqueue_block(shared: &Arc<Shared>, msg: Message, mut slot: RmaSlot) {
+/// Queue the received object on its OST write queue (§5.1: "determines
+/// the appropriate OST by the object's file offset and queues it on the
+/// OST's work queue"). The "RMA read" is the refcounted payload handoff
+/// itself — the slot is held purely as the §3.1 bounded-buffer credit,
+/// its buffer untouched; `pwrite` later runs straight from the payload.
+fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot) {
     let Message::NewBlock { file_idx, block_idx, offset, digest, data } = msg else {
         return;
     };
@@ -556,14 +566,11 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, mut slot: RmaSlot) {
             }
         }
     };
-    let buf = slot.buf();
-    buf.clear();
-    buf.extend_from_slice(&data);
     let ost = shared.pfs.layout().ost_for(start_ost, offset);
     shared.sched.on_enqueue(ost);
     shared.queues.push(
         ost,
-        WriteReq { file_idx, block_idx, fid, offset, len: data.len(), digest, slot },
+        WriteReq { file_idx, block_idx, fid, offset, digest, payload: data, _slot: slot },
     );
 }
 
@@ -630,12 +637,24 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
         if shared.is_aborted() {
             break;
         }
-        let len = req.len;
-        let buf = req.slot.buf();
-        // pwrite: the PFS may observe/corrupt the buffer like a DMA would;
+        let len = req.payload.len();
+        // pwrite straight from the refcounted payload. By the time the
+        // write runs, this thread holds the only view on both transports
+        // (the channel moved it, TCP sliced it from a private frame), so
+        // the mutable borrow is in place; a shared view (e.g. a test tap
+        // holding a clone) falls back to ONE counted copy-on-write.
+        if req.payload.try_unique_mut().is_none() {
+            shared.counters.payload_copies.fetch_add(1, Ordering::Relaxed);
+            shared
+                .counters
+                .bytes_copied
+                .fetch_add(len as u64, Ordering::Relaxed);
+        }
+        let buf = req.payload.to_mut();
+        // The PFS may observe/corrupt the buffer like a DMA would;
         // verification below digests the post-write buffer.
         let io_started = std::time::Instant::now();
-        if let Err(e) = shared.pfs.write_at(req.fid, req.offset, &mut buf[..len]) {
+        if let Err(e) = shared.pfs.write_at(req.fid, req.offset, buf) {
             shared.abort_with(format!("pwrite failed: {e}"));
             break;
         }
@@ -649,7 +668,8 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
 
         match shared.integrity {
             IntegrityMode::Pjrt => {
-                // Hand off to the batched PJRT verifier (slot moves along).
+                // Hand off to the batched PJRT verifier (payload + slot
+                // move along).
                 if let Some(tx) = &verify_tx {
                     if tx.send(req).is_err() {
                         shared.abort_with("verifier gone".into());
@@ -660,7 +680,7 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
             }
             IntegrityMode::Native => {
                 let ok = NativeEngine
-                    .digest_batch(&[&req.slot.data()[..len]], shared.padded_words)
+                    .digest_batch(&[req.payload.as_slice()], shared.padded_words)
                     .map(|d| d[0] == Digest::from_u64(req.digest))
                     .unwrap_or(false);
                 finish_block(shared, &req, ok);
@@ -671,7 +691,7 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
                 finish_block(shared, &req, true);
             }
         }
-        // Slot released on req drop.
+        // Slot credit released on req drop.
     }
 }
 
@@ -720,7 +740,7 @@ fn verifier_thread(shared: &Arc<Shared>, engine: PjrtEngine, rx: mpsc::Receiver<
             }
         }
 
-        let objects: Vec<&[u8]> = batch.iter().map(|r| &r.slot.data()[..r.len]).collect();
+        let objects: Vec<&[u8]> = batch.iter().map(|r| r.payload.as_slice()).collect();
         match engine.digest_batch(&objects, shared.padded_words) {
             Ok(digests) => {
                 for (req, d) in batch.drain(..).zip(digests) {

@@ -7,14 +7,20 @@
 //! - **IO threads** pull from the OST queue the configured scheduling
 //!   policy picks (`cfg.scheduler`, default: least-congested — see
 //!   [`crate::sched`]), reserve an RMA slot, `pread` the object from the
-//!   PFS (charging the OST model), digest it, and hand it to the wire as
-//!   NEW_BLOCK. With a negotiated `send_window > 1` the issue loop is
-//!   *credit-based* (`SendWindow`): the slot is released before the
-//!   wire serialization and up to `send_window` un-acknowledged
-//!   NEW_BLOCKs ride per connection, credits replenished as
-//!   BLOCK_SYNC/BLOCK_SYNC_BATCH acks arrive; `send_window = 1` (the
-//!   default, and the legacy/PR 2 negotiation fallback) keeps the exact
-//!   lockstep issue-and-wait path around the RMA slot pool.
+//!   PFS (charging the OST model — the data path's ONE payload copy),
+//!   freeze the slot into refcounted [`Bytes`] and hand it to the wire
+//!   as NEW_BLOCK with zero further copies; the buffer returns to the
+//!   pool when the sink drops the last reference, like a registered RMA
+//!   region. With a negotiated `send_window > 1` the issue loop is
+//!   *credit-based* (`SendWindow`): up to the applied window of
+//!   un-acknowledged NEW_BLOCKs ride per connection, credits
+//!   replenished as BLOCK_SYNC/BLOCK_SYNC_BATCH acks arrive;
+//!   `send_window = 1` (the default, and the legacy/PR 2 negotiation
+//!   fallback) keeps the lockstep issue-and-wait discipline. With
+//!   `send_window_adaptive` the applied window floats in
+//!   1..=negotiated: credit waits grow it, RMA-pool stalls shrink it
+//!   (pinned zero-copy payloads starve preads when the window outruns
+//!   the pool).
 //! - **comm** owns the receive side: routes FILE_ID / FILE_CLOSE_ACK to
 //!   the master and handles BLOCK_SYNC / BLOCK_SYNC_BATCH — *synchronous
 //!   logging* in the comm thread's context (§5.1), group-committed when
@@ -72,43 +78,68 @@ enum MasterEvent {
 
 /// Credit-based NEW_BLOCK send window (one per connection).
 ///
-/// Armed once after the CONNECT handshake with the negotiated window.
-/// `max <= 1` disables the gate entirely — the legacy lockstep path is
-/// taken and no credit accounting happens. Otherwise each NEW_BLOCK
-/// consumes one credit before it goes on the wire and the comm thread
-/// returns credits as BLOCK_SYNC / BLOCK_SYNC_BATCH acknowledgements
-/// arrive (capped at `max`, so duplicate acks after a resume can never
+/// Armed once after the CONNECT handshake with the negotiated window
+/// cap. `max <= 1` disables the gate entirely — the legacy lockstep path
+/// is taken and no credit accounting happens. Otherwise each NEW_BLOCK
+/// takes one in-flight slot before it goes on the wire and the comm
+/// thread returns them as BLOCK_SYNC / BLOCK_SYNC_BATCH acknowledgements
+/// arrive (floored at 0, so duplicate acks after a resume can never
 /// overfill the window).
+///
+/// With `adaptive` on (`Config::send_window_adaptive`), the *applied*
+/// window `eff` floats in 1..=`max`, mirroring the sink's adaptive ack
+/// coalescer: an issue that had to wait on a credit doubles it (the
+/// window is the binding constraint), a dry RMA pool halves it (zero-copy
+/// pins payload buffers while un-acked, so a window wider than the pool
+/// starves the issue loop's preads). Both movements are atomic RMWs —
+/// IO threads race on `eff` and a lost update would erase a feedback
+/// step.
 struct SendWindow {
-    /// Negotiated window size; read once by the IO threads after arming.
+    /// Negotiated window cap; read once by the IO threads after arming.
     max: AtomicU32,
-    credits: Mutex<u32>,
+    /// Applied window (== `max` unless the autotuner floats it).
+    eff: AtomicU32,
+    /// Grow/shrink `eff` from issue-loop feedback.
+    adaptive: bool,
+    /// NEW_BLOCKs currently on the wire and un-acknowledged.
+    inflight: Mutex<u32>,
     available: Condvar,
 }
 
 impl SendWindow {
-    fn new() -> SendWindow {
+    fn new(adaptive: bool) -> SendWindow {
         SendWindow {
             max: AtomicU32::new(1),
-            credits: Mutex::new(1),
+            eff: AtomicU32::new(1),
+            adaptive,
+            inflight: Mutex::new(0),
             available: Condvar::new(),
         }
     }
 
-    /// Set the negotiated window and grant the full credit line. Called
-    /// between the handshake and the IO-thread spawn, so every issue-loop
-    /// thread observes the final value.
+    /// Set the negotiated window cap. Called between the handshake and
+    /// the IO-thread spawn, so every issue-loop thread observes the
+    /// final value. The adaptive applied window starts at the floor and
+    /// earns its way up, like the sink's ack coalescer; fixed mode pins
+    /// it to the cap.
     fn arm(&self, window: u32) {
         let window = window.max(1);
         self.max.store(window, Ordering::SeqCst);
-        let mut credits = self.credits.lock().unwrap_or_else(|e| e.into_inner());
-        *credits = window;
-        drop(credits);
+        self.eff.store(
+            if self.adaptive && window > 1 { 1 } else { window },
+            Ordering::SeqCst,
+        );
         self.available.notify_all();
     }
 
     fn window(&self) -> u32 {
         self.max.load(Ordering::SeqCst)
+    }
+
+    /// The applied window: where the autotuner currently sits (== the
+    /// negotiated cap in fixed mode).
+    fn effective(&self) -> u32 {
+        self.eff.load(Ordering::SeqCst)
     }
 
     /// Windowing is a no-op at `send_window = 1`: the issue loop runs the
@@ -117,51 +148,97 @@ impl SendWindow {
         self.window() > 1
     }
 
-    /// Take one credit without blocking; false when the window is full of
-    /// un-acknowledged blocks.
+    /// Take one in-flight slot without blocking; false when the applied
+    /// window is full of un-acknowledged blocks.
     fn try_acquire(&self) -> bool {
-        let mut credits = self.credits.lock().unwrap_or_else(|e| e.into_inner());
-        if *credits > 0 {
-            *credits -= 1;
+        let mut inflight = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+        if *inflight < self.effective() {
+            *inflight += 1;
             true
         } else {
             false
         }
     }
 
-    /// Wait up to `timeout` for a credit (the stall path; callers loop
-    /// with a short tick so aborts interrupt the wait).
+    /// Wait up to `timeout` for an in-flight slot (the stall path;
+    /// callers loop with a short tick so aborts interrupt the wait). The
+    /// applied window is re-read every pass, so an autotuner grow
+    /// unblocks waiters immediately.
     fn acquire_timeout(&self, timeout: Duration) -> bool {
         let deadline = std::time::Instant::now() + timeout;
-        let mut credits = self.credits.lock().unwrap_or_else(|e| e.into_inner());
-        while *credits == 0 {
+        let mut inflight = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+        while *inflight >= self.effective() {
             let now = std::time::Instant::now();
             if now >= deadline {
                 return false;
             }
             let (guard, res) = self
                 .available
-                .wait_timeout(credits, deadline - now)
+                .wait_timeout(inflight, deadline - now)
                 .unwrap_or_else(|e| e.into_inner());
-            credits = guard;
-            if res.timed_out() && *credits == 0 {
+            inflight = guard;
+            if res.timed_out() && *inflight >= self.effective() {
                 return false;
             }
         }
-        *credits -= 1;
+        *inflight += 1;
         true
     }
 
-    /// Return `n` credits (acks arrived), saturating at the window size.
+    /// Return `n` in-flight slots (acks arrived), floored at 0.
     fn release(&self, n: u32) {
         if n == 0 || !self.enabled() {
             return;
         }
-        let max = self.window();
-        let mut credits = self.credits.lock().unwrap_or_else(|e| e.into_inner());
-        *credits = credits.saturating_add(n).min(max);
-        drop(credits);
+        let mut inflight = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+        *inflight = inflight.saturating_sub(n);
+        drop(inflight);
         self.available.notify_all();
+    }
+
+    /// An issue had to wait on a credit: the window is what binds —
+    /// double the applied window toward the cap.
+    fn feedback_grow(&self, counters: &Counters) {
+        if !self.adaptive {
+            return;
+        }
+        let cap = self.window();
+        let grown = self.eff.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |eff| {
+            if eff < cap {
+                Some(eff.saturating_mul(2).min(cap))
+            } else {
+                None
+            }
+        });
+        if grown.is_ok() {
+            counters.send_window_grows.fetch_add(1, Ordering::Relaxed);
+            // Waiters gate on the applied window; a grow widens it.
+            // Notify while holding the inflight lock: a waiter that just
+            // evaluated the old window under the lock either re-checks
+            // after we release it or is already parked and receives this
+            // wakeup — without the lock it could park right past the
+            // notification and sleep out its full tick.
+            let _guard = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+            self.available.notify_all();
+        }
+    }
+
+    /// The RMA pool ran dry: in-flight zero-copy payloads are pinning
+    /// buffers the issue loop needs — halve the applied window.
+    fn feedback_shrink(&self, counters: &Counters) {
+        if !self.adaptive {
+            return;
+        }
+        let shrunk = self.eff.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |eff| {
+            if eff > 1 {
+                Some((eff / 2).max(1))
+            } else {
+                None
+            }
+        });
+        if shrunk.is_ok() {
+            counters.send_window_shrinks.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -214,6 +291,14 @@ pub struct SourceReport {
     /// The NEW_BLOCK send window actually negotiated at CONNECT (1 = the
     /// lockstep issue path; also the legacy-peer fallback).
     pub send_window: u32,
+    /// The applied send window at session end: the negotiated cap in
+    /// fixed mode, wherever the autotuner's grow/shrink feedback left it
+    /// in `send_window_adaptive` mode.
+    pub send_window_effective: u32,
+    /// (count, total ns) of source-side RMA reservation stalls — the
+    /// issue loop found the slot pool dry (with zero-copy, buffers stay
+    /// pinned until the sink releases the payload).
+    pub rma_stalls: (u64, u64),
 }
 
 /// Run the source node to completion/fault. Blocks the calling thread
@@ -233,7 +318,7 @@ pub fn run_source(
         sched: cfg.scheduler.build(cfg.ost_count),
         sched_stats: SchedStats::default(),
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
-        window: SendWindow::new(),
+        window: SendWindow::new(cfg.send_window_adaptive),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
         logger: Mutex::new(logger),
@@ -312,6 +397,8 @@ pub fn run_source(
         files_done,
         sched: shared.sched_stats.snapshot(),
         send_window: shared.window.window(),
+        send_window_effective: shared.window.effective(),
+        rma_stalls: shared.rma.stall_stats(),
     })
 }
 
@@ -324,6 +411,8 @@ fn report_with_fault(shared: &Shared, msg: String, files_done: u64) -> SourceRep
         files_done,
         sched: shared.sched_stats.snapshot(),
         send_window: shared.window.window(),
+        send_window_effective: shared.window.effective(),
+        rma_stalls: shared.rma.stall_stats(),
     }
 }
 
@@ -517,23 +606,32 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
     shared.queues.push_batch(batch);
 }
 
-/// IO thread: policy-picked OST dequeue → RMA reserve → pread → digest
-/// → NEW_BLOCK.
+/// IO thread: policy-picked OST dequeue → RMA reserve → pread → freeze →
+/// digest → NEW_BLOCK.
+///
+/// The `pread` into the RMA slot is the data path's ONE payload copy
+/// (`Counters::payload_copies`); the slot is then frozen into refcounted
+/// [`Bytes`] and everything downstream — wire serialization, the peer's
+/// `pwrite` — runs off that buffer. It returns to the pool when the last
+/// reference drops, i.e. once the sink has written and released it,
+/// exactly like an RMA-registered region stays pinned until the remote
+/// read completes.
 ///
 /// Two issue disciplines, selected by the negotiated send window:
 ///
-/// - **lockstep** (`send_window = 1`, the PR 2/legacy path, reproduced
-///   exactly): the RMA slot is held across the wire serialization and
-///   released only after the send returns.
-/// - **windowed** (`send_window > 1`): the payload is copied into the
-///   NEW_BLOCK before the send, so the slot is released as soon as the
-///   read+digest finish and the next pread can stage while this block
-///   serializes; the send itself is gated on a [`SendWindow`] credit,
-///   bounding un-acknowledged blocks in flight per connection.
+/// - **lockstep** (`send_window = 1`, the legacy/PR 2 negotiation
+///   fallback): issue-and-wait — the send is not gated and the pool
+///   bounds what is in flight.
+/// - **windowed** (`send_window > 1`): the send is gated on a
+///   [`SendWindow`] in-flight slot, bounding un-acknowledged blocks per
+///   connection; with `send_window_adaptive` the applied window floats
+///   from issue-loop feedback.
 ///
 /// A failed *first* slot reservation counts as one issue-loop stall in
-/// `Counters::send_stalls`; a failed first credit grab counts in
-/// `Counters::credit_waits` (back-pressure, not slot starvation).
+/// `Counters::send_stalls` (and, in adaptive mode, shrinks the applied
+/// window — in-flight payloads pin pool buffers); a failed first credit
+/// grab counts in `Counters::credit_waits` (back-pressure, not slot
+/// starvation; in adaptive mode it grows the applied window).
 fn io_thread(shared: &Arc<Shared>) {
     let osts = shared.pfs.ost_model();
     let windowed = shared.window.enabled();
@@ -550,6 +648,7 @@ fn io_thread(shared: &Arc<Shared>) {
             Some(s) => Some(s),
             None => {
                 shared.counters.send_stalls.fetch_add(1, Ordering::Relaxed);
+                shared.window.feedback_shrink(&shared.counters);
                 loop {
                     match shared.rma.reserve_timeout(Duration::from_millis(50)) {
                         Some(s) => break Some(s),
@@ -575,6 +674,13 @@ fn io_thread(shared: &Arc<Shared>) {
                 let service = io_started.elapsed();
                 shared.sched.on_complete(ost, service);
                 shared.sched_stats.record_complete(service);
+                // The staging pread is the zero-copy path's single
+                // payload copy per object.
+                shared.counters.payload_copies.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .counters
+                    .bytes_copied
+                    .fetch_add(req.len as u64, Ordering::Relaxed);
             }
             Ok(n) => {
                 shared.abort_with(format!(
@@ -589,13 +695,17 @@ fn io_thread(shared: &Arc<Shared>) {
             }
         }
 
+        // Freeze the slot into the refcounted payload: no copy, and the
+        // buffer stays registered (out of the pool) until the sink
+        // releases its view.
+        let payload = slot.take().expect("slot present until freeze").freeze();
+
         let digest = match shared.integrity {
             IntegrityMode::Off => 0u64,
             // Send-side digests are always computed natively — they must
             // exist *before* the object leaves the node; the sink side is
             // where the batched PJRT verify runs (see sink::verifier).
-            _ => integrity::digest_bytes_padded(slot_ref.data(), shared.padded_words)
-                .as_u64(),
+            _ => integrity::digest_bytes_padded(&payload, shared.padded_words).as_u64(),
         };
 
         let msg = Message::NewBlock {
@@ -603,15 +713,13 @@ fn io_thread(shared: &Arc<Shared>) {
             block_idx: req.block_idx,
             offset: req.offset,
             digest,
-            data: slot_ref.data().to_vec(),
+            data: payload,
         };
         if windowed {
-            // Pipelined issue: the payload is already copied out, so free
-            // the RMA slot for the next pread before this block pays the
-            // wire serialization, and gate the send on a window credit.
-            drop(slot.take());
+            // Gate the send on an in-flight slot of the applied window.
             if !shared.window.try_acquire() {
                 shared.counters.credit_waits.fetch_add(1, Ordering::Relaxed);
+                shared.window.feedback_grow(&shared.counters);
                 let mut granted = false;
                 while !shared.is_aborted() && !shared.done.load(Ordering::SeqCst) {
                     if shared.window.acquire_timeout(Duration::from_millis(50)) {
@@ -641,8 +749,6 @@ fn io_thread(shared: &Arc<Shared>) {
                 break;
             }
         }
-        // Lockstep path: the slot drops here -> released for the next
-        // read (the windowed path already released it pre-send).
     }
 }
 

@@ -35,7 +35,7 @@ use ftlads::sched::SchedPolicy;
 use ftlads::util::{fmt_bytes, fmt_duration};
 use ftlads::workload::{self, Workload};
 
-const FLAGS: [&str; 4] = ["resume", "verbose", "json", "ack-adaptive"];
+const FLAGS: [&str; 5] = ["resume", "verbose", "json", "ack-adaptive", "send-window-adaptive"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -87,6 +87,9 @@ fn print_usage() {
            --send-window N                               un-acked NEW_BLOCKs kept in\n\
                                                          flight per connection (1 =\n\
                                                          lockstep issue-and-wait)\n\
+           --send-window-adaptive                        float the applied window in\n\
+                                                         1..=send_window from stall/\n\
+                                                         credit-wait feedback\n\
            --workload big|small|mixed  --files N  --file-size BYTES\n\
            --fault FRAC [--fault-side source|sink]       inject fault at FRAC\n\
            --resume                                      resume per FT logs\n\
@@ -144,6 +147,9 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(v) = args.get("send-window") {
         cfg.send_window = v.parse().context("--send-window")?;
+    }
+    if args.flag("send-window-adaptive") {
+        cfg.send_window_adaptive = true;
     }
     if let Some(v) = args.get("object-size") {
         cfg.object_size = parse_bytes(v)?;
@@ -246,11 +252,28 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         m.insert("ack_messages".into(), Json::Num(out.sink.ack_messages as f64));
         m.insert("log_writes".into(), Json::Num(out.source.log_writes as f64));
         m.insert("send_window".into(), Json::Num(out.send_window as f64));
+        m.insert(
+            "send_window_effective".into(),
+            Json::Num(out.send_window_effective as f64),
+        );
         m.insert("send_stalls".into(), Json::Num(out.source.send_stalls as f64));
         m.insert("credit_waits".into(), Json::Num(out.source.credit_waits as f64));
         m.insert(
             "ack_batch_effective".into(),
             Json::Num(out.ack_batch_effective as f64),
+        );
+        m.insert(
+            "payload_copies".into(),
+            Json::Num(out.payload_copies() as f64),
+        );
+        m.insert("bytes_copied".into(), Json::Num(out.bytes_copied() as f64));
+        m.insert(
+            "rma_stalls_src".into(),
+            Json::Num(out.rma_stalls_src.0 as f64),
+        );
+        m.insert(
+            "rma_stalls_snk".into(),
+            Json::Num(out.rma_stalls_snk.0 as f64),
         );
         m.insert(
             "sched_picks_source".into(),
@@ -310,14 +333,23 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         out.sink.ack_messages, out.source.log_writes
     );
     println!(
-        "  send path        : window {}  {} slot stalls  {} credit waits  \
-         eff ack batch {} ({}+ {}-)",
+        "  send path        : window {} (eff {}, {}+ {}-)  {} slot stalls  \
+         {} credit waits  eff ack batch {} ({}+ {}-)",
         out.send_window,
+        out.send_window_effective,
+        out.source.send_window_grows,
+        out.source.send_window_shrinks,
         out.source.send_stalls,
         out.source.credit_waits,
         out.ack_batch_effective,
         out.sink.ack_batch_grows,
         out.sink.ack_batch_shrinks
+    );
+    println!(
+        "  zero-copy        : {} payload copies ({}) — pread-into-slot only \
+         on the clean path",
+        out.payload_copies(),
+        fmt_bytes(out.bytes_copied())
     );
     println!(
         "  sched (source)   : {} picks ({} fallback)  avg pick {:.0} ns  avg service {:.1} µs",
@@ -334,9 +366,11 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         out.sink_sched.avg_service_us()
     );
     println!(
-        "  rma stalls(sink) : {} ({} ms waiting)",
-        out.rma_stalls.0,
-        out.rma_stalls.1 / 1_000_000
+        "  rma stalls       : src {} ({} ms waiting)  snk {} ({} ms waiting)",
+        out.rma_stalls_src.0,
+        out.rma_stalls_src.1 / 1_000_000,
+        out.rma_stalls_snk.0,
+        out.rma_stalls_snk.1 / 1_000_000
     );
 }
 

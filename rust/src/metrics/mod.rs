@@ -44,6 +44,21 @@ pub struct Counters {
     /// fired on a partial batch).
     pub ack_batch_grows: AtomicU64,
     pub ack_batch_shrinks: AtomicU64,
+    /// Payload memcpys on the data path. The zero-copy pipeline performs
+    /// exactly ONE per object — the `pread` that stages it into the RMA
+    /// slot (source side); everything after rides refcounted `Bytes` to
+    /// the wire and the sink's `pwrite`. A sink-side count means the
+    /// copy-on-write fallback fired (shared payload at write time) —
+    /// a regression on the hot path.
+    pub payload_copies: AtomicU64,
+    /// Bytes moved by those copies (`payload_copies` weighted by size).
+    pub bytes_copied: AtomicU64,
+    /// Send-window autotuner (source side, `send_window_adaptive`):
+    /// applied-window growth steps (an issue had to wait on a credit —
+    /// the window is the binding constraint) and shrink steps (the RMA
+    /// pool ran dry — pinned payloads are starving the issue loop).
+    pub send_window_grows: AtomicU64,
+    pub send_window_shrinks: AtomicU64,
 }
 
 impl Counters {
@@ -65,6 +80,10 @@ impl Counters {
             credit_waits: self.credit_waits.load(Ordering::Relaxed),
             ack_batch_grows: self.ack_batch_grows.load(Ordering::Relaxed),
             ack_batch_shrinks: self.ack_batch_shrinks.load(Ordering::Relaxed),
+            payload_copies: self.payload_copies.load(Ordering::Relaxed),
+            bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
+            send_window_grows: self.send_window_grows.load(Ordering::Relaxed),
+            send_window_shrinks: self.send_window_shrinks.load(Ordering::Relaxed),
         }
     }
 }
@@ -87,6 +106,10 @@ pub struct CounterSnapshot {
     pub credit_waits: u64,
     pub ack_batch_grows: u64,
     pub ack_batch_shrinks: u64,
+    pub payload_copies: u64,
+    pub bytes_copied: u64,
+    pub send_window_grows: u64,
+    pub send_window_shrinks: u64,
 }
 
 /// One `/proc/self` sample.

@@ -2,10 +2,12 @@
 //! a modeled wire (latency + bandwidth) and fault-controller hooks.
 //!
 //! This is the Verbs-like path: messages move as structured values with
-//! zero-copy buffer handoff (the `Vec<u8>` in NEW_BLOCK changes owner, no
-//! serialization), mirroring how CCI's RMA hands a registered buffer to
-//! the peer. The modeled wire charges serialization time proportional to
-//! payload size so bandwidth-bound behaviour is preserved.
+//! zero-copy buffer handoff (the refcounted `Bytes` in NEW_BLOCK passes
+//! by refcount — the receiver's view IS the sender's registered RMA
+//! buffer, which returns to its pool when the sink drops the last ref),
+//! mirroring how CCI's RMA hands a registered buffer to the peer. The
+//! modeled wire charges serialization time proportional to payload size
+//! so bandwidth-bound behaviour is preserved.
 
 use std::sync::mpsc;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -154,6 +156,30 @@ mod tests {
     }
 
     #[test]
+    fn payload_passes_by_refcount_not_copy() {
+        // The receiver's payload view is the sender's buffer: same
+        // allocation, zero bytes moved in transit.
+        let (src, sink) = fast_pair();
+        let payload = crate::util::bytes::Bytes::from_vec((0..100u8).collect());
+        let sent_ptr = payload.as_slice().as_ptr() as usize;
+        src.send(Message::NewBlock {
+            file_idx: 0,
+            block_idx: 0,
+            offset: 0,
+            digest: 0,
+            data: payload,
+        })
+        .unwrap();
+        match sink.recv().unwrap() {
+            Message::NewBlock { data, .. } => {
+                assert_eq!(data.as_slice().as_ptr() as usize, sent_ptr);
+                assert_eq!(data, (0..100u8).collect::<Vec<_>>());
+            }
+            m => panic!("unexpected {m:?}"),
+        }
+    }
+
+    #[test]
     fn messages_preserve_order() {
         let (src, sink) = fast_pair();
         for i in 0..100 {
@@ -194,7 +220,7 @@ mod tests {
             block_idx: n,
             offset: 0,
             digest: 0,
-            data: vec![0; 60],
+            data: vec![0; 60].into(),
         };
         src.send(block(0)).unwrap(); // 60 bytes: under threshold
         assert!(matches!(src.send(block(1)), Err(NetError::Fault(_)))); // 120
@@ -239,7 +265,7 @@ mod tests {
             block_idx: 0,
             offset: 0,
             digest: 0,
-            data: vec![0; 50_000], // 50 ms at 1 MB/s
+            data: vec![0; 50_000].into(), // 50 ms at 1 MB/s
         })
         .unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(45));

@@ -9,8 +9,19 @@
 //! A hand-rolled binary codec (offline env has no serde): little-endian
 //! fixed-width fields, u32-length-prefixed strings/blobs, one type byte.
 //! The codec is exercised by round-trip property tests.
+//!
+//! Zero-copy payloads: NEW_BLOCK's object data is a refcounted
+//! [`Bytes`], so moving a message between threads or endpoints never
+//! copies the payload. [`Message::encode_header`] emits everything *up
+//! to* the payload and hands the payload back by reference, letting
+//! scatter/gather transports put it on the wire straight from the RMA
+//! buffer; [`Message::decode_frame`] slices the payload out of a
+//! received frame refcounted. `encode`/`decode` remain the contiguous
+//! forms (identical wire bytes — the split is representation only).
 
 use anyhow::{bail, Result};
+
+use crate::util::bytes::Bytes;
 
 /// Digest carried in NEW_BLOCK headers, packed `[A | B<<32]`.
 pub type WireDigest = u64;
@@ -51,15 +62,16 @@ pub enum Message {
     /// Sink → source: file opened, here is the sink fd; or `skip` when the
     /// resume metadata matched a committed file.
     FileId { file_idx: u32, sink_fd: u64, skip: bool },
-    /// Source → sink: one object. Data rides along (the RMA-read emulation
-    /// hands the receiver this buffer); `digest` is the source-side
+    /// Source → sink: one object. Data rides along refcounted (the
+    /// RMA-read emulation hands the receiver a view of the sender's
+    /// registered buffer — no copy); `digest` is the source-side
     /// integrity digest (0 when integrity is off).
     NewBlock {
         file_idx: u32,
         block_idx: u32,
         offset: u64,
         digest: WireDigest,
-        data: Vec<u8>,
+        data: Bytes,
     },
     /// Sink → source: object written (and verified) at the sink PFS.
     /// `ok = false` reports a failed/corrupted write; the source must
@@ -115,8 +127,32 @@ impl Message {
         }
     }
 
-    /// Encode into `out` (appends; does not clear).
+    /// The payload riding this message, if any (NEW_BLOCK's object
+    /// data) — a refcounted view, never a copy.
+    pub fn payload(&self) -> Option<&Bytes> {
+        match self {
+            Message::NewBlock { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// Encode into `out` (appends; does not clear). Contiguous form:
+    /// header followed by the payload bytes — byte-identical to
+    /// [`encode_header`](Message::encode_header) + payload.
     pub fn encode(&self, out: &mut Vec<u8>) {
+        let payload = self.encode_header(out);
+        if let Some(p) = payload {
+            out.extend_from_slice(p);
+        }
+    }
+
+    /// Encode everything *up to* the payload into `out` and return the
+    /// payload (if any) that must follow it on the wire. Scatter/gather
+    /// transports reuse one header scratch buffer per connection and
+    /// write the payload from its own (RMA) buffer — zero per-message
+    /// frame allocation, zero payload copies. Wire bytes are identical
+    /// to [`encode`](Message::encode).
+    pub fn encode_header<'a>(&'a self, out: &mut Vec<u8>) -> Option<&'a Bytes> {
         match self {
             Message::Connect { max_object_size, rma_slots, resume, ack_batch, send_window } => {
                 out.push(T_CONNECT);
@@ -158,7 +194,7 @@ impl Message {
                 put_u64(out, *offset);
                 put_u64(out, *digest);
                 put_u32(out, data.len() as u32);
-                out.extend_from_slice(data);
+                return Some(data);
             }
             Message::BlockSync { file_idx, block_idx, ok } => {
                 out.push(T_BLOCK_SYNC);
@@ -185,11 +221,26 @@ impl Message {
             }
             Message::Bye => out.push(T_BYE),
         }
+        None
     }
 
     /// Decode one message from `buf` (must contain exactly one message).
+    /// The payload, if any, is copied out of `buf`; receive paths that
+    /// own their frame use [`decode_frame`](Message::decode_frame) to
+    /// slice it refcounted instead.
     pub fn decode(buf: &[u8]) -> Result<Message> {
-        let mut r = Reader { buf, pos: 0 };
+        Self::decode_inner(buf, None)
+    }
+
+    /// Decode one message from an owned `frame`, slicing the payload out
+    /// refcounted — the frame's buffer stays alive behind the payload
+    /// view and no payload bytes are copied.
+    pub fn decode_frame(frame: &Bytes) -> Result<Message> {
+        Self::decode_inner(frame.as_slice(), Some(frame))
+    }
+
+    fn decode_inner(buf: &[u8], frame: Option<&Bytes>) -> Result<Message> {
+        let mut r = Reader { buf, frame, pos: 0 };
         let msg = r.message()?;
         if r.pos != buf.len() {
             bail!("trailing bytes after message ({} of {})", r.pos, buf.len());
@@ -213,6 +264,10 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 
 struct Reader<'a> {
     buf: &'a [u8],
+    /// When decoding an owned frame, the refcounted whole-frame view —
+    /// payloads are sliced out of it instead of copied. Invariant:
+    /// `frame.as_slice()` and `buf` are the same region.
+    frame: Option<&'a Bytes>,
     pos: usize,
 }
 
@@ -260,6 +315,17 @@ impl<'a> Reader<'a> {
         }
     }
 
+    /// Consume `len` payload bytes: a refcounted slice of the frame when
+    /// one backs this reader, a copy otherwise.
+    fn payload(&mut self, len: usize) -> Result<Bytes> {
+        let start = self.pos;
+        let raw = self.take(len)?;
+        Ok(match self.frame {
+            Some(f) => f.slice(start..start + len),
+            None => Bytes::copy_from_slice(raw),
+        })
+    }
+
     fn message(&mut self) -> Result<Message> {
         Ok(match self.u8()? {
             T_CONNECT => Message::Connect {
@@ -300,7 +366,7 @@ impl<'a> Reader<'a> {
                 if len > 256 * 1024 * 1024 {
                     bail!("block of {len} bytes exceeds sanity cap");
                 }
-                let data = self.take(len)?.to_vec();
+                let data = self.payload(len)?;
                 Message::NewBlock { file_idx, block_idx, offset, digest, data }
             }
             T_BLOCK_SYNC => Message::BlockSync {
@@ -390,7 +456,7 @@ mod tests {
             block_idx: 0,
             offset: 0,
             digest: 0,
-            data: vec![],
+            data: Bytes::new(),
         });
     }
 
@@ -401,10 +467,123 @@ mod tests {
             block_idx: 0,
             offset: 0,
             digest: 0,
-            data: vec![0; 100],
+            data: vec![0; 100].into(),
         };
         assert_eq!(m.payload_len(), 100);
+        assert_eq!(m.payload().unwrap().len(), 100);
         assert_eq!(Message::Bye.payload_len(), 0);
+        assert!(Message::Bye.payload().is_none());
+    }
+
+    /// Reference encoding of a NEW_BLOCK, built by hand field by field —
+    /// the layout pin the zero-copy representation change must not move.
+    fn reference_new_block_bytes(
+        file_idx: u32,
+        block_idx: u32,
+        offset: u64,
+        digest: u64,
+        payload: &[u8],
+    ) -> Vec<u8> {
+        let mut buf = vec![T_NEW_BLOCK];
+        buf.extend_from_slice(&file_idx.to_le_bytes());
+        buf.extend_from_slice(&block_idx.to_le_bytes());
+        buf.extend_from_slice(&offset.to_le_bytes());
+        buf.extend_from_slice(&digest.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(payload);
+        buf
+    }
+
+    #[test]
+    fn new_block_wire_bytes_are_pinned() {
+        let payload: Vec<u8> = (0..200u32).map(|i| (i * 13) as u8).collect();
+        let expect = reference_new_block_bytes(7, 42, 42 << 16, 0xfeed_f00d, &payload);
+
+        // Owned-vec payload.
+        let mut buf = Vec::new();
+        Message::NewBlock {
+            file_idx: 7,
+            block_idx: 42,
+            offset: 42 << 16,
+            digest: 0xfeed_f00d,
+            data: payload.clone().into(),
+        }
+        .encode(&mut buf);
+        assert_eq!(buf, expect);
+
+        // A refcounted *slice* of a larger buffer encodes identically:
+        // the wire depends only on the logical view.
+        let mut big = vec![0xAAu8; 64];
+        big.extend_from_slice(&payload);
+        big.extend_from_slice(&[0xBB; 64]);
+        let sliced = Bytes::from_vec(big).slice(64..64 + payload.len());
+        let mut buf2 = Vec::new();
+        Message::NewBlock {
+            file_idx: 7,
+            block_idx: 42,
+            offset: 42 << 16,
+            digest: 0xfeed_f00d,
+            data: sliced,
+        }
+        .encode(&mut buf2);
+        assert_eq!(buf2, expect);
+    }
+
+    #[test]
+    fn encode_header_plus_payload_equals_encode() {
+        let msg = Message::NewBlock {
+            file_idx: 1,
+            block_idx: 2,
+            offset: 3,
+            digest: 4,
+            data: (0..64u8).collect(),
+        };
+        let mut whole = Vec::new();
+        msg.encode(&mut whole);
+        let mut header = Vec::new();
+        let payload = msg.encode_header(&mut header).expect("NEW_BLOCK has a payload");
+        header.extend_from_slice(payload);
+        assert_eq!(header, whole);
+
+        // Control messages: header IS the whole message.
+        let mut header = Vec::new();
+        assert!(Message::Bye.encode_header(&mut header).is_none());
+        let mut whole = Vec::new();
+        Message::Bye.encode(&mut whole);
+        assert_eq!(header, whole);
+    }
+
+    #[test]
+    fn decode_frame_slices_payload_zero_copy() {
+        let msg = Message::NewBlock {
+            file_idx: 9,
+            block_idx: 1,
+            offset: 1 << 20,
+            digest: 5,
+            data: (0..128u8).collect(),
+        };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        let frame = Bytes::from_vec(buf);
+        let frame_ptr = frame.as_slice().as_ptr() as usize;
+        let back = Message::decode_frame(&frame).unwrap();
+        assert_eq!(back, msg);
+        let Message::NewBlock { data, .. } = back else { panic!("wrong variant") };
+        // The decoded payload points INTO the frame buffer: header is
+        // 1 + 4 + 4 + 8 + 8 + 4 = 29 bytes, payload starts right after.
+        assert_eq!(data.as_slice().as_ptr() as usize, frame_ptr + 29);
+        // The frame stays alive behind the payload even after we drop
+        // our handle on it.
+        drop(frame);
+        assert_eq!(data, (0..128u8).collect::<Vec<_>>());
+
+        // decode_frame matches decode on every other variant too.
+        let mut buf = Vec::new();
+        Message::FileClose { file_idx: 3 }.encode(&mut buf);
+        assert_eq!(
+            Message::decode_frame(&Bytes::from_vec(buf.clone())).unwrap(),
+            Message::decode(&buf).unwrap()
+        );
     }
 
     #[test]

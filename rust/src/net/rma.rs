@@ -10,14 +10,23 @@
 //! The pool hands out real reusable `Vec<u8>` buffers (so the data path
 //! exercises actual memory traffic) and tracks reservation stalls — the
 //! back-pressure signal the figures' CPU/memory analysis cares about.
+//!
+//! Zero-copy handoff: [`RmaSlot::freeze`] turns a filled slot into a
+//! refcounted [`Bytes`] without copying. The buffer stays out of the
+//! pool for as long as any view of it is alive (it is "registered" for
+//! the duration of the transfer, like a real RMA region) and returns
+//! automatically when the last reference drops — so slot-hold accounting
+//! in the issue loop is decoupled from payload lifetime on the wire.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::bytes::{Bytes, BytesOwner};
 
 /// A reserved slot; returns its buffer to the pool on drop.
 pub struct RmaSlot {
-    pool: std::sync::Arc<RmaPoolInner>,
+    pool: Arc<RmaPoolInner>,
     buf: Option<Vec<u8>>,
     pub slot_bytes: usize,
 }
@@ -29,6 +38,45 @@ impl RmaSlot {
 
     pub fn data(&self) -> &[u8] {
         self.buf.as_ref().expect("slot buffer present until drop")
+    }
+
+    /// Freeze the slot's filled buffer into refcounted [`Bytes`] without
+    /// copying. The slot handle is consumed; the buffer returns to the
+    /// pool (cleared, reusable) when the last `Bytes` view drops — on the
+    /// send path that is after the payload has left the wire and the
+    /// peer released it, exactly like an RMA-registered region.
+    pub fn freeze(mut self) -> Bytes {
+        let buf = self.buf.take().expect("slot buffer present until drop");
+        Bytes::from_owner(Arc::new(PooledBuf {
+            pool: self.pool.clone(),
+            buf: Some(buf),
+        }))
+    }
+}
+
+/// A frozen slot buffer: the [`BytesOwner`] behind [`RmaSlot::freeze`],
+/// whose `Drop` gives the buffer back to its pool.
+struct PooledBuf {
+    pool: Arc<RmaPoolInner>,
+    buf: Option<Vec<u8>>,
+}
+
+impl BytesOwner for PooledBuf {
+    fn as_slice(&self) -> &[u8] {
+        self.buf.as_ref().expect("pooled buffer present until drop")
+    }
+
+    fn as_mut_slice(&mut self) -> Option<&mut [u8]> {
+        self.buf.as_mut().map(|b| &mut b[..])
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(mut b) = self.buf.take() {
+            b.clear();
+            self.pool.release(b);
+        }
     }
 }
 
@@ -253,5 +301,36 @@ mod tests {
         }
         let mut s = p.reserve();
         assert!(s.buf().is_empty(), "returned buffer must be cleared");
+    }
+
+    #[test]
+    fn freeze_pins_buffer_until_last_ref_drops() {
+        let p = RmaPool::new(2048, 1024);
+        let mut slot = p.try_reserve().unwrap();
+        slot.buf().extend_from_slice(&[7, 8, 9]);
+        let frozen = slot.freeze();
+        // The slot handle is gone but the buffer is still out of the pool.
+        assert_eq!(p.free_slots(), 1);
+        assert_eq!(frozen, vec![7, 8, 9]);
+        let view = frozen.slice(1..3);
+        drop(frozen);
+        assert_eq!(p.free_slots(), 1, "live view keeps the buffer registered");
+        assert_eq!(view, vec![8, 9]);
+        drop(view);
+        assert_eq!(p.free_slots(), 2, "last ref returns the buffer");
+        // And it comes back cleared, like a plain slot release.
+        let mut s = p.try_reserve().unwrap();
+        let _ = p.try_reserve().unwrap();
+        assert!(s.buf().is_empty(), "frozen buffer must return cleared");
+    }
+
+    #[test]
+    fn freeze_is_zero_copy() {
+        let p = RmaPool::new(1024, 1024);
+        let mut slot = p.reserve();
+        slot.buf().extend_from_slice(&[1; 64]);
+        let before = slot.data().as_ptr() as usize;
+        let frozen = slot.freeze();
+        assert_eq!(frozen.as_slice().as_ptr() as usize, before);
     }
 }

@@ -1,0 +1,334 @@
+//! Refcounted, cheaply sliceable byte buffer — the zero-copy payload
+//! currency of the data path (the offline crate set has no `bytes`).
+//!
+//! A [`Bytes`] is a `(Arc<owner>, offset, len)` view into backing
+//! storage. Cloning and slicing bump a refcount; no payload bytes move.
+//! The backing is any [`BytesOwner`], which lets the RMA pool hand out
+//! *poolable* buffers: `RmaSlot::freeze` wraps the slot's buffer in an
+//! owner whose `Drop` returns it to the pool, so the buffer is pinned
+//! exactly as long as any view of it is alive (slot accounting and
+//! payload lifetime are decoupled) and never copied on the way to the
+//! wire or the sink's `pwrite`.
+//!
+//! Mutation is copy-on-write: [`Bytes::to_mut`] hands out `&mut [u8]`
+//! directly when the view is unique (the hot path — the sink is the sole
+//! holder by the time it writes) and falls back to one counted copy when
+//! shared.
+
+use std::ops::{Bound, Deref, RangeBounds};
+use std::sync::Arc;
+
+/// Backing storage a [`Bytes`] views into. Implementors own a stable
+/// byte region for the lifetime of the `Arc`; pooled buffers use their
+/// `Drop` to return storage to the pool once the last view goes away.
+pub trait BytesOwner: Send + Sync {
+    fn as_slice(&self) -> &[u8];
+
+    /// Mutable access for the copy-on-write path. Owners backed by plain
+    /// writable memory return their full region; immutable owners (e.g.
+    /// static data) return `None` and force the COW fallback.
+    fn as_mut_slice(&mut self) -> Option<&mut [u8]> {
+        None
+    }
+}
+
+impl BytesOwner for Vec<u8> {
+    fn as_slice(&self) -> &[u8] {
+        self
+    }
+
+    fn as_mut_slice(&mut self) -> Option<&mut [u8]> {
+        Some(self)
+    }
+}
+
+impl BytesOwner for &'static [u8] {
+    fn as_slice(&self) -> &[u8] {
+        self
+    }
+}
+
+/// A refcounted view into a [`BytesOwner`]. See the module docs.
+#[derive(Clone)]
+pub struct Bytes {
+    owner: Arc<dyn BytesOwner>,
+    off: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// The empty buffer (shared static — no allocation per call after
+    /// the first).
+    pub fn new() -> Bytes {
+        static EMPTY: std::sync::OnceLock<Bytes> = std::sync::OnceLock::new();
+        EMPTY.get_or_init(|| Bytes::from_static(&[])).clone()
+    }
+
+    /// Take ownership of `v` without copying.
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes { owner: Arc::new(v), off: 0, len }
+    }
+
+    /// View a static region without copying.
+    pub fn from_static(s: &'static [u8]) -> Bytes {
+        Bytes { owner: Arc::new(s), off: 0, len: s.len() }
+    }
+
+    /// Copy `s` into a fresh owned buffer.
+    pub fn copy_from_slice(s: &[u8]) -> Bytes {
+        Bytes::from_vec(s.to_vec())
+    }
+
+    /// View the whole region of an existing owner without copying.
+    pub fn from_owner(owner: Arc<dyn BytesOwner>) -> Bytes {
+        let len = owner.as_slice().len();
+        Bytes { owner, off: 0, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.owner.as_slice()[self.off..self.off + self.len]
+    }
+
+    /// A refcounted subview — no bytes move. Panics when `range` falls
+    /// outside `0..len` (same contract as slice indexing).
+    pub fn slice(&self, range: impl RangeBounds<usize>) -> Bytes {
+        let start = match range.start_bound() {
+            Bound::Included(&s) => s,
+            Bound::Excluded(&s) => s + 1,
+            Bound::Unbounded => 0,
+        };
+        let end = match range.end_bound() {
+            Bound::Included(&e) => e + 1,
+            Bound::Excluded(&e) => e,
+            Bound::Unbounded => self.len,
+        };
+        assert!(
+            start <= end && end <= self.len,
+            "slice {start}..{end} out of range for Bytes of {}",
+            self.len
+        );
+        Bytes { owner: self.owner.clone(), off: self.off + start, len: end - start }
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+
+    /// Mutable access iff this is the only view into a writable owner;
+    /// `None` means [`to_mut`](Bytes::to_mut) would have to copy.
+    pub fn try_unique_mut(&mut self) -> Option<&mut [u8]> {
+        let (off, len) = (self.off, self.len);
+        let region = Arc::get_mut(&mut self.owner)?.as_mut_slice()?;
+        Some(&mut region[off..off + len])
+    }
+
+    /// Copy-on-write mutable access: unique writable views are handed
+    /// out in place, shared (or immutable-backed) ones are detached into
+    /// a fresh owned copy first.
+    pub fn to_mut(&mut self) -> &mut [u8] {
+        let in_place = Arc::get_mut(&mut self.owner).is_some_and(|o| o.as_mut_slice().is_some());
+        if !in_place {
+            let copy = self.as_slice().to_vec();
+            self.owner = Arc::new(copy);
+            self.off = 0;
+        }
+        let (off, len) = (self.off, self.len);
+        let region = Arc::get_mut(&mut self.owner)
+            .expect("unique after copy-on-write")
+            .as_mut_slice()
+            .expect("vec backing is writable");
+        &mut region[off..off + len]
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Bytes {
+        Bytes::new()
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Payloads run to megabytes; don't dump them into panic messages.
+        const SHOWN: usize = 32;
+        if self.len <= SHOWN {
+            write!(f, "Bytes({:?})", self.as_slice())
+        } else {
+            write!(f, "Bytes(len={}, {:?}…)", self.len, &self.as_slice()[..SHOWN])
+        }
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl PartialEq<[u8]> for Bytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Bytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Bytes> for Vec<u8> {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(s: &[u8]) -> Bytes {
+        Bytes::copy_from_slice(s)
+    }
+}
+
+impl FromIterator<u8> for Bytes {
+    fn from_iter<I: IntoIterator<Item = u8>>(iter: I) -> Bytes {
+        Bytes::from_vec(iter.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn construction_and_views() {
+        let b = Bytes::from_vec(vec![1, 2, 3, 4, 5]);
+        assert_eq!(b.len(), 5);
+        assert_eq!(&b[..], &[1, 2, 3, 4, 5]);
+        assert_eq!(b, vec![1, 2, 3, 4, 5]);
+        assert!(Bytes::new().is_empty());
+        assert_eq!(Bytes::from_static(b"abc").as_slice(), b"abc");
+        let collected: Bytes = (0u8..4).collect();
+        assert_eq!(collected, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn slice_is_zero_copy() {
+        let b = Bytes::from_vec((0u8..64).collect());
+        let s = b.slice(10..20);
+        assert_eq!(&s[..], &(10u8..20).collect::<Vec<_>>()[..]);
+        // Same backing allocation: the slice's data pointer lands inside
+        // the parent's region.
+        let parent = b.as_slice().as_ptr() as usize;
+        let child = s.as_slice().as_ptr() as usize;
+        assert_eq!(child, parent + 10);
+        // Nested slices compose offsets.
+        let s2 = s.slice(2..4);
+        assert_eq!(&s2[..], &[12, 13]);
+        // Open-ended ranges.
+        assert_eq!(b.slice(..).len(), 64);
+        assert_eq!(b.slice(60..).len(), 4);
+        assert_eq!(b.slice(..=1).len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn slice_out_of_range_panics() {
+        let b = Bytes::from_vec(vec![0; 4]);
+        let _ = b.slice(2..6);
+    }
+
+    #[test]
+    fn unique_mut_in_place_shared_copies() {
+        let mut b = Bytes::from_vec(vec![1, 2, 3]);
+        // Unique: mutation happens in the original allocation.
+        let p0 = b.as_slice().as_ptr() as usize;
+        b.to_mut()[0] = 9;
+        assert_eq!(b.as_slice().as_ptr() as usize, p0);
+        assert_eq!(b, vec![9, 2, 3]);
+
+        // Shared: COW detaches, the clone is untouched.
+        let clone = b.clone();
+        assert!(b.try_unique_mut().is_none());
+        b.to_mut()[0] = 7;
+        assert_eq!(b, vec![7, 2, 3]);
+        assert_eq!(clone, vec![9, 2, 3]);
+
+        // Static backing is immutable: even a unique view must copy.
+        let mut s = Bytes::from_static(b"xy");
+        assert!(s.try_unique_mut().is_none());
+        s.to_mut()[0] = b'z';
+        assert_eq!(s, b"zy".to_vec());
+    }
+
+    #[test]
+    fn slice_mut_stays_inside_view() {
+        let mut b = Bytes::from_vec(vec![0u8; 8]).slice(2..6);
+        b.to_mut().fill(7);
+        assert_eq!(b, vec![7, 7, 7, 7]);
+        assert_eq!(b.len(), 4);
+    }
+
+    struct DropOwner(Arc<AtomicUsize>);
+
+    impl BytesOwner for DropOwner {
+        fn as_slice(&self) -> &[u8] {
+            &[1, 2, 3, 4]
+        }
+    }
+
+    impl Drop for DropOwner {
+        fn drop(&mut self) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn owner_dropped_with_last_view() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let b = Bytes::from_owner(Arc::new(DropOwner(drops.clone())));
+        let s = b.slice(1..3);
+        drop(b);
+        assert_eq!(drops.load(Ordering::SeqCst), 0, "slice keeps the owner alive");
+        assert_eq!(s, vec![2, 3]);
+        drop(s);
+        assert_eq!(drops.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,6 +1,8 @@
 //! Small shared utilities: JSON parsing (offline environment has no serde),
-//! byte formatting, time formatting.
+//! the refcounted [`bytes::Bytes`] payload buffer, byte formatting, time
+//! formatting.
 
+pub mod bytes;
 pub mod json;
 
 /// Format a byte count human-readably (`12.3 MiB`).

@@ -84,6 +84,41 @@ fn cli_ack_batch_flag_coalesces_and_reports() {
 }
 
 #[test]
+fn cli_adaptive_send_window_and_zero_copy_summary() {
+    // --send-window-adaptive flows through the launcher, the summary
+    // reports both RMA stall sides, and the counter-instrumented
+    // zero-copy line shows exactly one payload copy per object
+    // (8 files x 2 objects = 16 copies, one pread each).
+    let ftdir = tmp("t1c");
+    let out = ftlads()
+        .args([
+            "transfer",
+            "--workload", "big",
+            "--files", "8",
+            "--file-size", "512K",
+            "--mechanism", "universal",
+            "--method", "bit64",
+            "--send-window", "8",
+            "--send-window-adaptive",
+            "--ft-dir", ftdir.to_str().unwrap(),
+            "--set", "time_scale=0",
+        ])
+        .output()
+        .expect("spawn ftlads");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "stdout: {stdout}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("completed        : true"), "{stdout}");
+    assert!(stdout.contains("send path        : window 8 (eff "), "{stdout}");
+    assert!(stdout.contains("zero-copy        : 16 payload copies"), "{stdout}");
+    assert!(stdout.contains("rma stalls       : src "), "{stdout}");
+    let _ = std::fs::remove_dir_all(&ftdir);
+}
+
+#[test]
 fn cli_fault_exits_2_then_recover_shows_state() {
     let ftdir = tmp("t2");
     let common = [

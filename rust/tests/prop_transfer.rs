@@ -48,6 +48,10 @@ fn random_config(rng: &mut Pcg32, tag: &str) -> Config {
     // batch size / flush window, including the seed-exact batch of 1.
     cfg.ack_batch = rng.range(1, 17) as u32;
     cfg.ack_flush_us = rng.range(200, 3000);
+    // The zero-copy windowed issue path (and its autotuner) must
+    // preserve them at any window too, including lockstep.
+    cfg.send_window = rng.range(1, 9) as u32;
+    cfg.send_window_adaptive = cfg.send_window > 1 && rng.bool(0.5);
     cfg.seed = rng.next_u64();
     cfg
 }
@@ -277,12 +281,26 @@ fn prop_message_codec_roundtrips_random() {
                 let len = rng.range(0, 2048) as usize;
                 let mut data = vec![0u8; len];
                 rng.fill_bytes(&mut data);
+                // Half the time carry the payload as a refcounted SLICE
+                // of a larger buffer — the wire bytes must depend only on
+                // the logical view, never the backing representation.
+                let payload = if rng.bool(0.5) {
+                    ftlads::util::bytes::Bytes::from_vec(data)
+                } else {
+                    let pad_front = rng.range(1, 64) as usize;
+                    let pad_back = rng.range(1, 64) as usize;
+                    let mut backing = vec![0xA5u8; pad_front];
+                    backing.extend_from_slice(&data);
+                    backing.resize(pad_front + len + pad_back, 0x5A);
+                    ftlads::util::bytes::Bytes::from_vec(backing)
+                        .slice(pad_front..pad_front + len)
+                };
                 Message::NewBlock {
                     file_idx: rng.next_u32(),
                     block_idx: rng.next_u32(),
                     offset: rng.next_u64(),
                     digest: rng.next_u64(),
-                    data,
+                    data: payload,
                 }
             }
             5 => Message::BlockSync {
@@ -297,7 +315,25 @@ fn prop_message_codec_roundtrips_random() {
         let mut buf = Vec::new();
         msg.encode(&mut buf);
         let back = Message::decode(&buf).map_err(|e| e.to_string())?;
-        prop_assert_eq!(back, msg);
+        prop_assert_eq!(&back, &msg);
+        // Zero-copy frame decode agrees byte-for-byte with the copying
+        // decode on every message.
+        let framed =
+            Message::decode_frame(&ftlads::util::bytes::Bytes::from_vec(buf.clone()))
+                .map_err(|e| e.to_string())?;
+        prop_assert_eq!(&framed, &msg);
+        // Payload-bearing frames: the wire layout pin. Header is
+        // 1 + 4 + 4 + 8 + 8 = 25 bytes, then the u32 payload length,
+        // then the payload verbatim — regardless of how the `Bytes` is
+        // backed (owned vec or a slice of a larger buffer).
+        if let Message::NewBlock { data, .. } = &msg {
+            prop_assert_eq!(buf.len(), 29 + data.len());
+            prop_assert_eq!(
+                u32::from_le_bytes(buf[25..29].try_into().unwrap()) as usize,
+                data.len()
+            );
+            prop_assert!(&buf[29..] == data.as_slice(), "payload bytes moved");
+        }
         // Decoder never panics on arbitrary mutations (truncate or flip).
         if !buf.is_empty() {
             let mut mutated = buf.clone();

@@ -1,7 +1,10 @@
 //! Source-side NEW_BLOCK pipelining (credit-based `send_window`):
 //! PR 2 equivalence at the defaults (byte-identical wire traces, same
 //! logger write counts), CONNECT negotiation incl. legacy fallback, the
-//! in-flight bound itself, and the adaptive ack coalescer's feedback.
+//! in-flight bound itself, the adaptive ack coalescer's feedback, the
+//! send-window autotuner, and the zero-copy equivalence pins (every
+//! payload-bearing frame on the wire byte-identical to a hand-rolled
+//! reference encoding of the source file data).
 
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -12,6 +15,7 @@ use ftlads::coordinator::sink::{spawn_sink, SinkReport};
 use ftlads::coordinator::source::{run_source, SourceReport};
 use ftlads::coordinator::{SimEnv, TransferSpec};
 use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
+use ftlads::pfs::Pfs;
 use ftlads::workload;
 
 /// Endpoint wrapper recording the exact encoded bytes of every message
@@ -166,6 +170,81 @@ fn defaults_produce_byte_identical_pr2_wire_trace() {
     assert_eq!(run_a.src.counters.credit_waits, 0, "lockstep never takes credits");
     let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
     let _ = std::fs::remove_dir_all(&env_b.cfg.ft_dir);
+}
+
+/// Hand-rolled reference encoding of a NEW_BLOCK frame — field-by-field,
+/// independent of the codec under test. The zero-copy `Bytes` refactor
+/// must not move a single wire byte.
+fn reference_new_block(
+    file_idx: u32,
+    block_idx: u32,
+    offset: u64,
+    digest: u64,
+    payload: &[u8],
+) -> Vec<u8> {
+    let mut buf = vec![4u8]; // T_NEW_BLOCK
+    buf.extend_from_slice(&file_idx.to_le_bytes());
+    buf.extend_from_slice(&block_idx.to_le_bytes());
+    buf.extend_from_slice(&offset.to_le_bytes());
+    buf.extend_from_slice(&digest.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+#[test]
+fn payload_frames_match_reference_encoding_and_source_data() {
+    // The zero-copy acceptance pin beyond the handshake: EVERY
+    // payload-bearing frame the source puts on the wire — lockstep and
+    // windowed — must equal a hand-built reference encoding whose
+    // payload is read straight from the source PFS. A representation
+    // change that leaked (offset slip, sliced-view confusion, header
+    // drift) shows up as a byte mismatch here.
+    for window in [1u32, 4] {
+        let mut cfg = Config::for_tests(&format!("swin-payload-pin-{window}"));
+        cfg.send_window = window;
+        let wl = workload::mixed_workload(4, 192 << 10, cfg.seed);
+        let env = SimEnv::new(cfg.clone(), &wl);
+        let run = run_split(&cfg, &cfg, &env);
+        assert!(run.src.fault.is_none(), "window={window}: {:?}", run.src.fault);
+        env.verify_sink_complete().unwrap();
+
+        let mut new_blocks = 0u64;
+        for frame in &run.src_sent {
+            if frame.first() != Some(&4u8) {
+                continue; // not a NEW_BLOCK
+            }
+            new_blocks += 1;
+            let Ok(Message::NewBlock { file_idx, block_idx, offset, digest, data }) =
+                Message::decode(frame)
+            else {
+                panic!("NEW_BLOCK frame failed to decode");
+            };
+            // Re-read the object from the source PFS and rebuild the
+            // frame by hand.
+            let name = &env.files[file_idx as usize];
+            let (fid, meta) = env.source.lookup(name).expect("source file present");
+            let len = (meta.size - offset).min(cfg.object_size) as usize;
+            let mut expect_payload = vec![0u8; len];
+            assert_eq!(
+                env.source.read_at(fid, offset, &mut expect_payload).unwrap(),
+                len
+            );
+            assert_eq!(
+                *frame,
+                reference_new_block(file_idx, block_idx, offset, digest, &expect_payload),
+                "window={window}: NEW_BLOCK frame for {name} block {block_idx} \
+                 is not byte-identical to the reference encoding"
+            );
+            assert_eq!(data, expect_payload, "decoded payload must match the PFS data");
+        }
+        assert_eq!(
+            new_blocks,
+            run.src.counters.objects_sent,
+            "every sent object must appear as a NEW_BLOCK frame in the trace"
+        );
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
 }
 
 #[test]
@@ -378,6 +457,108 @@ fn out_of_range_ack_faults_cleanly_instead_of_panicking() {
     );
     rogue.join().unwrap();
     let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
+
+#[test]
+fn adaptive_send_window_grows_from_credit_waits() {
+    // The autotuner's grow leg: the applied window starts at the floor
+    // of 1 while the sink coalesces acks 4-at-a-time behind a 2 ms flush
+    // window — so the first un-acked object necessarily blocks the next
+    // issue on a credit (the ack is parked in a partial batch), which
+    // doubles the applied window toward the cap. The negotiated (wire)
+    // window stays the cap.
+    let mut cfg = Config::for_tests("swin-auto-grow");
+    cfg.send_window = 8;
+    cfg.send_window_adaptive = true;
+    cfg.io_threads = 4;
+    cfg.ack_batch = 4;
+    cfg.ack_flush_us = 2_000;
+    let wl = workload::big_workload(2, 16 * cfg.object_size); // 32 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let run = run_split(&cfg, &cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert_eq!(run.src.counters.objects_synced, 32);
+    assert_eq!(run.src.send_window, 8, "negotiation must still land the cap");
+    assert!(
+        run.src.counters.credit_waits >= 1,
+        "four threads against an applied window of 1 must contend"
+    );
+    assert!(
+        run.src.counters.send_window_grows >= 1,
+        "a credit wait must grow the applied window"
+    );
+    assert!(
+        (1..=8).contains(&run.src.send_window_effective),
+        "applied window {} escaped [1, cap]",
+        run.src.send_window_effective
+    );
+    assert!(run.max_inflight <= 8, "the cap still bounds the wire");
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn adaptive_send_window_shrinks_on_slot_stalls() {
+    // The shrink leg: a 2-slot RMA pool under a wire-bound link keeps
+    // the pool dry (zero-copy pins each buffer across the serialization
+    // and the sink's write), so issue-loop slot stalls must fire and
+    // each one halves the applied window — observable in the shrink
+    // counter. Grow events race against them; the invariant is that both
+    // legs actually actuate and the window stays in range.
+    let mut cfg = Config::for_tests("swin-auto-shrink");
+    cfg.send_window = 8;
+    cfg.send_window_adaptive = true;
+    cfg.io_threads = 4;
+    cfg.rma_bytes = 2 * cfg.object_size as usize;
+    cfg.time_scale = 1.0;
+    cfg.net_bandwidth = 2.0e8; // ~330 µs per 64 KiB object on the wire
+    cfg.net_latency_us = 5;
+    cfg.ost_bandwidth = f64::INFINITY;
+    cfg.ost_latency_us = 0;
+    cfg.ost_concurrent = 8;
+    let wl = workload::big_workload(3, 16 * cfg.object_size); // 48 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let run = run_split(&cfg, &cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert_eq!(run.src.counters.objects_synced, 48);
+    assert!(
+        run.src.counters.send_stalls >= 1,
+        "a 2-slot pool on a wire-bound link must stall the issue loop"
+    );
+    assert!(
+        run.src.counters.send_window_grows >= 1,
+        "the floor-of-1 start must grow under 4 threads"
+    );
+    assert!(
+        run.src.counters.send_window_shrinks >= 1,
+        "slot stalls must shrink the applied window"
+    );
+    assert!((1..=8).contains(&run.src.send_window_effective));
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn adaptive_send_window_against_lockstep_peer_is_inert() {
+    // Negotiated down to a window of 1, the autotuner has nothing to
+    // float: the gate is disabled, no credits are taken, no feedback
+    // fires, and the applied window reports 1.
+    let mut src_cfg = Config::for_tests("swin-auto-lockstep");
+    src_cfg.send_window = 8;
+    src_cfg.send_window_adaptive = true;
+    let mut sink_cfg = src_cfg.clone();
+    sink_cfg.send_window = 1;
+    sink_cfg.send_window_adaptive = false;
+    let wl = workload::big_workload(2, 512 << 10); // 16 objects
+    let env = SimEnv::new(src_cfg.clone(), &wl);
+    let run = run_split(&src_cfg, &sink_cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert_eq!(run.src.send_window, 1, "negotiation must fall back to lockstep");
+    assert_eq!(run.src.send_window_effective, 1);
+    assert_eq!(run.src.counters.credit_waits, 0);
+    assert_eq!(run.src.counters.send_window_grows, 0);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
 }
 
 #[test]

@@ -1,16 +1,19 @@
 //! Transfer over the TCP transport: the two-process deployment path
 //! (source and sink nodes joined by real loopback sockets with full
-//! message serialization), exercised in-process.
+//! message serialization), exercised in-process — plus the raw-socket
+//! frame pin for the zero-copy vectored send path.
 
+use std::io::Read;
 use std::sync::Arc;
 
 use ftlads::config::Config;
 use ftlads::coordinator::{self, TransferSpec};
 use ftlads::fault::FaultPlan;
 use ftlads::ftlog::{Mechanism, Method};
-use ftlads::net::{tcp, Endpoint, FaultController, Side, WireModel};
+use ftlads::net::{tcp, Endpoint, FaultController, Message, Side, WireModel};
 use ftlads::pfs::sim::SimPfs;
 use ftlads::pfs::Pfs;
+use ftlads::util::bytes::Bytes;
 use ftlads::workload;
 
 struct TcpEnv {
@@ -72,10 +75,12 @@ impl TcpEnv {
             log_space: src_report.log_space,
             resources: Default::default(),
             payload_bytes: src_ep.payload_sent(),
-            rma_stalls: sink_report.rma_stalls,
+            rma_stalls_src: src_report.rma_stalls,
+            rma_stalls_snk: sink_report.rma_stalls,
             source_sched: src_report.sched,
             sink_sched: sink_report.sched,
             send_window: src_report.send_window,
+            send_window_effective: src_report.send_window_effective,
             ack_batch_effective: sink_report.ack_batch_effective,
         }
     }
@@ -153,6 +158,77 @@ fn tcp_batched_acks_roundtrip_the_codec() {
     assert!(out2.completed, "{:?}", out2.fault);
     env2.verify();
     let _ = std::fs::remove_dir_all(&env2.cfg.ft_dir);
+}
+
+#[test]
+fn tcp_frame_bytes_are_pinned_for_payload_messages() {
+    // Read the raw socket on the far side of a TcpEndpoint and compare
+    // every frame byte-for-byte against the hand-built contiguous
+    // layout: [u32 len][type][fields][u32 payload len][payload]. The
+    // vectored header-scratch + gathered-payload send path must produce
+    // EXACTLY the bytes the old frame-alloc path did, for owned and
+    // sliced payloads and for control messages.
+    let listener = tcp::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reader = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut frames = Vec::new();
+        for _ in 0..3 {
+            let mut len_buf = [0u8; 4];
+            s.read_exact(&mut len_buf).unwrap();
+            let mut body = vec![0u8; u32::from_le_bytes(len_buf) as usize];
+            s.read_exact(&mut body).unwrap();
+            let mut frame = len_buf.to_vec();
+            frame.extend_from_slice(&body);
+            frames.push(frame);
+        }
+        frames
+    });
+    let ep = tcp::connect(addr, WireModel::none(), FaultController::unarmed()).unwrap();
+
+    let payload: Vec<u8> = (0..10_000u32).map(|i| (i * 131) as u8).collect();
+    // 1: owned payload. 2: the same bytes as a refcounted slice of a
+    // padded backing buffer. 3: a control message (header-only path).
+    ep.send(Message::NewBlock {
+        file_idx: 5,
+        block_idx: 6,
+        offset: 6 << 16,
+        digest: 77,
+        data: payload.clone().into(),
+    })
+    .unwrap();
+    let mut backing = vec![0xEEu8; 100];
+    backing.extend_from_slice(&payload);
+    backing.extend_from_slice(&[0xEE; 100]);
+    ep.send(Message::NewBlock {
+        file_idx: 5,
+        block_idx: 6,
+        offset: 6 << 16,
+        digest: 77,
+        data: Bytes::from_vec(backing).slice(100..100 + payload.len()),
+    })
+    .unwrap();
+    ep.send(Message::FileClose { file_idx: 5 }).unwrap();
+
+    let frames = reader.join().unwrap();
+
+    // Reference frame, field by field.
+    let mut body = vec![4u8]; // T_NEW_BLOCK
+    body.extend_from_slice(&5u32.to_le_bytes());
+    body.extend_from_slice(&6u32.to_le_bytes());
+    body.extend_from_slice(&(6u64 << 16).to_le_bytes());
+    body.extend_from_slice(&77u64.to_le_bytes());
+    body.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    body.extend_from_slice(&payload);
+    let mut expect = (body.len() as u32).to_le_bytes().to_vec();
+    expect.extend_from_slice(&body);
+    assert_eq!(frames[0], expect, "owned-payload frame drifted");
+    assert_eq!(frames[1], expect, "sliced-payload frame differs from owned");
+
+    let mut expect_close = 5u32.to_le_bytes().to_vec(); // body = 1 type + 4 idx
+    expect_close.push(6); // T_FILE_CLOSE
+    expect_close.extend_from_slice(&5u32.to_le_bytes());
+    assert_eq!(frames[2], expect_close, "control frame drifted");
 }
 
 #[test]
