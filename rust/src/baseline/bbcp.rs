@@ -192,6 +192,7 @@ pub fn run_bbcp(
         send_window: 1,
         send_window_effective: 1,
         ack_batch_effective: 1,
+        rma_bytes_effective: 0, // bbcp has no RMA slot pool
     })
 }
 
@@ -230,12 +231,15 @@ fn bbcp_sink(pfs: &dyn Pfs, ep: &dyn Endpoint, ctr: &Counters) {
                 current = Some(fid);
                 let _ = ep.send(Message::FileId { file_idx, sink_fd: fid.0, skip: false });
             }
-            Message::NewBlock { file_idx, block_idx, offset, mut data, .. } => {
+            Message::NewBlock { file_idx, block_idx, offset, data, .. } => {
                 let Some(fid) = current else { break };
                 let len = data.len() as u64;
-                if pfs.write_at(fid, offset, data.to_mut()).is_err() {
+                // bbcp has no read-back verification: the fidelity flag is
+                // deliberately ignored (§3.2's silent-corruption window).
+                if pfs.write_at(fid, offset, data.as_slice()).is_err() {
                     break;
                 }
+                ctr.write_syscalls.fetch_add(1, Ordering::Relaxed);
                 ctr.bytes_written.fetch_add(len, Ordering::Relaxed);
                 ctr.objects_synced.fetch_add(1, Ordering::Relaxed);
                 let _ = ep.send(Message::BlockSync { file_idx, block_idx, ok: true });
@@ -513,6 +517,9 @@ mod tests {
         .unwrap();
         assert!(out.completed, "{:?}", out.fault);
         assert_eq!(out.sink.files_completed, 3);
+        // bbcp writes once per block — the summary's write-path line
+        // must report it (no coalescing in the baseline).
+        assert_eq!(out.sink.write_syscalls, out.sink.objects_synced);
         env.verify_sink_complete().unwrap();
     }
 

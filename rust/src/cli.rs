@@ -190,6 +190,36 @@ mod tests {
     }
 
     #[test]
+    fn write_coalesce_and_rma_autosize_flags_roundtrip_into_config() {
+        use crate::config::{parse_bytes, Config};
+        // The way main.rs wires them: --write-coalesce-bytes takes a byte
+        // value (with K/M/G units), --rma-autosize is a bare flag, and
+        // both exist as --set keys.
+        let a = Args::parse(
+            &argv(&["transfer", "--write-coalesce-bytes", "4M", "--rma-autosize"]),
+            &["rma-autosize"],
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.write_coalesce_bytes = parse_bytes(a.get("write-coalesce-bytes").unwrap()).unwrap();
+        cfg.rma_autosize = a.flag("rma-autosize");
+        assert_eq!(cfg.write_coalesce_bytes, 4 << 20);
+        assert!(cfg.rma_autosize);
+        assert!(cfg.validate().is_ok());
+
+        let mut cfg = Config::default();
+        cfg.apply_kv("write_coalesce_bytes", "16M").unwrap();
+        cfg.apply_kv("rma_autosize", "true").unwrap();
+        assert_eq!(cfg.write_coalesce_bytes, 16 << 20);
+        assert!(cfg.rma_autosize);
+        assert!(cfg.validate().is_ok());
+        // 0 is the seed-exact off position.
+        cfg.apply_kv("write_coalesce_bytes", "0").unwrap();
+        assert_eq!(cfg.write_coalesce_bytes, 0);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
     fn scheduler_typo_error_lists_valid_policies() {
         use crate::sched::SchedPolicy;
         let a = Args::parse(&argv(&["transfer", "--scheduler", "speedy"]), &[]).unwrap();

@@ -71,6 +71,22 @@ pub struct Config {
     /// wire handshake always carries the cap; adaptation is local to the
     /// source's issue discipline.
     pub send_window_adaptive: bool,
+    /// Sink-side contiguous-write coalescing budget: when an IO thread
+    /// dequeues a write, it drains further byte-contiguous objects of the
+    /// same file from the same OST queue until the gathered run reaches
+    /// this many bytes, and submits the run as ONE vectored `pwrite`
+    /// (`Pfs::write_at_vectored`). 0 (default) disables coalescing — the
+    /// seed-exact one-pwrite-per-object sink path. Every constituent
+    /// block keeps its own digest verify, BLOCK_SYNC ack, and FT-log
+    /// record regardless.
+    pub write_coalesce_bytes: u64,
+    /// RMA pool autosizer: at CONNECT, grow each side's slot pool toward
+    /// `negotiated send_window × object_size` so zero-copy payload
+    /// pinning can never starve the issue loop (the alternative is the
+    /// window autotuner shrinking around the undersized pool). The
+    /// applied pool lands in `TransferOutcome::rma_bytes_effective`.
+    /// False (default) keeps the configured `rma_bytes` exactly.
+    pub rma_autosize: bool,
     /// Integrity verification backend.
     pub integrity: IntegrityMode,
     /// OST dequeue policy for the source's IO threads (§2.1; see
@@ -114,6 +130,8 @@ impl Default for Config {
             ack_adaptive: false,
             send_window: 1,
             send_window_adaptive: false,
+            write_coalesce_bytes: 0,
+            rma_autosize: false,
             integrity: IntegrityMode::Native,
             scheduler: SchedPolicy::CongestionAware,
             sink_scheduler: None,
@@ -214,6 +232,8 @@ impl Config {
             "ack_adaptive" => self.ack_adaptive = parse_bool(value)?,
             "send_window" => self.send_window = value.parse()?,
             "send_window_adaptive" => self.send_window_adaptive = parse_bool(value)?,
+            "write_coalesce_bytes" => self.write_coalesce_bytes = parse_bytes(value)?,
+            "rma_autosize" => self.rma_autosize = parse_bool(value)?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
             "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
             "sink_scheduler" => {
@@ -423,6 +443,32 @@ mod tests {
         c.apply_kv("ack_adaptive", "1").unwrap();
         assert!(c.ack_adaptive);
         assert!(c.apply_kv("ack_adaptive", "maybe").is_err());
+    }
+
+    #[test]
+    fn write_coalesce_kv_defaults_and_units() {
+        let mut c = Config::default();
+        // Default is the seed-exact one-pwrite-per-object sink path.
+        assert_eq!(c.write_coalesce_bytes, 0);
+        assert!(c.validate().is_ok());
+        c.apply_kv("write_coalesce_bytes", "4M").unwrap();
+        assert_eq!(c.write_coalesce_bytes, 4 << 20);
+        assert!(c.validate().is_ok());
+        c.apply_kv("write_coalesce_bytes", "0").unwrap();
+        assert_eq!(c.write_coalesce_bytes, 0);
+        assert!(c.apply_kv("write_coalesce_bytes", "lots").is_err());
+    }
+
+    #[test]
+    fn rma_autosize_kv_defaults() {
+        let mut c = Config::default();
+        assert!(!c.rma_autosize, "autosizing must be opt-in");
+        c.apply_kv("rma_autosize", "true").unwrap();
+        assert!(c.rma_autosize);
+        assert!(c.validate().is_ok());
+        c.apply_kv("rma_autosize", "off").unwrap();
+        assert!(!c.rma_autosize);
+        assert!(c.apply_kv("rma_autosize", "maybe").is_err());
     }
 
     #[test]

@@ -96,6 +96,12 @@ pub struct TransferOutcome {
     /// negotiated `ack_batch` in fixed mode, wherever the grow/shrink
     /// feedback settled in `ack_adaptive` mode.
     pub ack_batch_effective: u32,
+    /// RMA DRAM registered per side at session end: `slots ×
+    /// object_size` — the configured `rma_bytes` rounded down to whole
+    /// object-sized slots, unless `rma_autosize` grew the pools toward
+    /// `negotiated send_window × object_size` at CONNECT (both sides
+    /// apply the same rule, so one number describes each).
+    pub rma_bytes_effective: u64,
 }
 
 impl TransferOutcome {
@@ -187,6 +193,7 @@ pub fn run_transfer(
         send_window: source_report.send_window,
         send_window_effective: source_report.send_window_effective,
         ack_batch_effective: sink_report.ack_batch_effective,
+        rma_bytes_effective: source_report.rma_bytes_effective,
     })
 }
 

@@ -22,6 +22,17 @@ pub struct OstQueues<T> {
     cv: Condvar,
 }
 
+/// Per-item decision of a [`OstQueues::drain_chain`] callback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainVerdict {
+    /// Remove the item from the queue and append it to the run.
+    Take,
+    /// Leave the item queued and keep scanning.
+    Skip,
+    /// Abort the drain immediately — nothing further can chain.
+    Stop,
+}
+
 struct Inner<T> {
     /// Per-OST FIFO of (global arrival sequence, request).
     queues: Vec<VecDeque<(u64, T)>>,
@@ -157,6 +168,57 @@ impl<T> OstQueues<T> {
                 .unwrap_or_else(|e| e.into_inner());
             g = guard;
         }
+    }
+
+    /// Drain further requests from `ost`'s queue that chain onto a head
+    /// the caller already popped — the sink's write-coalescing gather.
+    ///
+    /// `accept` is consulted for each queued item in arrival order and is
+    /// expected to be *stateful* (tracking the run's next byte offset and
+    /// remaining budget): [`DrainVerdict::Take`] removes the item and
+    /// appends it to the returned run, [`DrainVerdict::Skip`] leaves it
+    /// in place, and [`DrainVerdict::Stop`] ends the whole drain
+    /// immediately (the caller proved nothing further can chain — e.g.
+    /// the unique next-contiguous block busts the byte budget). The scan
+    /// repeats until a full pass takes nothing, so out-of-order arrivals
+    /// (block N+1 queued before block N) still chain once their
+    /// predecessor is taken; `Stop` keeps the scan from re-walking the
+    /// backlog under the queue lock once the run cannot grow.
+    ///
+    /// This deliberately bypasses the [`Scheduler`]: the policy already
+    /// picked this OST for the head, and the drained items ride the same
+    /// service round. The tie-break contract is preserved — non-taken
+    /// items keep their relative arrival order and head sequence numbers,
+    /// so subsequent `pick` consultations see exactly the queue state the
+    /// contract promises.
+    pub fn drain_chain(&self, ost: OstId, mut accept: impl FnMut(&T) -> DrainVerdict) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let qi = ost.0 as usize;
+        let mut out = Vec::new();
+        if qi >= g.queues.len() {
+            return out;
+        }
+        loop {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < g.queues[qi].len() {
+                match accept(&g.queues[qi][i].1) {
+                    DrainVerdict::Take => {
+                        let (_, item) = g.queues[qi].remove(i).expect("index checked");
+                        out.push(item);
+                        g.queued -= 1;
+                        progressed = true;
+                        // Do not advance: the next item shifted into slot i.
+                    }
+                    DrainVerdict::Skip => i += 1,
+                    DrainVerdict::Stop => return out,
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        out
     }
 
     /// Seed-compatible entry point: dequeue with the paper's
@@ -349,6 +411,79 @@ mod tests {
         let items: Vec<u32> = got.into_iter().map(|o| o.unwrap().1).collect();
         assert_eq!(items, vec![0, 1, 2, 3]);
         q.close();
+    }
+
+    #[test]
+    fn drain_chain_takes_matching_items_and_keeps_order() {
+        let q: OstQueues<u32> = OstQueues::new(2);
+        let m = model(2);
+        q.push_batch([
+            (OstId(0), 10u32),
+            (OstId(0), 99), // non-matching, must survive in place
+            (OstId(0), 11),
+            (OstId(1), 12), // other OST, never touched
+            (OstId(0), 12),
+        ]);
+        // Chain 10 -> 11 -> 12 (stateful accept), leaving 99 queued.
+        let mut next = 10u32;
+        let run = q.drain_chain(OstId(0), |&v| {
+            if v == next {
+                next += 1;
+                DrainVerdict::Take
+            } else {
+                DrainVerdict::Skip
+            }
+        });
+        assert_eq!(run, vec![10, 11, 12]);
+        assert_eq!(q.len(), 2);
+        // The survivor kept its position; the other OST is untouched.
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(0), 99)));
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(1), 12)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_chain_chains_out_of_order_arrivals() {
+        let q: OstQueues<u32> = OstQueues::new(1);
+        // Successor queued BEFORE its predecessor: one pass would miss it,
+        // the fixpoint rescan must not.
+        q.push_batch([(OstId(0), 2u32), (OstId(0), 1)]);
+        let mut next = 1u32;
+        let run = q.drain_chain(OstId(0), |&v| {
+            if v == next {
+                next += 1;
+                DrainVerdict::Take
+            } else {
+                DrainVerdict::Skip
+            }
+        });
+        assert_eq!(run, vec![1, 2]);
+        assert!(q.is_empty());
+        // Out-of-range OST is a no-op.
+        assert!(q
+            .drain_chain(OstId(9), |_| DrainVerdict::Take)
+            .is_empty());
+    }
+
+    #[test]
+    fn drain_chain_stop_ends_the_scan_immediately() {
+        let q: OstQueues<u32> = OstQueues::new(1);
+        let m = model(1);
+        q.push_batch([(OstId(0), 1u32), (OstId(0), 2), (OstId(0), 3)]);
+        let mut calls = 0;
+        let run = q.drain_chain(OstId(0), |&v| {
+            calls += 1;
+            match v {
+                1 => DrainVerdict::Take,
+                2 => DrainVerdict::Stop, // e.g. budget exhausted
+                _ => DrainVerdict::Skip,
+            }
+        });
+        assert_eq!(run, vec![1]);
+        assert_eq!(calls, 2, "Stop must end the drain without rescanning");
+        // Both survivors stay queued in arrival order.
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(0), 2)));
+        assert_eq!(q.pop_least_congested(&m), Some((OstId(0), 3)));
     }
 
     #[test]

@@ -12,7 +12,13 @@
 //!   scheduling policy (`cfg.sink_scheduler`/`cfg.scheduler`, default:
 //!   least-congested — see [`crate::sched`]), `pwrite` the object
 //!   straight from the refcounted payload (zero-copy; charging the OST
-//!   model), verify the digest, release the slot, and
+//!   model), verify the digest, release the slot, and — with
+//!   `write_coalesce_bytes > 0` — first drain further byte-contiguous
+//!   objects of the same file from the same OST queue and submit the
+//!   gathered run as ONE vectored `pwrite`
+//!   ([`crate::pfs::Pfs::write_at_vectored`]; one syscall, one OST
+//!   service round), while every constituent block keeps its own digest
+//!   verify and BLOCK_SYNC ack; then
 //!   send BLOCK_SYNC — directly when `ack_batch = 1` (the paper's
 //!   per-object path), or through the **ack coalescer**, which folds up
 //!   to `ack_batch` acknowledgements of a file into one
@@ -34,7 +40,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::queues::OstQueues;
+use super::queues::{DrainVerdict, OstQueues};
 use crate::config::Config;
 use crate::integrity::{Digest, DigestEngine, IntegrityMode, NativeEngine, PjrtEngine};
 use crate::metrics::{Counters, CounterSnapshot};
@@ -54,6 +60,11 @@ struct WriteReq {
     /// The object payload, refcounted straight off the transport —
     /// `pwrite` runs from this view, no copy into the slot buffer.
     payload: Bytes,
+    /// Storage fidelity, stamped after the write: `false` when the PFS
+    /// reported that what it persisted differs from the payload (the
+    /// §3.2 read-back verification channel) — the block then fails
+    /// verification and is retransmitted.
+    faithful: bool,
     /// Held for pool accounting only: the §3.1 bounded-buffer credit
     /// (back-pressure + park/wake path); released on drop after the
     /// write finishes.
@@ -149,6 +160,12 @@ struct Shared {
     /// The sink's configured NEW_BLOCK send-window cap; the CONNECT
     /// handshake replies with `min(this, peer's advertisement)`.
     send_window: AtomicU32,
+    /// Contiguous-write coalescing budget (`Config::write_coalesce_bytes`);
+    /// 0 = the seed-exact one-pwrite-per-object path.
+    coalesce_bytes: u64,
+    /// Grow the RMA pool toward the negotiated window at CONNECT
+    /// (`Config::rma_autosize`).
+    autosize: bool,
     rma: RmaPool,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SnkFile>>,
@@ -282,6 +299,11 @@ pub struct SinkReport {
     pub ack_batch_effective: u32,
     /// The NEW_BLOCK send window granted to the peer at CONNECT.
     pub send_window: u32,
+    /// RMA DRAM actually registered at session end (`slots ×
+    /// object_size`, i.e. `rma_bytes` rounded down to whole slots),
+    /// unless `rma_autosize` grew the pool toward the negotiated send
+    /// window at CONNECT.
+    pub rma_bytes_effective: u64,
 }
 
 /// Handle to the running sink node.
@@ -313,6 +335,8 @@ pub fn spawn_sink(
             pending: Mutex::new(BTreeMap::new()),
         },
         send_window: AtomicU32::new(cfg.send_window.max(1)),
+        coalesce_bytes: cfg.write_coalesce_bytes,
+        autosize: cfg.rma_autosize,
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
@@ -408,6 +432,7 @@ impl SinkNode {
             sched: self.shared.sched_stats.snapshot(),
             ack_batch_effective: self.shared.acks.eff.load(Ordering::SeqCst),
             send_window: self.shared.send_window.load(Ordering::SeqCst),
+            rma_bytes_effective: self.shared.rma.total_bytes(),
         }
     }
 }
@@ -459,6 +484,13 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
                 let win_ours = shared.send_window.load(Ordering::SeqCst);
                 let win = win_ours.min(send_window.max(1));
                 shared.send_window.store(win, Ordering::SeqCst);
+                // Pool autosizer: register enough slots to absorb the
+                // whole negotiated in-flight window (zero-copy pins each
+                // payload's slot until the write releases it), BEFORE
+                // advertising the slot count back to the peer.
+                if shared.autosize {
+                    shared.rma.grow_to(win as usize);
+                }
                 let _ = shared.ep.send(Message::ConnectAck {
                     rma_slots: shared.rma.slots() as u32,
                     ack_batch: negotiated,
@@ -570,7 +602,16 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot) {
     shared.sched.on_enqueue(ost);
     shared.queues.push(
         ost,
-        WriteReq { file_idx, block_idx, fid, offset, digest, payload: data, _slot: slot },
+        WriteReq {
+            file_idx,
+            block_idx,
+            fid,
+            offset,
+            digest,
+            payload: data,
+            faithful: true,
+            _slot: slot,
+        },
     );
 }
 
@@ -625,11 +666,12 @@ fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<Message>) {
     }
 }
 
-/// IO thread: policy-picked dequeue + pwrite + verify + BLOCK_SYNC (or
-/// hand to the verifier).
+/// IO thread: policy-picked dequeue (+ contiguity-aware coalescing
+/// drain) + pwrite + per-block verify + BLOCK_SYNC (or hand to the
+/// verifier).
 fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
     let osts = shared.pfs.ost_model();
-    while let Some((ost, mut req)) =
+    while let Some((ost, req)) =
         shared
             .queues
             .pop_next_timed(&*shared.sched, osts, &shared.sched_stats)
@@ -637,61 +679,170 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
         if shared.is_aborted() {
             break;
         }
-        let len = req.payload.len();
-        // pwrite straight from the refcounted payload. By the time the
-        // write runs, this thread holds the only view on both transports
-        // (the channel moved it, TCP sliced it from a private frame), so
-        // the mutable borrow is in place; a shared view (e.g. a test tap
-        // holding a clone) falls back to ONE counted copy-on-write.
-        if req.payload.try_unique_mut().is_none() {
-            shared.counters.payload_copies.fetch_add(1, Ordering::Relaxed);
-            shared
-                .counters
-                .bytes_copied
-                .fetch_add(len as u64, Ordering::Relaxed);
+        // Gather a byte-contiguous same-file run off the SAME OST queue
+        // the policy picked (a gate of 0 bytes never drains — the
+        // seed-exact per-object path). The drained blocks ride this
+        // thread's service round; the policy is not re-consulted.
+        let mut run = vec![req];
+        if shared.coalesce_bytes > 0 {
+            // Cap runs at POSIX's IOV_MAX so one gathered run is ONE
+            // `pwritev` on the disk backend (past the cap the backend
+            // would split silently and `write_syscalls` would
+            // under-count), keeping the counter == real submissions.
+            const MAX_RUN_BLOCKS: usize = crate::pfs::IOV_MAX_GATHER;
+            let fid = run[0].fid;
+            let mut end = run[0].offset + run[0].payload.len() as u64;
+            let mut run_bytes = run[0].payload.len() as u64;
+            let mut run_blocks = 1usize;
+            let extra = shared.queues.drain_chain(ost, |cand: &WriteReq| {
+                if cand.fid != fid || cand.offset != end {
+                    return DrainVerdict::Skip;
+                }
+                // The chain is linear: exactly one queued block can be
+                // the run's next byte. If that unique successor busts
+                // the budget (or the run hit the iov cap), nothing
+                // further can ever chain — stop the scan instead of
+                // re-walking the backlog.
+                let len = cand.payload.len() as u64;
+                if run_blocks == MAX_RUN_BLOCKS || run_bytes + len > shared.coalesce_bytes {
+                    return DrainVerdict::Stop;
+                }
+                end += len;
+                run_bytes += len;
+                run_blocks += 1;
+                DrainVerdict::Take
+            });
+            run.extend(extra);
         }
-        let buf = req.payload.to_mut();
-        // The PFS may observe/corrupt the buffer like a DMA would;
-        // verification below digests the post-write buffer.
-        let io_started = std::time::Instant::now();
-        if let Err(e) = shared.pfs.write_at(req.fid, req.offset, buf) {
-            shared.abort_with(format!("pwrite failed: {e}"));
-            break;
+
+        if !write_run(shared, ost, &mut run) {
+            break; // aborted (pwrite failure with no per-block recovery)
         }
-        let service = io_started.elapsed();
-        shared.sched.on_complete(ost, service);
-        shared.sched_stats.record_complete(service);
-        shared
-            .counters
-            .bytes_written
-            .fetch_add(len as u64, Ordering::Relaxed);
 
         match shared.integrity {
             IntegrityMode::Pjrt => {
-                // Hand off to the batched PJRT verifier (payload + slot
-                // move along).
+                // Hand off to the batched PJRT verifier (payload + slot +
+                // fidelity move along, one request per block).
                 if let Some(tx) = &verify_tx {
-                    if tx.send(req).is_err() {
-                        shared.abort_with("verifier gone".into());
+                    let mut gone = false;
+                    for req in run.drain(..) {
+                        if tx.send(req).is_err() {
+                            shared.abort_with("verifier gone".into());
+                            gone = true;
+                            break;
+                        }
+                    }
+                    if gone {
                         break;
                     }
                 }
                 continue;
             }
             IntegrityMode::Native => {
-                let ok = NativeEngine
-                    .digest_batch(&[req.payload.as_slice()], shared.padded_words)
-                    .map(|d| d[0] == Digest::from_u64(req.digest))
-                    .unwrap_or(false);
-                finish_block(shared, &req, ok);
+                // One digest batch for the run; every block keeps its own
+                // verdict (wire digest match AND storage fidelity).
+                let objects: Vec<&[u8]> = run.iter().map(|r| r.payload.as_slice()).collect();
+                match NativeEngine.digest_batch(&objects, shared.padded_words) {
+                    Ok(digests) => {
+                        for (req, d) in run.iter().zip(digests) {
+                            let ok = req.faithful && d == Digest::from_u64(req.digest);
+                            finish_block(shared, req, ok);
+                        }
+                    }
+                    Err(_) => {
+                        for req in &run {
+                            finish_block(shared, req, false);
+                        }
+                    }
+                }
             }
             IntegrityMode::Off => {
                 // Stock LADS: acknowledge without verification (§3.2's
                 // silent-corruption window, reproduced for A/B runs).
-                finish_block(shared, &req, true);
+                for req in &run {
+                    finish_block(shared, req, true);
+                }
             }
         }
-        // Slot credit released on req drop.
+        // Slot credits released as the run drops.
+    }
+}
+
+/// Submit one gathered run: a run of 1 takes the seed's plain
+/// [`Pfs::write_at`] path exactly; longer runs go down as ONE vectored
+/// write, and a failed vectored submission degrades to per-block writes
+/// so fault semantics match the uncoalesced path. Stamps each block's
+/// storage fidelity and feeds the scheduler one evenly-split service
+/// sample per constituent block (comparable with uncoalesced samples).
+/// Returns `false` when the sink aborted.
+fn write_run(shared: &Arc<Shared>, ost: crate::pfs::ost::OstId, run: &mut [WriteReq]) -> bool {
+    let total: u64 = run.iter().map(|r| r.payload.len() as u64).sum();
+    let io_started = std::time::Instant::now();
+    if run.len() == 1 {
+        if !write_one(shared, &mut run[0]) {
+            return false;
+        }
+    } else {
+        let gathered = {
+            let iovs: Vec<&[u8]> = run.iter().map(|r| r.payload.as_slice()).collect();
+            shared.pfs.write_at_vectored(run[0].fid, run[0].offset, &iovs)
+        };
+        match gathered {
+            Ok(corrupted) => {
+                shared.counters.write_syscalls.fetch_add(1, Ordering::Relaxed);
+                shared.counters.coalesced_runs.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .counters
+                    .coalesce_bytes_max
+                    .fetch_max(total, Ordering::Relaxed);
+                for i in corrupted {
+                    run[i].faithful = false;
+                }
+            }
+            Err(_) => {
+                // Degrade to per-block retry: every block still lands (or
+                // aborts) exactly as it would have without coalescing.
+                for req in run.iter_mut() {
+                    if !write_one(shared, req) {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    // Feed the storage feedback per CONSTITUENT BLOCK, with the run's
+    // wall time split evenly: stateful policies (StragglerAware's EWMA)
+    // compare per-request samples across OSTs, and a whole-run sample
+    // would read "8 blocks in one submission" as "8× slower OST" —
+    // penalizing exactly the OSTs where coalescing works best. A run of
+    // 1 degenerates to the seed's one-sample-per-object behavior.
+    let service = io_started.elapsed() / run.len() as u32;
+    for _ in 0..run.len() {
+        shared.sched.on_complete(ost, service);
+        shared.sched_stats.record_complete(service);
+    }
+    shared
+        .counters
+        .bytes_written
+        .fetch_add(total, Ordering::Relaxed);
+    true
+}
+
+/// One plain `write_at`: count the submission, stamp the block's
+/// storage fidelity; a write error aborts the sink (seed semantics).
+/// Returns `false` on abort. Used by the run-of-1 path and by the
+/// failed-vectored degrade loop, which must stay byte-identical.
+fn write_one(shared: &Arc<Shared>, req: &mut WriteReq) -> bool {
+    match shared.pfs.write_at(req.fid, req.offset, req.payload.as_slice()) {
+        Ok(faithful) => {
+            shared.counters.write_syscalls.fetch_add(1, Ordering::Relaxed);
+            req.faithful = faithful;
+            true
+        }
+        Err(e) => {
+            shared.abort_with(format!("pwrite failed: {e}"));
+            false
+        }
     }
 }
 
@@ -744,7 +895,9 @@ fn verifier_thread(shared: &Arc<Shared>, engine: PjrtEngine, rx: mpsc::Receiver<
         match engine.digest_batch(&objects, shared.padded_words) {
             Ok(digests) => {
                 for (req, d) in batch.drain(..).zip(digests) {
-                    let ok = d == Digest::from_u64(req.digest);
+                    // Wire digest match AND storage fidelity (§3.2): a
+                    // corrupted persist fails even if the payload is good.
+                    let ok = req.faithful && d == Digest::from_u64(req.digest);
                     finish_block(shared, &req, ok);
                 }
             }

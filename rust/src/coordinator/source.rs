@@ -299,6 +299,11 @@ pub struct SourceReport {
     /// issue loop found the slot pool dry (with zero-copy, buffers stay
     /// pinned until the sink releases the payload).
     pub rma_stalls: (u64, u64),
+    /// RMA DRAM actually registered at session end (`slots ×
+    /// object_size`, i.e. `rma_bytes` rounded down to whole slots),
+    /// unless `rma_autosize` grew the pool toward the negotiated send
+    /// window at CONNECT.
+    pub rma_bytes_effective: u64,
 }
 
 /// Run the source node to completion/fault. Blocks the calling thread
@@ -349,7 +354,16 @@ pub fn run_source(
             // Honor the sink's negotiated window, but never exceed our own
             // configured advertisement (defensive against a bad peer). A
             // legacy field-less CONNECT_ACK decodes as 1 = lockstep.
-            shared.window.arm(send_window.max(1).min(cfg.send_window.max(1)));
+            let win = send_window.max(1).min(cfg.send_window.max(1));
+            shared.window.arm(win);
+            // Pool autosizer: with zero-copy, every in-flight NEW_BLOCK
+            // pins its slot buffer until the sink releases the payload —
+            // register enough slots for the whole negotiated window
+            // instead of letting the window autotuner shrink around a
+            // starved pool.
+            if cfg.rma_autosize {
+                shared.rma.grow_to(win as usize);
+            }
         }
         Ok(m) => anyhow::bail!("handshake: unexpected {}", m.type_name()),
         Err(e) => return Ok(report_with_fault(&shared, format!("connect ack: {e}"), 0)),
@@ -399,6 +413,7 @@ pub fn run_source(
         send_window: shared.window.window(),
         send_window_effective: shared.window.effective(),
         rma_stalls: shared.rma.stall_stats(),
+        rma_bytes_effective: shared.rma.total_bytes(),
     })
 }
 
@@ -413,6 +428,7 @@ fn report_with_fault(shared: &Shared, msg: String, files_done: u64) -> SourceRep
         send_window: shared.window.window(),
         send_window_effective: shared.window.effective(),
         rma_stalls: shared.rma.stall_stats(),
+        rma_bytes_effective: shared.rma.total_bytes(),
     }
 }
 

@@ -35,7 +35,8 @@ use ftlads::sched::SchedPolicy;
 use ftlads::util::{fmt_bytes, fmt_duration};
 use ftlads::workload::{self, Workload};
 
-const FLAGS: [&str; 5] = ["resume", "verbose", "json", "ack-adaptive", "send-window-adaptive"];
+const FLAGS: [&str; 6] =
+    ["resume", "verbose", "json", "ack-adaptive", "send-window-adaptive", "rma-autosize"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -90,6 +91,13 @@ fn print_usage() {
            --send-window-adaptive                        float the applied window in\n\
                                                          1..=send_window from stall/\n\
                                                          credit-wait feedback\n\
+           --write-coalesce-bytes BYTES                  gather byte-contiguous sink\n\
+                                                         writes into one vectored\n\
+                                                         pwrite up to this budget\n\
+                                                         (0 = one pwrite per object)\n\
+           --rma-autosize                                grow each RMA pool toward\n\
+                                                         send_window x object_size at\n\
+                                                         CONNECT\n\
            --workload big|small|mixed  --files N  --file-size BYTES\n\
            --fault FRAC [--fault-side source|sink]       inject fault at FRAC\n\
            --resume                                      resume per FT logs\n\
@@ -150,6 +158,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if args.flag("send-window-adaptive") {
         cfg.send_window_adaptive = true;
+    }
+    if let Some(v) = args.get("write-coalesce-bytes") {
+        cfg.write_coalesce_bytes = parse_bytes(v)?;
+    }
+    if args.flag("rma-autosize") {
+        cfg.rma_autosize = true;
     }
     if let Some(v) = args.get("object-size") {
         cfg.object_size = parse_bytes(v)?;
@@ -268,6 +282,22 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         );
         m.insert("bytes_copied".into(), Json::Num(out.bytes_copied() as f64));
         m.insert(
+            "write_syscalls".into(),
+            Json::Num(out.sink.write_syscalls as f64),
+        );
+        m.insert(
+            "coalesced_runs".into(),
+            Json::Num(out.sink.coalesced_runs as f64),
+        );
+        m.insert(
+            "coalesce_bytes_max".into(),
+            Json::Num(out.sink.coalesce_bytes_max as f64),
+        );
+        m.insert(
+            "rma_bytes_effective".into(),
+            Json::Num(out.rma_bytes_effective as f64),
+        );
+        m.insert(
             "rma_stalls_src".into(),
             Json::Num(out.rma_stalls_src.0 as f64),
         );
@@ -350,6 +380,14 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
          on the clean path",
         out.payload_copies(),
         fmt_bytes(out.bytes_copied())
+    );
+    println!(
+        "  write path       : {} syscalls  {} coalesced runs  max run {}  \
+         rma pool {}",
+        out.sink.write_syscalls,
+        out.sink.coalesced_runs,
+        fmt_bytes(out.sink.coalesce_bytes_max),
+        fmt_bytes(out.rma_bytes_effective)
     );
     println!(
         "  sched (source)   : {} picks ({} fallback)  avg pick {:.0} ns  avg service {:.1} µs",

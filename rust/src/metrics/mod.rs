@@ -47,9 +47,8 @@ pub struct Counters {
     /// Payload memcpys on the data path. The zero-copy pipeline performs
     /// exactly ONE per object — the `pread` that stages it into the RMA
     /// slot (source side); everything after rides refcounted `Bytes` to
-    /// the wire and the sink's `pwrite`. A sink-side count means the
-    /// copy-on-write fallback fired (shared payload at write time) —
-    /// a regression on the hot path.
+    /// the wire and the sink's `pwrite`, which takes the payload as a
+    /// shared `&[u8]` (no copy-on-write detach even for shared views).
     pub payload_copies: AtomicU64,
     /// Bytes moved by those copies (`payload_copies` weighted by size).
     pub bytes_copied: AtomicU64,
@@ -59,6 +58,17 @@ pub struct Counters {
     /// pool ran dry — pinned payloads are starving the issue loop).
     pub send_window_grows: AtomicU64,
     pub send_window_shrinks: AtomicU64,
+    /// Sink write submissions: one per `write_at` call and one per
+    /// gathered `write_at_vectored` run. At `write_coalesce_bytes = 0`
+    /// this equals the object count (the seed's one-pwrite-per-object
+    /// path); coalescing drives it *below* the object count — the §A10
+    /// syscalls-per-byte claim.
+    pub write_syscalls: AtomicU64,
+    /// Gathered runs of length ≥ 2 actually submitted through
+    /// `write_at_vectored` (a run of 1 takes the plain `write_at` path).
+    pub coalesced_runs: AtomicU64,
+    /// Largest gathered run submitted, in bytes (high-water mark).
+    pub coalesce_bytes_max: AtomicU64,
 }
 
 impl Counters {
@@ -84,6 +94,9 @@ impl Counters {
             bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
             send_window_grows: self.send_window_grows.load(Ordering::Relaxed),
             send_window_shrinks: self.send_window_shrinks.load(Ordering::Relaxed),
+            write_syscalls: self.write_syscalls.load(Ordering::Relaxed),
+            coalesced_runs: self.coalesced_runs.load(Ordering::Relaxed),
+            coalesce_bytes_max: self.coalesce_bytes_max.load(Ordering::Relaxed),
         }
     }
 }
@@ -110,6 +123,9 @@ pub struct CounterSnapshot {
     pub bytes_copied: u64,
     pub send_window_grows: u64,
     pub send_window_shrinks: u64,
+    pub write_syscalls: u64,
+    pub coalesced_runs: u64,
+    pub coalesce_bytes_max: u64,
 }
 
 /// One `/proc/self` sample.

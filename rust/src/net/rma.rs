@@ -18,7 +18,7 @@
 //! automatically when the last reference drops — so slot-hold accounting
 //! in the issue loop is decoupled from payload lifetime on the wire.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -93,7 +93,9 @@ struct RmaPoolInner {
     free: Mutex<Vec<Vec<u8>>>,
     available: Condvar,
     slot_bytes: usize,
-    slots: usize,
+    /// Total registered slots. Atomic because the CONNECT-time autosizer
+    /// may grow the pool after IO threads already hold a handle.
+    slots: AtomicUsize,
     stalls: AtomicU64,
     stall_ns: AtomicU64,
 }
@@ -126,7 +128,7 @@ impl RmaPool {
                 free: Mutex::new(free),
                 available: Condvar::new(),
                 slot_bytes,
-                slots,
+                slots: AtomicUsize::new(slots),
                 stalls: AtomicU64::new(0),
                 stall_ns: AtomicU64::new(0),
             }),
@@ -134,11 +136,37 @@ impl RmaPool {
     }
 
     pub fn slots(&self) -> usize {
-        self.inner.slots
+        self.inner.slots.load(Ordering::SeqCst)
     }
 
     pub fn slot_bytes(&self) -> usize {
         self.inner.slot_bytes
+    }
+
+    /// Total registered RMA DRAM — `slots × slot_bytes` (grows with the
+    /// autosizer, never shrinks).
+    pub fn total_bytes(&self) -> u64 {
+        (self.slots() * self.slot_bytes()) as u64
+    }
+
+    /// Autosizer: grow the pool to at least `min_slots` slots (register
+    /// more DRAM), waking every blocked reservation. A pool already that
+    /// large is untouched — the pool only ever grows, so outstanding
+    /// slot handles stay valid. Returns the new slot count.
+    pub fn grow_to(&self, min_slots: usize) -> usize {
+        let mut free = self.inner.free.lock().unwrap_or_else(|e| e.into_inner());
+        let cur = self.inner.slots.load(Ordering::SeqCst);
+        if min_slots > cur {
+            for _ in cur..min_slots {
+                free.push(Vec::with_capacity(self.inner.slot_bytes));
+            }
+            self.inner.slots.store(min_slots, Ordering::SeqCst);
+            drop(free);
+            self.inner.available.notify_all();
+            min_slots
+        } else {
+            cur
+        }
     }
 
     pub fn free_slots(&self) -> usize {
@@ -246,6 +274,24 @@ mod tests {
         assert_eq!(p.slot_bytes(), 1 << 18);
         // Degenerate: smaller total than slot still yields one slot.
         assert_eq!(RmaPool::new(10, 100).slots(), 1);
+    }
+
+    #[test]
+    fn grow_to_adds_slots_and_wakes_waiters() {
+        let p = RmaPool::new(1024, 1024);
+        assert_eq!(p.slots(), 1);
+        assert_eq!(p.total_bytes(), 1024);
+        let _hold = p.reserve();
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || p2.reserve()); // blocks: pool dry
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(p.grow_to(4), 4);
+        let _s = h.join().unwrap(); // grow satisfied the blocked reserve
+        assert_eq!(p.slots(), 4);
+        assert_eq!(p.total_bytes(), 4096);
+        // Growing to a smaller/equal size is a no-op.
+        assert_eq!(p.grow_to(2), 4);
+        assert_eq!(p.slots(), 4);
     }
 
     #[test]

@@ -30,6 +30,14 @@ use anyhow::Result;
 pub use layout::StripeLayout;
 pub use ost::{OstId, OstModel, OstStats};
 
+/// Upper bound on the iovs of one gathered write — POSIX's IOV_MAX
+/// (1024 on Linux). Load-bearing invariant: the sink caps coalesced
+/// runs at this many blocks and [`disk::DiskPfs`] splits `pwritev`
+/// calls at the same bound, so "one gathered run == one syscall" (and
+/// therefore `write_syscalls` == real submissions) holds by
+/// construction. Keep both sides on THIS constant.
+pub const IOV_MAX_GATHER: usize = 1024;
+
 /// Opaque per-PFS file handle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FileId(pub u64);
@@ -71,12 +79,40 @@ pub trait Pfs: Send + Sync {
 
     /// `pwrite`: write at `offset`, charging the serving OST.
     ///
-    /// Takes `&mut` because the PFS models the DMA's view of the buffer:
-    /// an injected write corruption (see `sim::SimPfs`) mutates the bytes
-    /// *in place*, so a caller that digests the buffer after the call is
-    /// performing a faithful read-back verification — the §3.2 failure
-    /// mode stock LADS cannot detect.
-    fn write_at(&self, file: FileId, offset: u64, data: &mut [u8]) -> Result<()>;
+    /// Returns `true` when the storage persisted exactly `data` — the
+    /// caller's read-back verification channel for the §3.2 failure mode
+    /// stock LADS cannot detect. Real backends always persist faithfully
+    /// and return `true`; [`sim::SimPfs`] returns `false` for a write its
+    /// injected corruption flipped on the way down (the stored bytes, and
+    /// the ledger digest, then differ from `data`).
+    ///
+    /// The payload is a shared `&[u8]` — no implementor mutates it, so
+    /// refcounted `Bytes` views reach the platters without a
+    /// copy-on-write detach.
+    fn write_at(&self, file: FileId, offset: u64, data: &[u8]) -> Result<bool>;
+
+    /// Vectored `pwrite`: persist the concatenation of `iovs` at `offset`
+    /// as ONE storage request — one syscall / one OST service round where
+    /// the backend supports gather I/O ([`disk::DiskPfs`] via `pwritev`,
+    /// [`sim::SimPfs`] as a single charged service op). Returns the
+    /// indices of iovs the storage corrupted on the way down (empty =
+    /// every iov byte-faithful, the only possibility for real backends).
+    ///
+    /// The default implementation degrades to one [`write_at`] per iov:
+    /// byte- and fidelity-equivalent, just without the coalescing win.
+    ///
+    /// [`write_at`]: Pfs::write_at
+    fn write_at_vectored(&self, file: FileId, offset: u64, iovs: &[&[u8]]) -> Result<Vec<usize>> {
+        let mut corrupted = Vec::new();
+        let mut off = offset;
+        for (i, iov) in iovs.iter().enumerate() {
+            if !self.write_at(file, off, iov)? {
+                corrupted.push(i);
+            }
+            off += iov.len() as u64;
+        }
+        Ok(corrupted)
+    }
 
     /// Mark a file fully transferred (close + metadata barrier). After
     /// commit, `lookup().1.committed` is true.

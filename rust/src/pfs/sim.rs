@@ -6,11 +6,13 @@
 //! function regenerates the bytes anywhere (which is how tests verify
 //! end-to-end integrity without a second copy of the data).
 //!
-//! Sink side: `write_at` records a digest ledger entry per written range
-//! (plus optionally the raw bytes), so tests can check every object landed
-//! exactly once with exactly the right content. Write-corruption hooks
-//! flip a byte on the way down to exercise the §3.2 failure mode that
-//! motivates BLOCK_SYNC + integrity verification.
+//! Sink side: `write_at`/`write_at_vectored` record a digest ledger entry
+//! per written range (plus optionally the raw bytes), so tests can check
+//! every object landed exactly once with exactly the right content.
+//! Write-corruption hooks flip a byte of the *stored* copy on the way
+//! down — reported back through the write's fidelity return value — to
+//! exercise the §3.2 failure mode that motivates BLOCK_SYNC + integrity
+//! verification.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -134,7 +136,8 @@ impl SimPfs {
     }
 
     /// Arrange for the next write covering `(file_name, offset)` to be
-    /// corrupted (one byte flipped) before it lands.
+    /// corrupted (one byte of the stored copy flipped) before it lands;
+    /// the write reports the infidelity through its return value.
     pub fn inject_write_corruption(&self, file_name: &str, offset: u64) {
         self.corruptions
             .lock()
@@ -254,56 +257,80 @@ impl Pfs for SimPfs {
         Ok(n)
     }
 
-    fn write_at(&self, file: FileId, offset: u64, data: &mut [u8]) -> Result<()> {
+    fn write_at(&self, file: FileId, offset: u64, data: &[u8]) -> Result<bool> {
+        Ok(self.write_at_vectored(file, offset, &[data])?.is_empty())
+    }
+
+    /// One charged OST service op for the whole gathered run; per-iov
+    /// ledger entries so every constituent object keeps its own digest.
+    /// Pending single-shot corruptions whose `(file, offset)` matches an
+    /// iov flip one byte of the *stored* copy — the caller's buffer is
+    /// untouched, and the corrupted iov indices come back in the return
+    /// value, exactly what a read-back verification would observe.
+    fn write_at_vectored(&self, file: FileId, offset: u64, iovs: &[&[u8]]) -> Result<Vec<usize>> {
         let name = {
             let ids = self.ids.lock().unwrap_or_else(|e| e.into_inner());
             ids.get(&file.0)
                 .ok_or_else(|| anyhow::anyhow!("write_at: no file id {}", file.0))?
                 .clone()
         };
+        let total: u64 = iovs.iter().map(|v| v.len() as u64).sum();
 
-        // Apply any pending single-shot corruption for this (file, offset):
-        // the buffer is mutated IN PLACE, modeling bit rot between the
-        // caller's memory and the platters — a post-write digest of the
-        // buffer therefore sees exactly what the PFS stored.
-        {
-            let mut corr = self.corruptions.lock().unwrap_or_else(|e| e.into_inner());
-            let h = name_hash(&name);
-            if let Some(pos) = corr
-                .iter()
-                .position(|c| c.file_name_hash == h && c.offset == offset)
-            {
-                corr.remove(pos);
-                if !data.is_empty() {
-                    let mid = data.len() / 2;
-                    data[mid] ^= 0x40;
-                }
-                self.corrupted_writes.fetch_add(1, Ordering::SeqCst);
-            }
-        }
-        let payload: &[u8] = data;
-
+        let mut corrupted = Vec::new();
         let mut files = self.files.lock().unwrap_or_else(|e| e.into_inner());
         let f = files
             .get_mut(&name)
             .ok_or_else(|| anyhow::anyhow!("write_at: file '{name}' removed"))?;
-        if offset + payload.len() as u64 > f.meta.size {
+        if offset + total > f.meta.size {
             bail!(
-                "write_at: [{offset}, +{}) beyond declared size {} of '{name}'",
-                payload.len(),
+                "write_at: [{offset}, +{total}) beyond declared size {} of '{name}'",
                 f.meta.size
             );
         }
         let ost = self.layout.ost_for(f.meta.start_ost, offset);
-        let start_ost = f.meta.start_ost;
-        let _ = start_ost;
-        f.writes.insert(offset, (digest_bytes(payload), payload.len() as u32));
-        if let Some(d) = f.data.as_mut() {
-            d[offset as usize..offset as usize + payload.len()].copy_from_slice(payload);
+        let h = name_hash(&name);
+        let mut iov_offset = offset;
+        for (i, &iov) in iovs.iter().enumerate() {
+            // Single-shot corruption for this (file, iov offset): bit rot
+            // between the caller's memory and the platters, applied to the
+            // stored copy only.
+            let corrupt = {
+                let mut corr = self.corruptions.lock().unwrap_or_else(|e| e.into_inner());
+                match corr
+                    .iter()
+                    .position(|c| c.file_name_hash == h && c.offset == iov_offset)
+                {
+                    Some(pos) => {
+                        corr.remove(pos);
+                        true
+                    }
+                    None => false,
+                }
+            };
+            let mut stored_copy: Vec<u8>;
+            let stored: &[u8] = if corrupt && !iov.is_empty() {
+                stored_copy = iov.to_vec();
+                let mid = stored_copy.len() / 2;
+                stored_copy[mid] ^= 0x40;
+                self.corrupted_writes.fetch_add(1, Ordering::SeqCst);
+                corrupted.push(i);
+                &stored_copy
+            } else {
+                iov
+            };
+            f.writes
+                .insert(iov_offset, (digest_bytes(stored), stored.len() as u32));
+            if let Some(d) = f.data.as_mut() {
+                d[iov_offset as usize..iov_offset as usize + stored.len()]
+                    .copy_from_slice(stored);
+            }
+            iov_offset += iov.len() as u64;
         }
         drop(files);
-        self.osts.service(ost, payload.len() as u64, true);
-        Ok(())
+        // ONE service round for the gathered run (the coalescing win the
+        // OST model is meant to expose).
+        self.osts.service(ost, total, true);
+        Ok(corrupted)
     }
 
     fn commit_file(&self, file: FileId) -> Result<()> {
@@ -390,8 +417,8 @@ mod tests {
     fn write_ledger_records_digests() {
         let pfs = fast_pfs();
         let id = pfs.create("out", 100, 0).unwrap();
-        pfs.write_at(id, 0, &mut [1, 2, 3, 4]).unwrap();
-        pfs.write_at(id, 50, &mut [5; 10]).unwrap();
+        assert!(pfs.write_at(id, 0, &[1, 2, 3, 4]).unwrap());
+        assert!(pfs.write_at(id, 50, &[5; 10]).unwrap());
         let (d, len) = pfs.written_digest("out", 0).unwrap();
         assert_eq!(len, 4);
         assert_eq!(d, digest_bytes(&[1, 2, 3, 4]));
@@ -403,7 +430,44 @@ mod tests {
     fn write_beyond_size_rejected() {
         let pfs = fast_pfs();
         let id = pfs.create("out", 10, 0).unwrap();
-        assert!(pfs.write_at(id, 8, &mut [0; 4]).is_err());
+        assert!(pfs.write_at(id, 8, &[0; 4]).is_err());
+        // Vectored totals are bounds-checked the same way.
+        assert!(pfs.write_at_vectored(id, 4, &[&[0; 4], &[0; 4]]).is_err());
+    }
+
+    #[test]
+    fn vectored_write_is_one_service_op_with_per_iov_ledger() {
+        let pfs = fast_pfs();
+        let id = pfs.create("out", 100, 0).unwrap();
+        let (a, b, c): (&[u8], &[u8], &[u8]) = (&[1; 8], &[2; 8], &[3; 4]);
+        let corrupted = pfs.write_at_vectored(id, 10, &[a, b, c]).unwrap();
+        assert!(corrupted.is_empty());
+        // One OST service round for the whole gathered run...
+        let stats = pfs.ost_model().total_stats();
+        assert_eq!(stats.writes, 1);
+        assert_eq!(stats.bytes_written, 20);
+        // ...but every constituent range keeps its own ledger digest.
+        assert_eq!(pfs.written_digest("out", 10).unwrap(), (digest_bytes(a), 8));
+        assert_eq!(pfs.written_digest("out", 18).unwrap(), (digest_bytes(b), 8));
+        assert_eq!(pfs.written_digest("out", 26).unwrap(), (digest_bytes(c), 4));
+        assert_eq!(pfs.written_ranges("out"), 3);
+    }
+
+    #[test]
+    fn vectored_write_reports_corrupted_iov_indices() {
+        let pfs = fast_pfs();
+        let id = pfs.create("out", 100, 0).unwrap();
+        // Corrupt the middle iov of a 3-iov run (it starts at offset 18).
+        pfs.inject_write_corruption("out", 18);
+        let (a, b): (&[u8], &[u8]) = (&[7; 8], &[9; 8]);
+        let corrupted = pfs.write_at_vectored(id, 10, &[a, b, a]).unwrap();
+        assert_eq!(corrupted, vec![1]);
+        assert_eq!(pfs.corrupted_writes.load(Ordering::SeqCst), 1);
+        // The caller's view of the run is untouched; the stored copy of
+        // the corrupted iov differs, its neighbors are faithful.
+        assert_eq!(pfs.written_digest("out", 10).unwrap().0, digest_bytes(a));
+        assert_ne!(pfs.written_digest("out", 18).unwrap().0, digest_bytes(b));
+        assert_eq!(pfs.written_digest("out", 26).unwrap().0, digest_bytes(a));
     }
 
     #[test]
@@ -421,12 +485,15 @@ mod tests {
         let id = pfs.create("out", 100, 0).unwrap();
         pfs.inject_write_corruption("out", 10);
         let data = [7u8; 20];
-        pfs.write_at(id, 10, &mut data.clone()).unwrap();
+        assert!(
+            !pfs.write_at(id, 10, &data).unwrap(),
+            "corrupted write must report infidelity"
+        );
         let (d, _) = pfs.written_digest("out", 10).unwrap();
         assert_ne!(d, digest_bytes(&data), "write should have been corrupted");
         assert_eq!(pfs.corrupted_writes.load(Ordering::SeqCst), 1);
         // Re-write is clean (single shot).
-        pfs.write_at(id, 10, &mut data.clone()).unwrap();
+        assert!(pfs.write_at(id, 10, &data).unwrap());
         let (d2, _) = pfs.written_digest("out", 10).unwrap();
         assert_eq!(d2, digest_bytes(&data));
     }

@@ -119,6 +119,43 @@ fn cli_adaptive_send_window_and_zero_copy_summary() {
 }
 
 #[test]
+fn cli_write_coalesce_and_rma_autosize_summary() {
+    // --write-coalesce-bytes / --rma-autosize flow through the launcher;
+    // the summary's write-path line reports the syscall/run counters and
+    // the autosized pool (window 16 x 256 KiB MTU = 4 MiB).
+    let ftdir = tmp("t1d");
+    let out = ftlads()
+        .args([
+            "transfer",
+            "--workload", "big",
+            "--files", "4",
+            "--file-size", "512K",
+            "--mechanism", "universal",
+            "--method", "bit64",
+            "--send-window", "16",
+            "--write-coalesce-bytes", "4M",
+            "--rma-autosize",
+            "--set", "rma_bytes=512K",
+            "--ft-dir", ftdir.to_str().unwrap(),
+            "--set", "time_scale=0",
+        ])
+        .output()
+        .expect("spawn ftlads");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "stdout: {stdout}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("completed        : true"), "{stdout}");
+    // 4 files x 2 objects: 8 writes uncoalesced, fewer if runs formed —
+    // either way the line is present and the autosized pool is 4 MiB.
+    assert!(stdout.contains("write path       : "), "{stdout}");
+    assert!(stdout.contains("rma pool 4.0 MiB"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&ftdir);
+}
+
+#[test]
 fn cli_fault_exits_2_then_recover_shows_state() {
     let ftdir = tmp("t2");
     let common = [

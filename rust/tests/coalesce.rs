@@ -1,0 +1,292 @@
+//! Sink-side contiguous-write coalescing: seed equivalence at
+//! `write_coalesce_bytes = 0`, the gathered-run win itself (fewer write
+//! submissions, one OST service round per run), per-block ack/verify
+//! semantics inside runs, the failed-vectored-write degradation path,
+//! and the CONNECT-time RMA pool autosizer.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+use ftlads::config::Config;
+use ftlads::coordinator::sink::spawn_sink;
+use ftlads::coordinator::source::run_source;
+use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
+use ftlads::pfs::ost::OstConfig;
+use ftlads::pfs::sim::SimPfs;
+use ftlads::pfs::{FileId, FileMeta, Pfs, StripeLayout};
+use ftlads::workload;
+
+/// Endpoint wrapper recording the type of every message sent through it
+/// (sink side: observes the ack wire shapes).
+struct Tap {
+    inner: channel::ChannelEndpoint,
+    sent_types: Arc<Mutex<Vec<&'static str>>>,
+}
+
+impl Endpoint for Tap {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        self.sent_types
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(msg.type_name());
+        self.inner.send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+fn count(types: &[&'static str], name: &str) -> usize {
+    types.iter().filter(|t| **t == name).count()
+}
+
+/// A SimEnv whose *sink* storage is slow and strictly serial per OST
+/// while the source/wire are instant — write queues genuinely build up,
+/// so contiguous runs form deterministically instead of racing the
+/// drain. `blocks_per_file` objects per file land on one OST each
+/// (stripe_count 1, file < one stripe).
+fn slow_sink_env(files: usize, blocks_per_file: u64, mut cfg: Config) -> SimEnv {
+    cfg.send_window = 64;
+    cfg.rma_bytes = 64 * cfg.object_size as usize;
+    let wl = workload::big_workload(files, blocks_per_file * cfg.object_size);
+    let source = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), cfg.seed));
+    source.populate(&wl.as_tuples());
+    let slow = OstConfig {
+        bandwidth: 1e12,
+        base_latency: Duration::from_millis(1),
+        max_concurrent: 1,
+        time_scale: 1.0,
+    };
+    let sink = Arc::new(SimPfs::new(cfg.layout(), slow, cfg.seed));
+    let files = wl.files.iter().map(|f| f.name.clone()).collect();
+    SimEnv { cfg, source, sink, files }
+}
+
+#[test]
+fn coalesce_off_is_ack_for_ack_identical_to_seed() {
+    // The acceptance pin: at write_coalesce_bytes = 0 (the default) the
+    // sink write path is the PR 4 path exactly — one pwrite and one
+    // single BLOCK_SYNC per object, no gathered runs, no batch messages,
+    // and the configured RMA pool untouched.
+    let cfg = Config::for_tests("coal-seed-eq");
+    assert_eq!(cfg.write_coalesce_bytes, 0, "default must be the seed path");
+    assert!(!cfg.rma_autosize, "autosizing must be opt-in");
+    let wl = workload::big_workload(4, 512 << 10); // 32 objects @ 64 KiB
+    let env = SimEnv::new(cfg.clone(), &wl);
+
+    let (src_ep, sink_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let sent_types = Arc::new(Mutex::new(Vec::new()));
+    let tap = Tap { inner: sink_ep, sent_types: sent_types.clone() };
+    let sink_node = spawn_sink(&cfg, env.sink.clone(), Arc::new(tap), None).unwrap();
+    let spec = TransferSpec::fresh(env.files.clone());
+    let src = run_source(&cfg, env.source.clone(), Arc::new(src_ep), &spec).unwrap();
+    let snk = sink_node.join();
+    let types = sent_types.lock().unwrap_or_else(|e| e.into_inner()).clone();
+
+    assert!(src.fault.is_none(), "{:?}", src.fault);
+    assert!(snk.fault.is_none(), "{:?}", snk.fault);
+    assert_eq!(count(&types, "BLOCK_SYNC"), 32, "one ack per object");
+    assert_eq!(count(&types, "BLOCK_SYNC_BATCH"), 0);
+    assert_eq!(snk.counters.ack_messages, 32);
+    assert_eq!(snk.counters.write_syscalls, 32, "one pwrite per object");
+    assert_eq!(snk.counters.coalesced_runs, 0);
+    assert_eq!(snk.counters.coalesce_bytes_max, 0);
+    // One scheduler service round per object, exactly as before.
+    assert_eq!(snk.sched.completes, 32);
+    assert_eq!(src.counters.log_writes, 32, "one logger write per ack");
+    assert_eq!(snk.rma_bytes_effective, cfg.rma_bytes as u64);
+    assert_eq!(src.rma_bytes_effective, cfg.rma_bytes as u64);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn coalescing_gathers_runs_but_keeps_per_block_acks_and_logs() {
+    // With a 4 MiB gather budget on a contiguous workload, the sink
+    // submits measurably fewer writes — but every block is still
+    // individually acked, logged, and content-verified.
+    let mut cfg = Config::for_tests("coal-gather");
+    cfg.write_coalesce_bytes = 4 << 20;
+    let env = slow_sink_env(4, 8, cfg); // 32 objects
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+
+    let objects = out.source.objects_sent;
+    assert_eq!(objects, 32);
+    assert!(
+        out.sink.coalesced_runs > 0,
+        "contiguous backlog must form gathered runs"
+    );
+    assert!(
+        out.sink.write_syscalls * 2 <= objects,
+        "coalescing must at least halve write submissions: {} syscalls for {objects} objects",
+        out.sink.write_syscalls
+    );
+    assert!(out.sink.coalesce_bytes_max > env.cfg.object_size);
+    assert!(out.sink.coalesce_bytes_max <= 4 << 20);
+    // Per-block semantics unchanged: one ack and one log append per
+    // object (ack_batch = 1), nothing failed.
+    assert_eq!(out.sink.ack_messages, objects);
+    assert_eq!(out.source.log_appends, objects);
+    assert_eq!(out.source.objects_synced, objects);
+    assert_eq!(out.sink.objects_failed_verify, 0);
+    // The OST model saw one service round per gathered run, not per
+    // object — the congestion-avoidance win the OST model exposes.
+    let ost_writes = env.sink.ost_model().total_stats().writes;
+    assert_eq!(ost_writes, out.sink.write_syscalls);
+    // Scheduler feedback stays per-object (run samples split evenly), so
+    // stateful policies see comparable numbers with coalescing on.
+    assert_eq!(out.sink_sched.completes, objects);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn corruption_mid_run_fails_only_that_block() {
+    // A corrupted persist inside a gathered run must fail exactly that
+    // block's verify (per-block digest semantics), get retransmitted,
+    // and leave the final dataset byte-identical.
+    let mut cfg = Config::for_tests("coal-corrupt");
+    cfg.write_coalesce_bytes = 4 << 20;
+    let env = slow_sink_env(3, 8, cfg);
+    // Corrupt a mid-file block of file 1 (offset 3 * object_size).
+    env.sink
+        .inject_write_corruption(&env.files[1], 3 * env.cfg.object_size);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    assert_eq!(out.sink.objects_failed_verify, 1);
+    assert_eq!(out.source.objects_failed_verify, 1);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+/// A PFS whose vectored write always fails: the sink must degrade to
+/// per-block writes with unchanged fault semantics.
+struct NoGatherPfs {
+    inner: Arc<SimPfs>,
+}
+
+impl Pfs for NoGatherPfs {
+    fn layout(&self) -> &StripeLayout {
+        self.inner.layout()
+    }
+    fn ost_model(&self) -> &ftlads::pfs::OstModel {
+        self.inner.ost_model()
+    }
+    fn lookup(&self, name: &str) -> Option<(FileId, FileMeta)> {
+        self.inner.lookup(name)
+    }
+    fn list(&self) -> Vec<String> {
+        self.inner.list()
+    }
+    fn create(&self, name: &str, size: u64, start_ost: u32) -> Result<FileId> {
+        self.inner.create(name, size, start_ost)
+    }
+    fn read_at(&self, file: FileId, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.inner.read_at(file, offset, buf)
+    }
+    fn write_at(&self, file: FileId, offset: u64, data: &[u8]) -> Result<bool> {
+        self.inner.write_at(file, offset, data)
+    }
+    fn write_at_vectored(
+        &self,
+        _file: FileId,
+        _offset: u64,
+        _iovs: &[&[u8]],
+    ) -> Result<Vec<usize>> {
+        anyhow::bail!("gather I/O unavailable")
+    }
+    fn commit_file(&self, file: FileId) -> Result<()> {
+        self.inner.commit_file(file)
+    }
+    fn remove(&self, name: &str) -> Result<()> {
+        self.inner.remove(name)
+    }
+}
+
+#[test]
+fn failed_vectored_write_degrades_to_per_block_and_completes() {
+    let mut cfg = Config::for_tests("coal-degrade");
+    cfg.write_coalesce_bytes = 4 << 20;
+    let env = slow_sink_env(3, 8, cfg); // 24 objects
+    let gateless: Arc<dyn Pfs> = Arc::new(NoGatherPfs { inner: env.sink.clone() });
+    let out = ftlads::coordinator::run_transfer(
+        &env.cfg,
+        env.source.clone(),
+        gateless,
+        &TransferSpec::fresh(env.files.clone()),
+        None,
+    )
+    .unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    // Every gathered submission failed over to per-block writes: the
+    // syscall count collapses back to one per object and no run is
+    // counted as coalesced.
+    assert_eq!(out.sink.write_syscalls, 24);
+    assert_eq!(out.sink.coalesced_runs, 0);
+    assert_eq!(out.sink.objects_failed_verify, 0);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn rma_autosize_grows_both_pools_to_the_negotiated_window() {
+    // A 2-slot pool with a 16-deep window: without the autosizer the
+    // transfer limps along on pool back-pressure; with it both sides
+    // register window × object_size at CONNECT and report it.
+    for autosize in [false, true] {
+        let mut cfg = Config::for_tests(&format!("coal-autosize-{autosize}"));
+        cfg.send_window = 16;
+        cfg.rma_bytes = 2 * cfg.object_size as usize;
+        cfg.rma_autosize = autosize;
+        let wl = workload::big_workload(3, 8 * cfg.object_size); // 24 objects
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        assert!(out.completed, "autosize={autosize}: {:?}", out.fault);
+        let want = if autosize {
+            16 * env.cfg.object_size
+        } else {
+            env.cfg.rma_bytes as u64
+        };
+        assert_eq!(out.rma_bytes_effective, want, "autosize={autosize}");
+        env.verify_sink_complete().unwrap();
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+}
+
+#[test]
+fn rma_autosize_respects_the_negotiated_minimum() {
+    // Source asks for window 16 but the sink caps it at 4: the autosizer
+    // must size to the NEGOTIATED window (4 slots), not the request.
+    let mut src_cfg = Config::for_tests("coal-autosize-min");
+    src_cfg.send_window = 16;
+    src_cfg.rma_bytes = 2 * src_cfg.object_size as usize;
+    src_cfg.rma_autosize = true;
+    let mut sink_cfg = src_cfg.clone();
+    sink_cfg.send_window = 4;
+    let wl = workload::big_workload(2, 8 * src_cfg.object_size);
+    let env = SimEnv::new(src_cfg.clone(), &wl);
+
+    let (src_ep, sink_ep) = channel::pair(src_cfg.wire(), FaultController::unarmed());
+    let sink_node = spawn_sink(&sink_cfg, env.sink.clone(), Arc::new(sink_ep), None).unwrap();
+    let spec = TransferSpec::fresh(env.files.clone());
+    let src = run_source(&src_cfg, env.source.clone(), Arc::new(src_ep), &spec).unwrap();
+    let snk = sink_node.join();
+    assert!(src.fault.is_none(), "{:?}", src.fault);
+    assert_eq!(src.send_window, 4, "negotiation lands the min");
+    assert_eq!(src.rma_bytes_effective, 4 * src_cfg.object_size);
+    assert_eq!(snk.rma_bytes_effective, 4 * sink_cfg.object_size);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}

@@ -218,6 +218,85 @@ fn send_window_full_fault_every_mechanism() {
 }
 
 #[test]
+fn coalesced_writes_fault_every_mechanism() {
+    // The write-coalescing pipeline: for every FT mechanism, sever the
+    // connection mid-transfer — with gathered runs potentially half-
+    // written at the sink — then resume and require the log-based
+    // retransmit bound (`resent <= total - logged`: every group-committed
+    // object is skipped) and a final dataset byte-identical to what the
+    // uncoalesced path produces. Coalescing must never change WHAT lands,
+    // only how many write submissions carry it.
+    for mech in Mechanism::ALL_FT {
+        let mut cfg = Config::for_tests(&format!("matrix-coal-{}", mech.as_str()));
+        cfg.mechanism = mech;
+        cfg.method = Method::Bit64;
+        cfg.write_coalesce_bytes = 4 << 20;
+        cfg.send_window = 8;
+        cfg.ack_batch = 4;
+        cfg.ack_flush_us = 500;
+        let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+        let total = wl.total_objects(cfg.object_size);
+        let env = SimEnv::new(cfg, &wl);
+        let out = env
+            .run(
+                &TransferSpec::fresh(env.files.clone())
+                    .with_fault(FaultPlan::at_fraction(0.5, Side::Source)),
+            )
+            .unwrap();
+        assert!(!out.completed, "{mech:?}: fault did not fire");
+        let logged: u64 = recover::recover_all(&env.cfg.ft())
+            .unwrap()
+            .values()
+            .map(|s| s.count() as u64)
+            .sum();
+        let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+        assert!(out2.completed, "{mech:?}: resume failed: {:?}", out2.fault);
+        assert!(
+            out2.source.objects_skipped_resume >= logged,
+            "{mech:?}: logged objects not skipped ({} skipped, {logged} logged)",
+            out2.source.objects_skipped_resume
+        );
+        assert!(
+            out2.source.objects_sent <= total - logged,
+            "{mech:?}: resume retransmitted logged objects \
+             ({} sent, {logged} logged of {total})",
+            out2.source.objects_sent
+        );
+        env.verify_sink_complete()
+            .unwrap_or_else(|e| panic!("{mech:?}: {e}"));
+        let left = recover::recover_all(&env.cfg.ft()).unwrap();
+        assert!(left.is_empty(), "{mech:?}: logs left after completion");
+
+        // Byte-identity vs coalesce-off: a reference transfer of the
+        // same workload with coalescing disabled must leave the exact
+        // same per-offset write digests at its sink.
+        let mut ref_cfg = Config::for_tests(&format!("matrix-coal-ref-{}", mech.as_str()));
+        ref_cfg.mechanism = mech;
+        ref_cfg.method = Method::Bit64;
+        assert_eq!(ref_cfg.write_coalesce_bytes, 0);
+        let ref_env = SimEnv::new(ref_cfg, &wl);
+        let ref_out = ref_env
+            .run(&TransferSpec::fresh(ref_env.files.clone()))
+            .unwrap();
+        assert!(ref_out.completed, "{mech:?}: reference run failed");
+        for name in &env.files {
+            let size = env.source.lookup(name).unwrap().1.size;
+            let blocks = ftlads::util::div_ceil(size, env.cfg.object_size);
+            for b in 0..blocks {
+                let offset = b * env.cfg.object_size;
+                assert_eq!(
+                    env.sink.written_digest(name, offset),
+                    ref_env.sink.written_digest(name, offset),
+                    "{mech:?}: '{name}' block {b} differs from the uncoalesced path"
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        let _ = std::fs::remove_dir_all(&ref_env.cfg.ft_dir);
+    }
+}
+
+#[test]
 fn adaptive_acks_survive_mid_transfer_fault() {
     // ack_adaptive mid-flight: a crash while the effective batch floats
     // must lose at most the un-flushed acks, like the fixed-batch path.

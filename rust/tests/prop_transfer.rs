@@ -52,6 +52,14 @@ fn random_config(rng: &mut Pcg32, tag: &str) -> Config {
     // preserve them at any window too, including lockstep.
     cfg.send_window = rng.range(1, 9) as u32;
     cfg.send_window_adaptive = cfg.send_window > 1 && rng.bool(0.5);
+    // Sink write coalescing must preserve every invariant at any gather
+    // budget — half the runs stay on the seed-exact 0 path, the rest
+    // sweep small-to-huge budgets (a budget below 2 objects can never
+    // gather and must behave like 0).
+    cfg.write_coalesce_bytes =
+        *rng.choose(&[0, 0, cfg.object_size, 2 * cfg.object_size, 64 * cfg.object_size]);
+    // The CONNECT-time pool autosizer must be invariant-preserving too.
+    cfg.rma_autosize = rng.bool(0.25);
     cfg.seed = rng.next_u64();
     cfg
 }

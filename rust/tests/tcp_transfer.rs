@@ -82,6 +82,7 @@ impl TcpEnv {
             send_window: src_report.send_window,
             send_window_effective: src_report.send_window_effective,
             ack_batch_effective: sink_report.ack_batch_effective,
+            rma_bytes_effective: src_report.rma_bytes_effective,
         }
     }
 
