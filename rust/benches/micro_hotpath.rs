@@ -24,6 +24,11 @@
 //!                   workload with a slow serial sink: gathered vectored
 //!                   pwrites must cut syscalls-per-byte ≥ 2× at 4 MiB
 //!                   (the §A10 table)
+//!   multi-stream    aggregate goodput per `data_streams` on a wire-bound
+//!                   transfer (K OST-sharded data connections, per-stream
+//!                   credit windows + RMA pools: ≥ 2× at K = 4) and
+//!                   source read syscalls with the preadv gather (≥ 2×
+//!                   fewer at a 4 MiB budget) — the §A11 tables
 //!
 //! Plain timing mains (no criterion offline); each reports mean ± 99 % CI
 //! over fixed iteration counts with warmup. With `FTLADS_BENCH_JSON_DIR`
@@ -467,6 +472,143 @@ fn bench_write_coalesce() {
     );
 }
 
+/// §A11 headline tables: (a) aggregate goodput vs `data_streams` on a
+/// wire-bound transfer — the wire model serializes each connection
+/// independently at ~200 MB/s, so K OST-sharded data connections with
+/// per-stream credit windows and RMA pools must scale aggregate goodput
+/// ≥ 2× at K = 4 vs the fused K = 1 baseline; (b) source read syscalls
+/// with the preadv gather on a byte-contiguous workload — one
+/// `read_at_vectored` per contiguous run instead of one `read_at` per
+/// object must cut read submissions ≥ 2×. `FTLADS_BENCH_SCALE=quick`
+/// shrinks the workload for CI smoke runs; the ratios are asserted at
+/// either scale.
+fn bench_multi_stream() {
+    let quick = std::env::var("FTLADS_BENCH_SCALE").as_deref() == Ok("quick");
+    // Files sit wholly on one OST each (file ≤ one 1 MiB stripe at 64 KiB
+    // objects ×16) and round-robin over the 11 OSTs, so the `ost % K`
+    // shard spreads them across every stream.
+    let (files, blocks) = if quick { (8usize, 8u64) } else { (12, 16) };
+    let wire_cfg = |tag: &str| {
+        let mut cfg = Config::for_tests(tag);
+        cfg.io_threads = 4;
+        // Wire-bound: ~330 µs to serialize one 64 KiB object per
+        // connection, free storage on both ends (the send-window bench's
+        // §A8 configuration — the wire is the only contended resource).
+        cfg.time_scale = 1.0;
+        cfg.net_bandwidth = 2.0e8;
+        cfg.net_latency_us = 5;
+        cfg.ost_bandwidth = f64::INFINITY;
+        cfg.ost_latency_us = 0;
+        cfg.ost_concurrent = 8;
+        cfg
+    };
+
+    // (a) stream scaling.
+    let mut rows = Vec::new();
+    let mut goodput_at: Vec<(u32, f64)> = Vec::new();
+    for k in [1u32, 2, 4] {
+        let mut cfg = wire_cfg(&format!("micro-mstream-{k}"));
+        cfg.data_streams = k;
+        // Window and pool are per stream — identical per-stream credit,
+        // so added streams are the only variable.
+        cfg.send_window = 16;
+        cfg.rma_bytes = 16 * cfg.object_size as usize;
+        let wl = workload::big_workload(files, blocks * cfg.object_size);
+        let total_bytes = wl.total_bytes();
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        assert!(out.completed, "streams={k}: {:?}", out.fault);
+        assert_eq!(out.data_streams, k, "CONNECT must negotiate the asked K");
+        env.verify_sink_complete().unwrap();
+        let secs = out.elapsed.as_secs_f64();
+        let mbps = total_bytes as f64 / secs / 1e6;
+        goodput_at.push((k, mbps));
+        rows.push(vec![
+            format!("{k}"),
+            format!("{:.1}", secs * 1e3),
+            format!("{mbps:.1}"),
+            format!(
+                "{:.2}",
+                mbps / goodput_at[0].1.max(f64::MIN_POSITIVE)
+            ),
+        ]);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    let find = |k: u32| goodput_at.iter().find(|&&(fk, _)| fk == k).unwrap().1;
+    assert!(
+        find(4) >= 2.0 * find(1),
+        "K=4 must at least double aggregate goodput over the fused path: \
+         {:.1} MB/s vs {:.1} MB/s",
+        find(4),
+        find(1)
+    );
+    print_table(
+        &format!(
+            "stream scaling ({} objects, wire-bound, window 16/stream)",
+            files as u64 * blocks
+        ),
+        &["data streams", "ms", "MB/s", "speedup"],
+        &rows,
+    );
+
+    // (b) preadv gather: shallow window (few wire-pinned slots) over a
+    // deep pool, so spare slots are available to stage gathered runs.
+    let mut rows = Vec::new();
+    let mut reads_at: Vec<(u64, u64)> = Vec::new();
+    for gather in [0u64, 4 << 20] {
+        let mut cfg = wire_cfg(&format!("micro-mgather-{gather}"));
+        cfg.read_gather_bytes = gather;
+        cfg.send_window = 8;
+        cfg.rma_bytes = 64 * cfg.object_size as usize;
+        let wl = workload::big_workload(files, blocks * cfg.object_size);
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        assert!(out.completed, "gather={gather}: {:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        let objects = out.source.objects_sent;
+        if gather == 0 {
+            assert_eq!(
+                out.source.read_syscalls, objects,
+                "gather off must pread once per object"
+            );
+            assert_eq!(out.source.gathered_runs, 0);
+        } else {
+            assert!(
+                out.source.gathered_runs > 0,
+                "contiguous backlog must form gathered preads"
+            );
+        }
+        reads_at.push((gather, out.source.read_syscalls));
+        let label = if gather == 0 {
+            "off".to_string()
+        } else {
+            format!("{} MiB", gather >> 20)
+        };
+        rows.push(vec![
+            label,
+            format!("{}", out.source.read_syscalls),
+            format!("{}", out.source.gathered_runs),
+            format!("{}", out.source.gather_bytes_max >> 10),
+        ]);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    let find = |g: u64| reads_at.iter().find(|&&(fg, _)| fg == g).unwrap().1;
+    let (off, four) = (find(0), find(4 << 20));
+    assert!(
+        four * 2 <= off,
+        "4 MiB preadv gather must at least halve source read syscalls: \
+         {four} vs {off}"
+    );
+    print_table(
+        &format!(
+            "source read gather ({} contiguous objects, preadv)",
+            files as u64 * blocks
+        ),
+        &["gather", "read syscalls", "gathered runs", "max run KiB"],
+        &rows,
+    );
+}
+
 fn bench_recovery_parse() {
     let blocks_per_file = 256u32;
     let files = 64usize;
@@ -641,6 +783,7 @@ fn main() {
     bench_send_window();
     bench_zero_copy();
     bench_write_coalesce();
+    bench_multi_stream();
     bench_recovery_parse();
     let _ = ftlads::bench_support::write_json_summary("micro_hotpath");
 }

@@ -210,6 +210,7 @@ fn bbcp_sink(pfs: &dyn Pfs, ep: &dyn Endpoint, ctr: &Counters) {
                     rma_slots: 0,
                     ack_batch: 1,
                     send_window: 1,
+                    data_streams: 1,
                 });
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
@@ -271,6 +272,7 @@ fn bbcp_source(
         resume: false,
         ack_batch: 1,
         send_window: 1,
+        data_streams: 1,
     })
     .map_err(|e| anyhow::anyhow!("connect: {e}"))?;
     match ep.recv_timeout(Duration::from_secs(10)) {

@@ -220,6 +220,40 @@ mod tests {
     }
 
     #[test]
+    fn data_streams_and_read_gather_flags_roundtrip_into_config() {
+        use crate::config::{parse_bytes, Config};
+        // The way main.rs wires them: --data-streams takes a count,
+        // --read-gather-bytes a byte value; both exist as --set keys.
+        let a = Args::parse(
+            &argv(&["transfer", "--data-streams", "4", "--read-gather-bytes", "8M"]),
+            &[],
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.data_streams = a.get_parse("data-streams", 1u32).unwrap();
+        cfg.read_gather_bytes = parse_bytes(a.get("read-gather-bytes").unwrap()).unwrap();
+        assert_eq!(cfg.data_streams, 4);
+        assert_eq!(cfg.read_gather_bytes, 8 << 20);
+        assert!(cfg.validate().is_ok());
+
+        let mut cfg = Config::default();
+        cfg.apply_kv("data_streams", "8").unwrap();
+        cfg.apply_kv("read_gather_bytes", "2M").unwrap();
+        assert_eq!(cfg.data_streams, 8);
+        assert_eq!(cfg.read_gather_bytes, 2 << 20);
+        assert!(cfg.validate().is_ok());
+        // 1 stream / 0 gather is the seed-exact off position; the stream
+        // count is bounded.
+        cfg.apply_kv("data_streams", "1").unwrap();
+        cfg.apply_kv("read_gather_bytes", "0").unwrap();
+        assert!(cfg.validate().is_ok());
+        cfg.apply_kv("data_streams", "65").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.apply_kv("data_streams", "0").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn scheduler_typo_error_lists_valid_policies() {
         use crate::sched::SchedPolicy;
         let a = Args::parse(&argv(&["transfer", "--scheduler", "speedy"]), &[]).unwrap();

@@ -80,6 +80,24 @@ pub struct Config {
     /// block keeps its own digest verify, BLOCK_SYNC ack, and FT-log
     /// record regardless.
     pub write_coalesce_bytes: u64,
+    /// Parallel data plane: how many OST-sharded data connections to run
+    /// alongside the control connection. 1 (default) is today's single
+    /// fused connection, reproduced byte-identically; K >= 2 dials K data
+    /// connections (identified by STREAM_HELLO), shards OSTs across them
+    /// (`ost % K`), and gives every stream its own credit window, RMA
+    /// slot pool, and ack coalescer. Negotiated to min(src, sink) at
+    /// CONNECT; legacy peers without the field read as 1 and keep the
+    /// fused path. Note `rma_bytes` and `send_window` are per stream.
+    pub data_streams: u32,
+    /// Source-side contiguous-read gather budget: when an IO thread
+    /// dequeues a block, it drains further byte-contiguous blocks of the
+    /// same file from the same OST queue until the gathered run reaches
+    /// this many bytes, reserves one RMA slot per block, and fills them
+    /// all with ONE vectored `preadv` (`Pfs::read_at_vectored`) — the
+    /// source mirror of `write_coalesce_bytes`. 0 (default) disables
+    /// gathering — the seed-exact one-pread-per-object path. Per-block
+    /// digest and NEW_BLOCK framing are unchanged regardless.
+    pub read_gather_bytes: u64,
     /// RMA pool autosizer: at CONNECT, grow each side's slot pool toward
     /// `negotiated send_window × object_size` so zero-copy payload
     /// pinning can never starve the issue loop (the alternative is the
@@ -131,6 +149,8 @@ impl Default for Config {
             send_window: 1,
             send_window_adaptive: false,
             write_coalesce_bytes: 0,
+            data_streams: 1,
+            read_gather_bytes: 0,
             rma_autosize: false,
             integrity: IntegrityMode::Native,
             scheduler: SchedPolicy::CongestionAware,
@@ -233,6 +253,8 @@ impl Config {
             "send_window" => self.send_window = value.parse()?,
             "send_window_adaptive" => self.send_window_adaptive = parse_bool(value)?,
             "write_coalesce_bytes" => self.write_coalesce_bytes = parse_bytes(value)?,
+            "data_streams" => self.data_streams = value.parse()?,
+            "read_gather_bytes" => self.read_gather_bytes = parse_bytes(value)?,
             "rma_autosize" => self.rma_autosize = parse_bool(value)?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
             "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
@@ -300,6 +322,10 @@ impl Config {
         anyhow::ensure!(
             (1..=self.ost_count).contains(&self.stripe_count),
             "stripe_count must be in 1..=ost_count"
+        );
+        anyhow::ensure!(
+            (1..=64u32).contains(&self.data_streams),
+            "data_streams must be in 1..=64"
         );
         Ok(())
     }
@@ -457,6 +483,38 @@ mod tests {
         c.apply_kv("write_coalesce_bytes", "0").unwrap();
         assert_eq!(c.write_coalesce_bytes, 0);
         assert!(c.apply_kv("write_coalesce_bytes", "lots").is_err());
+    }
+
+    #[test]
+    fn data_streams_kv_defaults_and_validation() {
+        let mut c = Config::default();
+        // Default is the single fused connection — the PR 5 equivalence pin.
+        assert_eq!(c.data_streams, 1);
+        c.apply_kv("data_streams", "4").unwrap();
+        assert_eq!(c.data_streams, 4);
+        assert!(c.validate().is_ok());
+        c.data_streams = 0;
+        assert!(c.validate().is_err(), "data_streams 0 rejected");
+        c.data_streams = 65;
+        assert!(c.validate().is_err(), "data_streams above 64 rejected");
+        c.data_streams = 64;
+        assert!(c.validate().is_ok());
+        let mut c = Config::default();
+        assert!(c.apply_kv("data_streams", "many").is_err());
+    }
+
+    #[test]
+    fn read_gather_kv_defaults_and_units() {
+        let mut c = Config::default();
+        // Default is the seed-exact one-pread-per-object source path.
+        assert_eq!(c.read_gather_bytes, 0);
+        assert!(c.validate().is_ok());
+        c.apply_kv("read_gather_bytes", "4M").unwrap();
+        assert_eq!(c.read_gather_bytes, 4 << 20);
+        assert!(c.validate().is_ok());
+        c.apply_kv("read_gather_bytes", "0").unwrap();
+        assert_eq!(c.read_gather_bytes, 0);
+        assert!(c.apply_kv("read_gather_bytes", "lots").is_err());
     }
 
     #[test]

@@ -57,6 +57,59 @@ impl TransferSpec {
     }
 }
 
+/// How a node obtains its K data connections when the CONNECT handshake
+/// negotiates a multi-stream session (`data_streams ≥ 2`).
+///
+/// The in-process channel transport pre-creates every pair up front and
+/// hands each side a [`DataPlane::Ready`] list; the TCP transport cannot
+/// dial/accept before the negotiated K is known, so the CLI passes a
+/// [`DataPlane::Connector`] closure that brings the connections up on
+/// demand (source: dial K times; sink: accept K times and order the
+/// connections by their STREAM_HELLO ids). A session that negotiates
+/// K = 1 never materializes the plane — the single fused connection is
+/// the control endpoint itself.
+pub enum DataPlane {
+    /// Pre-established endpoints, stream `s` at index `s`. May hold more
+    /// than the negotiated K (the excess is dropped) but never fewer.
+    Ready(Vec<Arc<dyn Endpoint>>),
+    /// Bring up exactly K connections once K is known.
+    #[allow(clippy::type_complexity)]
+    Connector(Box<dyn FnOnce(u32) -> Result<Vec<Arc<dyn Endpoint>>> + Send>),
+}
+
+impl DataPlane {
+    /// The plane of a session that can only ever negotiate K = 1 (the
+    /// legacy single-connection entry points).
+    pub fn none() -> DataPlane {
+        DataPlane::Ready(Vec::new())
+    }
+
+    /// Produce the K per-stream endpoints. Only called for K ≥ 2.
+    pub(crate) fn materialize(self, k: u32) -> Result<Vec<Arc<dyn Endpoint>>> {
+        let k = k as usize;
+        match self {
+            DataPlane::Ready(mut eps) => {
+                anyhow::ensure!(
+                    eps.len() >= k,
+                    "data plane has {} pre-established connections, negotiated {k}",
+                    eps.len()
+                );
+                eps.truncate(k);
+                Ok(eps)
+            }
+            DataPlane::Connector(f) => {
+                let eps = f(k as u32)?;
+                anyhow::ensure!(
+                    eps.len() == k,
+                    "data-plane connector produced {} connections, wanted {k}",
+                    eps.len()
+                );
+                Ok(eps)
+            }
+        }
+    }
+}
+
 /// Result of one transfer session.
 #[derive(Debug, Clone)]
 pub struct TransferOutcome {
@@ -100,8 +153,13 @@ pub struct TransferOutcome {
     /// object_size` — the configured `rma_bytes` rounded down to whole
     /// object-sized slots, unless `rma_autosize` grew the pools toward
     /// `negotiated send_window × object_size` at CONNECT (both sides
-    /// apply the same rule, so one number describes each).
+    /// apply the same rule — with `data_streams = K ≥ 2` the source
+    /// figure sums its K per-stream pools).
     pub rma_bytes_effective: u64,
+    /// Parallel data streams negotiated at CONNECT (1 = the fused
+    /// single-connection path, byte-identical to the pre-multi-stream
+    /// wire; also the legacy-peer fallback).
+    pub data_streams: u32,
 }
 
 impl TransferOutcome {
@@ -160,15 +218,45 @@ pub fn run_transfer(
     }
 
     let fault = spec.fault.arm(total_bytes);
-    let (src_ep, sink_ep) = channel::pair(cfg.wire(), fault);
+    let (src_ep, sink_ep) = channel::pair(cfg.wire(), fault.clone());
     let src_ep: Arc<dyn Endpoint> = Arc::new(src_ep);
     let sink_ep: Arc<dyn Endpoint> = Arc::new(sink_ep);
+
+    // Pre-establish the data plane: one extra channel pair per requested
+    // stream, all sharing the session's fault controller — a payload-
+    // threshold fault severs the control AND every data connection at
+    // once, like a real node failure. The nodes only consume these when
+    // CONNECT negotiates data_streams ≥ 2; a fused session (K = 1)
+    // leaves them untouched (and unbuilt: no pairs at K = 1, so the
+    // default path allocates exactly what the seed did).
+    let k = cfg.data_streams.max(1);
+    let mut src_data: Vec<Arc<dyn Endpoint>> = Vec::new();
+    let mut snk_data: Vec<Arc<dyn Endpoint>> = Vec::new();
+    if k >= 2 {
+        for _ in 0..k {
+            let (s, d) = channel::pair(cfg.wire(), fault.clone());
+            src_data.push(Arc::new(s));
+            snk_data.push(Arc::new(d));
+        }
+    }
 
     let sampler = Sampler::start(Duration::from_millis(20));
     let started = Instant::now();
 
-    let sink_node = sink::spawn_sink(cfg, sink_pfs, sink_ep, runtime)?;
-    let source_report = source::run_source(cfg, source_pfs, src_ep.clone(), spec)?;
+    let sink_node = sink::spawn_sink_multi(
+        cfg,
+        sink_pfs,
+        sink_ep,
+        DataPlane::Ready(snk_data),
+        runtime,
+    )?;
+    let source_report = source::run_source_multi(
+        cfg,
+        source_pfs,
+        src_ep.clone(),
+        DataPlane::Ready(src_data.clone()),
+        spec,
+    )?;
     let sink_report = sink_node.join();
     let elapsed = started.elapsed();
     let resources = sampler.finish();
@@ -185,7 +273,11 @@ pub fn run_transfer(
         sink: sink_report.counters,
         log_space: source_report.log_space,
         resources,
-        payload_bytes: src_ep.payload_sent(),
+        // NEW_BLOCK payload crosses whichever connection carried it:
+        // the fused control connection at K = 1, the data connections
+        // at K ≥ 2.
+        payload_bytes: src_ep.payload_sent()
+            + src_data.iter().map(|ep| ep.payload_sent()).sum::<u64>(),
         rma_stalls_src: source_report.rma_stalls,
         rma_stalls_snk: sink_report.rma_stalls,
         source_sched: source_report.sched,
@@ -194,6 +286,7 @@ pub fn run_transfer(
         send_window_effective: source_report.send_window_effective,
         ack_batch_effective: sink_report.ack_batch_effective,
         rma_bytes_effective: source_report.rma_bytes_effective,
+        data_streams: source_report.data_streams,
     })
 }
 

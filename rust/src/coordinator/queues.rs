@@ -7,6 +7,13 @@
 //! least-congested OST that has work, so if one OST is slow (external
 //! load, deep queue), threads naturally drain the others — "the N−1
 //! threads are free to issue new requests to other OSTs".
+//!
+//! With a multi-stream data plane (`data_streams = K ≥ 2`) the *source*
+//! builds one `OstQueues` per stream over that stream's OST shard
+//! (`ost % K`), so each stream's IO threads run the policy over their own
+//! pick domain and layout-aware scheduling is preserved per stream; the
+//! *sink* keeps a single shared `OstQueues` — however the wire was
+//! sharded, the storage side drains one policy-governed queue set.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

@@ -18,7 +18,12 @@
 //!   gathered run as ONE vectored `pwrite`
 //!   ([`crate::pfs::Pfs::write_at_vectored`]; one syscall, one OST
 //!   service round), while every constituent block keeps its own digest
-//!   verify and BLOCK_SYNC ack; then
+//!   verify and BLOCK_SYNC ack. When a run's chain broke with budget to
+//!   spare (the byte-successor simply hadn't arrived yet — e.g. it was
+//!   held behind the source's credit window until this run's acks went
+//!   out), the thread re-checks the queue after acking and *continues*
+//!   the run from the successor instead of returning to the scheduler
+//!   (`Counters::coalesce_continuations`). Then
 //!   send BLOCK_SYNC — directly when `ack_batch = 1` (the paper's
 //!   per-object path), or through the **ack coalescer**, which folds up
 //!   to `ack_batch` acknowledgements of a file into one
@@ -32,19 +37,37 @@
 //!   over; it batches them into the compiled Pallas digest artifact's
 //!   fixed (B, W) shape, executes it via the PJRT service, and emits the
 //!   BLOCK_SYNCs. This is the L1/L2 integration point on the hot path.
+//!
+//! # Multi-stream data plane (`data_streams > 1`)
+//!
+//! With a negotiated `data_streams = K ≥ 2` the sink serves one
+//! **control** connection (CONNECT, NEW_FILE, FILE_CLOSE, BYE) plus K
+//! **data** connections, one comm thread each. NEW_BLOCK only arrives on
+//! data connections, sharded by the source as `ost % K`; each data
+//! stream owns its own RMA slot pool (its half of the per-stream credit
+//! accounting) and its own ack coalescer, and BLOCK_SYNC(_BATCH) for a
+//! block returns on the stream that carried it — which is exactly the
+//! stream whose credit window the source charged, recomputed here from
+//! the block's OST with the same `ost % K` shard. The write path is
+//! unchanged: all streams feed the one set of per-OST write queues and
+//! the same IO threads. The negotiated `data_streams = 1` (default, and
+//! the legacy field-less peer fallback) runs the single fused connection
+//! exactly as before — byte-identical to the pre-multi-stream wire.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::queues::{DrainVerdict, OstQueues};
+use super::DataPlane;
 use crate::config::Config;
 use crate::integrity::{Digest, DigestEngine, IntegrityMode, NativeEngine, PjrtEngine};
 use crate::metrics::{Counters, CounterSnapshot};
 use crate::net::{Endpoint, Message, NetError, RmaPool, RmaSlot};
+use crate::pfs::ost::OstId;
 use crate::pfs::{FileId, Pfs};
 use crate::runtime::RuntimeHandle;
 use crate::sched::{SchedSnapshot, SchedStats, Scheduler};
@@ -57,6 +80,10 @@ struct WriteReq {
     fid: FileId,
     offset: u64,
     digest: u64,
+    /// The OST serving this block — fixes which data stream's coalescer/
+    /// endpoint the acknowledgement returns on (`ost % K`, the same
+    /// shard the source charged a credit on).
+    ost: OstId,
     /// The object payload, refcounted straight off the transport —
     /// `pwrite` runs from this view, no copy into the slot buffer.
     payload: Bytes,
@@ -84,9 +111,10 @@ struct PendingAcks {
     blocks: Vec<(u32, bool)>,
 }
 
-/// The ack coalescer's shared state. `batch <= 1` bypasses coalescing
-/// entirely, reproducing the seed's one-BLOCK_SYNC-per-object wire
-/// behavior exactly.
+/// The ack coalescer's shared state (one per connection that carries
+/// acks: the fused connection at K = 1, each data stream at K ≥ 2).
+/// `batch <= 1` bypasses coalescing entirely, reproducing the seed's
+/// one-BLOCK_SYNC-per-object wire behavior exactly.
 ///
 /// With `adaptive` on, `batch` is only the *cap*: the effective batch
 /// (`eff`) starts at 1, doubles toward the cap every time a batch fills
@@ -109,6 +137,18 @@ struct AckCoalescer {
 }
 
 impl AckCoalescer {
+    fn new(cap: u32, adaptive: bool, window: Duration) -> AckCoalescer {
+        AckCoalescer {
+            batch: AtomicU32::new(cap.max(1)),
+            // Adaptive coalescing starts at the seed's per-object floor
+            // and earns its way up; fixed mode pins eff to the cap.
+            eff: AtomicU32::new(if adaptive { 1 } else { cap.max(1) }),
+            adaptive,
+            window,
+            pending: Mutex::new(BTreeMap::new()),
+        }
+    }
+
     /// A batch filled on count: the coalescer can afford a bigger one.
     /// Atomic read-modify-write: IO threads (grow) and the flusher
     /// (shrink) race on `eff`, and a lost update would silently erase a
@@ -148,25 +188,53 @@ impl AckCoalescer {
     }
 }
 
+/// One data stream's receive state at K ≥ 2: its wire endpoint, its RMA
+/// slot pool (this side of the per-stream credit accounting) and its ack
+/// coalescer. Built by the control comm thread once CONNECT negotiates
+/// the stream count.
+struct SnkStream {
+    ep: Arc<dyn Endpoint>,
+    acks: AckCoalescer,
+    rma: RmaPool,
+}
+
 struct Shared {
     pfs: Arc<dyn Pfs>,
+    /// The control connection. At `data_streams = 1` it doubles as the
+    /// (only) data connection — the fused legacy path.
     ep: Arc<dyn Endpoint>,
+    /// The write-queue set is SHARED across streams: data comm threads
+    /// all enqueue here and the same IO-thread pool drains it, so the
+    /// storage side is indifferent to how the wire was sharded.
     queues: OstQueues<WriteReq>,
     /// The sink's OST dequeue policy (`cfg.sink_scheduler`, falling back
     /// to the session-wide `cfg.scheduler`).
     sched: Box<dyn Scheduler>,
     sched_stats: SchedStats,
+    /// The fused connection's ack coalescer (used only at K = 1).
     acks: AckCoalescer,
     /// The sink's configured NEW_BLOCK send-window cap; the CONNECT
     /// handshake replies with `min(this, peer's advertisement)`.
     send_window: AtomicU32,
+    /// The sink's configured data-stream cap; CONNECT negotiates
+    /// `min(this, peer's advertisement)`.
+    data_streams_cfg: u32,
+    /// Per-stream pools at K ≥ 2 are carved with this same budget
+    /// (`Config::rma_bytes`).
+    rma_bytes: usize,
     /// Contiguous-write coalescing budget (`Config::write_coalesce_bytes`);
     /// 0 = the seed-exact one-pwrite-per-object path.
     coalesce_bytes: u64,
-    /// Grow the RMA pool toward the negotiated window at CONNECT
+    /// Grow the RMA pool(s) toward the negotiated window at CONNECT
     /// (`Config::rma_autosize`).
     autosize: bool,
+    /// The fused connection's RMA pool (the only pool at K = 1; unused
+    /// once a K ≥ 2 plane materializes).
     rma: RmaPool,
+    /// The data plane at K ≥ 2, set exactly once by the control comm
+    /// thread after negotiation, before any data comm thread exists.
+    /// Empty (unset) for the whole life of a fused session.
+    data: OnceLock<Vec<SnkStream>>,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SnkFile>>,
     abort: Mutex<Option<String>>,
@@ -195,26 +263,65 @@ impl Shared {
         self.aborted.load(Ordering::SeqCst)
     }
 
-    /// Queue one object acknowledgement. With an effective batch `<= 1`
-    /// this sends the seed's single BLOCK_SYNC immediately; otherwise the
-    /// ack joins the file's pending batch, which flushes when full or
-    /// when the write failed (so retransmission is never delayed by
-    /// coalescing). Count-driven flushes feed the adaptive coalescer's
-    /// grow signal.
-    fn push_ack(&self, file_idx: u32, block_idx: u32, ok: bool) {
-        let batch = self.acks.eff.load(Ordering::SeqCst) as usize;
+    /// Negotiated stream count: 1 until (unless) a K ≥ 2 plane is set.
+    fn k(&self) -> usize {
+        self.data.get().map(|d| d.len()).unwrap_or(1)
+    }
+
+    /// Which stream a block's acknowledgement returns on — the same
+    /// `ost % K` shard the source used to pick its sending stream, so
+    /// the credit released by the ack is the credit that was charged.
+    fn stream_for_ost(&self, ost: OstId) -> usize {
+        ost.0 as usize % self.k()
+    }
+
+    /// Stream `s`'s RMA pool (the fused pool when no plane is set).
+    fn pool(&self, s: usize) -> &RmaPool {
+        match self.data.get() {
+            Some(d) => &d[s].rma,
+            None => &self.rma,
+        }
+    }
+
+    /// Stream `s`'s ack coalescer (the fused one when no plane is set).
+    fn coalescer(&self, s: usize) -> &AckCoalescer {
+        match self.data.get() {
+            Some(d) => &d[s].acks,
+            None => &self.acks,
+        }
+    }
+
+    /// The endpoint stream `s`'s acknowledgements ride.
+    fn ack_ep(&self, s: usize) -> &Arc<dyn Endpoint> {
+        match self.data.get() {
+            Some(d) => &d[s].ep,
+            None => &self.ep,
+        }
+    }
+
+    /// Queue one object acknowledgement on its stream. With an effective
+    /// batch `<= 1` this sends the seed's single BLOCK_SYNC immediately;
+    /// otherwise the ack joins the file's pending batch on that stream's
+    /// coalescer, which flushes when full or when the write failed (so
+    /// retransmission is never delayed by coalescing). Count-driven
+    /// flushes feed the adaptive coalescer's grow signal.
+    fn push_ack(&self, stream: usize, file_idx: u32, block_idx: u32, ok: bool) {
+        let acks = self.coalescer(stream);
+        let batch = acks.eff.load(Ordering::SeqCst) as usize;
         if batch <= 1 {
             self.counters.ack_messages.fetch_add(1, Ordering::Relaxed);
-            let _ = self.ep.send(Message::BlockSync { file_idx, block_idx, ok });
+            let _ = self
+                .ack_ep(stream)
+                .send(Message::BlockSync { file_idx, block_idx, ok });
             if ok {
                 // An adaptive coalescer ramps off the floor from here: a
                 // one-ack "batch" trivially filled on count.
-                self.acks.feedback_grow(&self.counters);
+                acks.feedback_grow(&self.counters);
             }
             return;
         }
         let (full, filled) = {
-            let mut pending = self.acks.pending.lock().unwrap_or_else(|e| e.into_inner());
+            let mut pending = acks.pending.lock().unwrap_or_else(|e| e.into_inner());
             let entry = pending.entry(file_idx).or_insert_with(|| PendingAcks {
                 oldest: Instant::now(),
                 // Cap the eager reservation: huge negotiated batches must
@@ -230,59 +337,68 @@ impl Shared {
             }
         };
         if filled {
-            self.acks.feedback_grow(&self.counters);
+            acks.feedback_grow(&self.counters);
         }
         if let Some(p) = full {
-            self.send_ack_batch(file_idx, p.blocks);
+            self.send_ack_batch(stream, file_idx, p.blocks);
         }
     }
 
     /// Emit one coalesced ack message (called outside the pending lock).
-    fn send_ack_batch(&self, file_idx: u32, blocks: Vec<(u32, bool)>) {
+    fn send_ack_batch(&self, stream: usize, file_idx: u32, blocks: Vec<(u32, bool)>) {
         if blocks.is_empty() {
             return;
         }
         self.counters.ack_messages.fetch_add(1, Ordering::Relaxed);
-        let _ = self.ep.send(Message::BlockSyncBatch { file_idx, blocks });
+        let _ = self
+            .ack_ep(stream)
+            .send(Message::BlockSyncBatch { file_idx, blocks });
     }
 
-    /// Flush one file's pending acks (FILE_CLOSE hygiene: nothing of the
-    /// file may linger once it commits).
+    /// Flush one file's pending acks on EVERY stream (FILE_CLOSE
+    /// hygiene: nothing of the file may linger once it commits — and at
+    /// K ≥ 2 a file's blocks were sharded across all of them).
     fn flush_acks_for(&self, file_idx: u32) {
-        let p = {
-            let mut pending = self.acks.pending.lock().unwrap_or_else(|e| e.into_inner());
-            pending.remove(&file_idx)
-        };
-        if let Some(p) = p {
-            self.send_ack_batch(file_idx, p.blocks);
+        for s in 0..self.k() {
+            let p = {
+                let mut pending =
+                    self.coalescer(s).pending.lock().unwrap_or_else(|e| e.into_inner());
+                pending.remove(&file_idx)
+            };
+            if let Some(p) = p {
+                self.send_ack_batch(s, file_idx, p.blocks);
+            }
         }
     }
 
-    /// Flush every batch whose oldest entry aged past the flush window —
-    /// or everything when `all` (shutdown path). A timer-driven flush of
-    /// a partial batch is the adaptive coalescer's shrink signal (one
-    /// step per sweep, not per file, so a multi-file burst does not
-    /// collapse the window to 1 in one tick).
+    /// Flush, on every stream, each batch whose oldest entry aged past
+    /// the flush window — or everything when `all` (shutdown path). A
+    /// timer-driven flush of a partial batch is the adaptive coalescer's
+    /// shrink signal (one step per stream per sweep, not per file, so a
+    /// multi-file burst does not collapse the window to 1 in one tick).
     fn flush_expired_acks(&self, all: bool) {
-        let expired: Vec<(u32, PendingAcks)> = {
-            let mut pending = self.acks.pending.lock().unwrap_or_else(|e| e.into_inner());
-            let keys: Vec<u32> = pending
-                .iter()
-                .filter(|(_, p)| all || p.oldest.elapsed() >= self.acks.window)
-                .map(|(&k, _)| k)
-                .collect();
-            keys.into_iter()
-                .map(|k| {
-                    let p = pending.remove(&k).expect("key collected under this lock");
-                    (k, p)
-                })
-                .collect()
-        };
-        if !all && !expired.is_empty() {
-            self.acks.feedback_shrink(&self.counters);
-        }
-        for (file_idx, p) in expired {
-            self.send_ack_batch(file_idx, p.blocks);
+        for s in 0..self.k() {
+            let acks = self.coalescer(s);
+            let expired: Vec<(u32, PendingAcks)> = {
+                let mut pending = acks.pending.lock().unwrap_or_else(|e| e.into_inner());
+                let keys: Vec<u32> = pending
+                    .iter()
+                    .filter(|(_, p)| all || p.oldest.elapsed() >= acks.window)
+                    .map(|(&k, _)| k)
+                    .collect();
+                keys.into_iter()
+                    .map(|k| {
+                        let p = pending.remove(&k).expect("key collected under this lock");
+                        (k, p)
+                    })
+                    .collect()
+            };
+            if !all && !expired.is_empty() {
+                acks.feedback_shrink(&self.counters);
+            }
+            for (file_idx, p) in expired {
+                self.send_ack_batch(s, file_idx, p.blocks);
+            }
         }
     }
 }
@@ -295,14 +411,16 @@ pub struct SinkReport {
     pub sched: SchedSnapshot,
     /// The effective ack batch at session end: the negotiated cap in
     /// fixed mode, wherever the grow/shrink feedback left it in adaptive
-    /// mode.
+    /// mode. With several streams, the most constrained (minimum)
+    /// stream's effective batch.
     pub ack_batch_effective: u32,
     /// The NEW_BLOCK send window granted to the peer at CONNECT.
     pub send_window: u32,
     /// RMA DRAM actually registered at session end (`slots ×
-    /// object_size`, i.e. `rma_bytes` rounded down to whole slots),
-    /// unless `rma_autosize` grew the pool toward the negotiated send
-    /// window at CONNECT.
+    /// object_size` per pool, i.e. `rma_bytes` rounded down to whole
+    /// slots), unless `rma_autosize` grew each pool toward the
+    /// negotiated send window at CONNECT. Summed over the data streams
+    /// at K ≥ 2 (the idle fused pool is excluded).
     pub rma_bytes_effective: u64,
 }
 
@@ -312,11 +430,36 @@ pub struct SinkNode {
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
-/// Spawn the sink: comm + master + IO threads (+ verifier with pjrt).
+/// Spawn the sink over a single fused connection (the legacy /
+/// `data_streams = 1` path). Fails fast when `cfg.data_streams > 1` —
+/// a multi-stream session needs a data-plane provider; use
+/// [`spawn_sink_multi`].
 pub fn spawn_sink(
     cfg: &Config,
     pfs: Arc<dyn Pfs>,
     ep: Arc<dyn Endpoint>,
+    runtime: Option<RuntimeHandle>,
+) -> Result<SinkNode> {
+    anyhow::ensure!(
+        cfg.data_streams <= 1,
+        "data_streams = {} needs a data-plane provider: call spawn_sink_multi",
+        cfg.data_streams
+    );
+    spawn_sink_multi(cfg, pfs, ep, DataPlane::none(), runtime)
+}
+
+/// Spawn the sink: comm + master + IO threads (+ verifier with pjrt).
+///
+/// `ep` is the control connection; `plane` supplies the per-stream data
+/// connections and is only consumed when the CONNECT handshake
+/// negotiates `data_streams ≥ 2` — negotiation happens asynchronously in
+/// the comm thread (this function never blocks: the in-process harness
+/// runs `spawn_sink_multi` and `run_source_multi` on the same thread).
+pub fn spawn_sink_multi(
+    cfg: &Config,
+    pfs: Arc<dyn Pfs>,
+    ep: Arc<dyn Endpoint>,
+    plane: DataPlane,
     runtime: Option<RuntimeHandle>,
 ) -> Result<SinkNode> {
     let shared = Arc::new(Shared {
@@ -325,19 +468,18 @@ pub fn spawn_sink(
         queues: OstQueues::new(cfg.ost_count),
         sched: cfg.sink_sched().build(cfg.ost_count),
         sched_stats: SchedStats::default(),
-        acks: AckCoalescer {
-            batch: AtomicU32::new(cfg.ack_batch.max(1)),
-            // Adaptive coalescing starts at the seed's per-object floor
-            // and earns its way up; fixed mode pins eff to the cap.
-            eff: AtomicU32::new(if cfg.ack_adaptive { 1 } else { cfg.ack_batch.max(1) }),
-            adaptive: cfg.ack_adaptive,
-            window: Duration::from_micros(cfg.ack_flush_us.max(1)),
-            pending: Mutex::new(BTreeMap::new()),
-        },
+        acks: AckCoalescer::new(
+            cfg.ack_batch.max(1),
+            cfg.ack_adaptive,
+            Duration::from_micros(cfg.ack_flush_us.max(1)),
+        ),
         send_window: AtomicU32::new(cfg.send_window.max(1)),
+        data_streams_cfg: cfg.data_streams.max(1),
+        rma_bytes: cfg.rma_bytes,
         coalesce_bytes: cfg.write_coalesce_bytes,
         autosize: cfg.rma_autosize,
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
+        data: OnceLock::new(),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
         abort: Mutex::new(None),
@@ -367,8 +509,9 @@ pub fn spawn_sink(
         None
     };
 
-    // Parked-block channel: comm -> master when the RMA pool is dry.
-    let (park_tx, park_rx) = mpsc::channel::<Message>();
+    // Parked-block channel: comm -> master when a stream's RMA pool is
+    // dry; tagged with the stream so the master waits on the RIGHT pool.
+    let (park_tx, park_rx) = mpsc::channel::<(usize, Message)>();
 
     // IO threads.
     for t in 0..cfg.io_threads {
@@ -401,13 +544,15 @@ pub fn spawn_sink(
         );
     }
 
-    // Comm (receive loop).
+    // Control comm (receive loop + CONNECT negotiation; owns the data
+    // plane until the negotiated stream count is known, and spawns/joins
+    // the per-stream comm threads itself).
     {
         let sh = shared.clone();
         threads.push(
             std::thread::Builder::new()
                 .name("snk-comm".into())
-                .spawn(move || comm_thread(&sh, park_tx))?,
+                .spawn(move || comm_thread(&sh, park_tx, Some(plane)))?,
         );
     }
 
@@ -420,24 +565,48 @@ impl SinkNode {
         for t in self.threads {
             let _ = t.join();
         }
+        let shared = &self.shared;
+        let (mut stall_count, mut stall_ns) = shared.rma.stall_stats();
+        let mut rma_bytes = shared.rma.total_bytes();
+        let mut eff = shared.acks.eff.load(Ordering::SeqCst);
+        if let Some(data) = shared.data.get() {
+            // Multi-stream session: the fused pool/coalescer sat idle —
+            // report the data plane's aggregate (stall counts still sum
+            // both; the fused side contributes zero).
+            rma_bytes = 0;
+            eff = u32::MAX;
+            for s in data {
+                let (c, ns) = s.rma.stall_stats();
+                stall_count += c;
+                stall_ns += ns;
+                rma_bytes += s.rma.total_bytes();
+                eff = eff.min(s.acks.eff.load(Ordering::SeqCst));
+            }
+        }
         SinkReport {
-            fault: self
-                .shared
-                .abort
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .clone(),
-            counters: self.shared.counters.snapshot(),
-            rma_stalls: self.shared.rma.stall_stats(),
-            sched: self.shared.sched_stats.snapshot(),
-            ack_batch_effective: self.shared.acks.eff.load(Ordering::SeqCst),
-            send_window: self.shared.send_window.load(Ordering::SeqCst),
-            rma_bytes_effective: self.shared.rma.total_bytes(),
+            fault: shared.abort.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+            counters: shared.counters.snapshot(),
+            rma_stalls: (stall_count, stall_ns),
+            sched: shared.sched_stats.snapshot(),
+            ack_batch_effective: eff,
+            send_window: shared.send_window.load(Ordering::SeqCst),
+            rma_bytes_effective: rma_bytes,
         }
     }
 }
 
-fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
+/// The control-connection comm thread. At K = 1 it is the ONLY comm
+/// thread and handles every message class (the fused legacy path); at
+/// K ≥ 2 it handles control traffic and NEW_BLOCK on a data connection
+/// is someone else's job — seeing one here is a protocol violation.
+fn comm_thread(
+    shared: &Arc<Shared>,
+    park_tx: mpsc::Sender<(usize, Message)>,
+    mut plane: Option<DataPlane>,
+) {
+    // Data comm threads this thread spawned after negotiation; joined on
+    // the way out so SinkNode::join transitively waits for them.
+    let mut data_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
         if shared.is_aborted() {
             break;
@@ -457,7 +626,14 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
             }
         };
         match msg {
-            Message::Connect { max_object_size, resume, ack_batch, send_window, .. } => {
+            Message::Connect {
+                max_object_size,
+                resume,
+                ack_batch,
+                send_window,
+                data_streams,
+                ..
+            } => {
                 shared.resume.store(resume, Ordering::SeqCst);
                 if max_object_size as usize > shared.rma.slot_bytes() {
                     shared.abort_with(format!(
@@ -484,6 +660,10 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
                 let win_ours = shared.send_window.load(Ordering::SeqCst);
                 let win = win_ours.min(send_window.max(1));
                 shared.send_window.store(win, Ordering::SeqCst);
+                // Negotiate the data-stream count the same way: the
+                // peer's ask, capped by ours (1 for legacy field-less
+                // peers — the fused fallback).
+                let k = shared.data_streams_cfg.min(data_streams.max(1));
                 // Pool autosizer: register enough slots to absorb the
                 // whole negotiated in-flight window (zero-copy pins each
                 // payload's slot until the write releases it), BEFORE
@@ -491,25 +671,104 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
                 if shared.autosize {
                     shared.rma.grow_to(win as usize);
                 }
+                // Ack BEFORE materializing the data plane: over TCP the
+                // source only dials its K data connections once it sees
+                // the negotiated count, so an accept-first order would
+                // deadlock the handshake.
                 let _ = shared.ep.send(Message::ConnectAck {
                     rma_slots: shared.rma.slots() as u32,
                     ack_batch: negotiated,
                     send_window: win,
+                    data_streams: k,
                 });
+                if k >= 2 {
+                    let Some(plane) = plane.take() else {
+                        shared.abort_with("duplicate multi-stream CONNECT".into());
+                        break;
+                    };
+                    let eps = match plane.materialize(k) {
+                        Ok(eps) => eps,
+                        Err(e) => {
+                            shared.abort_with(format!("data plane ({k} streams): {e}"));
+                            break;
+                        }
+                    };
+                    let streams: Vec<SnkStream> = eps
+                        .into_iter()
+                        .map(|ep| {
+                            let rma =
+                                RmaPool::new(shared.rma_bytes, shared.rma.slot_bytes());
+                            // Same autosize rule as the fused pool, per
+                            // stream: each stream's credit window is the
+                            // full negotiated `win`.
+                            if shared.autosize {
+                                rma.grow_to(win as usize);
+                            }
+                            SnkStream {
+                                ep,
+                                acks: AckCoalescer::new(
+                                    negotiated,
+                                    shared.acks.adaptive,
+                                    shared.acks.window,
+                                ),
+                                rma,
+                            }
+                        })
+                        .collect();
+                    if shared.data.set(streams).is_err() {
+                        shared.abort_with("data plane already materialized".into());
+                        break;
+                    }
+                    // Spawn the per-stream comm threads only now — the
+                    // plane is published, so every `pool()`/`coalescer()`
+                    // lookup they make resolves to their own stream.
+                    let mut spawn_err = false;
+                    for s in 0..k as usize {
+                        let sh = shared.clone();
+                        let ptx = park_tx.clone();
+                        match std::thread::Builder::new()
+                            .name(format!("snk-comm-{s}"))
+                            .spawn(move || data_comm_thread(&sh, s, ptx))
+                        {
+                            Ok(h) => data_threads.push(h),
+                            Err(e) => {
+                                shared.abort_with(format!(
+                                    "spawn stream {s} comm: {e}"
+                                ));
+                                spawn_err = true;
+                                break;
+                            }
+                        }
+                    }
+                    if spawn_err {
+                        break;
+                    }
+                }
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
                 handle_new_file(shared, file_idx, &name, size, start_ost);
             }
             Message::NewBlock { .. } => {
-                // Reserve an RMA slot; park with the master if dry (§3.1).
+                if shared.k() > 1 {
+                    // The source shards NEW_BLOCK onto data connections;
+                    // payload on the control connection means the peer is
+                    // confused — fail loudly rather than double-route.
+                    shared.abort_with(
+                        "NEW_BLOCK on the control connection of a multi-stream session"
+                            .into(),
+                    );
+                    break;
+                }
+                // Fused path: reserve an RMA slot; park with the master
+                // if dry (§3.1).
                 if let Some(slot) = shared.rma.try_reserve() {
                     enqueue_block(shared, msg, slot);
                 } else {
-                    let _ = park_tx.send(msg);
+                    let _ = park_tx.send((0, msg));
                 }
             }
             Message::FileClose { file_idx } => {
-                // Nothing of the file may linger in the coalescer once it
+                // Nothing of the file may linger in the coalescers once it
                 // commits (defensive: the source only closes after every
                 // ack arrived, so this is normally a no-op).
                 shared.flush_acks_for(file_idx);
@@ -539,6 +798,67 @@ fn comm_thread(shared: &Arc<Shared>, park_tx: mpsc::Sender<Message>) {
     }
     // Comm gone: drain stops; make sure nothing waits forever.
     shared.queues.close();
+    for h in data_threads {
+        let _ = h.join();
+    }
+}
+
+/// One data stream's comm thread (K ≥ 2 only): NEW_BLOCK in, slot from
+/// THIS stream's pool, parked against this stream when dry.
+fn data_comm_thread(
+    shared: &Arc<Shared>,
+    s: usize,
+    park_tx: mpsc::Sender<(usize, Message)>,
+) {
+    let ep = shared.data.get().expect("plane published before spawn")[s].ep.clone();
+    loop {
+        if shared.is_aborted() || shared.done.load(Ordering::SeqCst) {
+            break;
+        }
+        let msg = match ep.recv_timeout(Duration::from_millis(50)) {
+            Ok(m) => m,
+            Err(NetError::Timeout) => continue,
+            Err(NetError::Closed) => {
+                if !shared.done.load(Ordering::SeqCst) {
+                    shared.abort_with(format!("data stream {s} closed by source"));
+                }
+                break;
+            }
+            Err(NetError::Fault(e)) => {
+                shared.abort_with(e);
+                break;
+            }
+        };
+        match msg {
+            Message::StreamHello { stream_id } => {
+                // The source introduces each data connection with its
+                // stream id. The in-process channel transport delivers it
+                // here; the TCP acceptor already consumed it to order the
+                // accepted connections — so it is validated when present,
+                // required never.
+                if stream_id as usize != s {
+                    shared.abort_with(format!(
+                        "data stream {s}: STREAM_HELLO for stream {stream_id}"
+                    ));
+                    break;
+                }
+            }
+            Message::NewBlock { .. } => {
+                if let Some(slot) = shared.pool(s).try_reserve() {
+                    enqueue_block(shared, msg, slot);
+                } else {
+                    let _ = park_tx.send((s, msg));
+                }
+            }
+            other => {
+                shared.abort_with(format!(
+                    "sink stream {s} comm: unexpected {}",
+                    other.type_name()
+                ));
+                break;
+            }
+        }
+    }
 }
 
 /// §5.2.2 sink half (resume only): metadata match -> skip, else
@@ -608,6 +928,7 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot) {
             fid,
             offset,
             digest,
+            ost,
             payload: data,
             faithful: true,
             _slot: slot,
@@ -618,7 +939,8 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot) {
 /// Ack flusher: ticks at a fraction of the flush window and pushes out
 /// any partially-filled batch whose oldest acknowledgement aged past
 /// `ack_flush_us` — the straggler bound that keeps coalescing from ever
-/// stalling the source's logging/close path.
+/// stalling the source's logging/close path. One thread sweeps every
+/// stream's coalescer (they share the window).
 fn ack_flusher_thread(shared: &Arc<Shared>) {
     // Tick at a fraction of the window, but capped so shutdown (join)
     // never stalls behind a huge configured window.
@@ -640,10 +962,12 @@ fn ack_flusher_thread(shared: &Arc<Shared>) {
 }
 
 /// Master: the RMA buffer wait queue (§3.1's "master thread will sleep on
-/// the RMA buffer's wait queue until a buffer is released").
-fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<Message>) {
+/// the RMA buffer's wait queue until a buffer is released") — parked
+/// blocks carry their stream, so the master sleeps on the pool whose
+/// stream actually ran dry.
+fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<(usize, Message)>) {
     loop {
-        let msg = match park_rx.recv_timeout(Duration::from_millis(50)) {
+        let (stream, msg) = match park_rx.recv_timeout(Duration::from_millis(50)) {
             Ok(m) => m,
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if shared.is_aborted() || shared.done.load(Ordering::SeqCst) {
@@ -655,7 +979,7 @@ fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<Message>) {
         };
         // Block (abort-aware) until a slot frees.
         let slot = loop {
-            match shared.rma.reserve_timeout(Duration::from_millis(50)) {
+            match shared.pool(stream).reserve_timeout(Duration::from_millis(50)) {
                 Some(s) => break Some(s),
                 None if shared.is_aborted() => break None,
                 None => continue,
@@ -669,9 +993,19 @@ fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<Message>) {
 /// IO thread: policy-picked dequeue (+ contiguity-aware coalescing
 /// drain) + pwrite + per-block verify + BLOCK_SYNC (or hand to the
 /// verifier).
+///
+/// When coalescing is on and a run's chain broke with budget to spare
+/// (no byte-successor was queued yet), the thread checks the queue once
+/// more after submitting and acking the run: the successor frequently
+/// arrives exactly then, freed by the credits those acks returned. If it
+/// has, the thread coalesces onward from it (a fresh budget, counted in
+/// `Counters::coalesce_continuations`) instead of returning to the
+/// scheduler — so an ack-batch flush mid-file no longer permanently cuts
+/// the run short. Each continuation removes a queued block, so the loop
+/// strictly drains.
 fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
     let osts = shared.pfs.ost_model();
-    while let Some((ost, req)) =
+    'pop: while let Some((ost, first)) =
         shared
             .queues
             .pop_next_timed(&*shared.sched, osts, &shared.sched_stats)
@@ -679,92 +1013,133 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
         if shared.is_aborted() {
             break;
         }
-        // Gather a byte-contiguous same-file run off the SAME OST queue
-        // the policy picked (a gate of 0 bytes never drains — the
-        // seed-exact per-object path). The drained blocks ride this
-        // thread's service round; the policy is not re-consulted.
-        let mut run = vec![req];
-        if shared.coalesce_bytes > 0 {
-            // Cap runs at POSIX's IOV_MAX so one gathered run is ONE
-            // `pwritev` on the disk backend (past the cap the backend
-            // would split silently and `write_syscalls` would
-            // under-count), keeping the counter == real submissions.
-            const MAX_RUN_BLOCKS: usize = crate::pfs::IOV_MAX_GATHER;
-            let fid = run[0].fid;
-            let mut end = run[0].offset + run[0].payload.len() as u64;
-            let mut run_bytes = run[0].payload.len() as u64;
-            let mut run_blocks = 1usize;
-            let extra = shared.queues.drain_chain(ost, |cand: &WriteReq| {
-                if cand.fid != fid || cand.offset != end {
-                    return DrainVerdict::Skip;
-                }
-                // The chain is linear: exactly one queued block can be
-                // the run's next byte. If that unique successor busts
-                // the budget (or the run hit the iov cap), nothing
-                // further can ever chain — stop the scan instead of
-                // re-walking the backlog.
-                let len = cand.payload.len() as u64;
-                if run_blocks == MAX_RUN_BLOCKS || run_bytes + len > shared.coalesce_bytes {
-                    return DrainVerdict::Stop;
-                }
-                end += len;
-                run_bytes += len;
-                run_blocks += 1;
-                DrainVerdict::Take
-            });
-            run.extend(extra);
-        }
+        let mut next = Some(first);
+        while let Some(head) = next.take() {
+            // Gather a byte-contiguous same-file run off the SAME OST
+            // queue the policy picked (a gate of 0 bytes never drains —
+            // the seed-exact per-object path). The drained blocks ride
+            // this thread's service round; the policy is not
+            // re-consulted.
+            let mut run = vec![head];
+            let mut budget_stop = false;
+            if shared.coalesce_bytes > 0 {
+                // Cap runs at POSIX's IOV_MAX so one gathered run is ONE
+                // `pwritev` on the disk backend (past the cap the backend
+                // would split silently and `write_syscalls` would
+                // under-count), keeping the counter == real submissions.
+                const MAX_RUN_BLOCKS: usize = crate::pfs::IOV_MAX_GATHER;
+                let fid = run[0].fid;
+                let mut end = run[0].offset + run[0].payload.len() as u64;
+                let mut run_bytes = run[0].payload.len() as u64;
+                let mut run_blocks = 1usize;
+                let extra = shared.queues.drain_chain(ost, |cand: &WriteReq| {
+                    if cand.fid != fid || cand.offset != end {
+                        return DrainVerdict::Skip;
+                    }
+                    // The chain is linear: exactly one queued block can be
+                    // the run's next byte. If that unique successor busts
+                    // the budget (or the run hit the iov cap), nothing
+                    // further can ever chain — stop the scan instead of
+                    // re-walking the backlog.
+                    let len = cand.payload.len() as u64;
+                    if run_blocks == MAX_RUN_BLOCKS
+                        || run_bytes + len > shared.coalesce_bytes
+                    {
+                        budget_stop = true;
+                        return DrainVerdict::Stop;
+                    }
+                    end += len;
+                    run_bytes += len;
+                    run_blocks += 1;
+                    DrainVerdict::Take
+                });
+                run.extend(extra);
+            }
 
-        if !write_run(shared, ost, &mut run) {
-            break; // aborted (pwrite failure with no per-block recovery)
-        }
+            // Where a continuation would have to pick up, captured before
+            // the run is consumed below. Only a chain that ended for LACK
+            // of a successor (not because the budget/cap said stop) is
+            // worth re-checking — a budget stop is deliberate.
+            let chain_open = shared.coalesce_bytes > 0 && !budget_stop;
+            let cont_fid = run[0].fid;
+            let cont_end = {
+                let last = run.last().expect("run is never empty");
+                last.offset + last.payload.len() as u64
+            };
 
-        match shared.integrity {
-            IntegrityMode::Pjrt => {
-                // Hand off to the batched PJRT verifier (payload + slot +
-                // fidelity move along, one request per block).
-                if let Some(tx) = &verify_tx {
-                    let mut gone = false;
-                    for req in run.drain(..) {
-                        if tx.send(req).is_err() {
-                            shared.abort_with("verifier gone".into());
-                            gone = true;
-                            break;
-                        }
-                    }
-                    if gone {
-                        break;
-                    }
-                }
-                continue;
+            if !write_run(shared, ost, &mut run) {
+                break 'pop; // aborted (pwrite failure with no per-block recovery)
             }
-            IntegrityMode::Native => {
-                // One digest batch for the run; every block keeps its own
-                // verdict (wire digest match AND storage fidelity).
-                let objects: Vec<&[u8]> = run.iter().map(|r| r.payload.as_slice()).collect();
-                match NativeEngine.digest_batch(&objects, shared.padded_words) {
-                    Ok(digests) => {
-                        for (req, d) in run.iter().zip(digests) {
-                            let ok = req.faithful && d == Digest::from_u64(req.digest);
-                            finish_block(shared, req, ok);
-                        }
-                    }
-                    Err(_) => {
-                        for req in &run {
-                            finish_block(shared, req, false);
+
+            match shared.integrity {
+                IntegrityMode::Pjrt => {
+                    // Hand off to the batched PJRT verifier (payload +
+                    // slot + fidelity move along, one request per block).
+                    if let Some(tx) = &verify_tx {
+                        for req in run.drain(..) {
+                            if tx.send(req).is_err() {
+                                shared.abort_with("verifier gone".into());
+                                break 'pop;
+                            }
                         }
                     }
                 }
+                IntegrityMode::Native => {
+                    // One digest batch for the run; every block keeps its
+                    // own verdict (wire digest match AND storage
+                    // fidelity).
+                    let objects: Vec<&[u8]> =
+                        run.iter().map(|r| r.payload.as_slice()).collect();
+                    match NativeEngine.digest_batch(&objects, shared.padded_words) {
+                        Ok(digests) => {
+                            for (req, d) in run.iter().zip(digests) {
+                                let ok = req.faithful && d == Digest::from_u64(req.digest);
+                                finish_block(shared, req, ok);
+                            }
+                        }
+                        Err(_) => {
+                            for req in &run {
+                                finish_block(shared, req, false);
+                            }
+                        }
+                    }
+                }
+                IntegrityMode::Off => {
+                    // Stock LADS: acknowledge without verification (§3.2's
+                    // silent-corruption window, reproduced for A/B runs).
+                    for req in &run {
+                        finish_block(shared, req, true);
+                    }
+                }
             }
-            IntegrityMode::Off => {
-                // Stock LADS: acknowledge without verification (§3.2's
-                // silent-corruption window, reproduced for A/B runs).
-                for req in &run {
-                    finish_block(shared, req, true);
+            // Slot credits released as the run drops.
+
+            if chain_open && !shared.is_aborted() {
+                // One-shot re-check: did the run's byte-successor arrive
+                // while we were writing/acking? Take exactly it (and
+                // nothing else — later chaining happens in the next
+                // gather pass above).
+                let mut taken = false;
+                let cont = shared.queues.drain_chain(ost, |cand: &WriteReq| {
+                    if taken {
+                        return DrainVerdict::Stop;
+                    }
+                    if cand.fid == cont_fid && cand.offset == cont_end {
+                        taken = true;
+                        DrainVerdict::Take
+                    } else {
+                        DrainVerdict::Skip
+                    }
+                });
+                next = cont.into_iter().next();
+                if next.is_some() {
+                    shared
+                        .counters
+                        .coalesce_continuations
+                        .fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
-        // Slot credits released as the run drops.
     }
 }
 
@@ -775,7 +1150,7 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
 /// storage fidelity and feeds the scheduler one evenly-split service
 /// sample per constituent block (comparable with uncoalesced samples).
 /// Returns `false` when the sink aborted.
-fn write_run(shared: &Arc<Shared>, ost: crate::pfs::ost::OstId, run: &mut [WriteReq]) -> bool {
+fn write_run(shared: &Arc<Shared>, ost: OstId, run: &mut [WriteReq]) -> bool {
     let total: u64 = run.iter().map(|r| r.payload.len() as u64).sum();
     let io_started = std::time::Instant::now();
     if run.len() == 1 {
@@ -855,7 +1230,7 @@ fn finish_block(shared: &Arc<Shared>, req: &WriteReq, ok: bool) {
             .objects_failed_verify
             .fetch_add(1, Ordering::Relaxed);
     }
-    shared.push_ack(req.file_idx, req.block_idx, ok);
+    shared.push_ack(shared.stream_for_ost(req.ost), req.file_idx, req.block_idx, ok);
 }
 
 /// Verifier thread: batch written objects into the compiled digest

@@ -11,8 +11,14 @@
 //!   freeze the slot into refcounted [`Bytes`] and hand it to the wire
 //!   as NEW_BLOCK with zero further copies; the buffer returns to the
 //!   pool when the sink drops the last reference, like a registered RMA
-//!   region. With a negotiated `send_window > 1` the issue loop is
-//!   *credit-based* (`SendWindow`): up to the applied window of
+//!   region. With `read_gather_bytes > 0` the IO thread first drains
+//!   further byte-contiguous objects of the same file from the popped
+//!   OST queue ([`OstQueues::drain_chain`], one RMA slot reserved per
+//!   block) and fills the whole run with ONE vectored `preadv`
+//!   ([`crate::pfs::Pfs::read_at_vectored`]) — the source mirror of the
+//!   sink's write coalescing; each block still gets its own digest,
+//!   credit and NEW_BLOCK. With a negotiated `send_window > 1` the issue
+//!   loop is *credit-based* (`SendWindow`): up to the applied window of
 //!   un-acknowledged NEW_BLOCKs ride per connection, credits
 //!   replenished as BLOCK_SYNC/BLOCK_SYNC_BATCH acks arrive;
 //!   `send_window = 1` (the default, and the legacy/PR 2 negotiation
@@ -28,6 +34,26 @@
 //!   logger write per wire message), FILE_CLOSE when a file's last
 //!   object is synced, retransmission when the sink reports a failed
 //!   write.
+//!
+//! # Multi-stream data plane (`data_streams > 1`)
+//!
+//! With a negotiated `data_streams = K ≥ 2` the transfer runs over one
+//! **control** connection plus K **data** connections (GridFTP-style
+//! parallel streams). OSTs are sharded across streams
+//! (`stream = ost % K`), so layout-aware scheduling stays intact *per
+//! stream*: every stream owns its own [`OstQueues`] pick domain, its own
+//! credit [`SendWindow`] and its own RMA slot pool, and NEW_BLOCK /
+//! BLOCK_SYNC(_BATCH) for an OST only ever ride that OST's stream.
+//! CONNECT, NEW_FILE/FILE_ID, FILE_CLOSE(_ACK) and BYE stay on the
+//! control connection; FILE_CLOSE is only sent once every stream's
+//! outstanding acks for the file arrived (the shared per-file
+//! `CompletedSet` is the barrier). The comm side splits accordingly: a
+//! control comm thread (FILE_ID / FILE_CLOSE_ACK) plus one data comm
+//! thread per stream (acks → that stream's credit window). IO threads
+//! are partitioned `ceil(io_threads / K)` per stream. The negotiated
+//! `data_streams = 1` (default, and the legacy field-less peer
+//! fallback) runs the single fused connection exactly as before —
+//! byte-identical to the pre-multi-stream wire.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
@@ -36,13 +62,13 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::queues::OstQueues;
-use super::TransferSpec;
+use super::queues::{DrainVerdict, OstQueues};
+use super::{DataPlane, TransferSpec};
 use crate::config::Config;
 use crate::ftlog::{self, CompletedSet, FileKey, FtLogger, SpaceStats};
 use crate::integrity::{self, IntegrityMode};
 use crate::metrics::{Counters, CounterSnapshot};
-use crate::net::{Endpoint, Message, NetError, RmaPool};
+use crate::net::{Endpoint, Message, NetError, RmaPool, RmaSlot};
 use crate::pfs::ost::OstId;
 use crate::pfs::{FileId, Pfs};
 use crate::sched::{SchedSnapshot, SchedStats, Scheduler};
@@ -76,7 +102,8 @@ enum MasterEvent {
     Abort,
 }
 
-/// Credit-based NEW_BLOCK send window (one per connection).
+/// Credit-based NEW_BLOCK send window (one per connection — with
+/// `data_streams = K ≥ 2`, one per data stream).
 ///
 /// Armed once after the CONNECT handshake with the negotiated window
 /// cap. `max <= 1` disables the gate entirely — the legacy lockstep path
@@ -242,17 +269,37 @@ impl SendWindow {
     }
 }
 
-struct Shared {
-    pfs: Arc<dyn Pfs>,
+/// One data stream's sending state: its wire endpoint, its private OST
+/// pick domain (only OSTs with `ost % K == stream` are ever pushed
+/// here), its credit window and its RMA slot pool. At `data_streams = 1`
+/// the single stream's endpoint IS the control connection (the fused
+/// legacy path).
+struct SrcStream {
     ep: Arc<dyn Endpoint>,
     queues: OstQueues<BlockReq>,
-    /// The configured OST dequeue policy (`cfg.scheduler`).
-    sched: Box<dyn Scheduler>,
-    sched_stats: SchedStats,
-    rma: RmaPool,
     /// Credit gate for in-flight NEW_BLOCKs (disabled at window 1).
     window: SendWindow,
+    rma: RmaPool,
+}
+
+struct Shared {
+    pfs: Arc<dyn Pfs>,
+    /// The control connection (CONNECT, NEW_FILE/FILE_ID,
+    /// FILE_CLOSE(_ACK), BYE). At `data_streams = 1` it doubles as the
+    /// single data stream's endpoint.
+    ep: Arc<dyn Endpoint>,
+    /// The data plane: one entry per negotiated stream.
+    streams: Vec<SrcStream>,
+    /// The configured OST dequeue policy (`cfg.scheduler`), shared
+    /// across streams — each OST belongs to exactly one stream, so
+    /// stateful policies (e.g. straggler-EWMA) keep one coherent per-OST
+    /// view even though picks happen per stream.
+    sched: Box<dyn Scheduler>,
+    sched_stats: SchedStats,
     counters: Counters,
+    /// Contiguous-read gather budget (`Config::read_gather_bytes`);
+    /// 0 = the seed-exact one-pread-per-object path.
+    read_gather_bytes: u64,
     files: Mutex<BTreeMap<u32, SrcFile>>,
     logger: Mutex<Box<dyn FtLogger>>,
     abort: Mutex<Option<String>>,
@@ -271,11 +318,38 @@ impl Shared {
         }
         drop(g);
         self.aborted.store(true, Ordering::SeqCst);
-        self.queues.close_and_clear();
+        for s in &self.streams {
+            s.queues.close_and_clear();
+        }
     }
 
     fn is_aborted(&self) -> bool {
         self.aborted.load(Ordering::SeqCst)
+    }
+
+    /// OST → stream shard: `ost % K`. Every OST's objects ride exactly
+    /// one stream, so per-stream scheduling stays layout-aware.
+    fn stream_of(&self, ost: OstId) -> usize {
+        ost.0 as usize % self.streams.len()
+    }
+
+    /// Partition a batch across the stream shards and enqueue each
+    /// stream's share with one batched push (single wakeup per stream).
+    fn push_to_streams(&self, batch: Vec<(OstId, BlockReq)>) {
+        if self.streams.len() == 1 {
+            self.streams[0].queues.push_batch(batch);
+            return;
+        }
+        let mut per: Vec<Vec<(OstId, BlockReq)>> =
+            (0..self.streams.len()).map(|_| Vec::new()).collect();
+        for (ost, req) in batch {
+            per[self.stream_of(ost)].push((ost, req));
+        }
+        for (s, share) in per.into_iter().enumerate() {
+            if !share.is_empty() {
+                self.streams[s].queues.push_batch(share);
+            }
+        }
     }
 }
 
@@ -289,44 +363,156 @@ pub struct SourceReport {
     /// Read-queue scheduling counters (picks, pick latency, service).
     pub sched: SchedSnapshot,
     /// The NEW_BLOCK send window actually negotiated at CONNECT (1 = the
-    /// lockstep issue path; also the legacy-peer fallback).
+    /// lockstep issue path; also the legacy-peer fallback). Per stream.
     pub send_window: u32,
     /// The applied send window at session end: the negotiated cap in
     /// fixed mode, wherever the autotuner's grow/shrink feedback left it
-    /// in `send_window_adaptive` mode.
+    /// in `send_window_adaptive` mode. With several streams, the most
+    /// constrained (minimum) stream's applied window.
     pub send_window_effective: u32,
     /// (count, total ns) of source-side RMA reservation stalls — the
     /// issue loop found the slot pool dry (with zero-copy, buffers stay
-    /// pinned until the sink releases the payload).
+    /// pinned until the sink releases the payload). Summed over streams.
     pub rma_stalls: (u64, u64),
-    /// RMA DRAM actually registered at session end (`slots ×
-    /// object_size`, i.e. `rma_bytes` rounded down to whole slots),
-    /// unless `rma_autosize` grew the pool toward the negotiated send
-    /// window at CONNECT.
+    /// RMA DRAM actually registered at session end, summed over the
+    /// per-stream pools (`slots × object_size` each, i.e. `rma_bytes`
+    /// rounded down to whole slots per pool), unless `rma_autosize` grew
+    /// each pool toward the negotiated send window at CONNECT.
     pub rma_bytes_effective: u64,
+    /// The parallel data-stream count negotiated at CONNECT (1 = the
+    /// fused single-connection path; also the legacy-peer fallback).
+    pub data_streams: u32,
 }
 
-/// Run the source node to completion/fault. Blocks the calling thread
-/// (which acts as the orchestrator); master/comm/IO threads are spawned
-/// internally and joined before returning.
+/// Run the source node over a single fused connection (the legacy /
+/// `data_streams = 1` path). Fails fast when `cfg.data_streams > 1` —
+/// a multi-stream session needs a data-plane provider; use
+/// [`run_source_multi`].
 pub fn run_source(
     cfg: &Config,
     pfs: Arc<dyn Pfs>,
     ep: Arc<dyn Endpoint>,
     spec: &TransferSpec,
 ) -> Result<SourceReport> {
-    let logger = ftlog::create_logger_with_mode(&cfg.ft(), cfg.logging)?;
+    anyhow::ensure!(
+        cfg.data_streams <= 1,
+        "data_streams = {} needs a data-plane provider: call run_source_multi",
+        cfg.data_streams
+    );
+    run_source_multi(cfg, pfs, ep, DataPlane::none(), spec)
+}
+
+/// Run the source node to completion/fault. Blocks the calling thread
+/// (which acts as the orchestrator); master/comm/IO threads are spawned
+/// internally and joined before returning.
+///
+/// `ctrl` is the control connection; `plane` supplies the per-stream
+/// data connections and is only consumed when the CONNECT handshake
+/// negotiates `data_streams ≥ 2` (a legacy peer negotiates 1 and the
+/// whole session stays fused on `ctrl`).
+pub fn run_source_multi(
+    cfg: &Config,
+    pfs: Arc<dyn Pfs>,
+    ctrl: Arc<dyn Endpoint>,
+    plane: DataPlane,
+    spec: &TransferSpec,
+) -> Result<SourceReport> {
+    let logger = Mutex::new(ftlog::create_logger_with_mode(&cfg.ft(), cfg.logging)?);
+
+    // Connect handshake (control connection). Stream 0's pool doubles as
+    // the CONNECT-time slot advertisement — every stream's pool is
+    // carved with the same `rma_bytes` budget, so one number describes
+    // each of them.
+    let rma0 = RmaPool::new(cfg.rma_bytes, cfg.object_size as usize);
+    if let Err(e) = ctrl.send(Message::Connect {
+        max_object_size: cfg.object_size,
+        rma_slots: rma0.slots() as u32,
+        resume: spec.resume,
+        // Advertise the largest ack batch we are willing to consume, the
+        // NEW_BLOCK send window we would like to run, and the number of
+        // parallel data streams we can drive; the sink answers with the
+        // negotiated (min) values it will use.
+        ack_batch: cfg.ack_batch.max(1),
+        send_window: cfg.send_window.max(1),
+        data_streams: cfg.data_streams.max(1),
+    }) {
+        return Ok(handshake_fault_report(&logger, format!("connect: {e}")));
+    }
+    let (win, k) = match ctrl.recv_timeout(Duration::from_secs(10)) {
+        Ok(Message::ConnectAck { send_window, data_streams, .. }) => {
+            // Honor the sink's negotiated values, but never exceed our own
+            // configured advertisements (defensive against a bad peer). A
+            // legacy field-less CONNECT_ACK decodes as window 1 (lockstep)
+            // and 1 data stream (fused).
+            (
+                send_window.max(1).min(cfg.send_window.max(1)),
+                data_streams.max(1).min(cfg.data_streams.max(1)),
+            )
+        }
+        Ok(m) => anyhow::bail!("handshake: unexpected {}", m.type_name()),
+        Err(e) => {
+            return Ok(handshake_fault_report(&logger, format!("connect ack: {e}")))
+        }
+    };
+
+    // Materialize the data plane: K = 1 fuses the single stream onto the
+    // control connection (today's path, byte-identical); K ≥ 2 brings up
+    // K dedicated data connections, each introduced to the sink by a
+    // STREAM_HELLO carrying its stream id.
+    let data_eps: Vec<Arc<dyn Endpoint>> = if k <= 1 {
+        vec![ctrl.clone()]
+    } else {
+        let eps = match plane.materialize(k) {
+            Ok(eps) => eps,
+            Err(e) => {
+                return Ok(handshake_fault_report(
+                    &logger,
+                    format!("data plane ({k} streams): {e}"),
+                ))
+            }
+        };
+        for (s, ep) in eps.iter().enumerate() {
+            if let Err(e) = ep.send(Message::StreamHello { stream_id: s as u32 }) {
+                return Ok(handshake_fault_report(
+                    &logger,
+                    format!("stream {s} hello: {e}"),
+                ));
+            }
+        }
+        eps
+    };
+    let mut rma0 = Some(rma0);
+    let streams: Vec<SrcStream> = data_eps
+        .into_iter()
+        .map(|ep| {
+            let window = SendWindow::new(cfg.send_window_adaptive);
+            window.arm(win);
+            let rma = rma0
+                .take()
+                .unwrap_or_else(|| RmaPool::new(cfg.rma_bytes, cfg.object_size as usize));
+            // Pool autosizer: with zero-copy, every in-flight NEW_BLOCK
+            // pins its slot buffer until the sink releases the payload —
+            // register enough slots for the whole negotiated window
+            // instead of letting the window autotuner shrink around a
+            // starved pool. The window (and therefore the pool) is per
+            // stream.
+            if cfg.rma_autosize {
+                rma.grow_to(win as usize);
+            }
+            SrcStream { ep, queues: OstQueues::new(cfg.ost_count), window, rma }
+        })
+        .collect();
+
     let shared = Arc::new(Shared {
         pfs,
-        ep,
-        queues: OstQueues::new(cfg.ost_count),
+        ep: ctrl,
+        streams,
         sched: cfg.scheduler.build(cfg.ost_count),
         sched_stats: SchedStats::default(),
-        rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
-        window: SendWindow::new(cfg.send_window_adaptive),
         counters: Counters::default(),
+        read_gather_bytes: cfg.read_gather_bytes,
         files: Mutex::new(BTreeMap::new()),
-        logger: Mutex::new(logger),
+        logger,
         abort: Mutex::new(None),
         aborted: AtomicBool::new(false),
         done: AtomicBool::new(false),
@@ -335,100 +521,114 @@ pub fn run_source(
         padded_words: (cfg.object_size as usize).div_ceil(4),
     });
 
-    // Connect handshake.
-    let rma_slots = shared.rma.slots() as u32;
-    if let Err(e) = shared.ep.send(Message::Connect {
-        max_object_size: cfg.object_size,
-        rma_slots,
-        resume: spec.resume,
-        // Advertise the largest ack batch we are willing to consume and
-        // the NEW_BLOCK send window we would like to run; the sink
-        // answers with the negotiated (min) values it will use.
-        ack_batch: cfg.ack_batch.max(1),
-        send_window: cfg.send_window.max(1),
-    }) {
-        return Ok(report_with_fault(&shared, format!("connect: {e}"), 0));
-    }
-    match shared.ep.recv_timeout(Duration::from_secs(10)) {
-        Ok(Message::ConnectAck { send_window, .. }) => {
-            // Honor the sink's negotiated window, but never exceed our own
-            // configured advertisement (defensive against a bad peer). A
-            // legacy field-less CONNECT_ACK decodes as 1 = lockstep.
-            let win = send_window.max(1).min(cfg.send_window.max(1));
-            shared.window.arm(win);
-            // Pool autosizer: with zero-copy, every in-flight NEW_BLOCK
-            // pins its slot buffer until the sink releases the payload —
-            // register enough slots for the whole negotiated window
-            // instead of letting the window autotuner shrink around a
-            // starved pool.
-            if cfg.rma_autosize {
-                shared.rma.grow_to(win as usize);
-            }
-        }
-        Ok(m) => anyhow::bail!("handshake: unexpected {}", m.type_name()),
-        Err(e) => return Ok(report_with_fault(&shared, format!("connect ack: {e}"), 0)),
-    }
-
     let (master_tx, master_rx) = mpsc::channel::<MasterEvent>();
 
-    // IO threads.
+    // IO threads, partitioned across streams (K = 1 keeps the exact
+    // seed thread count on the single stream).
+    let per_stream_io = cfg.io_threads.div_ceil(k as usize).max(1);
     let mut io_threads = Vec::new();
-    for t in 0..cfg.io_threads {
-        let sh = shared.clone();
-        io_threads.push(
-            std::thread::Builder::new()
-                .name(format!("src-io-{t}"))
-                .spawn(move || io_thread(&sh))?,
-        );
+    for s in 0..shared.streams.len() {
+        for t in 0..per_stream_io {
+            let sh = shared.clone();
+            io_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("src-io-{s}-{t}"))
+                    .spawn(move || io_thread(&sh, s))?,
+            );
+        }
     }
 
-    // Comm thread (receive side).
-    let comm = {
+    // Comm threads (receive side): one fused thread at K = 1; a control
+    // thread plus one per data stream at K ≥ 2.
+    let mut comm_threads = Vec::new();
+    if k <= 1 {
         let sh = shared.clone();
         let tx = master_tx.clone();
-        std::thread::Builder::new()
-            .name("src-comm".into())
-            .spawn(move || comm_thread(&sh, tx))?
-    };
+        comm_threads.push(
+            std::thread::Builder::new()
+                .name("src-comm".into())
+                .spawn(move || comm_thread(&sh, CommRole::Fused, tx))?,
+        );
+    } else {
+        let sh = shared.clone();
+        let tx = master_tx.clone();
+        comm_threads.push(
+            std::thread::Builder::new()
+                .name("src-comm".into())
+                .spawn(move || comm_thread(&sh, CommRole::Control, tx))?,
+        );
+        for s in 0..shared.streams.len() {
+            let sh = shared.clone();
+            let tx = master_tx.clone();
+            comm_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("src-comm-{s}"))
+                    .spawn(move || comm_thread(&sh, CommRole::Data(s), tx))?,
+            );
+        }
+    }
 
     // Master runs on the calling thread.
     let files_done = master_loop(cfg, &shared, spec, master_rx);
 
-    // Teardown: stop IO threads, then the comm thread.
+    // Teardown: stop IO threads, then the comm threads.
     shared.done.store(true, Ordering::SeqCst);
-    shared.queues.close();
+    for s in &shared.streams {
+        s.queues.close();
+    }
     for h in io_threads {
         let _ = h.join();
     }
-    let _ = comm.join();
+    for h in comm_threads {
+        let _ = h.join();
+    }
 
-    let fault = shared.abort.lock().unwrap_or_else(|e| e.into_inner()).clone();
-    let log_space = shared.logger.lock().unwrap_or_else(|e| e.into_inner()).space();
-    Ok(SourceReport {
-        fault,
-        counters: shared.counters.snapshot(),
-        log_space,
-        files_done,
-        sched: shared.sched_stats.snapshot(),
-        send_window: shared.window.window(),
-        send_window_effective: shared.window.effective(),
-        rma_stalls: shared.rma.stall_stats(),
-        rma_bytes_effective: shared.rma.total_bytes(),
-    })
+    Ok(aggregate_report(&shared, files_done))
 }
 
-fn report_with_fault(shared: &Shared, msg: String, files_done: u64) -> SourceReport {
-    shared.abort_with(msg);
+/// Assemble the session report from the shared state, aggregating the
+/// per-stream window/pool figures.
+fn aggregate_report(shared: &Shared, files_done: u64) -> SourceReport {
+    let (mut stall_count, mut stall_ns, mut rma_bytes) = (0u64, 0u64, 0u64);
+    let mut eff = u32::MAX;
+    for s in &shared.streams {
+        let (c, ns) = s.rma.stall_stats();
+        stall_count += c;
+        stall_ns += ns;
+        rma_bytes += s.rma.total_bytes();
+        eff = eff.min(s.window.effective());
+    }
     SourceReport {
         fault: shared.abort.lock().unwrap_or_else(|e| e.into_inner()).clone(),
         counters: shared.counters.snapshot(),
         log_space: shared.logger.lock().unwrap_or_else(|e| e.into_inner()).space(),
         files_done,
         sched: shared.sched_stats.snapshot(),
-        send_window: shared.window.window(),
-        send_window_effective: shared.window.effective(),
-        rma_stalls: shared.rma.stall_stats(),
-        rma_bytes_effective: shared.rma.total_bytes(),
+        send_window: shared.streams[0].window.window(),
+        send_window_effective: eff,
+        rma_stalls: (stall_count, stall_ns),
+        rma_bytes_effective: rma_bytes,
+        data_streams: shared.streams.len() as u32,
+    }
+}
+
+/// A session that died during the CONNECT handshake, before any data
+/// plane (or shared state) existed.
+fn handshake_fault_report(
+    logger: &Mutex<Box<dyn FtLogger>>,
+    msg: String,
+) -> SourceReport {
+    SourceReport {
+        fault: Some(msg),
+        counters: Counters::default().snapshot(),
+        log_space: logger.lock().unwrap_or_else(|e| e.into_inner()).space(),
+        files_done: 0,
+        sched: SchedStats::default().snapshot(),
+        send_window: 1,
+        send_window_effective: 1,
+        rma_stalls: (0, 0),
+        rma_bytes_effective: 0,
+        data_streams: 1,
     }
 }
 
@@ -563,7 +763,7 @@ fn master_loop(
 }
 
 /// On FILE_ID: register with the FT logger (seeded from recovery) and
-/// enqueue the pending objects on their OST queues.
+/// enqueue the pending objects on their OST queues (sharded per stream).
 fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
     let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
     let Some(f) = files.get_mut(&file_idx) else { return };
@@ -606,8 +806,9 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
         return;
     }
 
-    // Whole-file admission is the batch enqueue path: take the queue lock
-    // once for every pending object and broadcast a single wakeup.
+    // Whole-file admission is the batch enqueue path: take each stream's
+    // queue lock once for its share of the pending objects and broadcast
+    // a single wakeup per stream.
     let layout = shared.pfs.layout();
     let mut batch = Vec::with_capacity(pending.len());
     for b in pending {
@@ -619,11 +820,11 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
     for (ost, _) in &batch {
         shared.sched.on_enqueue(*ost);
     }
-    shared.queues.push_batch(batch);
+    shared.push_to_streams(batch);
 }
 
-/// IO thread: policy-picked OST dequeue → RMA reserve → pread → freeze →
-/// digest → NEW_BLOCK.
+/// IO thread (pinned to one stream): policy-picked OST dequeue → RMA
+/// reserve → pread → freeze → digest → NEW_BLOCK.
 ///
 /// The `pread` into the RMA slot is the data path's ONE payload copy
 /// (`Counters::payload_copies`); the slot is then frozen into refcounted
@@ -633,6 +834,16 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
 /// exactly like an RMA-registered region stays pinned until the remote
 /// read completes.
 ///
+/// With `read_gather_bytes > 0` the thread first drains further
+/// byte-contiguous same-file objects from the popped OST queue
+/// (`drain_chain`, one `try_reserve`d slot per block — a dry pool ends
+/// the run rather than stalling the scan) and fills all their slots with
+/// ONE vectored `preadv` ([`Pfs::read_at_vectored`]); runs are capped at
+/// [`crate::pfs::IOV_MAX_GATHER`] blocks so one gathered run is one real
+/// syscall on the disk backend (`Counters::read_syscalls` stays an
+/// honest submission count). Every block of the run still gets its own
+/// freeze/digest/credit/NEW_BLOCK — the wire is unchanged by gathering.
+///
 /// Two issue disciplines, selected by the negotiated send window:
 ///
 /// - **lockstep** (`send_window = 1`, the legacy/PR 2 negotiation
@@ -640,19 +851,20 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
 ///   bounds what is in flight.
 /// - **windowed** (`send_window > 1`): the send is gated on a
 ///   [`SendWindow`] in-flight slot, bounding un-acknowledged blocks per
-///   connection; with `send_window_adaptive` the applied window floats
-///   from issue-loop feedback.
+///   stream; with `send_window_adaptive` the applied window floats from
+///   issue-loop feedback.
 ///
 /// A failed *first* slot reservation counts as one issue-loop stall in
 /// `Counters::send_stalls` (and, in adaptive mode, shrinks the applied
 /// window — in-flight payloads pin pool buffers); a failed first credit
 /// grab counts in `Counters::credit_waits` (back-pressure, not slot
 /// starvation; in adaptive mode it grows the applied window).
-fn io_thread(shared: &Arc<Shared>) {
+fn io_thread(shared: &Arc<Shared>, stream_idx: usize) {
+    let stream = &shared.streams[stream_idx];
     let osts = shared.pfs.ost_model();
-    let windowed = shared.window.enabled();
-    while let Some((ost, req)) =
-        shared
+    let windowed = stream.window.enabled();
+    'pop: while let Some((ost, req)) =
+        stream
             .queues
             .pop_next_timed(&*shared.sched, osts, &shared.sched_stats)
     {
@@ -660,13 +872,13 @@ fn io_thread(shared: &Arc<Shared>) {
             break;
         }
         // Reserve an RMA slot (bounded buffer registration), abort-aware.
-        let mut slot = match shared.rma.try_reserve() {
+        let first_slot = match stream.rma.try_reserve() {
             Some(s) => Some(s),
             None => {
                 shared.counters.send_stalls.fetch_add(1, Ordering::Relaxed);
-                shared.window.feedback_shrink(&shared.counters);
+                stream.window.feedback_shrink(&shared.counters);
                 loop {
-                    match shared.rma.reserve_timeout(Duration::from_millis(50)) {
+                    match stream.rma.reserve_timeout(Duration::from_millis(50)) {
                         Some(s) => break Some(s),
                         None if shared.is_aborted()
                             || shared.done.load(Ordering::SeqCst) =>
@@ -678,109 +890,236 @@ fn io_thread(shared: &Arc<Shared>) {
                 }
             }
         };
-        let Some(slot_ref) = slot.as_mut() else { break };
+        let Some(first_slot) = first_slot else { break };
 
-        let buf = slot_ref.buf();
-        buf.resize(req.len as usize, 0);
-        let io_started = std::time::Instant::now();
-        match shared.pfs.read_at(req.fid, req.offset, buf) {
-            Ok(n) if n == req.len as usize => {
-                // Feed the measured storage service time back to stateful
-                // policies (e.g. straggler-aware EWMA) and the counters.
-                let service = io_started.elapsed();
-                shared.sched.on_complete(ost, service);
-                shared.sched_stats.record_complete(service);
-                // The staging pread is the zero-copy path's single
-                // payload copy per object.
-                shared.counters.payload_copies.fetch_add(1, Ordering::Relaxed);
-                shared
-                    .counters
-                    .bytes_copied
-                    .fetch_add(req.len as u64, Ordering::Relaxed);
-            }
-            Ok(n) => {
-                shared.abort_with(format!(
-                    "short read: file {} block {} got {n} of {}",
-                    req.file_idx, req.block_idx, req.len
-                ));
-                break;
-            }
-            Err(e) => {
-                shared.abort_with(format!("pread failed: {e}"));
-                break;
-            }
+        // Gather a byte-contiguous same-file run off the SAME OST queue
+        // the policy picked (a budget of 0 never drains — the seed-exact
+        // per-object path), reserving one slot per block as the scan
+        // takes it. The drained blocks ride this thread's service round;
+        // the policy is not re-consulted mid-run.
+        let mut run: Vec<(BlockReq, RmaSlot)> = vec![(req, first_slot)];
+        if shared.read_gather_bytes > 0 {
+            // Cap runs at POSIX's IOV_MAX so one gathered run is ONE
+            // `preadv` on the disk backend (past the cap the backend
+            // would split silently and `read_syscalls` would
+            // under-count), keeping the counter == real submissions.
+            const MAX_RUN_BLOCKS: usize = crate::pfs::IOV_MAX_GATHER;
+            let fid = run[0].0.fid;
+            let mut end = run[0].0.offset + run[0].0.len as u64;
+            let mut run_bytes = run[0].0.len as u64;
+            let mut run_blocks = 1usize;
+            let mut extra_slots: Vec<RmaSlot> = Vec::new();
+            let extra = stream.queues.drain_chain(ost, |cand: &BlockReq| {
+                if cand.fid != fid || cand.offset != end {
+                    return DrainVerdict::Skip;
+                }
+                // The chain is linear: exactly one queued block can be
+                // the run's next byte. If that unique successor busts
+                // the budget (or the run hit the iov cap), nothing
+                // further can ever chain — stop the scan instead of
+                // re-walking the backlog.
+                let len = cand.len as u64;
+                if run_blocks == MAX_RUN_BLOCKS
+                    || run_bytes + len > shared.read_gather_bytes
+                {
+                    return DrainVerdict::Stop;
+                }
+                // One slot per gathered block, non-blocking: a dry pool
+                // ends the run instead of stalling under the queue lock.
+                let Some(slot) = stream.rma.try_reserve() else {
+                    return DrainVerdict::Stop;
+                };
+                extra_slots.push(slot);
+                end += len;
+                run_bytes += len;
+                run_blocks += 1;
+                DrainVerdict::Take
+            });
+            run.extend(extra.into_iter().zip(extra_slots));
         }
 
-        // Freeze the slot into the refcounted payload: no copy, and the
-        // buffer stays registered (out of the pool) until the sink
-        // releases its view.
-        let payload = slot.take().expect("slot present until freeze").freeze();
-
-        let digest = match shared.integrity {
-            IntegrityMode::Off => 0u64,
-            // Send-side digests are always computed natively — they must
-            // exist *before* the object leaves the node; the sink side is
-            // where the batched PJRT verify runs (see sink::verifier).
-            _ => integrity::digest_bytes_padded(&payload, shared.padded_words).as_u64(),
-        };
-
-        let msg = Message::NewBlock {
-            file_idx: req.file_idx,
-            block_idx: req.block_idx,
-            offset: req.offset,
-            digest,
-            data: payload,
-        };
-        if windowed {
-            // Gate the send on an in-flight slot of the applied window.
-            if !shared.window.try_acquire() {
-                shared.counters.credit_waits.fetch_add(1, Ordering::Relaxed);
-                shared.window.feedback_grow(&shared.counters);
-                let mut granted = false;
-                while !shared.is_aborted() && !shared.done.load(Ordering::SeqCst) {
-                    if shared.window.acquire_timeout(Duration::from_millis(50)) {
-                        granted = true;
-                        break;
-                    }
+        // Stage the whole run with one storage submission: the plain
+        // `pread` for a run of 1 (the seed path), one vectored `preadv`
+        // otherwise. Either way this is the data path's ONE payload copy
+        // per object.
+        let io_started = std::time::Instant::now();
+        if run.len() == 1 {
+            let (first_req, slot) = &mut run[0];
+            let buf = slot.buf();
+            buf.resize(first_req.len as usize, 0);
+            match shared.pfs.read_at(first_req.fid, first_req.offset, buf) {
+                Ok(n) if n == first_req.len as usize => {
+                    shared.counters.read_syscalls.fetch_add(1, Ordering::Relaxed);
                 }
-                if !granted {
+                Ok(n) => {
+                    shared.abort_with(format!(
+                        "short read: file {} block {} got {n} of {}",
+                        first_req.file_idx, first_req.block_idx, first_req.len
+                    ));
+                    break;
+                }
+                Err(e) => {
+                    shared.abort_with(format!("pread failed: {e}"));
+                    break;
+                }
+            }
+        } else {
+            let fid = run[0].0.fid;
+            let base = run[0].0.offset;
+            let total: usize = run.iter().map(|(r, _)| r.len as usize).sum();
+            for (r, slot) in run.iter_mut() {
+                slot.buf().resize(r.len as usize, 0);
+            }
+            let got = {
+                let mut iovs: Vec<&mut [u8]> = run
+                    .iter_mut()
+                    .map(|(_, slot)| slot.buf().as_mut_slice())
+                    .collect();
+                shared.pfs.read_at_vectored(fid, base, &mut iovs)
+            };
+            match got {
+                Ok(n) if n == total => {
+                    shared.counters.read_syscalls.fetch_add(1, Ordering::Relaxed);
+                    shared.counters.gathered_runs.fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .counters
+                        .gather_bytes_max
+                        .fetch_max(total as u64, Ordering::Relaxed);
+                }
+                Ok(n) => {
+                    shared.abort_with(format!(
+                        "short gathered read: file {} at {base} got {n} of {total}",
+                        run[0].0.file_idx
+                    ));
+                    break;
+                }
+                Err(e) => {
+                    shared.abort_with(format!("preadv failed: {e}"));
                     break;
                 }
             }
         }
-        match shared.ep.send(msg) {
-            Ok(()) => {
-                shared.counters.objects_sent.fetch_add(1, Ordering::Relaxed);
-                shared
-                    .counters
-                    .bytes_sent
-                    .fetch_add(req.len as u64, Ordering::Relaxed);
+        // Feed the measured storage service time back to stateful
+        // policies (e.g. straggler-aware EWMA) and the counters — one
+        // evenly-split sample per constituent block, so gathered and
+        // ungathered samples stay comparable (mirrors the sink's
+        // write_run accounting).
+        let service = io_started.elapsed() / run.len() as u32;
+        for _ in 0..run.len() {
+            shared.sched.on_complete(ost, service);
+            shared.sched_stats.record_complete(service);
+        }
+        for (r, _) in &run {
+            // The staging pread is the zero-copy path's single payload
+            // copy per object.
+            shared.counters.payload_copies.fetch_add(1, Ordering::Relaxed);
+            shared
+                .counters
+                .bytes_copied
+                .fetch_add(r.len as u64, Ordering::Relaxed);
+        }
+
+        // Per-block freeze → digest → credit → NEW_BLOCK: the wire is
+        // identical whether the payload was staged alone or in a run.
+        for (req, slot) in run.drain(..) {
+            // Freeze the slot into the refcounted payload: no copy, and
+            // the buffer stays registered (out of the pool) until the
+            // sink releases its view.
+            let payload = slot.freeze();
+
+            let digest = match shared.integrity {
+                IntegrityMode::Off => 0u64,
+                // Send-side digests are always computed natively — they
+                // must exist *before* the object leaves the node; the
+                // sink side is where the batched PJRT verify runs (see
+                // sink::verifier).
+                _ => integrity::digest_bytes_padded(&payload, shared.padded_words)
+                    .as_u64(),
+            };
+
+            let msg = Message::NewBlock {
+                file_idx: req.file_idx,
+                block_idx: req.block_idx,
+                offset: req.offset,
+                digest,
+                data: payload,
+            };
+            if windowed {
+                // Gate the send on an in-flight slot of the applied
+                // window.
+                if !stream.window.try_acquire() {
+                    shared.counters.credit_waits.fetch_add(1, Ordering::Relaxed);
+                    stream.window.feedback_grow(&shared.counters);
+                    let mut granted = false;
+                    while !shared.is_aborted() && !shared.done.load(Ordering::SeqCst) {
+                        if stream.window.acquire_timeout(Duration::from_millis(50)) {
+                            granted = true;
+                            break;
+                        }
+                    }
+                    if !granted {
+                        break 'pop;
+                    }
+                }
             }
-            Err(NetError::Fault(e)) => {
-                shared.abort_with(e);
-                break;
-            }
-            Err(e) => {
-                shared.abort_with(format!("send failed: {e}"));
-                break;
+            match stream.ep.send(msg) {
+                Ok(()) => {
+                    shared.counters.objects_sent.fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .counters
+                        .bytes_sent
+                        .fetch_add(req.len as u64, Ordering::Relaxed);
+                }
+                Err(NetError::Fault(e)) => {
+                    shared.abort_with(e);
+                    break 'pop;
+                }
+                Err(e) => {
+                    shared.abort_with(format!("send failed: {e}"));
+                    break 'pop;
+                }
             }
         }
     }
 }
 
+/// Which connection a comm thread serves — and therefore which message
+/// classes it may legally see there.
+#[derive(Clone, Copy)]
+enum CommRole {
+    /// The single `data_streams = 1` connection: every message class
+    /// (the legacy path — today's comm thread, unchanged).
+    Fused,
+    /// The control connection at K ≥ 2: FILE_ID and FILE_CLOSE_ACK.
+    Control,
+    /// Data stream `s` at K ≥ 2: BLOCK_SYNC(_BATCH) feeding that
+    /// stream's credit window (plus the introductory STREAM_HELLO echo
+    /// when the transport delivers it end-to-end rather than consuming
+    /// it during accept).
+    Data(usize),
+}
+
 /// Comm thread: the receive loop. BLOCK_SYNC handling — synchronous FT
-/// logging in this thread's context — is the paper's §5.1 change.
-fn comm_thread(shared: &Arc<Shared>, master_tx: mpsc::Sender<MasterEvent>) {
+/// logging in the receiving comm thread's context — is the paper's §5.1
+/// change.
+fn comm_thread(shared: &Arc<Shared>, role: CommRole, master_tx: mpsc::Sender<MasterEvent>) {
+    let ep: &Arc<dyn Endpoint> = match role {
+        CommRole::Fused | CommRole::Control => &shared.ep,
+        CommRole::Data(s) => &shared.streams[s].ep,
+    };
     loop {
         if shared.is_aborted() || shared.done.load(Ordering::SeqCst) {
             break;
         }
-        let msg = match shared.ep.recv_timeout(Duration::from_millis(50)) {
+        let msg = match ep.recv_timeout(Duration::from_millis(50)) {
             Ok(m) => m,
             Err(NetError::Timeout) => continue,
             Err(NetError::Closed) => {
                 if !shared.done.load(Ordering::SeqCst) {
-                    shared.abort_with("connection closed by sink".into());
+                    shared.abort_with(match role {
+                        CommRole::Data(s) => format!("data stream {s} closed by sink"),
+                        _ => "connection closed by sink".into(),
+                    });
                     let _ = master_tx.send(MasterEvent::Abort);
                 }
                 break;
@@ -791,27 +1130,40 @@ fn comm_thread(shared: &Arc<Shared>, master_tx: mpsc::Sender<MasterEvent>) {
                 break;
             }
         };
-        match msg {
-            Message::FileId { file_idx, skip, .. } => {
+        match (role, msg) {
+            (CommRole::Fused | CommRole::Control, Message::FileId { file_idx, skip, .. }) => {
                 let _ = master_tx.send(MasterEvent::FileId { file_idx, skip });
             }
-            Message::BlockSync { file_idx, block_idx, ok } => {
+            (CommRole::Fused | CommRole::Control, Message::FileCloseAck { file_idx }) => {
+                let _ = master_tx.send(MasterEvent::CloseAck { file_idx });
+            }
+            (CommRole::Fused, Message::BlockSync { file_idx, block_idx, ok }) => {
                 // Every acknowledged block returns one send credit —
                 // failed writes too: the object left the window and its
                 // retransmit will take a fresh credit.
-                shared.window.release(1);
+                shared.streams[0].window.release(1);
                 handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
             }
-            Message::BlockSyncBatch { file_idx, blocks } => {
-                shared.window.release(blocks.len() as u32);
+            (CommRole::Fused, Message::BlockSyncBatch { file_idx, blocks }) => {
+                shared.streams[0].window.release(blocks.len() as u32);
                 handle_block_syncs(shared, file_idx, &blocks);
             }
-            Message::FileCloseAck { file_idx } => {
-                let _ = master_tx.send(MasterEvent::CloseAck { file_idx });
+            (CommRole::Data(s), Message::BlockSync { file_idx, block_idx, ok }) => {
+                shared.streams[s].window.release(1);
+                handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
             }
-            other => {
+            (CommRole::Data(s), Message::BlockSyncBatch { file_idx, blocks }) => {
+                shared.streams[s].window.release(blocks.len() as u32);
+                handle_block_syncs(shared, file_idx, &blocks);
+            }
+            (role, other) => {
                 shared.abort_with(format!(
-                    "source comm: unexpected {}",
+                    "source {} comm: unexpected {}",
+                    match role {
+                        CommRole::Fused => "fused".to_string(),
+                        CommRole::Control => "control".to_string(),
+                        CommRole::Data(s) => format!("stream {s}"),
+                    },
                     other.type_name()
                 ));
                 let _ = master_tx.send(MasterEvent::Abort);
@@ -823,9 +1175,13 @@ fn comm_thread(shared: &Arc<Shared>, master_tx: mpsc::Sender<MasterEvent>) {
 
 /// Apply one wire acknowledgement message — a single BLOCK_SYNC arrives
 /// as a one-element slice, a BLOCK_SYNC_BATCH as the whole batch. Failed
-/// writes are rescheduled (§3.2); fresh syncs are group-committed to the
-/// FT logger in ONE `log_blocks` write per wire message — the §5.1
-/// synchronous logging, amortized over the negotiated ack batch.
+/// writes are rescheduled (§3.2) onto their OST's stream; fresh syncs
+/// are group-committed to the FT logger in ONE `log_blocks` write per
+/// wire message — the §5.1 synchronous logging, amortized over the
+/// negotiated ack batch. FILE_CLOSE rides the control connection and is
+/// only emitted once the file's shared `CompletedSet` is complete — the
+/// cross-stream barrier: every stream's outstanding acks for the file
+/// must have arrived, whichever stream carried them.
 fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)]) {
     let mut resched: Vec<(OstId, BlockReq)> = Vec::new();
     let mut log_err: Option<String> = None;
@@ -913,7 +1269,7 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
         for (ost, _) in &resched {
             shared.sched.on_enqueue(*ost);
         }
-        shared.queues.push_batch(resched);
+        shared.push_to_streams(resched);
     }
     if close {
         let _ = shared.ep.send(Message::FileClose { file_idx });

@@ -95,6 +95,16 @@ fn print_usage() {
                                                          writes into one vectored\n\
                                                          pwrite up to this budget\n\
                                                          (0 = one pwrite per object)\n\
+           --read-gather-bytes BYTES                     gather byte-contiguous source\n\
+                                                         reads into one preadv up to\n\
+                                                         this budget (0 = one pread\n\
+                                                         per object)\n\
+           --data-streams K                              shard OSTs over K parallel\n\
+                                                         data connections, each with\n\
+                                                         its own credit window + RMA\n\
+                                                         pool (negotiated down to the\n\
+                                                         peer's K; 1 = single fused\n\
+                                                         connection, the legacy wire)\n\
            --rma-autosize                                grow each RMA pool toward\n\
                                                          send_window x object_size at\n\
                                                          CONNECT\n\
@@ -161,6 +171,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(v) = args.get("write-coalesce-bytes") {
         cfg.write_coalesce_bytes = parse_bytes(v)?;
+    }
+    if let Some(v) = args.get("read-gather-bytes") {
+        cfg.read_gather_bytes = parse_bytes(v)?;
+    }
+    if let Some(v) = args.get("data-streams") {
+        cfg.data_streams = v.parse().context("--data-streams")?;
     }
     if args.flag("rma-autosize") {
         cfg.rma_autosize = true;
@@ -294,6 +310,23 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
             Json::Num(out.sink.coalesce_bytes_max as f64),
         );
         m.insert(
+            "coalesce_continuations".into(),
+            Json::Num(out.sink.coalesce_continuations as f64),
+        );
+        m.insert(
+            "read_syscalls".into(),
+            Json::Num(out.source.read_syscalls as f64),
+        );
+        m.insert(
+            "gathered_runs".into(),
+            Json::Num(out.source.gathered_runs as f64),
+        );
+        m.insert(
+            "gather_bytes_max".into(),
+            Json::Num(out.source.gather_bytes_max as f64),
+        );
+        m.insert("data_streams".into(), Json::Num(out.data_streams as f64));
+        m.insert(
             "rma_bytes_effective".into(),
             Json::Num(out.rma_bytes_effective as f64),
         );
@@ -334,6 +367,11 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         "  payload          : {} ({:.1} MB/s)",
         fmt_bytes(out.payload_bytes),
         out.throughput_bytes_per_sec() / 1e6
+    );
+    println!(
+        "  data plane       : {} stream{} (OST-sharded, per-stream window + rma pool)",
+        out.data_streams,
+        if out.data_streams == 1 { "" } else { "s" }
     );
     println!(
         "  objects          : sent {}  synced {}  skipped(resume) {}  failed-verify {}",
@@ -382,12 +420,19 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         fmt_bytes(out.bytes_copied())
     );
     println!(
-        "  write path       : {} syscalls  {} coalesced runs  max run {}  \
-         rma pool {}",
+        "  write path       : {} syscalls  {} coalesced runs ({} continued)  \
+         max run {}  rma pool {}",
         out.sink.write_syscalls,
         out.sink.coalesced_runs,
+        out.sink.coalesce_continuations,
         fmt_bytes(out.sink.coalesce_bytes_max),
         fmt_bytes(out.rma_bytes_effective)
+    );
+    println!(
+        "  read path        : {} syscalls  {} gathered runs  max run {}",
+        out.source.read_syscalls,
+        out.source.gathered_runs,
+        fmt_bytes(out.source.gather_bytes_max)
     );
     println!(
         "  sched (source)   : {} picks ({} fallback)  avg pick {:.0} ns  avg service {:.1} µs",
@@ -488,12 +533,50 @@ fn cmd_sink(args: &Args) -> Result<i32> {
     let runtime = maybe_runtime(&cfg)?;
     println!("sink: listening on {addr}, PFS root {root}");
     let listener = tcp::listen(addr)?;
+    // The FIRST connection is always control (the source dials data
+    // connections only after the CONNECT handshake negotiated a stream
+    // count, so there is no accept-order race).
     let ep = tcp::accept(&listener, cfg.wire(), FaultController::unarmed())?;
     let ep: Arc<dyn Endpoint> = Arc::new(ep);
-    let node = coordinator::sink::spawn_sink(
+    let wire = cfg.wire();
+    let plane = coordinator::DataPlane::Connector(Box::new(move |k| {
+        let mut slots: Vec<Option<Arc<dyn Endpoint>>> = (0..k).map(|_| None).collect();
+        for _ in 0..k {
+            let dep = tcp::accept(&listener, wire.clone(), FaultController::unarmed())?;
+            let dep: Arc<dyn Endpoint> = Arc::new(dep);
+            // Each data connection introduces itself with STREAM_HELLO;
+            // consume it here to place the connection at its stream
+            // index (TCP accept order is not dial order).
+            let hello = dep
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .map_err(|e| anyhow::anyhow!("waiting for STREAM_HELLO: {e:?}"))?;
+            let ftlads::net::Message::StreamHello { stream_id } = hello else {
+                bail!(
+                    "expected STREAM_HELLO on data connection, got {}",
+                    hello.type_name()
+                );
+            };
+            let idx = stream_id as usize;
+            anyhow::ensure!(
+                idx < k as usize,
+                "STREAM_HELLO stream {stream_id} out of range (k = {k})"
+            );
+            anyhow::ensure!(
+                slots[idx].is_none(),
+                "duplicate STREAM_HELLO for stream {stream_id}"
+            );
+            slots[idx] = Some(dep);
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("k distinct in-range hellos fill every slot"))
+            .collect())
+    }));
+    let node = coordinator::sink::spawn_sink_multi(
         &cfg,
         pfs,
         ep,
+        plane,
         runtime.as_ref().map(|(_, h)| h.clone()),
     )?;
     let report = node.join();
@@ -534,12 +617,24 @@ fn cmd_source(args: &Args) -> Result<i32> {
     anyhow::ensure!(!files.is_empty(), "no files to transfer under {root}");
     let ep = tcp::connect(addr, cfg.wire(), FaultController::unarmed())?;
     let ep: Arc<dyn Endpoint> = Arc::new(ep);
+    let wire = cfg.wire();
+    // Dialed lazily, only when CONNECT negotiates K >= 2; the source
+    // introduces each connection with STREAM_HELLO after materializing.
+    let plane = coordinator::DataPlane::Connector(Box::new(move |k| {
+        let mut eps: Vec<Arc<dyn Endpoint>> = Vec::with_capacity(k as usize);
+        for _ in 0..k {
+            let dep = tcp::connect(addr, wire.clone(), FaultController::unarmed())?;
+            eps.push(Arc::new(dep));
+        }
+        Ok(eps)
+    }));
     let spec = TransferSpec {
         files,
         resume: args.flag("resume"),
         fault: FaultPlan::none(),
     };
-    let report = coordinator::source::run_source(&cfg, Arc::new(pfs), ep, &spec)?;
+    let report =
+        coordinator::source::run_source_multi(&cfg, Arc::new(pfs), ep, plane, &spec)?;
     match report.fault {
         None => {
             println!(

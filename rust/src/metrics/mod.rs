@@ -69,6 +69,24 @@ pub struct Counters {
     pub coalesced_runs: AtomicU64,
     /// Largest gathered run submitted, in bytes (high-water mark).
     pub coalesce_bytes_max: AtomicU64,
+    /// Source read submissions: one per `read_at` call and one per
+    /// gathered `read_at_vectored` run — the source mirror of
+    /// `write_syscalls`. At `read_gather_bytes = 0` this equals the
+    /// object count (the seed's one-pread-per-object path); gathering
+    /// drives it *below* the object count.
+    pub read_syscalls: AtomicU64,
+    /// Gathered runs of length ≥ 2 actually submitted through
+    /// `read_at_vectored` (a run of 1 takes the plain `read_at` path).
+    pub gathered_runs: AtomicU64,
+    /// Largest gathered read run submitted, in bytes (high-water mark).
+    pub gather_bytes_max: AtomicU64,
+    /// Sink write-coalescer continuations: times an IO thread, after
+    /// submitting a gathered run whose chain broke with budget to spare,
+    /// found the run's byte-successor queued (it arrived while the run
+    /// was being written/acked — e.g. released by a mid-run ack-batch
+    /// flush) and extended the logical run instead of returning to the
+    /// policy pick.
+    pub coalesce_continuations: AtomicU64,
 }
 
 impl Counters {
@@ -97,6 +115,10 @@ impl Counters {
             write_syscalls: self.write_syscalls.load(Ordering::Relaxed),
             coalesced_runs: self.coalesced_runs.load(Ordering::Relaxed),
             coalesce_bytes_max: self.coalesce_bytes_max.load(Ordering::Relaxed),
+            read_syscalls: self.read_syscalls.load(Ordering::Relaxed),
+            gathered_runs: self.gathered_runs.load(Ordering::Relaxed),
+            gather_bytes_max: self.gather_bytes_max.load(Ordering::Relaxed),
+            coalesce_continuations: self.coalesce_continuations.load(Ordering::Relaxed),
         }
     }
 }
@@ -126,6 +148,10 @@ pub struct CounterSnapshot {
     pub write_syscalls: u64,
     pub coalesced_runs: u64,
     pub coalesce_bytes_max: u64,
+    pub read_syscalls: u64,
+    pub gathered_runs: u64,
+    pub gather_bytes_max: u64,
+    pub coalesce_continuations: u64,
 }
 
 /// One `/proc/self` sample.

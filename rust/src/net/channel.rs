@@ -146,12 +146,18 @@ mod tests {
             resume: false,
             ack_batch: 1,
             send_window: 1,
+            data_streams: 1,
         })
         .unwrap();
         let m = sink.recv().unwrap();
         assert_eq!(m.type_name(), "CONNECT");
-        sink.send(Message::ConnectAck { rma_slots: 2, ack_batch: 1, send_window: 1 })
-            .unwrap();
+        sink.send(Message::ConnectAck {
+            rma_slots: 2,
+            ack_batch: 1,
+            send_window: 1,
+            data_streams: 1,
+        })
+        .unwrap();
         assert_eq!(src.recv().unwrap().type_name(), "CONNECT_ACK");
     }
 

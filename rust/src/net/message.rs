@@ -42,20 +42,31 @@ pub enum Message {
     /// decoder rejects trailing bytes, so asking a pre-`send_window` peer
     /// for a window > 1 fails the handshake rather than degrading —
     /// non-default windows assume both ends speak this revision.
+    /// `data_streams` (1 = today's single fused connection) asks for a
+    /// parallel data plane: the source proposes how many OST-sharded data
+    /// connections it wants to dial alongside the control connection, the
+    /// sink answers with the min of both sides, and each data connection
+    /// then identifies itself with a [`StreamHello`]. Optional trailing
+    /// field after `send_window`; a field-less legacy/PR 5-era peer
+    /// decodes as 1 and keeps the fused path. Because the trailing fields
+    /// are positional, encoding a non-default `data_streams` forces the
+    /// preceding `send_window` onto the wire even when it is 1.
     Connect {
         max_object_size: u64,
         rma_slots: u32,
         resume: bool,
         ack_batch: u32,
         send_window: u32,
+        data_streams: u32,
     },
     /// Sink accepts; advertises its own RMA slot count, the ack batch
-    /// size it will actually use (min of both sides' `ack_batch`), and
-    /// the negotiated NEW_BLOCK send window the source must honor (min of
-    /// both sides' `send_window`). Both trailing fields are optional on
-    /// the wire, defaulting to 1 for legacy peers, and `send_window` is
-    /// only encoded when it is not 1.
-    ConnectAck { rma_slots: u32, ack_batch: u32, send_window: u32 },
+    /// size it will actually use (min of both sides' `ack_batch`), the
+    /// negotiated NEW_BLOCK send window the source must honor (min of
+    /// both sides' `send_window`), and the negotiated data-stream count
+    /// (min of both sides' `data_streams`). All trailing fields are
+    /// optional on the wire, defaulting to 1 for legacy peers, and each
+    /// is only encoded when it (or a later field) is not 1.
+    ConnectAck { rma_slots: u32, ack_batch: u32, send_window: u32, data_streams: u32 },
     /// Source → sink: begin file `file_idx` (§5.2.1). Carries the
     /// metadata the sink uses for the resume match (§5.2.2).
     NewFile { file_idx: u32, name: String, size: u64, start_ost: u32 },
@@ -89,6 +100,12 @@ pub enum Message {
     FileCloseAck { file_idx: u32 },
     /// Source → sink: transfer complete, disconnect.
     Bye,
+    /// First (and only handshake) message on each *data* connection of a
+    /// multi-stream transfer: identifies which stream id the connection
+    /// carries, so accepts arriving in any order still bind to the right
+    /// OST shard. Never sent when the negotiated `data_streams` is 1 —
+    /// the default wire is untouched.
+    StreamHello { stream_id: u32 },
 }
 
 const T_CONNECT: u8 = 0;
@@ -101,6 +118,7 @@ const T_FILE_CLOSE: u8 = 6;
 const T_FILE_CLOSE_ACK: u8 = 7;
 const T_BYE: u8 = 8;
 const T_BLOCK_SYNC_BATCH: u8 = 9;
+const T_STREAM_HELLO: u8 = 10;
 
 impl Message {
     /// Payload bytes for accounting/bandwidth purposes (object data only —
@@ -124,6 +142,7 @@ impl Message {
             Message::FileClose { .. } => "FILE_CLOSE",
             Message::FileCloseAck { .. } => "FILE_CLOSE_ACK",
             Message::Bye => "BYE",
+            Message::StreamHello { .. } => "STREAM_HELLO",
         }
     }
 
@@ -154,24 +173,39 @@ impl Message {
     /// to [`encode`](Message::encode).
     pub fn encode_header<'a>(&'a self, out: &mut Vec<u8>) -> Option<&'a Bytes> {
         match self {
-            Message::Connect { max_object_size, rma_slots, resume, ack_batch, send_window } => {
+            Message::Connect {
+                max_object_size,
+                rma_slots,
+                resume,
+                ack_batch,
+                send_window,
+                data_streams,
+            } => {
                 out.push(T_CONNECT);
                 put_u64(out, *max_object_size);
                 put_u32(out, *rma_slots);
                 out.push(*resume as u8);
                 put_u32(out, *ack_batch);
-                // Optional trailing field, omitted at the default so the
-                // PR 2-era wire bytes are reproduced exactly.
-                if *send_window != 1 {
+                // Optional trailing fields, omitted at the defaults so the
+                // PR 2-era wire bytes are reproduced exactly. The decode is
+                // positional, so a non-default `data_streams` forces
+                // `send_window` onto the wire even at its default.
+                if *send_window != 1 || *data_streams != 1 {
                     put_u32(out, *send_window);
                 }
+                if *data_streams != 1 {
+                    put_u32(out, *data_streams);
+                }
             }
-            Message::ConnectAck { rma_slots, ack_batch, send_window } => {
+            Message::ConnectAck { rma_slots, ack_batch, send_window, data_streams } => {
                 out.push(T_CONNECT_ACK);
                 put_u32(out, *rma_slots);
                 put_u32(out, *ack_batch);
-                if *send_window != 1 {
+                if *send_window != 1 || *data_streams != 1 {
                     put_u32(out, *send_window);
+                }
+                if *data_streams != 1 {
+                    put_u32(out, *data_streams);
                 }
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
@@ -220,6 +254,10 @@ impl Message {
                 put_u32(out, *file_idx);
             }
             Message::Bye => out.push(T_BYE),
+            Message::StreamHello { stream_id } => {
+                out.push(T_STREAM_HELLO);
+                put_u32(out, *stream_id);
+            }
         }
         None
     }
@@ -340,11 +378,13 @@ impl<'a> Reader<'a> {
                 // extra field (see the `Connect` doc).
                 ack_batch: if self.remaining() > 0 { self.u32()? } else { 1 },
                 send_window: if self.remaining() > 0 { self.u32()? } else { 1 },
+                data_streams: if self.remaining() > 0 { self.u32()? } else { 1 },
             },
             T_CONNECT_ACK => Message::ConnectAck {
                 rma_slots: self.u32()?,
                 ack_batch: if self.remaining() > 0 { self.u32()? } else { 1 },
                 send_window: if self.remaining() > 0 { self.u32()? } else { 1 },
+                data_streams: if self.remaining() > 0 { self.u32()? } else { 1 },
             },
             T_NEW_FILE => Message::NewFile {
                 file_idx: self.u32()?,
@@ -389,6 +429,7 @@ impl<'a> Reader<'a> {
             T_FILE_CLOSE => Message::FileClose { file_idx: self.u32()? },
             T_FILE_CLOSE_ACK => Message::FileCloseAck { file_idx: self.u32()? },
             T_BYE => Message::Bye,
+            T_STREAM_HELLO => Message::StreamHello { stream_id: self.u32()? },
             t => bail!("unknown message type byte {t}"),
         })
     }
@@ -413,6 +454,7 @@ mod tests {
             resume: true,
             ack_batch: 8,
             send_window: 1,
+            data_streams: 1,
         });
         roundtrip(Message::Connect {
             max_object_size: 1 << 20,
@@ -420,9 +462,38 @@ mod tests {
             resume: false,
             ack_batch: 8,
             send_window: 32,
+            data_streams: 4,
         });
-        roundtrip(Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1 });
-        roundtrip(Message::ConnectAck { rma_slots: 8, ack_batch: 4, send_window: 16 });
+        // The forced-encode corner: data_streams != 1 with the default
+        // send_window — positional decode must still land every field.
+        roundtrip(Message::Connect {
+            max_object_size: 1 << 20,
+            rma_slots: 64,
+            resume: false,
+            ack_batch: 1,
+            send_window: 1,
+            data_streams: 8,
+        });
+        roundtrip(Message::ConnectAck {
+            rma_slots: 8,
+            ack_batch: 1,
+            send_window: 1,
+            data_streams: 1,
+        });
+        roundtrip(Message::ConnectAck {
+            rma_slots: 8,
+            ack_batch: 4,
+            send_window: 16,
+            data_streams: 2,
+        });
+        roundtrip(Message::ConnectAck {
+            rma_slots: 8,
+            ack_batch: 1,
+            send_window: 1,
+            data_streams: 64,
+        });
+        roundtrip(Message::StreamHello { stream_id: 0 });
+        roundtrip(Message::StreamHello { stream_id: 63 });
         roundtrip(Message::NewFile {
             file_idx: 3,
             name: "dir/file-α.bin".into(),
@@ -619,13 +690,14 @@ mod tests {
                 resume: true,
                 ack_batch: 1,
                 send_window: 1,
+                data_streams: 1,
             }
         );
         let mut buf = vec![T_CONNECT_ACK];
         buf.extend_from_slice(&8u32.to_le_bytes());
         assert_eq!(
             Message::decode(&buf).unwrap(),
-            Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1 }
+            Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1, data_streams: 1 }
         );
     }
 
@@ -646,6 +718,7 @@ mod tests {
                 resume: false,
                 ack_batch: 8,
                 send_window: 1,
+                data_streams: 1,
             }
         );
         let mut buf = vec![T_CONNECT_ACK];
@@ -653,7 +726,38 @@ mod tests {
         buf.extend_from_slice(&4u32.to_le_bytes());
         assert_eq!(
             Message::decode(&buf).unwrap(),
-            Message::ConnectAck { rma_slots: 8, ack_batch: 4, send_window: 1 }
+            Message::ConnectAck { rma_slots: 8, ack_batch: 4, send_window: 1, data_streams: 1 }
+        );
+    }
+
+    #[test]
+    fn pr5_handshake_without_data_streams_decodes_as_one() {
+        // A PR 5-era peer's CONNECT: ack_batch and send_window present,
+        // no trailing data_streams — the single fused connection path.
+        let mut buf = vec![T_CONNECT];
+        buf.extend_from_slice(&(1u64 << 20).to_le_bytes());
+        buf.extend_from_slice(&64u32.to_le_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&16u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&buf).unwrap(),
+            Message::Connect {
+                max_object_size: 1 << 20,
+                rma_slots: 64,
+                resume: false,
+                ack_batch: 8,
+                send_window: 16,
+                data_streams: 1,
+            }
+        );
+        let mut buf = vec![T_CONNECT_ACK];
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&4u32.to_le_bytes());
+        buf.extend_from_slice(&16u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&buf).unwrap(),
+            Message::ConnectAck { rma_slots: 8, ack_batch: 4, send_window: 16, data_streams: 1 }
         );
     }
 
@@ -669,12 +773,44 @@ mod tests {
             resume: false,
             ack_batch: 1,
             send_window: 1,
+            data_streams: 1,
         }
         .encode(&mut buf);
         assert_eq!(buf.len(), 1 + 8 + 4 + 1 + 4, "CONNECT grew beyond the PR 2 shape");
         let mut buf = Vec::new();
-        Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1 }.encode(&mut buf);
+        Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1, data_streams: 1 }
+            .encode(&mut buf);
         assert_eq!(buf.len(), 1 + 4 + 4, "CONNECT_ACK grew beyond the PR 2 shape");
+    }
+
+    #[test]
+    fn multi_stream_handshake_forces_send_window_onto_the_wire() {
+        // data_streams != 1 with the default window: both trailing u32s
+        // must be present (positional decode) — 5 extra bytes over PR 2
+        // on CONNECT (4 + 4 minus nothing; window was already omitted).
+        let mut buf = Vec::new();
+        Message::Connect {
+            max_object_size: 1 << 20,
+            rma_slots: 64,
+            resume: false,
+            ack_batch: 1,
+            send_window: 1,
+            data_streams: 4,
+        }
+        .encode(&mut buf);
+        assert_eq!(buf.len(), 1 + 8 + 4 + 1 + 4 + 4 + 4);
+        let mut buf = Vec::new();
+        Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1, data_streams: 4 }
+            .encode(&mut buf);
+        assert_eq!(buf.len(), 1 + 4 + 4 + 4 + 4);
+        // And STREAM_HELLO is a fixed 5-byte frame.
+        let mut buf = Vec::new();
+        Message::StreamHello { stream_id: 3 }.encode(&mut buf);
+        assert_eq!(buf, {
+            let mut b = vec![T_STREAM_HELLO];
+            b.extend_from_slice(&3u32.to_le_bytes());
+            b
+        });
     }
 
     #[test]

@@ -202,6 +202,88 @@ fn pwritev_all(f: &fs::File, offset: u64, iovs: &[&[u8]]) -> std::io::Result<()>
     f.write_all(&scratch)
 }
 
+/// Fill `iovs` from `offset` with scattered positional I/O:
+/// `libc::preadv` on unix, advancing the iov cursor across short reads
+/// (posix permits them) and stopping at EOF. Returns the total bytes
+/// read. Non-unix targets fall back to one seek + read into a scratch
+/// buffer scattered out afterwards — still a single read submission.
+#[cfg(unix)]
+fn preadv_all(f: &fs::File, offset: u64, iovs: &mut [&mut [u8]]) -> std::io::Result<usize> {
+    use std::os::unix::io::AsRawFd;
+    // Same IOV_MAX discipline as `pwritev_all`: the source caps gathered
+    // runs at the shared constant, so the split never actually fires and
+    // `read_syscalls` stays exact.
+    const MAX_IOVS: usize = super::IOV_MAX_GATHER;
+    let fd = f.as_raw_fd();
+    let total: u64 = iovs.iter().map(|v| v.len() as u64).sum();
+    let mut read = 0u64;
+    while read < total {
+        // Rebuild the iovec list past what has already arrived.
+        let mut skip = read;
+        let mut vecs: Vec<libc::iovec> = Vec::with_capacity(iovs.len().min(MAX_IOVS));
+        for iov in iovs.iter_mut() {
+            if vecs.len() == MAX_IOVS {
+                break;
+            }
+            let len = iov.len() as u64;
+            if skip >= len {
+                skip -= len;
+                continue;
+            }
+            vecs.push(libc::iovec {
+                iov_base: unsafe { iov.as_mut_ptr().add(skip as usize) } as *mut libc::c_void,
+                iov_len: (len - skip) as usize,
+            });
+            skip = 0;
+        }
+        let pos = libc::off_t::try_from(offset + read).map_err(|_| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "read offset exceeds off_t on this target",
+            )
+        })?;
+        let n = unsafe { libc::preadv(fd, vecs.as_ptr(), vecs.len() as libc::c_int, pos) };
+        if n < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(err);
+        }
+        if n == 0 {
+            break; // EOF inside the run: short total, like read_at
+        }
+        read += n as u64;
+    }
+    Ok(read as usize)
+}
+
+#[cfg(not(unix))]
+fn preadv_all(f: &fs::File, offset: u64, iovs: &mut [&mut [u8]]) -> std::io::Result<usize> {
+    let mut f = f;
+    let total: usize = iovs.iter().map(|v| v.len()).sum();
+    let mut scratch = vec![0u8; total];
+    f.seek(SeekFrom::Start(offset))?;
+    let mut got = 0usize;
+    while got < total {
+        let n = f.read(&mut scratch[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+    }
+    let mut off = 0usize;
+    for iov in iovs.iter_mut() {
+        if off >= got {
+            break;
+        }
+        let n = iov.len().min(got - off);
+        iov[..n].copy_from_slice(&scratch[off..off + n]);
+        off += n;
+    }
+    Ok(got)
+}
+
 impl Pfs for DiskPfs {
     fn layout(&self) -> &StripeLayout {
         &self.layout
@@ -294,6 +376,27 @@ impl Pfs for DiskPfs {
         pwritev_all(&f, offset, iovs)?;
         self.osts.service(ost, total, true);
         Ok(Vec::new())
+    }
+
+    /// Scattered read: ONE `preadv` syscall for the whole run on unix
+    /// (looping only on short reads), a single scratch read elsewhere.
+    /// Either way the OST model is charged one service round for the
+    /// run — the gather win, mirroring `write_at_vectored`.
+    fn read_at_vectored(
+        &self,
+        file: FileId,
+        offset: u64,
+        iovs: &mut [&mut [u8]],
+    ) -> Result<usize> {
+        let name = self.name_of(file)?;
+        let meta = self
+            .read_meta(&name)
+            .ok_or_else(|| anyhow::anyhow!("no metadata for '{name}'"))?;
+        let ost = self.layout.ost_for(meta.start_ost, offset);
+        let f = fs::File::open(self.data_path(&name))?;
+        let n = preadv_all(&f, offset, iovs)?;
+        self.osts.service(ost, n as u64, false);
+        Ok(n)
     }
 
     fn commit_file(&self, file: FileId) -> Result<()> {
@@ -419,6 +522,45 @@ mod tests {
         for (i, b) in buf.iter().enumerate() {
             assert_eq!(*b, (i % 251) as u8, "byte {i}");
         }
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn vectored_read_scatters_one_run() {
+        let root = tmp_root("vread");
+        let pfs = DiskPfs::new(&root, StripeLayout::paper(), fast_cfg()).unwrap();
+        let id = pfs.create("r.bin", 64, 0).unwrap();
+        let data: Vec<u8> = (0..24u8).collect();
+        assert!(pfs.write_at(id, 8, &data).unwrap());
+        let (mut a, mut b, mut c) = ([0u8; 8], [0u8; 4], [0u8; 12]);
+        let reads_before = pfs.ost_model().total_stats().reads;
+        let n = pfs
+            .read_at_vectored(id, 8, &mut [&mut a[..], &mut b[..], &mut c[..]])
+            .unwrap();
+        assert_eq!(n, 24);
+        let mut got = Vec::new();
+        got.extend_from_slice(&a);
+        got.extend_from_slice(&b);
+        got.extend_from_slice(&c);
+        assert_eq!(got, data);
+        // One OST read round charged for the whole run.
+        assert_eq!(pfs.ost_model().total_stats().reads, reads_before + 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn vectored_read_short_at_eof() {
+        let root = tmp_root("vreadeof");
+        let pfs = DiskPfs::new(&root, StripeLayout::paper(), fast_cfg()).unwrap();
+        let id = pfs.create("s.bin", 10, 0).unwrap();
+        pfs.write_at(id, 0, &[7u8; 10]).unwrap();
+        let (mut a, mut b) = ([0u8; 8], [0u8; 8]);
+        let n = pfs
+            .read_at_vectored(id, 0, &mut [&mut a[..], &mut b[..]])
+            .unwrap();
+        assert_eq!(n, 10, "EOF inside the run returns the short total");
+        assert_eq!(a, [7u8; 8]);
+        assert_eq!(&b[..2], &[7u8; 2]);
         let _ = fs::remove_dir_all(&root);
     }
 

@@ -114,6 +114,36 @@ pub trait Pfs: Send + Sync {
         Ok(corrupted)
     }
 
+    /// Vectored `pread`: fill the concatenation of `iovs` from `offset`
+    /// as ONE storage request — one syscall / one OST service round where
+    /// the backend supports scatter I/O ([`disk::DiskPfs`] via `preadv`,
+    /// [`sim::SimPfs`] as a single charged service op). Returns the total
+    /// bytes read; a short count means EOF landed inside the run (the
+    /// trailing iovs are partially or not at all filled).
+    ///
+    /// The default implementation degrades to one [`read_at`] per iov:
+    /// byte-equivalent, just without the gather win.
+    ///
+    /// [`read_at`]: Pfs::read_at
+    fn read_at_vectored(
+        &self,
+        file: FileId,
+        offset: u64,
+        iovs: &mut [&mut [u8]],
+    ) -> Result<usize> {
+        let mut total = 0usize;
+        let mut off = offset;
+        for iov in iovs.iter_mut() {
+            let n = self.read_at(file, off, iov)?;
+            total += n;
+            if n < iov.len() {
+                break; // EOF inside this iov
+            }
+            off += iov.len() as u64;
+        }
+        Ok(total)
+    }
+
     /// Mark a file fully transferred (close + metadata barrier). After
     /// commit, `lookup().1.committed` is true.
     fn commit_file(&self, file: FileId) -> Result<()>;

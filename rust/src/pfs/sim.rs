@@ -261,6 +261,49 @@ impl Pfs for SimPfs {
         Ok(self.write_at_vectored(file, offset, &[data])?.is_empty())
     }
 
+    /// One charged OST service op for the whole scattered run — the
+    /// gather win `read_at` pays per object. Fill semantics match
+    /// `read_at` exactly (same synthetic bytes, short total at EOF).
+    fn read_at_vectored(
+        &self,
+        file: FileId,
+        offset: u64,
+        iovs: &mut [&mut [u8]],
+    ) -> Result<usize> {
+        let (name, size, start_ost) = {
+            let ids = self.ids.lock().unwrap_or_else(|e| e.into_inner());
+            let name = ids
+                .get(&file.0)
+                .ok_or_else(|| anyhow::anyhow!("read_at: no file id {}", file.0))?
+                .clone();
+            let files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+            let f = &files[&name];
+            (name, f.meta.size, f.meta.start_ost)
+        };
+        if offset >= size {
+            return Ok(0);
+        }
+        let want: u64 = iovs.iter().map(|v| v.len() as u64).sum();
+        let n = want.min(size - offset) as usize;
+        // ONE service round for the gathered run, charged before the data
+        // is produced (pread semantics), on the OST serving the head.
+        let ost = self.layout.ost_for(start_ost, offset);
+        self.osts.service(ost, n as u64, false);
+        let h = name_hash(&name);
+        let mut remaining = n;
+        let mut off = offset;
+        for iov in iovs.iter_mut() {
+            if remaining == 0 {
+                break;
+            }
+            let take = iov.len().min(remaining);
+            synth_fill(self.seed, h, off, &mut iov[..take]);
+            off += take as u64;
+            remaining -= take;
+        }
+        Ok(n)
+    }
+
     /// One charged OST service op for the whole gathered run; per-iov
     /// ledger entries so every constituent object keeps its own digest.
     /// Pending single-shot corruptions whose `(file, offset)` matches an
@@ -468,6 +511,49 @@ mod tests {
         assert_eq!(pfs.written_digest("out", 10).unwrap().0, digest_bytes(a));
         assert_ne!(pfs.written_digest("out", 18).unwrap().0, digest_bytes(b));
         assert_eq!(pfs.written_digest("out", 26).unwrap().0, digest_bytes(a));
+    }
+
+    #[test]
+    fn vectored_read_is_one_service_op_matching_read_at() {
+        let pfs = fast_pfs();
+        pfs.populate(&[("f".into(), 1000)]);
+        let (id, _) = pfs.lookup("f").unwrap();
+        let mut plain = vec![0u8; 96];
+        pfs.read_at(id, 40, &mut plain).unwrap();
+        let reads_before = pfs.ost_model().total_stats().reads;
+        let (mut a, mut b, mut c) = ([0u8; 32], [0u8; 32], [0u8; 32]);
+        let n = pfs
+            .read_at_vectored(id, 40, &mut [&mut a[..], &mut b[..], &mut c[..]])
+            .unwrap();
+        assert_eq!(n, 96);
+        // One OST service round for the whole run...
+        assert_eq!(pfs.ost_model().total_stats().reads, reads_before + 1);
+        // ...and byte-identical content to three plain reads.
+        let mut got = Vec::new();
+        got.extend_from_slice(&a);
+        got.extend_from_slice(&b);
+        got.extend_from_slice(&c);
+        assert_eq!(got, plain);
+    }
+
+    #[test]
+    fn vectored_read_short_at_eof() {
+        let pfs = fast_pfs();
+        pfs.populate(&[("f".into(), 50)]);
+        let (id, _) = pfs.lookup("f").unwrap();
+        let (mut a, mut b) = ([0u8; 32], [0u8; 32]);
+        let n = pfs
+            .read_at_vectored(id, 0, &mut [&mut a[..], &mut b[..]])
+            .unwrap();
+        assert_eq!(n, 50, "EOF inside the run returns the short total");
+        let mut plain = vec![0u8; 50];
+        pfs.read_at(id, 0, &mut plain).unwrap();
+        let mut got = Vec::new();
+        got.extend_from_slice(&a);
+        got.extend_from_slice(&b[..18]);
+        assert_eq!(got, plain);
+        // Fully past EOF is an empty read.
+        assert_eq!(pfs.read_at_vectored(id, 50, &mut [&mut a[..]]).unwrap(), 0);
     }
 
     #[test]

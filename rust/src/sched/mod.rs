@@ -9,6 +9,14 @@
 //! `OstQueues::pop_next(&*sched, osts)` and the queue layer consults the
 //! policy under its lock.
 //!
+//! A multi-stream source (`data_streams = K ≥ 2`) shares ONE policy
+//! instance across its K per-stream queue sets: `pick` is consulted under
+//! each queue set's own lock, so implementations must stay safe under
+//! concurrent picks (the built-ins use atomics / internal locking — unit
+//! policies trivially so), and stateful signals like the straggler EWMA
+//! deliberately aggregate across streams, since OST service time is a
+//! property of the storage target, not of the wire stream observing it.
+//!
 //! ## Built-in policies and the paper sections they model
 //!
 //! | policy | config name | models |

@@ -240,6 +240,182 @@ fn failed_vectored_write_degrades_to_per_block_and_completes() {
     let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
 }
 
+/// A PFS that blocks the FIRST write until the test releases it, so a
+/// follow-up block can deterministically arrive while its predecessor's
+/// write is in flight.
+struct GatePfs {
+    inner: Arc<SimPfs>,
+    armed: std::sync::atomic::AtomicBool,
+    started: std::sync::mpsc::Sender<()>,
+    release: Mutex<std::sync::mpsc::Receiver<()>>,
+}
+
+impl GatePfs {
+    fn gate(&self) {
+        if self.armed.swap(false, std::sync::atomic::Ordering::SeqCst) {
+            let _ = self.started.send(());
+            let _ = self
+                .release
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .recv_timeout(Duration::from_secs(10));
+        }
+    }
+}
+
+impl Pfs for GatePfs {
+    fn layout(&self) -> &StripeLayout {
+        self.inner.layout()
+    }
+    fn ost_model(&self) -> &ftlads::pfs::OstModel {
+        self.inner.ost_model()
+    }
+    fn lookup(&self, name: &str) -> Option<(FileId, FileMeta)> {
+        self.inner.lookup(name)
+    }
+    fn list(&self) -> Vec<String> {
+        self.inner.list()
+    }
+    fn create(&self, name: &str, size: u64, start_ost: u32) -> Result<FileId> {
+        self.inner.create(name, size, start_ost)
+    }
+    fn read_at(&self, file: FileId, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        self.inner.read_at(file, offset, buf)
+    }
+    fn write_at(&self, file: FileId, offset: u64, data: &[u8]) -> Result<bool> {
+        self.gate();
+        self.inner.write_at(file, offset, data)
+    }
+    fn write_at_vectored(&self, file: FileId, offset: u64, iovs: &[&[u8]]) -> Result<Vec<usize>> {
+        self.gate();
+        self.inner.write_at_vectored(file, offset, iovs)
+    }
+    fn commit_file(&self, file: FileId) -> Result<()> {
+        self.inner.commit_file(file)
+    }
+    fn remove(&self, name: &str) -> Result<()> {
+        self.inner.remove(name)
+    }
+}
+
+#[test]
+fn coalescer_continues_run_after_successor_arrives_mid_write() {
+    // The PR 5 interaction fix: a gathered run that ran out of queued
+    // successors must NOT give up on the chain. After the write (and its
+    // per-block acks, which may flush on the ack-batch timer in between)
+    // the IO thread re-drains the queue for the byte-successor of the
+    // run it just wrote and continues, instead of falling back to the
+    // scheduler for an unrelated pick. Scripted source + a write gate
+    // make the interleaving deterministic: block 1 arrives while block
+    // 0's write is parked inside the PFS.
+    let mut cfg = Config::for_tests("coal-continue");
+    cfg.write_coalesce_bytes = 4 << 20;
+    cfg.ack_batch = 4; // acks park in the coalescer across the boundary
+    cfg.io_threads = 1;
+    cfg.integrity = ftlads::integrity::IntegrityMode::Off;
+    let wl = workload::big_workload(1, 2 * cfg.object_size); // 2 blocks
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let name = env.files[0].clone();
+    let (fid, meta) = env.source.lookup(&name).unwrap();
+    // The exact synthetic payloads the sink's ledger expects.
+    let osz = cfg.object_size as usize;
+    let mut b0 = vec![0u8; osz];
+    let mut b1 = vec![0u8; osz];
+    env.source.read_at(fid, 0, &mut b0).unwrap();
+    env.source.read_at(fid, cfg.object_size, &mut b1).unwrap();
+
+    let (started_tx, started_rx) = std::sync::mpsc::channel();
+    let (release_tx, release_rx) = std::sync::mpsc::channel();
+    let gate = Arc::new(GatePfs {
+        inner: env.sink.clone(),
+        armed: std::sync::atomic::AtomicBool::new(true),
+        started: started_tx,
+        release: Mutex::new(release_rx),
+    });
+    let (src_ep, sink_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let node = spawn_sink(&cfg, gate, Arc::new(sink_ep), None).unwrap();
+
+    // Scripted source: handshake, open the file, then the gated dance.
+    src_ep
+        .send(Message::Connect {
+            max_object_size: cfg.object_size,
+            rma_slots: 8,
+            resume: false,
+            ack_batch: 4,
+            send_window: 1,
+            data_streams: 1,
+        })
+        .unwrap();
+    let Message::ConnectAck { .. } = src_ep.recv_timeout(Duration::from_secs(5)).unwrap()
+    else {
+        panic!("expected CONNECT_ACK")
+    };
+    src_ep
+        .send(Message::NewFile {
+            file_idx: 0,
+            name: name.clone(),
+            size: meta.size,
+            start_ost: meta.start_ost,
+        })
+        .unwrap();
+    let Message::FileId { skip: false, .. } =
+        src_ep.recv_timeout(Duration::from_secs(5)).unwrap()
+    else {
+        panic!("expected FILE_ID without skip")
+    };
+    let send_block = |idx: u32, offset: u64, data: &[u8]| {
+        src_ep
+            .send(Message::NewBlock {
+                file_idx: 0,
+                block_idx: idx,
+                offset,
+                digest: 0, // integrity off
+                data: ftlads::util::bytes::Bytes::from_vec(data.to_vec()),
+            })
+            .unwrap();
+    };
+    send_block(0, 0, &b0);
+    // Block 0's write is now parked inside the PFS gate; block 1 lands
+    // in the write queue while the run is mid-flight.
+    started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    send_block(1, cfg.object_size, &b1);
+    std::thread::sleep(Duration::from_millis(200)); // let the sink queue it
+    release_tx.send(()).unwrap();
+
+    // Both blocks must come back acked ok (singly or batched — the
+    // ack-batch timer decides, and the continuation must not care).
+    let mut acked = 0;
+    while acked < 2 {
+        match src_ep.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Message::BlockSync { ok, .. } => {
+                assert!(ok);
+                acked += 1;
+            }
+            Message::BlockSyncBatch { blocks, .. } => {
+                assert!(blocks.iter().all(|(_, ok)| *ok));
+                acked += blocks.len();
+            }
+            other => panic!("unexpected {}", other.type_name()),
+        }
+    }
+    src_ep.send(Message::FileClose { file_idx: 0 }).unwrap();
+    let Message::FileCloseAck { .. } = src_ep.recv_timeout(Duration::from_secs(5)).unwrap()
+    else {
+        panic!("expected FILE_CLOSE_ACK")
+    };
+    src_ep.send(Message::Bye).unwrap();
+    let snk = node.join();
+    assert!(snk.fault.is_none(), "{:?}", snk.fault);
+    assert_eq!(
+        snk.counters.coalesce_continuations, 1,
+        "the drained chain must continue into the block that arrived mid-write"
+    );
+    assert_eq!(snk.counters.write_syscalls, 2, "one write per single-block run");
+    assert_eq!(snk.counters.bytes_written, 2 * cfg.object_size);
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
 #[test]
 fn rma_autosize_grows_both_pools_to_the_negotiated_window() {
     // A 2-slot pool with a 16-deep window: without the autosizer the

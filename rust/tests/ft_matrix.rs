@@ -297,6 +297,76 @@ fn coalesced_writes_fault_every_mechanism() {
 }
 
 #[test]
+fn multi_stream_fault_every_mechanism() {
+    // The multi-stream data plane under faults: for every FT mechanism
+    // and data_streams ∈ {1, 2, 8}, sever the session mid-transfer (the
+    // fault controller is shared by the control connection and every
+    // data leg, so losing one leg kills them all — a TCP RST on any
+    // socket of a striped session ends the session) with payload spread
+    // across the per-stream credit windows at the crash. Resume must
+    // honor the log-based retransmit bound (`resent <= total - logged`),
+    // the sink must byte-verify, and no logs may survive completion —
+    // identically at every stream count.
+    for mech in Mechanism::ALL_FT {
+        for streams in [1u32, 2, 8] {
+            let mut cfg =
+                Config::for_tests(&format!("matrix-mstream-{}-{streams}", mech.as_str()));
+            cfg.mechanism = mech;
+            cfg.method = Method::Bit64;
+            cfg.data_streams = streams;
+            cfg.send_window = 4;
+            cfg.ack_batch = 4;
+            cfg.ack_flush_us = 500;
+            let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+            let total = wl.total_objects(cfg.object_size);
+            let env = SimEnv::new(cfg, &wl);
+            let out = env
+                .run(
+                    &TransferSpec::fresh(env.files.clone())
+                        .with_fault(FaultPlan::at_fraction(0.5, Side::Source)),
+                )
+                .unwrap();
+            assert!(!out.completed, "{mech:?} streams={streams}: fault did not fire");
+            assert_eq!(
+                out.data_streams, streams,
+                "negotiation must land the configured stream count"
+            );
+            let logged: u64 = recover::recover_all(&env.cfg.ft())
+                .unwrap()
+                .values()
+                .map(|s| s.count() as u64)
+                .sum();
+            let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+            assert!(
+                out2.completed,
+                "{mech:?} streams={streams}: resume failed: {:?}",
+                out2.fault
+            );
+            assert!(
+                out2.source.objects_skipped_resume >= logged,
+                "{mech:?} streams={streams}: logged objects not skipped \
+                 ({} skipped, {logged} logged)",
+                out2.source.objects_skipped_resume
+            );
+            assert!(
+                out2.source.objects_sent <= total - logged,
+                "{mech:?} streams={streams}: resume retransmitted logged objects \
+                 ({} sent, {logged} logged of {total})",
+                out2.source.objects_sent
+            );
+            env.verify_sink_complete()
+                .unwrap_or_else(|e| panic!("{mech:?} streams={streams}: {e}"));
+            let left = recover::recover_all(&env.cfg.ft()).unwrap();
+            assert!(
+                left.is_empty(),
+                "{mech:?} streams={streams}: logs left after completion"
+            );
+            let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        }
+    }
+}
+
+#[test]
 fn adaptive_acks_survive_mid_transfer_fault() {
     // ack_adaptive mid-flight: a crash while the effective batch floats
     // must lose at most the un-flushed acks, like the fixed-batch path.

@@ -1,0 +1,476 @@
+//! Multi-stream data plane (`data_streams = K`): the K = 1 default is
+//! byte-identical to the fused single-connection wire (the acceptance
+//! pin), CONNECT negotiates min(ours, theirs) with a legacy field-less
+//! fallback to 1, every stream's un-acked NEW_BLOCKs stay within the
+//! per-stream credit window, and FILE_CLOSE only leaves the source after
+//! every stream's acknowledgements for that file are in (the close
+//! barrier).
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ftlads::config::Config;
+use ftlads::coordinator::sink::{spawn_sink, spawn_sink_multi, SinkReport};
+use ftlads::coordinator::source::{run_source, run_source_multi, SourceReport};
+use ftlads::coordinator::{DataPlane, SimEnv, TransferSpec};
+use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
+use ftlads::workload;
+
+/// Wire-level event, recorded by every tap into ONE shared log so the
+/// cross-stream ordering (acks before FILE_CLOSE) is observable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Event {
+    /// NEW_BLOCK sent on `stream`.
+    NewBlock { stream: usize, file_idx: u32 },
+    /// `n` acknowledgements for `file_idx` received on `stream`.
+    Ack { stream: usize, file_idx: u32, n: usize },
+    /// FILE_CLOSE sent (control stream).
+    FileClose { file_idx: u32 },
+}
+
+const CONTROL: usize = usize::MAX;
+
+/// Endpoint wrapper for the SOURCE side of one connection: records the
+/// encoded bytes of every send, the per-connection NEW_BLOCK in-flight
+/// high-water mark, and the shared event log.
+struct Tap {
+    inner: channel::ChannelEndpoint,
+    stream: usize,
+    events: Arc<Mutex<Vec<Event>>>,
+    sent: Arc<Mutex<Vec<Vec<u8>>>>,
+    inflight: AtomicI64,
+    max_inflight: Arc<AtomicI64>,
+}
+
+impl Tap {
+    fn new(
+        inner: channel::ChannelEndpoint,
+        stream: usize,
+        events: Arc<Mutex<Vec<Event>>>,
+    ) -> (Tap, Arc<Mutex<Vec<Vec<u8>>>>, Arc<AtomicI64>) {
+        let sent = Arc::new(Mutex::new(Vec::new()));
+        let max_inflight = Arc::new(AtomicI64::new(0));
+        let tap = Tap {
+            inner,
+            stream,
+            events,
+            sent: sent.clone(),
+            inflight: AtomicI64::new(0),
+            max_inflight: max_inflight.clone(),
+        };
+        (tap, sent, max_inflight)
+    }
+
+    fn log(&self, ev: Event) {
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
+    }
+
+    fn track(&self, delta: i64) {
+        let now = self.inflight.fetch_add(delta, Ordering::SeqCst) + delta;
+        self.max_inflight.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn on_recv(&self, msg: &Message) {
+        match msg {
+            Message::BlockSync { file_idx, .. } => {
+                self.track(-1);
+                self.log(Event::Ack { stream: self.stream, file_idx: *file_idx, n: 1 });
+            }
+            Message::BlockSyncBatch { file_idx, blocks } => {
+                self.track(-(blocks.len() as i64));
+                self.log(Event::Ack {
+                    stream: self.stream,
+                    file_idx: *file_idx,
+                    n: blocks.len(),
+                });
+            }
+            _ => {}
+        }
+    }
+}
+
+impl Endpoint for Tap {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        let mut bytes = Vec::new();
+        msg.encode(&mut bytes);
+        self.sent.lock().unwrap_or_else(|e| e.into_inner()).push(bytes);
+        match &msg {
+            Message::NewBlock { file_idx, .. } => {
+                self.track(1);
+                self.log(Event::NewBlock { stream: self.stream, file_idx: *file_idx });
+            }
+            Message::FileClose { file_idx } => {
+                self.log(Event::FileClose { file_idx: *file_idx });
+            }
+            _ => {}
+        }
+        self.inner.send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        let msg = self.inner.recv()?;
+        self.on_recv(&msg);
+        Ok(msg)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        let msg = self.inner.recv_timeout(timeout)?;
+        self.on_recv(&msg);
+        Ok(msg)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+struct MultiRun {
+    src: SourceReport,
+    snk: SinkReport,
+    events: Vec<Event>,
+    /// Per-data-stream NEW_BLOCK in-flight high-water marks, index = id.
+    max_inflight: Vec<i64>,
+    /// Encoded bytes of every control-connection source send.
+    ctrl_sent: Vec<Vec<u8>>,
+}
+
+/// Wire a K-stream source/sink pair over in-process channels, tapping
+/// every source-side endpoint, and run one fresh transfer.
+fn run_multi(cfg: &Config, env: &SimEnv) -> MultiRun {
+    let k = cfg.data_streams.max(1) as usize;
+    let events = Arc::new(Mutex::new(Vec::new()));
+
+    let (src_ctrl, snk_ctrl) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let (ctrl_tap, ctrl_sent, _) = Tap::new(src_ctrl, CONTROL, events.clone());
+
+    let mut src_data: Vec<Arc<dyn Endpoint>> = Vec::new();
+    let mut snk_data: Vec<Arc<dyn Endpoint>> = Vec::new();
+    let mut highs = Vec::new();
+    for s in 0..k {
+        let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+        let (tap, _, max_inflight) = Tap::new(src_ep, s, events.clone());
+        src_data.push(Arc::new(tap));
+        snk_data.push(Arc::new(snk_ep));
+        highs.push(max_inflight);
+    }
+
+    let node = spawn_sink_multi(
+        cfg,
+        env.sink.clone(),
+        Arc::new(snk_ctrl),
+        DataPlane::Ready(snk_data),
+        None,
+    )
+    .unwrap();
+    let src = run_source_multi(
+        cfg,
+        env.source.clone(),
+        Arc::new(ctrl_tap),
+        DataPlane::Ready(src_data),
+        &TransferSpec::fresh(env.files.clone()),
+    )
+    .unwrap();
+    let snk = node.join();
+    MultiRun {
+        src,
+        snk,
+        events: events.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        max_inflight: highs.iter().map(|h| h.load(Ordering::SeqCst)).collect(),
+        ctrl_sent: ctrl_sent.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+    }
+}
+
+/// Sorted copy — IO threads race, so cross-run comparison is by multiset.
+fn sorted(trace: &[Vec<u8>]) -> Vec<Vec<u8>> {
+    let mut t = trace.to_vec();
+    t.sort();
+    t
+}
+
+#[test]
+fn default_single_stream_wire_is_byte_identical_to_fused_path() {
+    // The acceptance pin: `data_streams = 1` (the default) puts exactly
+    // the pre-multi-stream bytes on the wire — the handshake carries no
+    // trailing data_streams field, no STREAM_HELLO frame ever appears,
+    // and the whole trace through the multi-capable entry points is the
+    // same multiset of encoded messages as the legacy fused entry points
+    // produce.
+    let cfg = Config::for_tests("mstream-fused-pin");
+    assert_eq!(cfg.data_streams, 1, "default must be the fused path");
+    let wl = workload::big_workload(4, 512 << 10); // 32 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+
+    // Run A: legacy fused entry points (run_source / spawn_sink).
+    let events = Arc::new(Mutex::new(Vec::new()));
+    let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let (tap_a, sent_a, _) = Tap::new(src_ep, CONTROL, events.clone());
+    let node = spawn_sink(&cfg, env.sink.clone(), Arc::new(snk_ep), None).unwrap();
+    let src_a = run_source(
+        &cfg,
+        env.source.clone(),
+        Arc::new(tap_a),
+        &TransferSpec::fresh(env.files.clone()),
+    )
+    .unwrap();
+    let snk_a = node.join();
+    assert!(src_a.fault.is_none(), "{:?}", src_a.fault);
+    assert!(snk_a.fault.is_none(), "{:?}", snk_a.fault);
+    assert_eq!(src_a.data_streams, 1);
+    env.verify_sink_complete().unwrap();
+    let sent_a = sent_a.lock().unwrap_or_else(|e| e.into_inner()).clone();
+
+    // The handshake bytes, hand-built to the fused layout: no trailing
+    // send_window or data_streams field on CONNECT (both at their
+    // omit-at-default value of 1).
+    let mut connect = vec![0u8]; // T_CONNECT
+    connect.extend_from_slice(&cfg.object_size.to_le_bytes());
+    connect.extend_from_slice(&8u32.to_le_bytes()); // 8 RMA slots in tests
+    connect.push(0); // resume = false
+    connect.extend_from_slice(&1u32.to_le_bytes()); // ack_batch = 1
+    assert_eq!(sent_a[0], connect, "CONNECT grew beyond the fused-path bytes");
+    assert!(
+        sent_a.iter().all(|f| f.first() != Some(&10u8)),
+        "STREAM_HELLO on a single-stream session"
+    );
+
+    // Run B: the SAME config through the multi-stream entry points must
+    // produce the same wire multiset (IO threads race on ordering).
+    let env_b = SimEnv::new(cfg.clone(), &wl);
+    let run_b = run_multi(&cfg, &env_b);
+    assert!(run_b.src.fault.is_none(), "{:?}", run_b.src.fault);
+    assert_eq!(run_b.src.data_streams, 1);
+    env_b.verify_sink_complete().unwrap();
+    assert_eq!(
+        sorted(&sent_a),
+        sorted(&run_b.ctrl_sent),
+        "multi entry points changed the K = 1 wire bytes"
+    );
+    assert_eq!(src_a.counters.objects_sent, run_b.src.counters.objects_sent);
+    assert_eq!(snk_a.counters.ack_messages, run_b.snk.counters.ack_messages);
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    let _ = std::fs::remove_dir_all(&env_b.cfg.ft_dir);
+}
+
+#[test]
+fn connect_negotiation_takes_min_streams() {
+    // k = min(source ask, sink cap), on BOTH sides; 1 disables the data
+    // plane entirely (the fused fallback).
+    for (src_k, sink_k, expect) in
+        [(4u32, 2u32, 2u32), (2, 4, 2), (8, 1, 1), (1, 8, 1), (3, 3, 3)]
+    {
+        let mut src_cfg = Config::for_tests(&format!("mstream-neg-{src_k}-{sink_k}"));
+        src_cfg.data_streams = src_k;
+        src_cfg.send_window = 4;
+        let mut sink_cfg = src_cfg.clone();
+        sink_cfg.data_streams = sink_k;
+        let wl = workload::big_workload(3, 512 << 10); // 24 objects
+        let env = SimEnv::new(src_cfg.clone(), &wl);
+
+        // Hand-wire with split configs: give each side as many data
+        // connections as the SOURCE asks for; negotiation must use (and
+        // materialize) only the first `expect`.
+        let (src_ctrl, snk_ctrl) = channel::pair(src_cfg.wire(), FaultController::unarmed());
+        let mut src_data: Vec<Arc<dyn Endpoint>> = Vec::new();
+        let mut snk_data: Vec<Arc<dyn Endpoint>> = Vec::new();
+        for _ in 0..src_k.max(sink_k) {
+            let (s, d) = channel::pair(src_cfg.wire(), FaultController::unarmed());
+            src_data.push(Arc::new(s));
+            snk_data.push(Arc::new(d));
+        }
+        let node = spawn_sink_multi(
+            &sink_cfg,
+            env.sink.clone(),
+            Arc::new(snk_ctrl),
+            DataPlane::Ready(snk_data),
+            None,
+        )
+        .unwrap();
+        let src = run_source_multi(
+            &src_cfg,
+            env.source.clone(),
+            Arc::new(src_ctrl),
+            DataPlane::Ready(src_data),
+            &TransferSpec::fresh(env.files.clone()),
+        )
+        .unwrap();
+        let snk = node.join();
+        assert!(src.fault.is_none(), "{src_k}/{sink_k}: {:?}", src.fault);
+        assert!(snk.fault.is_none(), "{src_k}/{sink_k}: {:?}", snk.fault);
+        assert_eq!(
+            src.data_streams, expect,
+            "source must honor min({src_k}, {sink_k})"
+        );
+        env.verify_sink_complete().unwrap();
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+}
+
+#[test]
+fn legacy_field_less_sink_falls_back_to_fused() {
+    // A legacy peer's CONNECT_ACK has no data_streams field, which the
+    // codec decodes as 1: a source asking for 8 streams must fall back
+    // to the fused single connection — no STREAM_HELLO, no data-plane
+    // materialization (the empty Ready plane would fail loudly if the
+    // source tried), and a complete verified transfer.
+    let mut cfg = Config::for_tests("mstream-legacy");
+    cfg.data_streams = 8;
+    let wl = workload::big_workload(1, 4 * cfg.object_size); // 4 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let (src_ep, sink_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let events = Arc::new(Mutex::new(Vec::new()));
+    let (tap, sent, _) = Tap::new(src_ep, CONTROL, events);
+
+    // Scripted legacy sink: a ConnectAck built with data_streams = 1
+    // encodes EXACTLY the legacy field-less bytes (the codec omits the
+    // trailing field at its default), then the seed's lockstep protocol.
+    let legacy = std::thread::spawn(move || {
+        loop {
+            match sink_ep.recv_timeout(Duration::from_millis(100)) {
+                Ok(Message::Connect { ack_batch, send_window, .. }) => {
+                    let _ = sink_ep.send(Message::ConnectAck {
+                        rma_slots: 8,
+                        ack_batch,
+                        send_window,
+                        data_streams: 1,
+                    });
+                }
+                Ok(Message::NewFile { file_idx, .. }) => {
+                    let _ = sink_ep.send(Message::FileId {
+                        file_idx,
+                        sink_fd: 0,
+                        skip: false,
+                    });
+                }
+                Ok(Message::NewBlock { file_idx, block_idx, .. }) => {
+                    let _ = sink_ep.send(Message::BlockSync {
+                        file_idx,
+                        block_idx,
+                        ok: true,
+                    });
+                }
+                Ok(Message::FileClose { file_idx }) => {
+                    let _ = sink_ep.send(Message::FileCloseAck { file_idx });
+                }
+                Ok(Message::Bye) => break,
+                Ok(_) => {}
+                Err(NetError::Timeout) => continue,
+                Err(_) => break,
+            }
+        }
+    });
+
+    let report = run_source_multi(
+        &cfg,
+        env.source.clone(),
+        Arc::new(tap),
+        // Empty plane: materializing ANY stream count would error, so
+        // the fallback is proven by the transfer completing at all.
+        DataPlane::Ready(Vec::new()),
+        &TransferSpec::fresh(env.files.clone()),
+    )
+    .unwrap();
+    legacy.join().unwrap();
+    assert!(report.fault.is_none(), "{:?}", report.fault);
+    assert_eq!(report.data_streams, 1, "legacy peer must negotiate down to fused");
+    assert_eq!(report.counters.objects_synced, 4);
+    let sent = sent.lock().unwrap_or_else(|e| e.into_inner());
+    assert!(
+        sent.iter().all(|f| f.first() != Some(&10u8)),
+        "STREAM_HELLO sent to a legacy peer"
+    );
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn per_stream_inflight_never_exceeds_window_and_all_streams_carry() {
+    // Each data stream owns an independent credit window: no stream may
+    // ever have more than `send_window` un-acked NEW_BLOCKs on its wire,
+    // and with OSTs sharded `ost % K` every stream actually carries
+    // payload (the shard spreads an 11-OST layout over 4 streams).
+    let mut cfg = Config::for_tests("mstream-inflight");
+    cfg.data_streams = 4;
+    cfg.send_window = 2;
+    cfg.io_threads = 4;
+    let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let run = run_multi(&cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert!(run.snk.fault.is_none(), "{:?}", run.snk.fault);
+    assert_eq!(run.src.data_streams, 4);
+    assert_eq!(run.src.counters.objects_synced, 48);
+    env.verify_sink_complete().unwrap();
+    for (s, &high) in run.max_inflight.iter().enumerate() {
+        assert!(
+            high <= 2,
+            "stream {s}: {high} un-acked NEW_BLOCKs in flight (window 2)"
+        );
+        assert!(high >= 1, "stream {s} carried no blocks — sharding is broken");
+    }
+    // Every NEW_BLOCK rode a data stream, never the control connection,
+    // and its ack came back on the SAME stream.
+    let mut sent_on = std::collections::BTreeMap::<usize, u64>::new();
+    let mut acked_on = std::collections::BTreeMap::<usize, u64>::new();
+    for ev in &run.events {
+        match ev {
+            Event::NewBlock { stream, .. } => {
+                assert_ne!(*stream, CONTROL, "NEW_BLOCK on the control connection");
+                *sent_on.entry(*stream).or_default() += 1;
+            }
+            Event::Ack { stream, n, .. } => {
+                assert_ne!(*stream, CONTROL, "BLOCK_SYNC on the control connection");
+                *acked_on.entry(*stream).or_default() += *n as u64;
+            }
+            Event::FileClose { .. } => {}
+        }
+    }
+    assert_eq!(sent_on, acked_on, "per-stream sends and acks must balance");
+    assert_eq!(sent_on.values().sum::<u64>(), 48);
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn file_close_barriers_on_every_streams_acks() {
+    // FILE_CLOSE rides the control connection, but a file's blocks are
+    // spread over every data stream: the source may only close once ALL
+    // of them are acknowledged. In the linearized event log, every
+    // FILE_CLOSE must be preceded by exactly as many acks for that file
+    // as NEW_BLOCKs were sent for it.
+    let mut cfg = Config::for_tests("mstream-close-barrier");
+    cfg.data_streams = 3;
+    cfg.send_window = 4;
+    cfg.ack_batch = 4;
+    cfg.ack_flush_us = 500;
+    cfg.io_threads = 4;
+    let wl = workload::big_workload(4, 8 * cfg.object_size); // 32 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let run = run_multi(&cfg, &env);
+    assert!(run.src.fault.is_none(), "{:?}", run.src.fault);
+    assert!(run.snk.fault.is_none(), "{:?}", run.snk.fault);
+    env.verify_sink_complete().unwrap();
+
+    let mut sent = std::collections::BTreeMap::<u32, u64>::new();
+    let mut acked = std::collections::BTreeMap::<u32, u64>::new();
+    let mut closes = 0;
+    for ev in &run.events {
+        match ev {
+            Event::NewBlock { file_idx, .. } => *sent.entry(*file_idx).or_default() += 1,
+            Event::Ack { file_idx, n, .. } => {
+                *acked.entry(*file_idx).or_default() += *n as u64
+            }
+            Event::FileClose { file_idx } => {
+                closes += 1;
+                let s = sent.get(file_idx).copied().unwrap_or(0);
+                let a = acked.get(file_idx).copied().unwrap_or(0);
+                assert!(s > 0, "file {file_idx} closed before any block was sent");
+                assert_eq!(
+                    a, s,
+                    "file {file_idx} closed with {a}/{s} blocks acknowledged — \
+                     the close barrier leaked past an un-acked stream"
+                );
+            }
+        }
+    }
+    assert_eq!(closes, 4, "every file must close exactly once");
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}

@@ -58,8 +58,15 @@ fn random_config(rng: &mut Pcg32, tag: &str) -> Config {
     // gather and must behave like 0).
     cfg.write_coalesce_bytes =
         *rng.choose(&[0, 0, cfg.object_size, 2 * cfg.object_size, 64 * cfg.object_size]);
+    // Source-side preadv gather: same sweep shape as the write coalescer
+    // — half the runs stay on the seed-exact 0 path.
+    cfg.read_gather_bytes =
+        *rng.choose(&[0, 0, cfg.object_size, 2 * cfg.object_size, 64 * cfg.object_size]);
     // The CONNECT-time pool autosizer must be invariant-preserving too.
     cfg.rma_autosize = rng.bool(0.25);
+    // Multi-stream data plane: every invariant must hold at any stream
+    // count (half the runs stay on the fused single-connection path).
+    cfg.data_streams = if rng.bool(0.5) { 1 } else { rng.range(2, 9) as u32 };
     cfg.seed = rng.next_u64();
     cfg
 }
@@ -248,19 +255,22 @@ fn prop_batched_ack_fault_mid_window_never_resends_acked() {
 fn prop_message_codec_roundtrips_random() {
     use ftlads::net::Message;
     forall("msg_codec", 300, |rng| {
-        let msg = match rng.below(10) {
+        let msg = match rng.below(11) {
             0 => Message::Connect {
                 max_object_size: rng.next_u64(),
                 rma_slots: rng.next_u32(),
                 resume: rng.bool(0.5),
                 ack_batch: rng.next_u32(),
                 send_window: if rng.bool(0.5) { 1 } else { rng.next_u32() },
+                data_streams: if rng.bool(0.5) { 1 } else { rng.next_u32() },
             },
             1 => Message::ConnectAck {
                 rma_slots: rng.next_u32(),
                 ack_batch: rng.next_u32(),
                 send_window: if rng.bool(0.5) { 1 } else { rng.next_u32() },
+                data_streams: if rng.bool(0.5) { 1 } else { rng.next_u32() },
             },
+            10 => Message::StreamHello { stream_id: rng.next_u32() },
             9 => {
                 let len = rng.range(0, 64) as usize;
                 let blocks = (0..len)

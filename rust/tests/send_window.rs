@@ -419,6 +419,7 @@ fn out_of_range_ack_faults_cleanly_instead_of_panicking() {
                         rma_slots: 8,
                         ack_batch,
                         send_window,
+                        data_streams: 1,
                     });
                 }
                 Ok(Message::NewFile { file_idx, .. }) => {
