@@ -254,6 +254,41 @@ mod tests {
     }
 
     #[test]
+    fn tune_flag_roundtrips_into_config_and_supersedes_adaptive() {
+        use crate::config::Config;
+        // The way main.rs wires them: --tune is a bare flag,
+        // --tune-epoch-ms takes a value; both exist as --set keys.
+        let a = Args::parse(
+            &argv(&["transfer", "--tune", "--tune-epoch-ms", "50"]),
+            &["tune"],
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.tune = a.flag("tune");
+        cfg.tune_epoch_ms = a.get_parse("tune-epoch-ms", 100u64).unwrap();
+        assert!(cfg.tune);
+        assert_eq!(cfg.tune_epoch_ms, 50);
+        assert!(cfg.validate().is_ok());
+
+        let mut cfg = Config::default();
+        cfg.apply_kv("tune", "true").unwrap();
+        cfg.apply_kv("tune_epoch_ms", "25").unwrap();
+        assert!(cfg.tune);
+        assert_eq!(cfg.tune_epoch_ms, 25);
+        assert!(cfg.validate().is_ok());
+
+        // One controller per knob: the unified tuner rejects the
+        // per-knob adaptive flags with an actionable message.
+        let mut cfg = Config::default();
+        cfg.tune = true;
+        cfg.ack_adaptive = true;
+        cfg.ack_batch = 16;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("supersedes"), "{err}");
+        assert!(err.contains("ack-adaptive"), "{err}");
+    }
+
+    #[test]
     fn scheduler_typo_error_lists_valid_policies() {
         use crate::sched::SchedPolicy;
         let a = Args::parse(&argv(&["transfer", "--scheduler", "speedy"]), &[]).unwrap();

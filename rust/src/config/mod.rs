@@ -105,6 +105,21 @@ pub struct Config {
     /// applied pool lands in `TransferOutcome::rma_bytes_effective`.
     /// False (default) keeps the configured `rma_bytes` exactly.
     pub rma_autosize: bool,
+    /// Unified epoch-based online autotuner: when true, one goodput-
+    /// driven controller per side walks the whole knob vector mid-
+    /// transfer — applied send window, applied ack batch, write-coalesce
+    /// and read-gather byte budgets, plus the per-stream window split —
+    /// via a bounded hill-climb with hysteresis (see [`crate::tune`]).
+    /// CONNECT then advertises raised caps (`send_window_cap`,
+    /// `ack_batch_cap`) so the applied values can float without any wire
+    /// change. Supersedes (and rejects) the per-knob `ack_adaptive` /
+    /// `send_window_adaptive` loops. False (default) changes nothing:
+    /// caps collapse to the configured values and the seed wire bytes
+    /// are reproduced exactly.
+    pub tune: bool,
+    /// Autotuner epoch length in milliseconds: the controller samples
+    /// goodput and moves at most one knob per epoch.
+    pub tune_epoch_ms: u64,
     /// Integrity verification backend.
     pub integrity: IntegrityMode,
     /// OST dequeue policy for the source's IO threads (§2.1; see
@@ -152,6 +167,8 @@ impl Default for Config {
             data_streams: 1,
             read_gather_bytes: 0,
             rma_autosize: false,
+            tune: false,
+            tune_epoch_ms: 100,
             integrity: IntegrityMode::Native,
             scheduler: SchedPolicy::CongestionAware,
             sink_scheduler: None,
@@ -235,6 +252,50 @@ impl Config {
         }
     }
 
+    /// The send window to ADVERTISE at CONNECT: the configured value,
+    /// raised to [`crate::tune::TUNE_WINDOW_CAP`] when the autotuner is
+    /// on so the applied window has room to float. With `tune` off this
+    /// is exactly `send_window` — the seed wire bytes are untouched.
+    pub fn send_window_cap(&self) -> u32 {
+        let w = self.send_window.max(1);
+        if self.tune {
+            w.max(crate::tune::TUNE_WINDOW_CAP)
+        } else {
+            w
+        }
+    }
+
+    /// The ack batch to advertise at CONNECT — `ack_batch`, raised to
+    /// [`crate::tune::TUNE_ACK_CAP`] when the autotuner is on.
+    pub fn ack_batch_cap(&self) -> u32 {
+        let b = self.ack_batch.max(1);
+        if self.tune {
+            b.max(crate::tune::TUNE_ACK_CAP)
+        } else {
+            b
+        }
+    }
+
+    /// Ceiling for the tuned read-gather budget: the configured value,
+    /// raised to [`crate::tune::TUNE_BUDGET_CAP`] when the autotuner is
+    /// on (local to the source — nothing on the wire).
+    pub fn gather_cap(&self) -> u64 {
+        if self.tune {
+            self.read_gather_bytes.max(crate::tune::TUNE_BUDGET_CAP)
+        } else {
+            self.read_gather_bytes
+        }
+    }
+
+    /// Ceiling for the tuned write-coalesce budget (sink-local).
+    pub fn coalesce_cap(&self) -> u64 {
+        if self.tune {
+            self.write_coalesce_bytes.max(crate::tune::TUNE_BUDGET_CAP)
+        } else {
+            self.write_coalesce_bytes
+        }
+    }
+
     /// Apply `key = value` (config file or CLI `--set key=value`).
     pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
@@ -256,6 +317,8 @@ impl Config {
             "data_streams" => self.data_streams = value.parse()?,
             "read_gather_bytes" => self.read_gather_bytes = parse_bytes(value)?,
             "rma_autosize" => self.rma_autosize = parse_bool(value)?,
+            "tune" => self.tune = parse_bool(value)?,
+            "tune_epoch_ms" => self.tune_epoch_ms = value.parse()?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
             "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
             "sink_scheduler" => {
@@ -311,14 +374,7 @@ impl Config {
             (1..=1u32 << 16).contains(&self.send_window),
             "send_window must be in 1..=65536 (wire sanity cap)"
         );
-        anyhow::ensure!(
-            !self.ack_adaptive || self.ack_batch > 1,
-            "ack_adaptive needs an ack_batch cap > 1 to adapt within"
-        );
-        anyhow::ensure!(
-            !self.send_window_adaptive || self.send_window > 1,
-            "send_window_adaptive needs a send_window cap > 1 to adapt within"
-        );
+        self.validate_adaptive()?;
         anyhow::ensure!(
             (1..=self.ost_count).contains(&self.stripe_count),
             "stripe_count must be in 1..=ost_count"
@@ -327,6 +383,43 @@ impl Config {
             (1..=64u32).contains(&self.data_streams),
             "data_streams must be in 1..=64"
         );
+        Ok(())
+    }
+
+    /// Cross-check the feedback-loop flags (`ack_adaptive`,
+    /// `send_window_adaptive`, `rma_autosize`, `tune`) against each
+    /// other and their caps. The per-knob loops and the unified tuner
+    /// both drive the same applied-value cells, so running them together
+    /// would have two controllers fighting over one knob — `tune`
+    /// supersedes and rejects the per-knob flags with an actionable
+    /// message. `rma_autosize` stays compatible with all of them: it is
+    /// a one-shot pool sizing at CONNECT, not an online loop.
+    pub fn validate_adaptive(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.ack_adaptive || self.ack_batch > 1,
+            "ack_adaptive needs an ack_batch cap > 1 to adapt within"
+        );
+        anyhow::ensure!(
+            !self.send_window_adaptive || self.send_window > 1,
+            "send_window_adaptive needs a send_window cap > 1 to adapt within"
+        );
+        if self.tune {
+            anyhow::ensure!(
+                !self.ack_adaptive,
+                "--tune supersedes --ack-adaptive: the unified tuner already \
+                 drives the applied ack batch — drop --ack-adaptive"
+            );
+            anyhow::ensure!(
+                !self.send_window_adaptive,
+                "--tune supersedes --send-window-adaptive: the unified tuner \
+                 already drives the applied send window — drop \
+                 --send-window-adaptive"
+            );
+            anyhow::ensure!(
+                self.tune_epoch_ms >= 1,
+                "tune_epoch_ms must be >= 1 (the tuner needs a nonzero epoch)"
+            );
+        }
         Ok(())
     }
 }
@@ -527,6 +620,69 @@ mod tests {
         c.apply_kv("rma_autosize", "off").unwrap();
         assert!(!c.rma_autosize);
         assert!(c.apply_kv("rma_autosize", "maybe").is_err());
+    }
+
+    #[test]
+    fn tune_kv_defaults_and_validation() {
+        let mut c = Config::default();
+        assert!(!c.tune, "the autotuner must be opt-in");
+        assert_eq!(c.tune_epoch_ms, 100);
+        c.apply_kv("tune", "true").unwrap();
+        assert!(c.tune);
+        assert!(c.validate().is_ok(), "tune alone needs no other knobs");
+        c.apply_kv("tune_epoch_ms", "10").unwrap();
+        assert_eq!(c.tune_epoch_ms, 10);
+        assert!(c.validate().is_ok());
+        c.tune_epoch_ms = 0;
+        assert!(c.validate().is_err(), "a zero epoch cannot sample goodput");
+        c.tune_epoch_ms = 100;
+        assert!(c.apply_kv("tune", "maybe").is_err());
+        assert!(c.apply_kv("tune_epoch_ms", "soon").is_err());
+    }
+
+    #[test]
+    fn tune_supersedes_the_per_knob_adaptive_flags() {
+        // One knob, one controller: the unified tuner rejects the
+        // per-knob loops with errors that say what to drop.
+        let mut c = Config::default();
+        c.apply_kv("tune", "true").unwrap();
+        c.apply_kv("ack_adaptive", "true").unwrap();
+        c.apply_kv("ack_batch", "16").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("supersedes"), "{err}");
+        assert!(err.contains("ack-adaptive"), "{err}");
+        c.apply_kv("ack_adaptive", "off").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply_kv("send_window_adaptive", "true").unwrap();
+        c.apply_kv("send_window", "8").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("send-window-adaptive"), "{err}");
+        c.apply_kv("send_window_adaptive", "off").unwrap();
+        // rma_autosize is a one-shot CONNECT sizing, not an online loop:
+        // it composes with the tuner.
+        c.apply_kv("rma_autosize", "true").unwrap();
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn tune_caps_raise_the_advertised_knobs_only_when_on() {
+        let c = Config::default();
+        // Off: caps collapse to the configured values (seed-exact wire).
+        assert_eq!(c.send_window_cap(), c.send_window);
+        assert_eq!(c.ack_batch_cap(), c.ack_batch);
+        assert_eq!(c.gather_cap(), 0);
+        assert_eq!(c.coalesce_cap(), 0);
+        let mut c = Config::default();
+        c.tune = true;
+        assert_eq!(c.send_window_cap(), crate::tune::TUNE_WINDOW_CAP);
+        assert_eq!(c.ack_batch_cap(), crate::tune::TUNE_ACK_CAP);
+        assert_eq!(c.gather_cap(), crate::tune::TUNE_BUDGET_CAP);
+        assert_eq!(c.coalesce_cap(), crate::tune::TUNE_BUDGET_CAP);
+        // A configured value above the tuner ceiling wins the max.
+        c.send_window = 128;
+        c.write_coalesce_bytes = 64 << 20;
+        assert_eq!(c.send_window_cap(), 128);
+        assert_eq!(c.coalesce_cap(), 64 << 20);
     }
 
     #[test]

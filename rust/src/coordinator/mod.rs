@@ -14,6 +14,7 @@
 //! over the TCP transport instead.
 
 pub mod queues;
+pub mod shard;
 pub mod sink;
 pub mod source;
 
@@ -160,6 +161,22 @@ pub struct TransferOutcome {
     /// single-connection path, byte-identical to the pre-multi-stream
     /// wire; also the legacy-peer fallback).
     pub data_streams: u32,
+    /// Unified autotuner (`tune`): epochs observed across both sides'
+    /// controllers (0 when `tune` is off or the transfer finished inside
+    /// the first epoch).
+    pub tune_epochs: u64,
+    /// Knob moves the controllers accepted upward / downward.
+    pub tune_grows: u64,
+    pub tune_shrinks: u64,
+    /// Knob moves rolled back on goodput regression.
+    pub tune_reverts: u64,
+    /// Best single-epoch end-to-end goodput the source controller
+    /// measured, bytes/sec (0.0 when `tune` is off) — the §A12
+    /// convergence figure.
+    pub goodput_final: f64,
+    /// Human-readable knob move log, source entries prefixed `src `,
+    /// sink entries `snk ` (empty when `tune` is off).
+    pub tune_trajectory: Vec<String>,
 }
 
 impl TransferOutcome {
@@ -287,6 +304,21 @@ pub fn run_transfer(
         ack_batch_effective: sink_report.ack_batch_effective,
         rma_bytes_effective: source_report.rma_bytes_effective,
         data_streams: source_report.data_streams,
+        tune_epochs: source_report.counters.tune_epochs + sink_report.counters.tune_epochs,
+        tune_grows: source_report.counters.tune_grows + sink_report.counters.tune_grows,
+        tune_shrinks: source_report.counters.tune_shrinks
+            + sink_report.counters.tune_shrinks,
+        tune_reverts: source_report.counters.tune_reverts
+            + sink_report.counters.tune_reverts,
+        // The source controller differentiates end-to-end acked bytes, so
+        // its best epoch IS the session's goodput figure.
+        goodput_final: source_report.goodput_final,
+        tune_trajectory: source_report
+            .tune_trajectory
+            .iter()
+            .map(|t| format!("src {t}"))
+            .chain(sink_report.tune_trajectory.iter().map(|t| format!("snk {t}")))
+            .collect(),
     })
 }
 

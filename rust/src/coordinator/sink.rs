@@ -43,19 +43,21 @@
 //! With a negotiated `data_streams = K ≥ 2` the sink serves one
 //! **control** connection (CONNECT, NEW_FILE, FILE_CLOSE, BYE) plus K
 //! **data** connections, one comm thread each. NEW_BLOCK only arrives on
-//! data connections, sharded by the source as `ost % K`; each data
+//! data connections, sharded by the source's bytes-weighted LPT plan
+//! ([`super::shard`]); each data
 //! stream owns its own RMA slot pool (its half of the per-stream credit
 //! accounting) and its own ack coalescer, and BLOCK_SYNC(_BATCH) for a
 //! block returns on the stream that carried it — which is exactly the
-//! stream whose credit window the source charged, recomputed here from
-//! the block's OST with the same `ost % K` shard. The write path is
+//! stream whose credit window the source charged. The sink never needs
+//! the plan on the wire: it *learns* each OST's stream from the data
+//! connection its first NEW_BLOCK arrives on. The write path is
 //! unchanged: all streams feed the one set of per-OST write queues and
 //! the same IO threads. The negotiated `data_streams = 1` (default, and
 //! the legacy field-less peer fallback) runs the single fused connection
 //! exactly as before — byte-identical to the pre-multi-stream wire.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -130,6 +132,11 @@ struct AckCoalescer {
     eff: AtomicU32,
     /// Grow/shrink `eff` from flush feedback (`Config::ack_adaptive`).
     adaptive: bool,
+    /// The unified epoch tuner drives `eff` (`Config::tune`): like
+    /// `adaptive` it starts the effective batch at the floor, but the
+    /// movements come from [`crate::tune::HillClimb`] instead of flush
+    /// feedback.
+    tuned: bool,
     /// Straggler bound: flush a partial batch once its oldest entry is
     /// this old.
     window: Duration,
@@ -137,13 +144,14 @@ struct AckCoalescer {
 }
 
 impl AckCoalescer {
-    fn new(cap: u32, adaptive: bool, window: Duration) -> AckCoalescer {
+    fn new(cap: u32, adaptive: bool, tuned: bool, window: Duration) -> AckCoalescer {
         AckCoalescer {
             batch: AtomicU32::new(cap.max(1)),
-            // Adaptive coalescing starts at the seed's per-object floor
-            // and earns its way up; fixed mode pins eff to the cap.
-            eff: AtomicU32::new(if adaptive { 1 } else { cap.max(1) }),
+            // Adaptive/tuned coalescing starts at the seed's per-object
+            // floor and earns its way up; fixed mode pins eff to the cap.
+            eff: AtomicU32::new(if adaptive || tuned { 1 } else { cap.max(1) }),
             adaptive,
+            tuned,
             window,
             pending: Mutex::new(BTreeMap::new()),
         }
@@ -223,8 +231,26 @@ struct Shared {
     /// (`Config::rma_bytes`).
     rma_bytes: usize,
     /// Contiguous-write coalescing budget (`Config::write_coalesce_bytes`);
-    /// 0 = the seed-exact one-pwrite-per-object path.
-    coalesce_bytes: u64,
+    /// 0 = the seed-exact one-pwrite-per-object path. Atomic because the
+    /// unified tuner walks it mid-transfer; IO threads snapshot it once
+    /// per run.
+    coalesce_bytes: AtomicU64,
+    /// Ceiling the tuner may grow the coalesce budget to
+    /// (`Config::coalesce_cap`).
+    coalesce_cap: u64,
+    /// Run the sink half of the unified epoch tuner (`Config::tune`).
+    tune: bool,
+    /// The tuner's sampling period (`Config::tune_epoch_ms`).
+    tune_epoch_ms: u64,
+    /// OST → stream map, learned from which data connection each OST's
+    /// first NEW_BLOCK arrived on (the source's LPT plan, observed
+    /// passively). Acks must return on the stream whose credit was
+    /// charged; an OST not yet seen falls back to `ost % K` (only
+    /// reachable for the ack of the very block that would have taught
+    /// us, which enqueue_block records first).
+    ost_stream: Mutex<BTreeMap<u32, usize>>,
+    /// The sink tuner's move/revert log, drained into the session report.
+    tune_trajectory: Mutex<Vec<String>>,
     /// Grow the RMA pool(s) toward the negotiated window at CONNECT
     /// (`Config::rma_autosize`).
     autosize: bool,
@@ -268,11 +294,21 @@ impl Shared {
         self.data.get().map(|d| d.len()).unwrap_or(1)
     }
 
-    /// Which stream a block's acknowledgement returns on — the same
-    /// `ost % K` shard the source used to pick its sending stream, so
-    /// the credit released by the ack is the credit that was charged.
+    /// Which stream a block's acknowledgement returns on — the stream
+    /// the source's shard plan sent the OST's blocks over, learned from
+    /// arrivals (`ost_stream`), so the credit released by the ack is the
+    /// credit that was charged.
     fn stream_for_ost(&self, ost: OstId) -> usize {
-        ost.0 as usize % self.k()
+        let k = self.k();
+        if k == 1 {
+            return 0;
+        }
+        self.ost_stream
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&ost.0)
+            .copied()
+            .unwrap_or(ost.0 as usize % k)
     }
 
     /// Stream `s`'s RMA pool (the fused pool when no plane is set).
@@ -422,6 +458,8 @@ pub struct SinkReport {
     /// negotiated send window at CONNECT. Summed over the data streams
     /// at K ≥ 2 (the idle fused pool is excluded).
     pub rma_bytes_effective: u64,
+    /// The sink tuner's move/revert log, one line per knob step.
+    pub tune_trajectory: Vec<String>,
 }
 
 /// Handle to the running sink node.
@@ -469,14 +507,20 @@ pub fn spawn_sink_multi(
         sched: cfg.sink_sched().build(cfg.ost_count),
         sched_stats: SchedStats::default(),
         acks: AckCoalescer::new(
-            cfg.ack_batch.max(1),
+            cfg.ack_batch_cap(),
             cfg.ack_adaptive,
+            cfg.tune,
             Duration::from_micros(cfg.ack_flush_us.max(1)),
         ),
-        send_window: AtomicU32::new(cfg.send_window.max(1)),
+        send_window: AtomicU32::new(cfg.send_window_cap()),
         data_streams_cfg: cfg.data_streams.max(1),
         rma_bytes: cfg.rma_bytes,
-        coalesce_bytes: cfg.write_coalesce_bytes,
+        coalesce_bytes: AtomicU64::new(cfg.write_coalesce_bytes),
+        coalesce_cap: cfg.coalesce_cap(),
+        tune: cfg.tune,
+        tune_epoch_ms: cfg.tune_epoch_ms,
+        ost_stream: Mutex::new(BTreeMap::new()),
+        tune_trajectory: Mutex::new(Vec::new()),
         autosize: cfg.rma_autosize,
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
         data: OnceLock::new(),
@@ -534,8 +578,10 @@ pub fn spawn_sink_multi(
         );
     }
 
-    // Ack flusher (only when coalescing can leave partial batches behind).
-    if cfg.ack_batch > 1 {
+    // Ack flusher (only when coalescing can leave partial batches
+    // behind — with `tune` on the cap is raised, so the tuner's walks
+    // are always covered by a flusher).
+    if cfg.ack_batch_cap() > 1 {
         let sh = shared.clone();
         threads.push(
             std::thread::Builder::new()
@@ -591,8 +637,88 @@ impl SinkNode {
             ack_batch_effective: eff,
             send_window: shared.send_window.load(Ordering::SeqCst),
             rma_bytes_effective: rma_bytes,
+            tune_trajectory: shared
+                .tune_trajectory
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .clone(),
         }
     }
+}
+
+/// Total RMA reservation stalls across the pools that are actually in
+/// service — the sink tuner's pressure signal (a dry pool means the
+/// write path can't drain as fast as the wire fills).
+fn pool_stalls(shared: &Shared) -> u64 {
+    match shared.data.get() {
+        Some(d) => d.iter().map(|s| s.rma.stall_stats().0).sum(),
+        None => shared.rma.stall_stats().0,
+    }
+}
+
+/// The sink half of the unified epoch tuner (`Config::tune`): every
+/// `tune_epoch_ms` it turns the written-byte delta into a goodput
+/// sample, feeds it (with RMA-pool stall pressure as the tiebreak
+/// signal) to one [`HillClimb`](crate::tune::HillClimb) over {effective
+/// ack batch, write-coalesce budget}, and applies the proposed move —
+/// the ack batch within the cap negotiated at CONNECT (every stream's
+/// coalescer walks together), the coalesce budget within
+/// `Config::coalesce_cap`. The wire never renegotiates mid-transfer.
+fn sink_tuner(shared: &Arc<Shared>, batch_cap: u32) {
+    use crate::tune::{HillClimb, KnobSpec};
+    let batch_cap = batch_cap.max(1);
+    let mut hc = HillClimb::new(vec![
+        KnobSpec {
+            name: "ack_batch",
+            floor: 1,
+            cap: u64::from(batch_cap),
+            seed: 2,
+            start: u64::from(shared.coalescer(0).eff.load(Ordering::SeqCst)),
+        },
+        KnobSpec {
+            name: "write_coalesce",
+            floor: 0,
+            cap: shared.coalesce_cap,
+            seed: 1 << 20,
+            start: shared.coalesce_bytes.load(Ordering::Relaxed),
+        },
+    ]);
+    let epoch = Duration::from_millis(shared.tune_epoch_ms.max(1));
+    let tick = epoch.min(Duration::from_millis(5)).max(Duration::from_millis(1));
+    let mut last = Instant::now();
+    let mut last_written = shared.counters.bytes_written.load(Ordering::Relaxed);
+    let mut last_stalls = pool_stalls(shared);
+    while !shared.is_aborted() && !shared.done.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        let now = Instant::now();
+        let dt = now.duration_since(last);
+        if dt < epoch {
+            continue;
+        }
+        last = now;
+        let written = shared.counters.bytes_written.load(Ordering::Relaxed);
+        let stalls = pool_stalls(shared);
+        let goodput = (written - last_written) as f64 / dt.as_secs_f64();
+        let pressure = stalls - last_stalls;
+        last_written = written;
+        last_stalls = stalls;
+        if let Some((idx, value)) = hc.observe(goodput, pressure) {
+            if idx == 0 {
+                let v = (value.min(u64::from(batch_cap)) as u32).max(1);
+                for s in 0..shared.k() {
+                    shared.coalescer(s).eff.store(v, Ordering::SeqCst);
+                }
+            } else {
+                shared.coalesce_bytes.store(value, Ordering::Relaxed);
+            }
+        }
+        shared.counters.tune_epochs.store(hc.epochs, Ordering::Relaxed);
+        shared.counters.tune_grows.store(hc.grows, Ordering::Relaxed);
+        shared.counters.tune_shrinks.store(hc.shrinks, Ordering::Relaxed);
+        shared.counters.tune_reverts.store(hc.reverts, Ordering::Relaxed);
+    }
+    *shared.tune_trajectory.lock().unwrap_or_else(|e| e.into_inner()) =
+        std::mem::take(&mut hc.trajectory);
 }
 
 /// The control-connection comm thread. At K = 1 it is the ONLY comm
@@ -652,7 +778,11 @@ fn comm_thread(
                 // fixed mode it IS the cap.
                 let eff = shared.acks.eff.load(Ordering::SeqCst);
                 shared.acks.eff.store(
-                    if shared.acks.adaptive { eff.min(negotiated).max(1) } else { negotiated },
+                    if shared.acks.adaptive || shared.acks.tuned {
+                        eff.min(negotiated).max(1)
+                    } else {
+                        negotiated
+                    },
                     Ordering::SeqCst,
                 );
                 // Grant the peer a NEW_BLOCK send window: its ask, capped
@@ -709,6 +839,7 @@ fn comm_thread(
                                 acks: AckCoalescer::new(
                                     negotiated,
                                     shared.acks.adaptive,
+                                    shared.acks.tuned,
                                     shared.acks.window,
                                 ),
                                 rma,
@@ -744,6 +875,23 @@ fn comm_thread(
                         break;
                     }
                 }
+                // The sink half of the unified epoch tuner, spawned only
+                // now: the negotiated ack-batch cap and the final stream
+                // count are both known, so every coalescer it walks
+                // exists. Joined through `data_threads` on the way out.
+                if shared.tune {
+                    let sh = shared.clone();
+                    match std::thread::Builder::new()
+                        .name("snk-tune".into())
+                        .spawn(move || sink_tuner(&sh, negotiated))
+                    {
+                        Ok(h) => data_threads.push(h),
+                        Err(e) => {
+                            shared.abort_with(format!("spawn sink tuner: {e}"));
+                            break;
+                        }
+                    }
+                }
             }
             Message::NewFile { file_idx, name, size, start_ost } => {
                 handle_new_file(shared, file_idx, &name, size, start_ost);
@@ -762,7 +910,7 @@ fn comm_thread(
                 // Fused path: reserve an RMA slot; park with the master
                 // if dry (§3.1).
                 if let Some(slot) = shared.rma.try_reserve() {
-                    enqueue_block(shared, msg, slot);
+                    enqueue_block(shared, msg, slot, 0);
                 } else {
                     let _ = park_tx.send((0, msg));
                 }
@@ -845,7 +993,7 @@ fn data_comm_thread(
             }
             Message::NewBlock { .. } => {
                 if let Some(slot) = shared.pool(s).try_reserve() {
-                    enqueue_block(shared, msg, slot);
+                    enqueue_block(shared, msg, slot, s);
                 } else {
                     let _ = park_tx.send((s, msg));
                 }
@@ -904,7 +1052,7 @@ fn handle_new_file(shared: &Arc<Shared>, file_idx: u32, name: &str, size: u64, s
 /// OST's work queue"). The "RMA read" is the refcounted payload handoff
 /// itself — the slot is held purely as the §3.1 bounded-buffer credit,
 /// its buffer untouched; `pwrite` later runs straight from the payload.
-fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot) {
+fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot, stream: usize) {
     let Message::NewBlock { file_idx, block_idx, offset, digest, data } = msg else {
         return;
     };
@@ -919,6 +1067,16 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot) {
         }
     };
     let ost = shared.pfs.layout().ost_for(start_ost, offset);
+    if shared.k() > 1 {
+        // Learn the source's OST → stream shard from the arrival itself:
+        // the ack for this block (and every later block of this OST)
+        // must return on the stream whose credit window was charged.
+        shared
+            .ost_stream
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(ost.0, stream);
+    }
     shared.sched.on_enqueue(ost);
     shared.queues.push(
         ost,
@@ -986,7 +1144,7 @@ fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<(usize, Message)>
             }
         };
         let Some(slot) = slot else { break };
-        enqueue_block(shared, msg, slot);
+        enqueue_block(shared, msg, slot, stream);
     }
 }
 
@@ -1019,10 +1177,13 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
             // queue the policy picked (a gate of 0 bytes never drains —
             // the seed-exact per-object path). The drained blocks ride
             // this thread's service round; the policy is not
-            // re-consulted.
+            // re-consulted. The budget is snapshotted once per run: the
+            // unified tuner may move it mid-transfer, and a run must be
+            // sized against one coherent value.
+            let coalesce_budget = shared.coalesce_bytes.load(Ordering::Relaxed);
             let mut run = vec![head];
             let mut budget_stop = false;
-            if shared.coalesce_bytes > 0 {
+            if coalesce_budget > 0 {
                 // Cap runs at POSIX's IOV_MAX so one gathered run is ONE
                 // `pwritev` on the disk backend (past the cap the backend
                 // would split silently and `write_syscalls` would
@@ -1042,9 +1203,7 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
                     // further can ever chain — stop the scan instead of
                     // re-walking the backlog.
                     let len = cand.payload.len() as u64;
-                    if run_blocks == MAX_RUN_BLOCKS
-                        || run_bytes + len > shared.coalesce_bytes
-                    {
+                    if run_blocks == MAX_RUN_BLOCKS || run_bytes + len > coalesce_budget {
                         budget_stop = true;
                         return DrainVerdict::Stop;
                     }
@@ -1060,7 +1219,7 @@ fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
             // the run is consumed below. Only a chain that ended for LACK
             // of a successor (not because the budget/cap said stop) is
             // worth re-checking — a budget stop is deliberate.
-            let chain_open = shared.coalesce_bytes > 0 && !budget_stop;
+            let chain_open = coalesce_budget > 0 && !budget_stop;
             let cont_fid = run[0].fid;
             let cont_end = {
                 let last = run.last().expect("run is never empty");

@@ -39,8 +39,10 @@
 //!
 //! With a negotiated `data_streams = K ≥ 2` the transfer runs over one
 //! **control** connection plus K **data** connections (GridFTP-style
-//! parallel streams). OSTs are sharded across streams
-//! (`stream = ost % K`), so layout-aware scheduling stays intact *per
+//! parallel streams). OSTs are sharded across streams by projected
+//! bytes with a greedy LPT pass ([`super::shard::lpt_assignment`] — the
+//! old `ost % K` remains only as the fallback for an OST the plan never
+//! saw), so layout-aware scheduling stays intact *per
 //! stream*: every stream owns its own [`OstQueues`] pick domain, its own
 //! credit [`SendWindow`] and its own RMA slot pool, and NEW_BLOCK /
 //! BLOCK_SYNC(_BATCH) for an OST only ever ride that OST's stream.
@@ -56,13 +58,14 @@
 //! byte-identical to the pre-multi-stream wire.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use super::queues::{DrainVerdict, OstQueues};
+use super::shard;
 use super::{DataPlane, TransferSpec};
 use crate::config::Config;
 use crate::ftlog::{self, CompletedSet, FileKey, FtLogger, SpaceStats};
@@ -128,17 +131,23 @@ struct SendWindow {
     eff: AtomicU32,
     /// Grow/shrink `eff` from issue-loop feedback.
     adaptive: bool,
+    /// The unified epoch tuner drives `eff` (`Config::tune`); like
+    /// `adaptive`, the applied window starts at the floor and earns its
+    /// way up, but the movements come from [`crate::tune::HillClimb`]
+    /// via [`SendWindow::set_eff`] instead of issue-loop feedback.
+    tuned: bool,
     /// NEW_BLOCKs currently on the wire and un-acknowledged.
     inflight: Mutex<u32>,
     available: Condvar,
 }
 
 impl SendWindow {
-    fn new(adaptive: bool) -> SendWindow {
+    fn new(adaptive: bool, tuned: bool) -> SendWindow {
         SendWindow {
             max: AtomicU32::new(1),
             eff: AtomicU32::new(1),
             adaptive,
+            tuned,
             inflight: Mutex::new(0),
             available: Condvar::new(),
         }
@@ -153,9 +162,18 @@ impl SendWindow {
         let window = window.max(1);
         self.max.store(window, Ordering::SeqCst);
         self.eff.store(
-            if self.adaptive && window > 1 { 1 } else { window },
+            if (self.adaptive || self.tuned) && window > 1 { 1 } else { window },
             Ordering::SeqCst,
         );
+        self.available.notify_all();
+    }
+
+    /// Pin the applied window to `v` (clamped into 1..=cap) — the
+    /// unified tuner's entry point. Notified under the in-flight lock
+    /// for the same park-past-the-wakeup race `feedback_grow` documents.
+    fn set_eff(&self, v: u32) {
+        self.eff.store(v.clamp(1, self.window()), Ordering::SeqCst);
+        let _guard = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
         self.available.notify_all();
     }
 
@@ -270,16 +288,19 @@ impl SendWindow {
 }
 
 /// One data stream's sending state: its wire endpoint, its private OST
-/// pick domain (only OSTs with `ost % K == stream` are ever pushed
-/// here), its credit window and its RMA slot pool. At `data_streams = 1`
-/// the single stream's endpoint IS the control connection (the fused
-/// legacy path).
+/// pick domain (only OSTs the LPT shard plan assigned to this stream
+/// are ever pushed here), its credit window and its RMA slot pool. At
+/// `data_streams = 1` the single stream's endpoint IS the control
+/// connection (the fused legacy path).
 struct SrcStream {
     ep: Arc<dyn Endpoint>,
     queues: OstQueues<BlockReq>,
     /// Credit gate for in-flight NEW_BLOCKs (disabled at window 1).
     window: SendWindow,
     rma: RmaPool,
+    /// Bytes acknowledged on this stream — the unified tuner's weight
+    /// for splitting the joint send window across streams.
+    acked: AtomicU64,
 }
 
 struct Shared {
@@ -298,8 +319,17 @@ struct Shared {
     sched_stats: SchedStats,
     counters: Counters,
     /// Contiguous-read gather budget (`Config::read_gather_bytes`);
-    /// 0 = the seed-exact one-pread-per-object path.
-    read_gather_bytes: u64,
+    /// 0 = the seed-exact one-pread-per-object path. Atomic because the
+    /// unified tuner walks it mid-transfer; IO threads snapshot it once
+    /// per dequeue.
+    read_gather_bytes: AtomicU64,
+    /// Bytes-weighted OST → stream plan ([`shard::lpt_assignment`]),
+    /// computed once from the dataset layout. Empty at K = 1.
+    shard: BTreeMap<u32, usize>,
+    /// The tuner's move/revert log, drained into the session report.
+    tune_trajectory: Mutex<Vec<String>>,
+    /// Best observed epoch goodput (bytes/s), stored as `f64` bits.
+    goodput_final: AtomicU64,
     files: Mutex<BTreeMap<u32, SrcFile>>,
     logger: Mutex<Box<dyn FtLogger>>,
     abort: Mutex<Option<String>>,
@@ -327,10 +357,18 @@ impl Shared {
         self.aborted.load(Ordering::SeqCst)
     }
 
-    /// OST → stream shard: `ost % K`. Every OST's objects ride exactly
-    /// one stream, so per-stream scheduling stays layout-aware.
+    /// OST → stream shard from the bytes-weighted LPT plan. Every OST's
+    /// objects ride exactly one stream, so per-stream scheduling stays
+    /// layout-aware; an OST the plan never saw (a file that appeared
+    /// after planning) falls back to the old `ost % K`.
     fn stream_of(&self, ost: OstId) -> usize {
-        ost.0 as usize % self.streams.len()
+        if self.streams.len() == 1 {
+            return 0;
+        }
+        self.shard
+            .get(&ost.0)
+            .copied()
+            .unwrap_or(ost.0 as usize % self.streams.len())
     }
 
     /// Partition a batch across the stream shards and enqueue each
@@ -382,6 +420,11 @@ pub struct SourceReport {
     /// The parallel data-stream count negotiated at CONNECT (1 = the
     /// fused single-connection path; also the legacy-peer fallback).
     pub data_streams: u32,
+    /// Best epoch goodput the unified tuner observed (bytes/s); 0.0
+    /// with `tune` off.
+    pub goodput_final: f64,
+    /// The source tuner's move/revert log, one line per knob step.
+    pub tune_trajectory: Vec<String>,
 }
 
 /// Run the source node over a single fused connection (the legacy /
@@ -431,9 +474,12 @@ pub fn run_source_multi(
         // Advertise the largest ack batch we are willing to consume, the
         // NEW_BLOCK send window we would like to run, and the number of
         // parallel data streams we can drive; the sink answers with the
-        // negotiated (min) values it will use.
-        ack_batch: cfg.ack_batch.max(1),
-        send_window: cfg.send_window.max(1),
+        // negotiated (min) values it will use. With `tune` on the
+        // advertisements are the tuner's caps (the knobs float *within*
+        // them mid-transfer, so the wire never renegotiates); with it
+        // off they are exactly the configured values.
+        ack_batch: cfg.ack_batch_cap(),
+        send_window: cfg.send_window_cap(),
         data_streams: cfg.data_streams.max(1),
     }) {
         return Ok(handshake_fault_report(&logger, format!("connect: {e}")));
@@ -445,7 +491,7 @@ pub fn run_source_multi(
             // legacy field-less CONNECT_ACK decodes as window 1 (lockstep)
             // and 1 data stream (fused).
             (
-                send_window.max(1).min(cfg.send_window.max(1)),
+                send_window.max(1).min(cfg.send_window_cap()),
                 data_streams.max(1).min(cfg.data_streams.max(1)),
             )
         }
@@ -485,7 +531,7 @@ pub fn run_source_multi(
     let streams: Vec<SrcStream> = data_eps
         .into_iter()
         .map(|ep| {
-            let window = SendWindow::new(cfg.send_window_adaptive);
+            let window = SendWindow::new(cfg.send_window_adaptive, cfg.tune);
             window.arm(win);
             let rma = rma0
                 .take()
@@ -499,9 +545,39 @@ pub fn run_source_multi(
             if cfg.rma_autosize {
                 rma.grow_to(win as usize);
             }
-            SrcStream { ep, queues: OstQueues::new(cfg.ost_count), window, rma }
+            SrcStream {
+                ep,
+                queues: OstQueues::new(cfg.ost_count),
+                window,
+                rma,
+                acked: AtomicU64::new(0),
+            }
         })
         .collect();
+
+    // Bytes-weighted OST → stream plan (satellite of the autotuner PR):
+    // project every object of the dataset onto its OST, then LPT the
+    // per-OST byte totals across the K streams. One deterministic pass
+    // up front — resume re-derives the identical plan from the same
+    // spec, and the sink learns the map passively from arrivals.
+    let ost_shard = if k >= 2 {
+        let layout = pfs.layout();
+        let mut weights: BTreeMap<u32, u64> = BTreeMap::new();
+        for name in &spec.files {
+            if let Some((_fid, meta)) = pfs.lookup(name) {
+                let mut off = 0u64;
+                while off < meta.size {
+                    let len = (meta.size - off).min(cfg.object_size);
+                    let ost = layout.ost_for(meta.start_ost, off);
+                    *weights.entry(ost.0).or_insert(0) += len;
+                    off += cfg.object_size;
+                }
+            }
+        }
+        shard::lpt_assignment(&weights, k as usize)
+    } else {
+        BTreeMap::new()
+    };
 
     let shared = Arc::new(Shared {
         pfs,
@@ -510,7 +586,10 @@ pub fn run_source_multi(
         sched: cfg.scheduler.build(cfg.ost_count),
         sched_stats: SchedStats::default(),
         counters: Counters::default(),
-        read_gather_bytes: cfg.read_gather_bytes,
+        read_gather_bytes: AtomicU64::new(cfg.read_gather_bytes),
+        shard: ost_shard,
+        tune_trajectory: Mutex::new(Vec::new()),
+        goodput_final: AtomicU64::new(0),
         files: Mutex::new(BTreeMap::new()),
         logger,
         abort: Mutex::new(None),
@@ -568,6 +647,21 @@ pub fn run_source_multi(
         }
     }
 
+    // The unified epoch tuner (source half): samples goodput every
+    // `tune_epoch_ms` and walks {send window, read-gather budget}.
+    let tune_thread = if cfg.tune {
+        let sh = shared.clone();
+        let epoch = Duration::from_millis(cfg.tune_epoch_ms.max(1));
+        let gather_cap = cfg.gather_cap();
+        Some(
+            std::thread::Builder::new()
+                .name("src-tune".into())
+                .spawn(move || source_tuner(&sh, epoch, gather_cap))?,
+        )
+    } else {
+        None
+    };
+
     // Master runs on the calling thread.
     let files_done = master_loop(cfg, &shared, spec, master_rx);
 
@@ -580,6 +674,9 @@ pub fn run_source_multi(
         let _ = h.join();
     }
     for h in comm_threads {
+        let _ = h.join();
+    }
+    if let Some(h) = tune_thread {
         let _ = h.join();
     }
 
@@ -609,6 +706,12 @@ fn aggregate_report(shared: &Shared, files_done: u64) -> SourceReport {
         rma_stalls: (stall_count, stall_ns),
         rma_bytes_effective: rma_bytes,
         data_streams: shared.streams.len() as u32,
+        goodput_final: f64::from_bits(shared.goodput_final.load(Ordering::Relaxed)),
+        tune_trajectory: shared
+            .tune_trajectory
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone(),
     }
 }
 
@@ -629,6 +732,98 @@ fn handshake_fault_report(
         rma_stalls: (0, 0),
         rma_bytes_effective: 0,
         data_streams: 1,
+        goodput_final: 0.0,
+        tune_trajectory: Vec::new(),
+    }
+}
+
+/// The source half of the unified epoch tuner (`Config::tune`): every
+/// `epoch` it turns the acked-byte delta into a goodput sample, feeds it
+/// (with issue-loop stall pressure as the tiebreak signal) to one
+/// [`HillClimb`](crate::tune::HillClimb) over {applied send window,
+/// read-gather budget}, and applies whatever move the climber proposes —
+/// all within the caps negotiated at CONNECT, so the wire never changes
+/// mid-transfer. The joint window budget is re-split across streams
+/// every epoch in proportion to per-stream acked bytes.
+fn source_tuner(shared: &Arc<Shared>, epoch: Duration, gather_cap: u64) {
+    use crate::tune::{HillClimb, KnobSpec};
+    let win_cap = u64::from(shared.streams[0].window.window());
+    let mut hc = HillClimb::new(vec![
+        KnobSpec {
+            name: "send_window",
+            floor: 1,
+            cap: win_cap,
+            seed: 2,
+            start: u64::from(shared.streams[0].window.effective()),
+        },
+        KnobSpec {
+            name: "read_gather",
+            floor: 0,
+            cap: gather_cap,
+            seed: 1 << 20,
+            start: shared.read_gather_bytes.load(Ordering::Relaxed),
+        },
+    ]);
+    let tick = epoch.min(Duration::from_millis(5)).max(Duration::from_millis(1));
+    let mut last = std::time::Instant::now();
+    let mut last_acked = shared.counters.bytes_acked.load(Ordering::Relaxed);
+    let mut last_stalls = shared.counters.send_stalls.load(Ordering::Relaxed);
+    while !shared.is_aborted() && !shared.done.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        let now = std::time::Instant::now();
+        let dt = now.duration_since(last);
+        if dt < epoch {
+            continue;
+        }
+        last = now;
+        let acked = shared.counters.bytes_acked.load(Ordering::Relaxed);
+        let stalls = shared.counters.send_stalls.load(Ordering::Relaxed);
+        let goodput = (acked - last_acked) as f64 / dt.as_secs_f64();
+        let pressure = stalls - last_stalls;
+        last_acked = acked;
+        last_stalls = stalls;
+        if let Some((idx, value)) = hc.observe(goodput, pressure) {
+            if idx == 1 {
+                shared.read_gather_bytes.store(value, Ordering::Relaxed);
+            }
+            // idx 0 (the window) is applied by the rebalance below.
+        }
+        rebalance_windows(shared, hc.value(0) as u32);
+        shared.counters.tune_epochs.store(hc.epochs, Ordering::Relaxed);
+        shared.counters.tune_grows.store(hc.grows, Ordering::Relaxed);
+        shared.counters.tune_shrinks.store(hc.shrinks, Ordering::Relaxed);
+        shared.counters.tune_reverts.store(hc.reverts, Ordering::Relaxed);
+    }
+    shared
+        .goodput_final
+        .store(hc.best.to_bits(), Ordering::Relaxed);
+    *shared.tune_trajectory.lock().unwrap_or_else(|e| e.into_inner()) =
+        std::mem::take(&mut hc.trajectory);
+}
+
+/// Split the tuner's joint window budget (`w` credits × K streams)
+/// across streams in proportion to the bytes each has moved, clamped
+/// into 1..=cap per stream. With no history yet (or K = 1) every stream
+/// gets `w`. No-op while windowing is disabled (negotiated window 1 —
+/// the lockstep path never reads `eff`).
+fn rebalance_windows(shared: &Arc<Shared>, w: u32) {
+    if !shared.streams[0].window.enabled() {
+        return;
+    }
+    if shared.streams.len() == 1 {
+        shared.streams[0].window.set_eff(w);
+        return;
+    }
+    let acked: Vec<u64> = shared
+        .streams
+        .iter()
+        .map(|s| s.acked.load(Ordering::Relaxed))
+        .collect();
+    let sum: u64 = acked.iter().sum();
+    let total = u64::from(w) * shared.streams.len() as u64;
+    for (s, a) in shared.streams.iter().zip(&acked) {
+        let share = if sum == 0 { u64::from(w) } else { (total * a / sum).max(1) };
+        s.window.set_eff(share.min(u64::from(u32::MAX)) as u32);
     }
 }
 
@@ -898,7 +1093,11 @@ fn io_thread(shared: &Arc<Shared>, stream_idx: usize) {
         // takes it. The drained blocks ride this thread's service round;
         // the policy is not re-consulted mid-run.
         let mut run: Vec<(BlockReq, RmaSlot)> = vec![(req, first_slot)];
-        if shared.read_gather_bytes > 0 {
+        // Snapshot the budget once per dequeue: the unified tuner may
+        // move it mid-transfer, and a run must be sized against one
+        // coherent value.
+        let gather_budget = shared.read_gather_bytes.load(Ordering::Relaxed);
+        if gather_budget > 0 {
             // Cap runs at POSIX's IOV_MAX so one gathered run is ONE
             // `preadv` on the disk backend (past the cap the backend
             // would split silently and `read_syscalls` would
@@ -919,9 +1118,7 @@ fn io_thread(shared: &Arc<Shared>, stream_idx: usize) {
                 // further can ever chain — stop the scan instead of
                 // re-walking the backlog.
                 let len = cand.len as u64;
-                if run_blocks == MAX_RUN_BLOCKS
-                    || run_bytes + len > shared.read_gather_bytes
-                {
+                if run_blocks == MAX_RUN_BLOCKS || run_bytes + len > gather_budget {
                     return DrainVerdict::Stop;
                 }
                 // One slot per gathered block, non-blocking: a dry pool
@@ -1142,18 +1339,30 @@ fn comm_thread(shared: &Arc<Shared>, role: CommRole, master_tx: mpsc::Sender<Mas
                 // failed writes too: the object left the window and its
                 // retransmit will take a fresh credit.
                 shared.streams[0].window.release(1);
+                shared.streams[0]
+                    .acked
+                    .fetch_add(shared.object_size, Ordering::Relaxed);
                 handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
             }
             (CommRole::Fused, Message::BlockSyncBatch { file_idx, blocks }) => {
                 shared.streams[0].window.release(blocks.len() as u32);
+                shared.streams[0]
+                    .acked
+                    .fetch_add(blocks.len() as u64 * shared.object_size, Ordering::Relaxed);
                 handle_block_syncs(shared, file_idx, &blocks);
             }
             (CommRole::Data(s), Message::BlockSync { file_idx, block_idx, ok }) => {
                 shared.streams[s].window.release(1);
+                shared.streams[s]
+                    .acked
+                    .fetch_add(shared.object_size, Ordering::Relaxed);
                 handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
             }
             (CommRole::Data(s), Message::BlockSyncBatch { file_idx, blocks }) => {
                 shared.streams[s].window.release(blocks.len() as u32);
+                shared.streams[s]
+                    .acked
+                    .fetch_add(blocks.len() as u64 * shared.object_size, Ordering::Relaxed);
                 handle_block_syncs(shared, file_idx, &blocks);
             }
             (role, other) => {
@@ -1225,6 +1434,12 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
                 continue; // duplicate sync (batch retransmit after resume)
             }
             shared.counters.objects_synced.fetch_add(1, Ordering::Relaxed);
+            // The tuner's goodput signal: unique durable bytes (dupes
+            // and failed writes don't count as progress).
+            shared.counters.bytes_acked.fetch_add(
+                (f.size - block_idx as u64 * shared.object_size).min(shared.object_size),
+                Ordering::Relaxed,
+            );
             fresh.push(block_idx);
         }
 

@@ -32,6 +32,7 @@ pub mod runtime;
 pub mod sched;
 pub mod stats;
 pub mod testutil;
+pub mod tune;
 pub mod util;
 pub mod workload;
 pub mod cli;

@@ -35,8 +35,15 @@ use ftlads::sched::SchedPolicy;
 use ftlads::util::{fmt_bytes, fmt_duration};
 use ftlads::workload::{self, Workload};
 
-const FLAGS: [&str; 6] =
-    ["resume", "verbose", "json", "ack-adaptive", "send-window-adaptive", "rma-autosize"];
+const FLAGS: [&str; 7] = [
+    "resume",
+    "verbose",
+    "json",
+    "ack-adaptive",
+    "send-window-adaptive",
+    "rma-autosize",
+    "tune",
+];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -108,6 +115,15 @@ fn print_usage() {
            --rma-autosize                                grow each RMA pool toward\n\
                                                          send_window x object_size at\n\
                                                          CONNECT\n\
+           --tune                                        unified online autotuner: one\n\
+                                                         goodput-driven hill-climb\n\
+                                                         walks send window, ack batch,\n\
+                                                         gather + coalesce budgets and\n\
+                                                         the per-stream window split\n\
+                                                         mid-transfer (supersedes the\n\
+                                                         per-knob *-adaptive flags)\n\
+           --tune-epoch-ms MS                            autotuner sampling epoch\n\
+                                                         (default 100)\n\
            --workload big|small|mixed  --files N  --file-size BYTES\n\
            --fault FRAC [--fault-side source|sink]       inject fault at FRAC\n\
            --resume                                      resume per FT logs\n\
@@ -180,6 +196,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if args.flag("rma-autosize") {
         cfg.rma_autosize = true;
+    }
+    if args.flag("tune") {
+        cfg.tune = true;
+    }
+    if let Some(v) = args.get("tune-epoch-ms") {
+        cfg.tune_epoch_ms = v.parse().context("--tune-epoch-ms")?;
     }
     if let Some(v) = args.get("object-size") {
         cfg.object_size = parse_bytes(v)?;
@@ -354,6 +376,23 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
             "sched_avg_pick_ns_sink".into(),
             Json::Num(out.sink_sched.avg_pick_ns()),
         );
+        m.insert("tune_epochs".into(), Json::Num(out.tune_epochs as f64));
+        m.insert("tune_grows".into(), Json::Num(out.tune_grows as f64));
+        m.insert("tune_shrinks".into(), Json::Num(out.tune_shrinks as f64));
+        m.insert("tune_reverts".into(), Json::Num(out.tune_reverts as f64));
+        m.insert(
+            "goodput_final_mbps".into(),
+            Json::Num(out.goodput_final / 1e6),
+        );
+        m.insert(
+            "tune_trajectory".into(),
+            Json::Arr(
+                out.tune_trajectory
+                    .iter()
+                    .map(|t| Json::Str(t.clone()))
+                    .collect(),
+            ),
+        );
         println!("{}", Json::Obj(m));
         return;
     }
@@ -413,6 +452,27 @@ fn print_outcome(label: &str, out: &coordinator::TransferOutcome, json: bool) {
         out.sink.ack_batch_grows,
         out.sink.ack_batch_shrinks
     );
+    if out.tune_epochs > 0 {
+        println!(
+            "  autotune         : {} epochs  {}+ {}-  {} reverts  best epoch {:.1} MB/s",
+            out.tune_epochs,
+            out.tune_grows,
+            out.tune_shrinks,
+            out.tune_reverts,
+            out.goodput_final / 1e6
+        );
+        // The first few knob moves tell the convergence story; the full
+        // trajectory is in the JSON output.
+        for step in out.tune_trajectory.iter().take(6) {
+            println!("                     {step}");
+        }
+        if out.tune_trajectory.len() > 6 {
+            println!(
+                "                     ... {} more steps (--json for all)",
+                out.tune_trajectory.len() - 6
+            );
+        }
+    }
     println!(
         "  zero-copy        : {} payload copies ({}) — pread-into-slot only \
          on the clean path",

@@ -80,6 +80,20 @@ pub struct Counters {
     pub gathered_runs: AtomicU64,
     /// Largest gathered read run submitted, in bytes (high-water mark).
     pub gather_bytes_max: AtomicU64,
+    /// Payload bytes acknowledged end-to-end (source side): bumped when a
+    /// BLOCK_SYNC for a freshly-sent object arrives, by that object's
+    /// true byte length. This is the goodput numerator the `tune`
+    /// controller differentiates per epoch — unlike `bytes_sent` it only
+    /// counts bytes the sink has durably accepted.
+    pub bytes_acked: AtomicU64,
+    /// Unified autotuner (`tune`): epochs observed, knob moves accepted
+    /// upward/downward, and moves rolled back on goodput regression.
+    /// Written by the side's tuner thread only; summed across sides into
+    /// `TransferOutcome`.
+    pub tune_epochs: AtomicU64,
+    pub tune_grows: AtomicU64,
+    pub tune_shrinks: AtomicU64,
+    pub tune_reverts: AtomicU64,
     /// Sink write-coalescer continuations: times an IO thread, after
     /// submitting a gathered run whose chain broke with budget to spare,
     /// found the run's byte-successor queued (it arrived while the run
@@ -118,6 +132,11 @@ impl Counters {
             read_syscalls: self.read_syscalls.load(Ordering::Relaxed),
             gathered_runs: self.gathered_runs.load(Ordering::Relaxed),
             gather_bytes_max: self.gather_bytes_max.load(Ordering::Relaxed),
+            bytes_acked: self.bytes_acked.load(Ordering::Relaxed),
+            tune_epochs: self.tune_epochs.load(Ordering::Relaxed),
+            tune_grows: self.tune_grows.load(Ordering::Relaxed),
+            tune_shrinks: self.tune_shrinks.load(Ordering::Relaxed),
+            tune_reverts: self.tune_reverts.load(Ordering::Relaxed),
             coalesce_continuations: self.coalesce_continuations.load(Ordering::Relaxed),
         }
     }
@@ -151,6 +170,11 @@ pub struct CounterSnapshot {
     pub read_syscalls: u64,
     pub gathered_runs: u64,
     pub gather_bytes_max: u64,
+    pub bytes_acked: u64,
+    pub tune_epochs: u64,
+    pub tune_grows: u64,
+    pub tune_shrinks: u64,
+    pub tune_reverts: u64,
     pub coalesce_continuations: u64,
 }
 

@@ -1,0 +1,422 @@
+//! Epoch-based online autotuner: one goodput-driven hill-climb over the
+//! joint knob vector, applied mid-transfer through the applied-value
+//! paths (`SendWindow::eff`, `AckCoalescer` effective batch, the atomic
+//! coalesce/gather byte budgets).
+//!
+//! The paper's transfer engine (and PRs 2–6 here) grew four independent,
+//! locally-greedy feedback loops — adaptive ack batch, adaptive send
+//! window, RMA pool autosizing, fixed byte budgets — each watching its
+//! own pressure signal and none watching goodput. Arslan & Kosar
+//! (arXiv:1708.05425) and the Globus production experience (Zheng et
+//! al., arXiv:2503.22981) both find that a single online controller
+//! over the whole vector beats per-knob heuristics. This module is that
+//! controller's decision core: a deterministic, single-threaded bounded
+//! hill-climb with hysteresis. The coordinator threads own the clocks
+//! and the atomics; [`HillClimb`] only ever sees one `(goodput,
+//! pressure)` sample per epoch and answers with at most one knob move.
+//!
+//! Behavior contract (pinned by the unit tests below):
+//! - **Exponential step.** A knob grows by doubling (through a `seed`
+//!   value when leaving its floor, so `0 -> 1 MiB`, not `0 -> 0`) and
+//!   shrinks by halving (collapsing to the floor at/below the seed).
+//! - **Hysteresis.** A probe only counts as a gain/loss outside a
+//!   ±[`HYSTERESIS`] band around the pre-move goodput; inside the band
+//!   the move is kept and the walk advances to the next axis, unless
+//!   the pressure signal worsened while goodput slipped — that
+//!   tiebreak reverts.
+//! - **Revert on regression + cooldown.** A losing move is rolled back
+//!   (the caller re-applies the previous value), the knob's direction
+//!   flips, the knob sits out the next [`REVERT_SKIP`] proposals, and
+//!   the whole walk idles for [`COOLDOWN`] epochs so the revert's
+//!   effect is measured before the next probe.
+//! - **Momentum.** A winning axis is walked again immediately.
+
+/// Negotiation ceiling the tuner may raise the send window to.
+///
+/// With `tune` on, CONNECT advertises at least this cap (see
+/// `Config::send_window_cap`) so the applied window can float up to it
+/// without any wire change mid-transfer.
+pub const TUNE_WINDOW_CAP: u32 = 32;
+
+/// Negotiation ceiling the tuner may raise the ack batch to.
+pub const TUNE_ACK_CAP: u32 = 64;
+
+/// Ceiling for the tuned byte budgets (write-coalesce, read-gather).
+pub const TUNE_BUDGET_CAP: u64 = 16 << 20;
+
+/// Relative goodput band treated as noise: a probe is a gain only above
+/// `base * (1 + HYSTERESIS)` and a loss only below `base * (1 -
+/// HYSTERESIS)` (or on the pressure tiebreak).
+pub const HYSTERESIS: f64 = 0.05;
+
+/// Epochs the walk idles after a revert before probing again.
+pub const COOLDOWN: u32 = 2;
+
+/// Proposals a knob sits out after one of its moves was reverted,
+/// damping oscillation against a cap or floor.
+pub const REVERT_SKIP: u32 = 4;
+
+/// Static description of one tunable axis.
+#[derive(Debug, Clone, Copy)]
+pub struct KnobSpec {
+    /// Axis name, used verbatim in trajectory entries.
+    pub name: &'static str,
+    /// Lowest value a shrink may reach (0 = feature off).
+    pub floor: u64,
+    /// Highest value a grow may reach (the negotiated/configured cap).
+    pub cap: u64,
+    /// First value a grow reaches from below it; doubling starts here,
+    /// so a floor of 0 can still leave the floor.
+    pub seed: u64,
+    /// Initial applied value (clamped into `floor..=cap`).
+    pub start: u64,
+}
+
+#[derive(Debug)]
+struct Knob {
+    spec: KnobSpec,
+    value: u64,
+    /// Current probe direction: `true` = grow.
+    grow: bool,
+    /// Remaining proposals to sit out after a revert.
+    skip: u32,
+}
+
+impl Knob {
+    fn grow_target(&self) -> u64 {
+        let t = if self.value < self.spec.seed {
+            self.spec.seed
+        } else {
+            self.value.saturating_mul(2)
+        };
+        t.min(self.spec.cap).max(self.spec.floor)
+    }
+
+    fn shrink_target(&self) -> u64 {
+        let t = if self.value <= self.spec.seed { self.spec.floor } else { self.value / 2 };
+        t.clamp(self.spec.floor, self.spec.cap)
+    }
+
+    fn target(&self) -> u64 {
+        if self.grow {
+            self.grow_target()
+        } else {
+            self.shrink_target()
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Phase {
+    /// First epoch after start: its sample spans the ramp-up, discard.
+    Warmup,
+    /// Idle for `left` more epochs (cooldown), then propose.
+    Settle { left: u32 },
+    /// A move on `knob` is in flight; the next sample judges it
+    /// against the pre-move `base` goodput and `base_pressure`.
+    Probe { knob: usize, prev: u64, base: f64, base_pressure: u64 },
+}
+
+/// The deterministic hill-climb core. Feed it one goodput sample per
+/// epoch via [`observe`](Self::observe); apply the `(knob index, new
+/// value)` it returns, if any, before the next epoch.
+#[derive(Debug)]
+pub struct HillClimb {
+    knobs: Vec<Knob>,
+    phase: Phase,
+    /// Next axis the round-robin proposal scan starts from.
+    axis: usize,
+    /// Epochs observed (including warmup/cooldown).
+    pub epochs: u64,
+    /// Accepted or in-flight upward moves.
+    pub grows: u64,
+    /// Accepted or in-flight downward moves.
+    pub shrinks: u64,
+    /// Moves rolled back on regression.
+    pub reverts: u64,
+    /// Best single-epoch goodput seen so far (the convergence figure).
+    pub best: f64,
+    /// Human-readable move log: `"e<epoch>: <name> <old> -> <new>"`.
+    pub trajectory: Vec<String>,
+}
+
+impl HillClimb {
+    pub fn new(specs: Vec<KnobSpec>) -> HillClimb {
+        let knobs = specs
+            .into_iter()
+            .map(|spec| Knob {
+                value: spec.start.clamp(spec.floor, spec.cap),
+                grow: true,
+                skip: 0,
+                spec,
+            })
+            .collect();
+        HillClimb {
+            knobs,
+            phase: Phase::Warmup,
+            axis: 0,
+            epochs: 0,
+            grows: 0,
+            shrinks: 0,
+            reverts: 0,
+            best: 0.0,
+            trajectory: Vec::new(),
+        }
+    }
+
+    /// Current applied value of knob `i`.
+    pub fn value(&self, i: usize) -> u64 {
+        self.knobs[i].value
+    }
+
+    /// Record one epoch's `(goodput, pressure)` sample and return the
+    /// next move to apply, if any. Goodput units are the caller's
+    /// (bytes/sec here); only ratios matter. Pressure is a
+    /// monotone-per-epoch badness count (stalls) used to break ties
+    /// inside the hysteresis band.
+    pub fn observe(&mut self, goodput: f64, pressure: u64) -> Option<(usize, u64)> {
+        self.epochs += 1;
+        if goodput > self.best {
+            self.best = goodput;
+        }
+        match self.phase {
+            Phase::Warmup => {
+                // The first full epoch still includes connection ramp-up;
+                // settle one more before the first probe baseline.
+                self.phase = Phase::Settle { left: 1 };
+                None
+            }
+            Phase::Settle { left } if left > 0 => {
+                self.phase = Phase::Settle { left: left - 1 };
+                None
+            }
+            Phase::Settle { .. } => self.propose(goodput, pressure),
+            Phase::Probe { knob, prev, base, base_pressure } => {
+                let gain = goodput > base * (1.0 + HYSTERESIS);
+                let loss = goodput < base * (1.0 - HYSTERESIS)
+                    || (goodput < base && pressure > base_pressure);
+                if gain {
+                    // Momentum: keep walking the winning axis.
+                    self.axis = knob;
+                    self.propose(goodput, pressure)
+                } else if loss {
+                    let k = &mut self.knobs[knob];
+                    let cur = k.value;
+                    k.value = prev;
+                    k.grow = !k.grow;
+                    k.skip = REVERT_SKIP;
+                    self.reverts += 1;
+                    self.trajectory.push(format!(
+                        "e{}: revert {} {cur} -> {prev}",
+                        self.epochs, k.spec.name
+                    ));
+                    self.axis = knob + 1;
+                    self.phase = Phase::Settle { left: COOLDOWN };
+                    Some((knob, prev))
+                } else {
+                    // Inside the band: keep the move, advance the scan.
+                    self.axis = knob + 1;
+                    self.propose(goodput, pressure)
+                }
+            }
+        }
+    }
+
+    /// Pick the next movable axis (round-robin from `self.axis`,
+    /// honoring revert-skips, flipping direction once at a cap/floor)
+    /// and start its probe.
+    fn propose(&mut self, goodput: f64, pressure: u64) -> Option<(usize, u64)> {
+        let n = self.knobs.len();
+        for step in 0..n {
+            let i = (self.axis + step) % n;
+            let k = &mut self.knobs[i];
+            if k.skip > 0 {
+                k.skip -= 1;
+                continue;
+            }
+            let mut target = k.target();
+            if target == k.value {
+                // Pinned at a cap or floor: turn around.
+                k.grow = !k.grow;
+                target = k.target();
+            }
+            if target == k.value {
+                // floor == cap: this axis can never move.
+                continue;
+            }
+            let prev = k.value;
+            k.value = target;
+            if target > prev {
+                self.grows += 1;
+            } else {
+                self.shrinks += 1;
+            }
+            self.trajectory
+                .push(format!("e{}: {} {prev} -> {target}", self.epochs, k.spec.name));
+            self.axis = i;
+            self.phase =
+                Phase::Probe { knob: i, prev, base: goodput, base_pressure: pressure };
+            return Some((i, target));
+        }
+        self.phase = Phase::Settle { left: 0 };
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_knob(start: u64) -> HillClimb {
+        HillClimb::new(vec![KnobSpec {
+            name: "window",
+            floor: 1,
+            cap: 32,
+            seed: 2,
+            start,
+        }])
+    }
+
+    #[test]
+    fn grows_exponentially_on_gain_and_reverts_the_overshoot() {
+        // Goodput tracks the knob value exactly: every grow is a gain
+        // until the cap, the post-cap shrink is a loss and reverts.
+        let mut hc = one_knob(1);
+        assert_eq!(hc.observe(1.0, 0), None, "warmup discards its epoch");
+        assert_eq!(hc.observe(1.0, 0), None, "one settle epoch before probing");
+        // Doubling walk through the seed: 1 -> 2 -> 4 -> ... -> 32.
+        let mut expect = vec![];
+        let mut v = 1.0f64;
+        for step in [2u64, 4, 8, 16, 32] {
+            assert_eq!(hc.observe(v, 0), Some((0, step)));
+            v = step as f64;
+            expect.push(step);
+        }
+        // At the cap with goodput still "up": the grow pins, direction
+        // flips, the probe shrinks...
+        assert_eq!(hc.observe(32.0, 0), Some((0, 16)));
+        // ...and the shrink regresses, so it reverts back to the cap.
+        assert_eq!(hc.observe(16.0, 0), Some((0, 32)), "loss must revert");
+        assert_eq!(hc.value(0), 32);
+        assert_eq!(hc.reverts, 1);
+        assert!(hc.grows >= 5, "doubling walk: {} grows", hc.grows);
+        assert!((hc.best - 32.0).abs() < 1e-9);
+        assert!(
+            hc.trajectory.iter().any(|t| t.contains("revert window 16 -> 32")),
+            "{:?}",
+            hc.trajectory
+        );
+    }
+
+    #[test]
+    fn revert_cooldown_then_knob_sits_out_proposals() {
+        let mut hc = HillClimb::new(vec![KnobSpec {
+            name: "batch",
+            floor: 1,
+            cap: 64,
+            seed: 2,
+            start: 4,
+        }]);
+        assert_eq!(hc.observe(10.0, 0), None); // warmup
+        assert_eq!(hc.observe(10.0, 0), None); // settle
+        assert_eq!(hc.observe(10.0, 0), Some((0, 8))); // probe grow
+        // Hard regression: roll back to 4, flip direction, cool down.
+        assert_eq!(hc.observe(1.0, 0), Some((0, 4)));
+        assert_eq!(hc.reverts, 1);
+        // COOLDOWN idle epochs...
+        assert_eq!(hc.observe(10.0, 0), None);
+        assert_eq!(hc.observe(10.0, 0), None);
+        // ...then REVERT_SKIP proposal rounds where the only knob sits
+        // out (single-axis walk: nothing else can move)...
+        for _ in 0..REVERT_SKIP {
+            assert_eq!(hc.observe(10.0, 0), None);
+        }
+        // ...and only then does it probe again, in the flipped
+        // (shrink) direction.
+        assert_eq!(hc.observe(10.0, 0), Some((0, 2)));
+        assert_eq!(hc.value(0), 2);
+    }
+
+    #[test]
+    fn pressure_breaks_ties_inside_the_hysteresis_band() {
+        let mut hc = one_knob(4);
+        assert_eq!(hc.observe(100.0, 0), None);
+        assert_eq!(hc.observe(100.0, 0), None);
+        assert_eq!(hc.observe(100.0, 0), Some((0, 8)));
+        // 99 is inside the ±5% band, but pressure rose while goodput
+        // slipped: the tiebreak calls it a loss and reverts.
+        assert_eq!(hc.observe(99.0, 7), Some((0, 4)));
+        assert_eq!(hc.reverts, 1);
+    }
+
+    #[test]
+    fn neutral_band_keeps_the_move_and_advances_the_axis() {
+        let mut hc = HillClimb::new(vec![
+            KnobSpec { name: "a", floor: 1, cap: 32, seed: 2, start: 4 },
+            KnobSpec { name: "b", floor: 0, cap: 1 << 20, seed: 1 << 10, start: 0 },
+        ]);
+        assert_eq!(hc.observe(100.0, 0), None);
+        assert_eq!(hc.observe(100.0, 0), None);
+        assert_eq!(hc.observe(100.0, 0), Some((0, 8)));
+        // Flat response, no pressure change: keep a = 8, probe b next.
+        assert_eq!(hc.observe(100.0, 0), Some((1, 1 << 10)));
+        assert_eq!(hc.value(0), 8);
+        assert_eq!(hc.reverts, 0);
+    }
+
+    #[test]
+    fn seed_lifts_a_zero_floor_budget_off_zero() {
+        let mut hc = HillClimb::new(vec![KnobSpec {
+            name: "budget",
+            floor: 0,
+            cap: 16 << 20,
+            seed: 1 << 20,
+            start: 0,
+        }]);
+        assert_eq!(hc.observe(1.0, 0), None);
+        assert_eq!(hc.observe(1.0, 0), None);
+        // 0 doubles to nothing; the seed is the escape hatch.
+        assert_eq!(hc.observe(1.0, 0), Some((0, 1 << 20)));
+        assert_eq!(hc.observe(2.0, 0), Some((0, 2 << 20)));
+        // And a shrink at/below the seed collapses back to the floor.
+        let mut hc = HillClimb::new(vec![KnobSpec {
+            name: "budget",
+            floor: 0,
+            cap: 16 << 20,
+            seed: 1 << 20,
+            start: 1 << 20,
+        }]);
+        assert_eq!(hc.observe(1.0, 0), None);
+        assert_eq!(hc.observe(1.0, 0), None);
+        assert_eq!(hc.observe(1.0, 0), Some((0, 2 << 20))); // grow first
+        assert_eq!(hc.observe(0.1, 0), Some((0, 1 << 20))); // revert
+        for _ in 0..(COOLDOWN + REVERT_SKIP) {
+            assert_eq!(hc.observe(1.0, 0), None);
+        }
+        // Flipped to shrink by the revert: seed -> floor.
+        assert_eq!(hc.observe(1.0, 0), Some((0, 0)));
+    }
+
+    #[test]
+    fn identical_inputs_produce_identical_trajectories() {
+        let samples: Vec<(f64, u64)> = (0..40)
+            .map(|i| (((i * 7919) % 101) as f64 + 1.0, (i % 3) as u64))
+            .collect();
+        let run = || {
+            let mut hc = HillClimb::new(vec![
+                KnobSpec { name: "w", floor: 1, cap: 32, seed: 2, start: 1 },
+                KnobSpec { name: "g", floor: 0, cap: 16 << 20, seed: 1 << 20, start: 0 },
+            ]);
+            let mut moves = Vec::new();
+            for &(g, p) in &samples {
+                moves.push(hc.observe(g, p));
+            }
+            (moves, hc.trajectory)
+        };
+        let (m1, t1) = run();
+        let (m2, t2) = run();
+        assert_eq!(m1, m2);
+        assert_eq!(t1, t2);
+        assert!(!t1.is_empty(), "40 epochs must move something");
+    }
+}

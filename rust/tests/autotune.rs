@@ -1,0 +1,166 @@
+//! Unified online autotuner (`--tune`): the OFF default is seed-exact —
+//! the CONNECT handshake carries the configured (not the raised) knob
+//! values, no tuner thread runs, and every tune field in the outcome is
+//! inert — while ON negotiates the full caps, runs one goodput-driven
+//! controller per side, and reports the walk in the outcome.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ftlads::config::Config;
+use ftlads::coordinator::sink::spawn_sink;
+use ftlads::coordinator::source::run_source;
+use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
+use ftlads::workload;
+
+/// Endpoint wrapper recording the encoded bytes of every source send —
+/// the wire evidence for the seed-exactness pin.
+struct Recorder {
+    inner: channel::ChannelEndpoint,
+    sent: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl Endpoint for Recorder {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        let mut bytes = Vec::new();
+        msg.encode(&mut bytes);
+        self.sent.lock().unwrap_or_else(|e| e.into_inner()).push(bytes);
+        self.inner.send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+#[test]
+fn tune_off_is_seed_exact_on_the_wire_and_in_the_outcome() {
+    // The acceptance pin: with `tune` off (the default) the handshake is
+    // byte-identical to the pre-tuner wire — the raised negotiation caps
+    // must never leak into a CONNECT unless --tune asked for them.
+    let cfg = Config::for_tests("autotune-off-pin");
+    assert!(!cfg.tune, "tune must default off");
+    assert_eq!(cfg.send_window, 1);
+    assert_eq!(cfg.ack_batch, 1);
+    let wl = workload::big_workload(4, 512 << 10); // 32 objects
+    let env = SimEnv::new(cfg.clone(), &wl);
+
+    let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let sent = Arc::new(Mutex::new(Vec::new()));
+    let rec = Recorder { inner: src_ep, sent: sent.clone() };
+    let node = spawn_sink(&cfg, env.sink.clone(), Arc::new(snk_ep), None).unwrap();
+    let src = run_source(
+        &cfg,
+        env.source.clone(),
+        Arc::new(rec),
+        &TransferSpec::fresh(env.files.clone()),
+    )
+    .unwrap();
+    let snk = node.join();
+    assert!(src.fault.is_none(), "{:?}", src.fault);
+    assert!(snk.fault.is_none(), "{:?}", snk.fault);
+    env.verify_sink_complete().unwrap();
+
+    // Hand-built fused CONNECT: no raised ack_batch, no trailing
+    // send_window or data_streams field (both at their omit-at-default
+    // value of 1) — exactly the seed bytes.
+    let mut connect = vec![0u8]; // T_CONNECT
+    connect.extend_from_slice(&cfg.object_size.to_le_bytes());
+    connect.extend_from_slice(&8u32.to_le_bytes()); // 8 RMA slots in tests
+    connect.push(0); // resume = false
+    connect.extend_from_slice(&1u32.to_le_bytes()); // ack_batch = 1
+    let sent = sent.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    assert_eq!(sent[0], connect, "tune-off CONNECT grew beyond the seed bytes");
+    assert!(
+        sent.iter().all(|f| f.first() != Some(&10u8)),
+        "STREAM_HELLO on a tune-off single-stream session"
+    );
+
+    // No tuner ran: every tune signal in the reports is inert.
+    assert_eq!(src.counters.tune_epochs, 0);
+    assert_eq!(snk.counters.tune_epochs, 0);
+    assert_eq!(src.goodput_final, 0.0);
+    assert!(src.tune_trajectory.is_empty());
+    assert!(snk.tune_trajectory.is_empty());
+
+    // Same through the full coordinator: the outcome's tune fields are
+    // all zero/empty with tune off.
+    let env2 = SimEnv::new(cfg, &wl);
+    let out = env2.run(&TransferSpec::fresh(env2.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    assert_eq!(out.tune_epochs, 0);
+    assert_eq!(out.tune_grows, 0);
+    assert_eq!(out.tune_shrinks, 0);
+    assert_eq!(out.tune_reverts, 0);
+    assert_eq!(out.goodput_final, 0.0);
+    assert!(out.tune_trajectory.is_empty());
+    env2.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    let _ = std::fs::remove_dir_all(&env2.cfg.ft_dir);
+}
+
+#[test]
+fn tune_on_negotiates_caps_and_reports_epochs() {
+    // --tune from the pessimal defaults (window 1, batch 1, budgets 0):
+    // the CONNECT advertises the raised caps so the applied values have
+    // room to float, both tuner threads run (real time: for_tests'
+    // time_scale 0.0 finishes before one epoch, so scale 1.0 + real
+    // latency here), and the transfer still completes byte-verified.
+    let mut cfg = Config::for_tests("autotune-on-smoke");
+    cfg.tune = true;
+    cfg.tune_epoch_ms = 1;
+    cfg.time_scale = 1.0;
+    cfg.net_latency_us = 200;
+    let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    assert_eq!(
+        out.send_window,
+        ftlads::tune::TUNE_WINDOW_CAP,
+        "tune must negotiate the raised window cap"
+    );
+    assert!(out.tune_epochs >= 1, "no tuner epoch ever ticked");
+    // With a healthy number of epochs the hill-climb must actually have
+    // walked (the threshold keeps slow-CI short runs from flaking).
+    if out.tune_epochs >= 12 {
+        assert!(
+            !out.tune_trajectory.is_empty(),
+            "{} epochs but an empty trajectory",
+            out.tune_epochs
+        );
+        assert!(out.goodput_final > 0.0);
+    }
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn tune_with_multi_stream_lpt_sharding_completes() {
+    // Tuner + LPT-sharded data plane: per-stream window rebalancing and
+    // the sink's learned ost->stream ack routing must hold together
+    // mid-walk, and the dataset still byte-verifies.
+    let mut cfg = Config::for_tests("autotune-mstream");
+    cfg.tune = true;
+    cfg.tune_epoch_ms = 1;
+    cfg.time_scale = 1.0;
+    cfg.net_latency_us = 200;
+    cfg.data_streams = 2;
+    let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    assert_eq!(out.data_streams, 2);
+    assert!(out.tune_epochs >= 1, "no tuner epoch ever ticked");
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}

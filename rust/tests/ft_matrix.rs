@@ -153,6 +153,65 @@ fn batched_acks_fault_mid_window_every_mechanism() {
 }
 
 #[test]
+fn autotuned_transfer_fault_every_mechanism() {
+    // The unified autotuner under faults: for every FT mechanism, run
+    // with --tune walking the whole knob vector (window, ack batch,
+    // both IO budgets, per-stream split) in real time and sever the
+    // session mid-walk. The crash lands with floated knobs — a grown
+    // credit window of un-acked NEW_BLOCKs, partially filled ack
+    // batches — and resume (also tuned) must still honor the log-based
+    // retransmit bound: every group-committed object is skipped, so at
+    // most `total - logged` objects are re-sent, which block re-write
+    // tolerates. Sink contents byte-verify and no logs survive.
+    for mech in Mechanism::ALL_FT {
+        let mut cfg = Config::for_tests(&format!("matrix-tune-{}", mech.as_str()));
+        cfg.mechanism = mech;
+        cfg.method = Method::Bit64;
+        cfg.tune = true;
+        cfg.tune_epoch_ms = 1;
+        // for_tests' time_scale 0.0 finishes before one epoch ticks;
+        // real time + wire latency lets the walk actually move.
+        cfg.time_scale = 1.0;
+        cfg.net_latency_us = 200;
+        cfg.ack_flush_us = 500;
+        cfg.data_streams = 2;
+        let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+        let total = wl.total_objects(cfg.object_size);
+        let env = SimEnv::new(cfg, &wl);
+        let out = env
+            .run(
+                &TransferSpec::fresh(env.files.clone())
+                    .with_fault(FaultPlan::at_fraction(0.5, Side::Source)),
+            )
+            .unwrap();
+        assert!(!out.completed, "{mech:?} tuned: fault did not fire");
+        let logged: u64 = recover::recover_all(&env.cfg.ft())
+            .unwrap()
+            .values()
+            .map(|s| s.count() as u64)
+            .sum();
+        let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+        assert!(out2.completed, "{mech:?} tuned: resume failed: {:?}", out2.fault);
+        assert!(
+            out2.source.objects_skipped_resume >= logged,
+            "{mech:?} tuned: logged objects not skipped ({} skipped, {logged} logged)",
+            out2.source.objects_skipped_resume
+        );
+        assert!(
+            out2.source.objects_sent <= total - logged,
+            "{mech:?} tuned: resume retransmitted logged objects \
+             ({} sent, {logged} logged of {total})",
+            out2.source.objects_sent
+        );
+        env.verify_sink_complete()
+            .unwrap_or_else(|e| panic!("{mech:?} tuned: {e}"));
+        let left = recover::recover_all(&env.cfg.ft()).unwrap();
+        assert!(left.is_empty(), "{mech:?} tuned: logs left after completion");
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+}
+
+#[test]
 fn send_window_full_fault_every_mechanism() {
     // The windowed-issue pipeline: for every FT mechanism and
     // send_window ∈ {1, 4, 32}, sever the connection mid-transfer — with

@@ -386,8 +386,9 @@ fn legacy_field_less_sink_falls_back_to_fused() {
 fn per_stream_inflight_never_exceeds_window_and_all_streams_carry() {
     // Each data stream owns an independent credit window: no stream may
     // ever have more than `send_window` un-acked NEW_BLOCKs on its wire,
-    // and with OSTs sharded `ost % K` every stream actually carries
-    // payload (the shard spreads an 11-OST layout over 4 streams).
+    // and with OSTs sharded by the bytes-weighted LPT plan every stream
+    // actually carries payload (the plan spreads an 11-OST layout over 4
+    // streams).
     let mut cfg = Config::for_tests("mstream-inflight");
     cfg.data_streams = 4;
     cfg.send_window = 2;
