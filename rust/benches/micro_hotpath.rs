@@ -34,6 +34,11 @@
 //!                   wire-bound workload: the best-epoch goodput must
 //!                   reach ≥ 0.9× a hand-tuned static run and ≥ 2× the
 //!                   pessimal run — the §A12 convergence table
+//!   serve           multi-job daemon: J concurrent jobs through one
+//!                   in-process `Serve`, weighted fair-share dispatch
+//!                   order under a full admission queue, and cross-job
+//!                   OST steering via the shared congestion registry
+//!                   (registry-informed vs blind) — the §A13 tables
 //!
 //! Plain timing mains (no criterion offline); each reports mean ± 99 % CI
 //! over fixed iteration counts with warmup. With `FTLADS_BENCH_JSON_DIR`
@@ -395,7 +400,7 @@ fn bench_zero_copy() {
 /// coalesce than with coalescing off, with byte-verified content either
 /// way and every object still individually acked.
 fn bench_write_coalesce() {
-    use ftlads::coordinator::run_transfer;
+    use ftlads::coordinator::TransferJob;
     use ftlads::pfs::sim::SimPfs;
     use std::sync::Arc;
     use std::time::Duration;
@@ -420,14 +425,11 @@ fn bench_write_coalesce() {
         let files: Vec<String> = wl.files.iter().map(|f| f.name.clone()).collect();
         let env = SimEnv { cfg, source, sink, files };
         let started = std::time::Instant::now();
-        let out = run_transfer(
-            &env.cfg,
-            env.source.clone(),
-            env.sink.clone(),
-            &TransferSpec::fresh(env.files.clone()),
-            None,
-        )
-        .unwrap();
+        let out = TransferJob::builder(&env.cfg, &TransferSpec::fresh(env.files.clone()))
+            .source_pfs(env.source.clone())
+            .sink_pfs(env.sink.clone())
+            .run()
+            .unwrap();
         let elapsed = started.elapsed();
         assert!(out.completed, "coalesce={coalesce}: {:?}", out.fault);
         env.verify_sink_complete().unwrap();
@@ -739,6 +741,225 @@ fn bench_autotune() {
     }
 }
 
+/// §A13 headline tables: the multi-job `ftlads serve` daemon, all three
+/// axes. (a) Job scaling — J identical wire-bound transfers submitted to
+/// one in-process [`Serve`] with four admission slots: every job must
+/// complete byte-verified and the daemon counters must account for every
+/// submission. (b) Weighted fair-share dispatch — a single admission
+/// slot with a warmup job holding it while two tenants (weights 2:1)
+/// queue alternately: the dispatch order must favour the heavy tenant
+/// 2:1, not FIFO. (c) Cross-job OST steering — two concurrent jobs on
+/// slow serial storage, shared registry on vs off: registry-informed
+/// runs must record foreign-load-aware picks (`shared_picks`) and
+/// actual steers away from the other job's hot OSTs (`shared_avoids`);
+/// registry-blind runs must record exactly zero of both.
+fn bench_serve() {
+    use ftlads::coordinator::serve::{JobRequest, Serve};
+    use ftlads::pfs::sim::SimPfs;
+    use std::sync::Arc;
+
+    let quick = std::env::var("FTLADS_BENCH_SCALE").as_deref() == Ok("quick");
+    let (files, blocks) = if quick { (4usize, 4u64) } else { (6, 8) };
+
+    let wire_cfg = |tag: &str| {
+        let mut cfg = Config::for_tests(tag);
+        cfg.io_threads = 2;
+        // Wire-bound in real time so concurrent jobs genuinely overlap:
+        // ~330 µs to serialize one 64 KiB object, free storage.
+        cfg.time_scale = 1.0;
+        cfg.net_bandwidth = 2.0e8;
+        cfg.net_latency_us = 5;
+        cfg.ost_bandwidth = f64::INFINITY;
+        cfg.ost_latency_us = 0;
+        cfg.ost_concurrent = 8;
+        cfg.send_window = 8;
+        cfg.rma_bytes = 8 * cfg.object_size as usize;
+        cfg
+    };
+    let make_job = |cfg: &Config, seed: u64| {
+        let wl = workload::big_workload(files, blocks * cfg.object_size);
+        let source = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), seed));
+        source.populate(&wl.as_tuples());
+        let sink = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), seed));
+        let names: Vec<String> = wl.files.iter().map(|f| f.name.clone()).collect();
+        let bytes = wl.total_bytes();
+        let req = JobRequest {
+            spec: TransferSpec::fresh(names.clone()),
+            source_pfs: source.clone() as Arc<dyn ftlads::pfs::Pfs>,
+            sink_pfs: sink.clone() as Arc<dyn ftlads::pfs::Pfs>,
+            runtime: None,
+        };
+        (req, source, sink, names, bytes)
+    };
+
+    // (a) job scaling through one daemon.
+    let mut rows = Vec::new();
+    for jobs in [1usize, 2, 4] {
+        let cfg = {
+            let mut c = wire_cfg(&format!("micro-serve-{jobs}"));
+            c.serve_max_jobs = 4;
+            c
+        };
+        let serve = Serve::new(cfg.clone());
+        let mut handles = Vec::new();
+        let mut envs = Vec::new();
+        let mut total_bytes = 0u64;
+        let started = std::time::Instant::now();
+        for j in 0..jobs {
+            let (req, source, sink, names, bytes) =
+                make_job(&cfg, cfg.seed + j as u64);
+            total_bytes += bytes;
+            envs.push(SimEnv { cfg: cfg.clone(), source, sink, files: names });
+            handles.push(serve.submit("bench", 1, req).unwrap());
+        }
+        let outs: Vec<_> =
+            handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        serve.drain();
+        let elapsed = started.elapsed();
+        for (out, env) in outs.iter().zip(&envs) {
+            assert!(out.completed, "serve jobs={jobs}: {:?}", out.fault);
+            env.verify_sink_complete().unwrap();
+        }
+        let stats = serve.stats();
+        assert_eq!(stats.jobs_submitted, jobs as u64);
+        assert_eq!(stats.jobs_completed, jobs as u64);
+        assert_eq!(stats.jobs_faulted, 0);
+        let mbps = total_bytes as f64 / elapsed.as_secs_f64() / 1e6;
+        rows.push(vec![
+            format!("{jobs}"),
+            format!("{:.1}", elapsed.as_secs_f64() * 1e3),
+            format!("{mbps:.1}"),
+            format!("{}", stats.peak_concurrent),
+        ]);
+        let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+    }
+    print_table(
+        "serve job scaling (concurrent jobs through one daemon)",
+        &["jobs", "ms", "aggregate MB/s", "peak concurrent"],
+        &rows,
+    );
+
+    // (b) weighted fair-share dispatch order. One admission slot; a
+    // warmup job holds it while six jobs from two tenants queue
+    // (alternating light, heavy — FIFO would alternate right back).
+    // Jobs run strictly serially, so completion order IS dispatch
+    // order; each run takes milliseconds, dwarfing the recording race.
+    let cfg = {
+        let mut c = wire_cfg("micro-serve-fair");
+        c.serve_max_jobs = 1;
+        c.net_latency_us = 100;
+        c
+    };
+    let serve = Serve::new(cfg.clone());
+    let (warm_req, _, _, _, _) = make_job(&cfg, cfg.seed + 100);
+    let warm = serve.submit("warmup", 1, warm_req).unwrap();
+    let (order_tx, order_rx) = std::sync::mpsc::channel();
+    let mut waiters = Vec::new();
+    for i in 0..6usize {
+        let (tenant, weight) =
+            if i % 2 == 0 { ("light", 1u32) } else { ("heavy", 2) };
+        let (req, _, _, _, _) = make_job(&cfg, cfg.seed + 200 + i as u64);
+        let handle = serve.submit(tenant, weight, req).unwrap();
+        let tx = order_tx.clone();
+        waiters.push(std::thread::spawn(move || {
+            let out = handle.wait().unwrap();
+            assert!(out.completed, "fair-share {tenant}: {:?}", out.fault);
+            let _ = tx.send(tenant);
+        }));
+    }
+    assert!(warm.wait().unwrap().completed);
+    let dispatch_order: Vec<&str> = (0..6).map(|_| order_rx.recv().unwrap()).collect();
+    for w in waiters {
+        w.join().unwrap();
+    }
+    serve.drain();
+    let heavy_first3 =
+        dispatch_order.iter().take(3).filter(|t| **t == "heavy").count();
+    assert!(
+        heavy_first3 >= 2,
+        "weight 2 must take >= 2 of the first 3 dispatch slots, got \
+         {dispatch_order:?}"
+    );
+    let rows: Vec<Vec<String>> = dispatch_order
+        .iter()
+        .enumerate()
+        .map(|(i, t)| vec![format!("{}", i + 1), (*t).to_string()])
+        .collect();
+    print_table(
+        "serve fair-share dispatch (2 tenants, weight 2:1, one slot)",
+        &["dispatch slot", "tenant"],
+        &rows,
+    );
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+
+    // (c) cross-job OST steering: storage-bound (slow strictly-serial
+    // OSTs, near-free wire) so both jobs hold deep in-flight OST queues
+    // the whole run — the shared registry is what lets each job's
+    // congestion scheduler see the other's.
+    let mut rows = Vec::new();
+    for informed in [true, false] {
+        let cfg = {
+            let mut c = wire_cfg(&format!("micro-steer-{informed}"));
+            c.serve_max_jobs = 2;
+            c.serve_registry = informed;
+            c.net_bandwidth = 1e12;
+            c.net_latency_us = 0;
+            c.ost_bandwidth = 1e12;
+            c.ost_latency_us = 200;
+            c.ost_concurrent = 1;
+            c.send_window = 16;
+            c.rma_bytes = 16 * c.object_size as usize;
+            c
+        };
+        let serve = Serve::new(cfg.clone());
+        let started = std::time::Instant::now();
+        let handles: Vec<_> = (0..2u64)
+            .map(|j| {
+                let (req, _, _, _, _) = make_job(&cfg, cfg.seed + j);
+                serve.submit("steer", 1, req).unwrap()
+            })
+            .collect();
+        let outs: Vec<_> =
+            handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        serve.drain();
+        let elapsed = started.elapsed();
+        let mut picks = 0u64;
+        let mut avoids = 0u64;
+        for out in &outs {
+            assert!(out.completed, "steer informed={informed}: {:?}", out.fault);
+            picks += out.source_sched.shared_picks + out.sink_sched.shared_picks;
+            avoids +=
+                out.source_sched.shared_avoids + out.sink_sched.shared_avoids;
+        }
+        if informed {
+            assert!(
+                picks > 0,
+                "registry-informed overlap must see foreign load at pick time"
+            );
+            assert!(
+                avoids > 0,
+                "registry-informed picks must steer around the other job's \
+                 hot OSTs at least once ({picks} foreign-load picks)"
+            );
+        } else {
+            assert_eq!(picks, 0, "registry off must never consult foreign load");
+            assert_eq!(avoids, 0);
+        }
+        rows.push(vec![
+            if informed { "informed" } else { "blind" }.to_string(),
+            format!("{picks}"),
+            format!("{avoids}"),
+            format!("{:.1}", elapsed.as_secs_f64() * 1e3),
+        ]);
+        let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+    }
+    print_table(
+        "cross-job OST steering (2 jobs, shared registry vs blind)",
+        &["registry", "foreign-load picks", "steered picks", "ms"],
+        &rows,
+    );
+}
+
 fn bench_recovery_parse() {
     let blocks_per_file = 256u32;
     let files = 64usize;
@@ -915,6 +1136,7 @@ fn main() {
     bench_write_coalesce();
     bench_multi_stream();
     bench_autotune();
+    bench_serve();
     bench_recovery_parse();
     let _ = ftlads::bench_support::write_json_summary("micro_hotpath");
 }

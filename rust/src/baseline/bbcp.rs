@@ -193,6 +193,13 @@ pub fn run_bbcp(
         send_window_effective: 1,
         ack_batch_effective: 1,
         rma_bytes_effective: 0, // bbcp has no RMA slot pool
+        data_streams: 1,
+        tune_epochs: 0, // bbcp has no online autotuner
+        tune_grows: 0,
+        tune_shrinks: 0,
+        tune_reverts: 0,
+        goodput_final: 0.0,
+        tune_trajectory: Vec::new(),
     })
 }
 
@@ -273,6 +280,7 @@ fn bbcp_source(
         ack_batch: 1,
         send_window: 1,
         data_streams: 1,
+        job: 0,
     })
     .map_err(|e| anyhow::anyhow!("connect: {e}"))?;
     match ep.recv_timeout(Duration::from_secs(10)) {

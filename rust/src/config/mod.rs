@@ -120,6 +120,17 @@ pub struct Config {
     /// Autotuner epoch length in milliseconds: the controller samples
     /// goodput and moves at most one knob per epoch.
     pub tune_epoch_ms: u64,
+    /// `ftlads serve` admission cap: how many transfer jobs the daemon
+    /// runs concurrently; excess submissions queue (weighted fair-share
+    /// order) until a slot frees. Irrelevant outside serve mode.
+    pub serve_max_jobs: usize,
+    /// `ftlads serve` cross-job congestion registry: when true (default)
+    /// every job charges its in-flight per-OST requests into one shared
+    /// daemon-wide registry, and each job's dequeue policy folds the
+    /// *other* jobs' load into its congestion view — steering around
+    /// OSTs a concurrent job is hammering. False runs each job
+    /// registry-blind (the A/B baseline for §A13).
+    pub serve_registry: bool,
     /// Integrity verification backend.
     pub integrity: IntegrityMode,
     /// OST dequeue policy for the source's IO threads (§2.1; see
@@ -169,6 +180,8 @@ impl Default for Config {
             rma_autosize: false,
             tune: false,
             tune_epoch_ms: 100,
+            serve_max_jobs: 4,
+            serve_registry: true,
             integrity: IntegrityMode::Native,
             scheduler: SchedPolicy::CongestionAware,
             sink_scheduler: None,
@@ -319,6 +332,8 @@ impl Config {
             "rma_autosize" => self.rma_autosize = parse_bool(value)?,
             "tune" => self.tune = parse_bool(value)?,
             "tune_epoch_ms" => self.tune_epoch_ms = value.parse()?,
+            "serve_max_jobs" => self.serve_max_jobs = value.parse()?,
+            "serve_registry" => self.serve_registry = parse_bool(value)?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
             "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
             "sink_scheduler" => {
@@ -382,6 +397,10 @@ impl Config {
         anyhow::ensure!(
             (1..=64u32).contains(&self.data_streams),
             "data_streams must be in 1..=64"
+        );
+        anyhow::ensure!(
+            (1..=1024).contains(&self.serve_max_jobs),
+            "serve_max_jobs must be in 1..=1024"
         );
         Ok(())
     }
@@ -562,6 +581,29 @@ mod tests {
         c.apply_kv("ack_adaptive", "1").unwrap();
         assert!(c.ack_adaptive);
         assert!(c.apply_kv("ack_adaptive", "maybe").is_err());
+    }
+
+    #[test]
+    fn serve_kv_defaults_and_validation() {
+        let mut c = Config::default();
+        // Serve defaults: a small admission cap, registry-informed
+        // scheduling on.
+        assert_eq!(c.serve_max_jobs, 4);
+        assert!(c.serve_registry);
+        c.apply_kv("serve_max_jobs", "2").unwrap();
+        assert_eq!(c.serve_max_jobs, 2);
+        assert!(c.validate().is_ok());
+        c.apply_kv("serve_registry", "off").unwrap();
+        assert!(!c.serve_registry);
+        assert!(c.validate().is_ok(), "registry-blind serve is a valid A/B mode");
+        c.serve_max_jobs = 0;
+        assert!(c.validate().is_err(), "serve_max_jobs 0 rejected");
+        c.serve_max_jobs = 1025;
+        assert!(c.validate().is_err(), "serve_max_jobs above cap rejected");
+        c.serve_max_jobs = 1024;
+        assert!(c.validate().is_ok());
+        assert!(c.apply_kv("serve_max_jobs", "lots").is_err());
+        assert!(c.apply_kv("serve_registry", "maybe").is_err());
     }
 
     #[test]

@@ -7,13 +7,18 @@
 //! `cfg.sink_scheduler` (defaulting to the same policy), so asymmetric
 //! source/sink scheduling experiments need no code changes.
 //!
-//! Entry point: [`run_transfer`] wires a source and a sink over an
+//! Entry point: [`TransferJob`] wires a source and a sink over an
 //! in-process channel transport (the Verbs-like path), runs the transfer
-//! to completion or injected fault, and reports timing/counters/space.
-//! The `ftlads` CLI's two-process mode uses the same source/sink nodes
-//! over the TCP transport instead.
+//! to completion or injected fault, and reports timing/counters/space —
+//! `TransferJob::builder(&cfg, &spec).source_pfs(..).sink_pfs(..).run()`.
+//! The `ftlads` CLI's two-process mode uses the same source/sink
+//! sessions ([`source::SourceSession`], [`sink::SinkSession`]) over the
+//! TCP transport instead, and [`serve`] runs many such jobs concurrently
+//! inside one long-lived daemon with a shared cross-job OST congestion
+//! registry.
 
 pub mod queues;
+pub mod serve;
 pub mod shard;
 pub mod sink;
 pub mod source;
@@ -28,6 +33,7 @@ use crate::fault::FaultPlan;
 use crate::ftlog::SpaceStats;
 use crate::metrics::{CounterSnapshot, ResourceReport, Sampler};
 use crate::net::{channel, Endpoint};
+use crate::pfs::registry::JobOstHandle;
 use crate::pfs::Pfs;
 use crate::runtime::RuntimeHandle;
 use crate::sched::SchedSnapshot;
@@ -198,91 +204,214 @@ impl TransferOutcome {
     }
 }
 
-/// Run one transfer session over the in-process channel transport.
+/// One in-process transfer job, built with [`TransferJob::builder`]:
+/// the replacement for the historical five-positional-argument
+/// `run_transfer(cfg, source_pfs, sink_pfs, spec, runtime)`.
 ///
-/// `runtime` is required when `cfg.integrity == Pjrt` (the sink's verify
-/// path executes the compiled digest artifact through it).
-pub fn run_transfer(
-    cfg: &Config,
-    source_pfs: Arc<dyn Pfs>,
-    sink_pfs: Arc<dyn Pfs>,
-    spec: &TransferSpec,
+/// ```ignore
+/// let outcome = TransferJob::builder(&cfg, &spec)
+///     .source_pfs(source)
+///     .sink_pfs(sink)
+///     .runtime(runtime)            // only needed for integrity = pjrt
+///     .run()?;
+/// ```
+///
+/// Under [`serve`] each job additionally gets a [`Self::job_id`] (its
+/// own FT logger namespace, `<ft_dir>/job-<id>`) and a pair of shared
+/// OST registry handles so concurrently running jobs steer around each
+/// other's in-flight load. At the defaults (no id, no registry) the job
+/// is behavior- and wire-identical to a standalone `run_transfer`.
+pub struct TransferJob {
+    cfg: Config,
+    spec: TransferSpec,
+    source_pfs: Option<Arc<dyn Pfs>>,
+    sink_pfs: Option<Arc<dyn Pfs>>,
     runtime: Option<RuntimeHandle>,
-) -> Result<TransferOutcome> {
-    cfg.validate()?;
-    if cfg.integrity == crate::integrity::IntegrityMode::Pjrt {
-        let rt = runtime
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("integrity=pjrt requires a RuntimeHandle"))?;
-        anyhow::ensure!(
-            rt.manifest.object_bytes as u64 == cfg.object_size,
-            "object_size {} does not match artifact object size {} — rebuild artifacts \
-             or set object_size = {}",
-            cfg.object_size,
-            rt.manifest.object_bytes,
-            rt.manifest.object_bytes
-        );
-    }
+    job_id: u64,
+    shared_source_osts: Option<Arc<JobOstHandle>>,
+    shared_sink_osts: Option<Arc<JobOstHandle>>,
+}
 
-    // Total dataset bytes — the denominator for %-of-transfer fault points.
-    let mut total_bytes = 0u64;
-    for name in &spec.files {
-        let (_, meta) = source_pfs
-            .lookup(name)
-            .ok_or_else(|| anyhow::anyhow!("file '{name}' not on source PFS"))?;
-        anyhow::ensure!(meta.size > 0, "zero-size file '{name}' not supported");
-        total_bytes += meta.size;
-    }
-
-    let fault = spec.fault.arm(total_bytes);
-    let (src_ep, sink_ep) = channel::pair(cfg.wire(), fault.clone());
-    let src_ep: Arc<dyn Endpoint> = Arc::new(src_ep);
-    let sink_ep: Arc<dyn Endpoint> = Arc::new(sink_ep);
-
-    // Pre-establish the data plane: one extra channel pair per requested
-    // stream, all sharing the session's fault controller — a payload-
-    // threshold fault severs the control AND every data connection at
-    // once, like a real node failure. The nodes only consume these when
-    // CONNECT negotiates data_streams ≥ 2; a fused session (K = 1)
-    // leaves them untouched (and unbuilt: no pairs at K = 1, so the
-    // default path allocates exactly what the seed did).
-    let k = cfg.data_streams.max(1);
-    let mut src_data: Vec<Arc<dyn Endpoint>> = Vec::new();
-    let mut snk_data: Vec<Arc<dyn Endpoint>> = Vec::new();
-    if k >= 2 {
-        for _ in 0..k {
-            let (s, d) = channel::pair(cfg.wire(), fault.clone());
-            src_data.push(Arc::new(s));
-            snk_data.push(Arc::new(d));
+impl TransferJob {
+    /// Start describing a job. The config and spec are cloned so the
+    /// job owns its state and can run on a daemon worker thread.
+    pub fn builder(cfg: &Config, spec: &TransferSpec) -> TransferJob {
+        TransferJob {
+            cfg: cfg.clone(),
+            spec: spec.clone(),
+            source_pfs: None,
+            sink_pfs: None,
+            runtime: None,
+            job_id: 0,
+            shared_source_osts: None,
+            shared_sink_osts: None,
         }
     }
 
-    let sampler = Sampler::start(Duration::from_millis(20));
-    let started = Instant::now();
+    /// The PFS the files are read from (required).
+    pub fn source_pfs(mut self, pfs: Arc<dyn Pfs>) -> Self {
+        self.source_pfs = Some(pfs);
+        self
+    }
 
-    let sink_node = sink::spawn_sink_multi(
-        cfg,
-        sink_pfs,
-        sink_ep,
-        DataPlane::Ready(snk_data),
-        runtime,
-    )?;
-    let source_report = source::run_source_multi(
-        cfg,
-        source_pfs,
-        src_ep.clone(),
-        DataPlane::Ready(src_data.clone()),
-        spec,
-    )?;
-    let sink_report = sink_node.join();
-    let elapsed = started.elapsed();
-    let resources = sampler.finish();
+    /// The PFS the files are written to (required).
+    pub fn sink_pfs(mut self, pfs: Arc<dyn Pfs>) -> Self {
+        self.sink_pfs = Some(pfs);
+        self
+    }
 
-    let fault_msg = source_report.fault.clone().or(sink_report.fault);
-    let completed =
-        fault_msg.is_none() && source_report.files_done as usize == spec.files.len();
+    /// PJRT runtime handle, required when `cfg.integrity == Pjrt` (the
+    /// sink's verify path executes the compiled digest artifact
+    /// through it).
+    pub fn runtime(mut self, runtime: Option<RuntimeHandle>) -> Self {
+        self.runtime = runtime;
+        self
+    }
 
-    Ok(TransferOutcome {
+    /// A daemon job id. Non-zero ids give the job its own FT logger
+    /// namespace (`<ft_dir>/job-<id>`) so concurrent jobs' object logs
+    /// never interleave — and each resumes from exactly its own log.
+    /// 0 (the default) keeps the configured `ft_dir` as-is.
+    pub fn job_id(mut self, id: u64) -> Self {
+        self.job_id = id;
+        self
+    }
+
+    /// Attach the job's handle on a daemon-wide *source-side* OST
+    /// registry (see [`crate::pfs::OstRegistry`]).
+    pub fn shared_source_osts(mut self, handle: Arc<JobOstHandle>) -> Self {
+        self.shared_source_osts = Some(handle);
+        self
+    }
+
+    /// Attach the job's handle on a daemon-wide *sink-side* OST
+    /// registry.
+    pub fn shared_sink_osts(mut self, handle: Arc<JobOstHandle>) -> Self {
+        self.shared_sink_osts = Some(handle);
+        self
+    }
+
+    /// Run the job over the in-process channel transport, to completion
+    /// or injected fault.
+    pub fn run(self) -> Result<TransferOutcome> {
+        let TransferJob {
+            mut cfg,
+            spec,
+            source_pfs,
+            sink_pfs,
+            runtime,
+            job_id,
+            shared_source_osts,
+            shared_sink_osts,
+        } = self;
+        let source_pfs =
+            source_pfs.ok_or_else(|| anyhow::anyhow!("TransferJob needs a source_pfs"))?;
+        let sink_pfs =
+            sink_pfs.ok_or_else(|| anyhow::anyhow!("TransferJob needs a sink_pfs"))?;
+        if job_id != 0 {
+            // Per-job FT namespace: logs (and §5.2.2 resume) are scoped
+            // to the job, independent of the wire-level job tag.
+            cfg.ft_dir = cfg.ft_dir.join(format!("job-{job_id}"));
+        }
+        cfg.validate()?;
+        if cfg.integrity == crate::integrity::IntegrityMode::Pjrt {
+            let rt = runtime
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("integrity=pjrt requires a RuntimeHandle"))?;
+            anyhow::ensure!(
+                rt.manifest.object_bytes as u64 == cfg.object_size,
+                "object_size {} does not match artifact object size {} — rebuild artifacts \
+                 or set object_size = {}",
+                cfg.object_size,
+                rt.manifest.object_bytes,
+                rt.manifest.object_bytes
+            );
+        }
+
+        // Total dataset bytes — the denominator for %-of-transfer fault
+        // points.
+        let mut total_bytes = 0u64;
+        for name in &spec.files {
+            let (_, meta) = source_pfs
+                .lookup(name)
+                .ok_or_else(|| anyhow::anyhow!("file '{name}' not on source PFS"))?;
+            anyhow::ensure!(meta.size > 0, "zero-size file '{name}' not supported");
+            total_bytes += meta.size;
+        }
+
+        let fault = spec.fault.arm(total_bytes);
+        let (src_ep, sink_ep) = channel::pair(cfg.wire(), fault.clone());
+        let src_ep: Arc<dyn Endpoint> = Arc::new(src_ep);
+        let sink_ep: Arc<dyn Endpoint> = Arc::new(sink_ep);
+
+        // Pre-establish the data plane: one extra channel pair per
+        // requested stream, all sharing the session's fault controller —
+        // a payload-threshold fault severs the control AND every data
+        // connection at once, like a real node failure. The nodes only
+        // consume these when CONNECT negotiates data_streams ≥ 2; a
+        // fused session (K = 1) leaves them untouched (and unbuilt: no
+        // pairs at K = 1, so the default path allocates exactly what the
+        // seed did).
+        let k = cfg.data_streams.max(1);
+        let mut src_data: Vec<Arc<dyn Endpoint>> = Vec::new();
+        let mut snk_data: Vec<Arc<dyn Endpoint>> = Vec::new();
+        if k >= 2 {
+            for _ in 0..k {
+                let (s, d) = channel::pair(cfg.wire(), fault.clone());
+                src_data.push(Arc::new(s));
+                snk_data.push(Arc::new(d));
+            }
+        }
+
+        let sampler = Sampler::start(Duration::from_millis(20));
+        let started = Instant::now();
+
+        let mut sink_session = sink::SinkSession::new(&cfg, sink_pfs, sink_ep)
+            .data_plane(DataPlane::Ready(snk_data))
+            .runtime(runtime);
+        if let Some(h) = shared_sink_osts {
+            sink_session = sink_session.shared_osts(h);
+        }
+        let sink_node = sink_session.spawn()?;
+        let mut source_session =
+            source::SourceSession::new(&cfg, source_pfs, src_ep.clone())
+                .data_plane(DataPlane::Ready(src_data.clone()));
+        if let Some(h) = shared_source_osts {
+            source_session = source_session.shared_osts(h);
+        }
+        let source_report = source_session.run(&spec)?;
+        let sink_report = sink_node.join();
+        let elapsed = started.elapsed();
+        let resources = sampler.finish();
+
+        let fault_msg = source_report.fault.clone().or(sink_report.fault);
+        let completed =
+            fault_msg.is_none() && source_report.files_done as usize == spec.files.len();
+
+        Ok(assemble_outcome(
+            completed,
+            fault_msg,
+            elapsed,
+            resources,
+            src_ep.payload_sent()
+                + src_data.iter().map(|ep| ep.payload_sent()).sum::<u64>(),
+            source_report,
+            sink_report,
+        ))
+    }
+}
+
+/// Fold the two session reports into the job's [`TransferOutcome`].
+fn assemble_outcome(
+    completed: bool,
+    fault_msg: Option<String>,
+    elapsed: Duration,
+    resources: ResourceReport,
+    payload_bytes: u64,
+    source_report: source::SourceReport,
+    sink_report: sink::SinkReport,
+) -> TransferOutcome {
+    TransferOutcome {
         completed,
         fault: fault_msg,
         elapsed,
@@ -292,9 +421,8 @@ pub fn run_transfer(
         resources,
         // NEW_BLOCK payload crosses whichever connection carried it:
         // the fused control connection at K = 1, the data connections
-        // at K ≥ 2.
-        payload_bytes: src_ep.payload_sent()
-            + src_data.iter().map(|ep| ep.payload_sent()).sum::<u64>(),
+        // at K ≥ 2 — the caller sums the endpoints it created.
+        payload_bytes,
         rma_stalls_src: source_report.rma_stalls,
         rma_stalls_snk: sink_report.rma_stalls,
         source_sched: source_report.sched,
@@ -319,7 +447,28 @@ pub fn run_transfer(
             .map(|t| format!("src {t}"))
             .chain(sink_report.tune_trajectory.iter().map(|t| format!("snk {t}")))
             .collect(),
-    })
+    }
+}
+
+/// Run one transfer session over the in-process channel transport.
+///
+/// `runtime` is required when `cfg.integrity == Pjrt` (the sink's verify
+/// path executes the compiled digest artifact through it).
+#[deprecated(
+    note = "use TransferJob::builder(cfg, spec).source_pfs(..).sink_pfs(..).runtime(..).run()"
+)]
+pub fn run_transfer(
+    cfg: &Config,
+    source_pfs: Arc<dyn Pfs>,
+    sink_pfs: Arc<dyn Pfs>,
+    spec: &TransferSpec,
+    runtime: Option<RuntimeHandle>,
+) -> Result<TransferOutcome> {
+    TransferJob::builder(cfg, spec)
+        .source_pfs(source_pfs)
+        .sink_pfs(sink_pfs)
+        .runtime(runtime)
+        .run()
 }
 
 /// Convenience harness: a SimPfs pair populated with a workload. Used by
@@ -349,7 +498,7 @@ impl SimEnv {
     }
 
     pub fn run(&self, spec: &TransferSpec) -> Result<TransferOutcome> {
-        run_transfer(&self.cfg, self.source.clone(), self.sink.clone(), spec, None)
+        self.run_with_runtime(spec, None)
     }
 
     pub fn run_with_runtime(
@@ -357,7 +506,11 @@ impl SimEnv {
         spec: &TransferSpec,
         runtime: Option<RuntimeHandle>,
     ) -> Result<TransferOutcome> {
-        run_transfer(&self.cfg, self.source.clone(), self.sink.clone(), spec, runtime)
+        TransferJob::builder(&self.cfg, spec)
+            .source_pfs(self.source.clone())
+            .sink_pfs(self.sink.clone())
+            .runtime(runtime)
+            .run()
     }
 
     /// Check every byte of every file arrived intact at the sink: all

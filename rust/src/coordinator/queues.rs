@@ -20,7 +20,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::pfs::ost::{OstId, OstModel};
-use crate::sched::{CongestionAware, QueueView, SchedStats, Scheduler};
+use crate::sched::{CongestionAware, OstCongestion, QueueView, SchedStats, Scheduler};
 
 /// Work queues for one side's IO threads. `T` is the request type
 /// (source: block reads; sink: block writes).
@@ -111,25 +111,27 @@ impl<T> OstQueues<T> {
     /// out-of-range OST falls back to the lowest-id non-empty queue, so
     /// progress never depends on policy correctness.
     pub fn pop_next(&self, sched: &dyn Scheduler, osts: &OstModel) -> Option<(OstId, T)> {
-        self.pop_next_inner(sched, osts, None)
+        self.pop_next_inner(sched, &OstCongestion::local(osts), None)
     }
 
-    /// [`pop_next`](Self::pop_next) that also records pick count, pick
-    /// latency, and fallback picks into `stats` — the coordinator entry
-    /// point behind the per-policy counters in `TransferOutcome`.
+    /// [`pop_next`](Self::pop_next) that dequeues through a full
+    /// [`OstCongestion`] view (own depth + cross-job foreign load under a
+    /// serve daemon) and records pick count, pick latency, fallback picks,
+    /// and cross-job steering into `stats` — the coordinator entry point
+    /// behind the per-policy counters in `TransferOutcome`.
     pub fn pop_next_timed(
         &self,
         sched: &dyn Scheduler,
-        osts: &OstModel,
+        cong: &OstCongestion<'_>,
         stats: &SchedStats,
     ) -> Option<(OstId, T)> {
-        self.pop_next_inner(sched, osts, Some(stats))
+        self.pop_next_inner(sched, cong, Some(stats))
     }
 
     fn pop_next_inner(
         &self,
         sched: &dyn Scheduler,
-        osts: &OstModel,
+        cong: &OstCongestion<'_>,
         stats: Option<&SchedStats>,
     ) -> Option<(OstId, T)> {
         let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
@@ -144,7 +146,7 @@ impl<T> OstQueues<T> {
                 }
                 let view = QueueView { len: &g.len_scratch, head_seq: &g.seq_scratch };
                 let pick_started = stats.map(|_| std::time::Instant::now());
-                let picked = sched.pick(&view, osts);
+                let picked = sched.pick(&view, cong);
                 let (idx, fallback) = match picked {
                     Some(o) if (o.0 as usize) < n && !g.queues[o.0 as usize].is_empty() => {
                         (o.0 as usize, false)
@@ -159,6 +161,20 @@ impl<T> OstQueues<T> {
                 };
                 if let (Some(stats), Some(t0)) = (stats, pick_started) {
                     stats.record_pick(t0.elapsed(), fallback);
+                    // Cross-job steering accounting: the pick counts as
+                    // "shared" when another job's load was visible on at
+                    // least one candidate, and as an "avoid" when the
+                    // chosen OST itself carried none of it. One pass, no
+                    // second `pick` — policies like RoundRobin mutate
+                    // state per consultation.
+                    if cong.has_shared() {
+                        let any_foreign = (0..n).any(|i| {
+                            g.len_scratch[i] > 0 && cong.foreign(OstId(i as u32)) > 0
+                        });
+                        if any_foreign {
+                            stats.record_shared(cong.foreign(OstId(idx as u32)) == 0);
+                        }
+                    }
                 }
                 let (_, item) = g.queues[idx].pop_front().unwrap();
                 g.queued -= 1;
@@ -517,7 +533,7 @@ mod tests {
             fn name(&self) -> &'static str {
                 "bogus"
             }
-            fn pick(&self, _view: &QueueView<'_>, _osts: &OstModel) -> Option<OstId> {
+            fn pick(&self, _view: &QueueView<'_>, _cong: &OstCongestion<'_>) -> Option<OstId> {
                 Some(OstId(999)) // out of range
             }
         }
@@ -529,7 +545,10 @@ mod tests {
         // And the timed variant counts the fallback.
         q.push(OstId(0), 6);
         let stats = SchedStats::default();
-        assert_eq!(q.pop_next_timed(&Bogus, &m, &stats), Some((OstId(0), 6)));
+        assert_eq!(
+            q.pop_next_timed(&Bogus, &OstCongestion::local(&m), &stats),
+            Some((OstId(0), 6))
+        );
         let snap = stats.snapshot();
         assert_eq!(snap.picks, 1);
         assert_eq!(snap.fallback_picks, 1);
@@ -542,11 +561,57 @@ mod tests {
         let stats = SchedStats::default();
         q.push_batch([(OstId(0), 1u32), (OstId(1), 2), (OstId(2), 3)]);
         for _ in 0..3 {
-            assert!(q.pop_next_timed(&CongestionAware, &m, &stats).is_some());
+            assert!(q
+                .pop_next_timed(&CongestionAware, &OstCongestion::local(&m), &stats)
+                .is_some());
         }
         let snap = stats.snapshot();
         assert_eq!(snap.picks, 3);
         assert_eq!(snap.fallback_picks, 0);
+        // No registry handle: never counted as a shared pick.
+        assert_eq!(snap.shared_picks, 0);
+        assert_eq!(snap.shared_avoids, 0);
+    }
+
+    #[test]
+    fn pop_next_timed_counts_cross_job_steering() {
+        use crate::pfs::registry::OstRegistry;
+        let q: OstQueues<u32> = OstQueues::new(3);
+        let m = model(3);
+        let reg = OstRegistry::new(3);
+        let me = reg.handle();
+        let other = reg.handle();
+        // Another job saturates OST 0.
+        for _ in 0..4 {
+            other.begin(OstId(0));
+        }
+        q.push_batch([(OstId(0), 1u32), (OstId(1), 2)]);
+        let stats = SchedStats::default();
+        let cong = OstCongestion::with_shared(&m, Some(&me));
+        // Foreign depth 4 on OST 0 steers the pick to OST 1 → an avoid.
+        assert_eq!(
+            q.pop_next_timed(&CongestionAware, &cong, &stats),
+            Some((OstId(1), 2))
+        );
+        // Only the hot OST remains: forced onto it → shared, not avoided.
+        assert_eq!(
+            q.pop_next_timed(&CongestionAware, &cong, &stats),
+            Some((OstId(0), 1))
+        );
+        let snap = stats.snapshot();
+        assert_eq!(snap.picks, 2);
+        assert_eq!(snap.shared_picks, 2);
+        assert_eq!(snap.shared_avoids, 1);
+        // Once the other job drains, picks stop counting as shared.
+        for _ in 0..4 {
+            other.end(OstId(0));
+        }
+        q.push(OstId(2), 3);
+        assert_eq!(
+            q.pop_next_timed(&CongestionAware, &cong, &stats),
+            Some((OstId(2), 3))
+        );
+        assert_eq!(stats.snapshot().shared_picks, 2);
     }
 
     #[test]

@@ -1,0 +1,701 @@
+//! Multi-transfer service mode: one long-lived daemon running many
+//! concurrent transfer jobs, each a job-scoped coordinator session.
+//!
+//! Two front-ends share the same machinery:
+//!
+//! - **In-process** ([`Serve`]): a job manager embedded in one process.
+//!   [`Serve::submit`] queues a [`JobRequest`] under a tenant name and a
+//!   fair-share weight; an admission gate (`Config::serve_max_jobs`)
+//!   bounds how many jobs run at once, and queued jobs dispatch in
+//!   weighted fair-share order (the queued tenant with the smallest
+//!   `dispatched / weight` ratio goes first). Every job runs a full
+//!   [`TransferJob`] — source and sink halves — on its own worker
+//!   thread, with its own job id, FT logger namespace and
+//!   [`TransferOutcome`].
+//! - **TCP** ([`serve_sink`] / [`serve_source`]): the `ftlads serve`
+//!   subcommand. The sink daemon serves many jobs over ONE listener —
+//!   every inbound connection introduces itself with its first message,
+//!   and the wire-level job tag (trailing field of CONNECT and
+//!   STREAM_HELLO, absent/0 for standalone transfers) demultiplexes
+//!   control and data connections onto the right job session. The
+//!   source daemon drives N tagged jobs against such a sink.
+//!
+//! Either way, all jobs of a daemon share one cross-job
+//! [`OstRegistry`](crate::pfs::OstRegistry) per side (gated by
+//! `Config::serve_registry`): each job charges its in-flight per-OST
+//! requests into the registry, and every job's dequeue policy folds the
+//! *other* jobs' load into its congestion view — so the §2.1
+//! layout-aware scheduler steers around OSTs a concurrent job is
+//! already hammering, not just its own queue depths.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::sink::{SinkReport, SinkSession};
+use super::source::{SourceReport, SourceSession};
+use super::{DataPlane, TransferJob, TransferOutcome, TransferSpec};
+use crate::config::Config;
+use crate::metrics::{DaemonSnapshot, DaemonStats};
+use crate::net::{tcp, Endpoint, FaultController, Message, NetError};
+use crate::pfs::{OstRegistry, Pfs};
+use crate::runtime::RuntimeHandle;
+
+/// How long a session waits for the pieces of a job to arrive over TCP
+/// (data connections routed by the demultiplexer).
+const TCP_JOB_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Everything one in-process job needs: what to move and where.
+pub struct JobRequest {
+    pub spec: TransferSpec,
+    pub source_pfs: Arc<dyn Pfs>,
+    pub sink_pfs: Arc<dyn Pfs>,
+    /// PJRT runtime handle (required when `cfg.integrity == Pjrt`).
+    pub runtime: Option<RuntimeHandle>,
+}
+
+/// A submitted job's claim ticket: [`wait`](JobHandle::wait) blocks
+/// until the job ran (or failed to) and yields its outcome.
+pub struct JobHandle {
+    id: u64,
+    rx: mpsc::Receiver<Result<TransferOutcome>>,
+}
+
+impl JobHandle {
+    /// The daemon-assigned job id (also the job's FT namespace suffix:
+    /// its logs live under `<ft_dir>/job-<id>`).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the job finishes and collect its outcome. An `Err`
+    /// means the job could not run at all (e.g. bad request); a
+    /// completed-with-fault transfer is an `Ok` outcome with
+    /// `completed == false`.
+    pub fn wait(self) -> Result<TransferOutcome> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("serve: job {} worker vanished", self.id))?
+    }
+}
+
+/// One queued-but-not-yet-dispatched job.
+struct Queued {
+    id: u64,
+    tenant: String,
+    weight: u32,
+    req: JobRequest,
+    tx: mpsc::Sender<Result<TransferOutcome>>,
+}
+
+struct Inner {
+    queue: VecDeque<Queued>,
+    running: usize,
+    /// Jobs dispatched so far per tenant — the weighted-fair-share
+    /// numerator (`dispatched / weight` picks the next tenant).
+    dispatched: BTreeMap<String, u64>,
+    shutting_down: bool,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// The in-process serve manager. Create once per daemon with
+/// [`Serve::new`]; submit any number of jobs from any thread; call
+/// [`Serve::drain`] to wait for everything to finish.
+pub struct Serve {
+    cfg: Config,
+    src_registry: Arc<OstRegistry>,
+    snk_registry: Arc<OstRegistry>,
+    stats: DaemonStats,
+    next_id: AtomicU64,
+    inner: Mutex<Inner>,
+    idle: Condvar,
+}
+
+impl Serve {
+    pub fn new(cfg: Config) -> Arc<Serve> {
+        let osts = cfg.ost_count;
+        Arc::new(Serve {
+            cfg,
+            src_registry: OstRegistry::new(osts),
+            snk_registry: OstRegistry::new(osts),
+            stats: DaemonStats::default(),
+            next_id: AtomicU64::new(1),
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                running: 0,
+                dispatched: BTreeMap::new(),
+                shutting_down: false,
+                workers: Vec::new(),
+            }),
+            idle: Condvar::new(),
+        })
+    }
+
+    /// The daemon-wide source-side congestion registry (all jobs'
+    /// in-flight read requests, per OST).
+    pub fn source_registry(&self) -> &Arc<OstRegistry> {
+        &self.src_registry
+    }
+
+    /// The daemon-wide sink-side congestion registry.
+    pub fn sink_registry(&self) -> &Arc<OstRegistry> {
+        &self.snk_registry
+    }
+
+    pub fn stats(&self) -> DaemonSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Queue a job under `tenant` with a fair-share `weight` (≥ 1;
+    /// among queued jobs, the tenant with the smallest
+    /// `dispatched / weight` ratio dispatches first, so a weight-4
+    /// tenant gets 4× the dispatch slots of a weight-1 tenant under
+    /// contention). Returns immediately with the job's claim ticket.
+    pub fn submit(
+        self: &Arc<Serve>,
+        tenant: &str,
+        weight: u32,
+        req: JobRequest,
+    ) -> Result<JobHandle> {
+        self.stats.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if inner.shutting_down {
+            self.stats.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("serve: daemon is shutting down, job rejected");
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        inner.queue.push_back(Queued {
+            id,
+            tenant: tenant.to_string(),
+            weight: weight.max(1),
+            req,
+            tx,
+        });
+        self.dispatch_locked(&mut inner);
+        Ok(JobHandle { id, rx })
+    }
+
+    /// Wait until every submitted job has finished, then reap the
+    /// worker threads. New submissions are rejected from this point on.
+    pub fn drain(self: &Arc<Serve>) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.shutting_down = true;
+        while inner.running > 0 || !inner.queue.is_empty() {
+            inner = self
+                .idle
+                .wait(inner)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        let workers = std::mem::take(&mut inner.workers);
+        drop(inner);
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+
+    /// Dispatch queued jobs (fair-share order) while admission slots
+    /// are free. Called with the lock held, from submit and from worker
+    /// exit.
+    fn dispatch_locked(self: &Arc<Serve>, inner: &mut Inner) {
+        while inner.running < self.cfg.serve_max_jobs {
+            let Some(pos) = fair_pick(
+                inner.queue.iter().map(|q| (q.tenant.as_str(), q.weight)),
+                &inner.dispatched,
+            ) else {
+                break;
+            };
+            let q = inner.queue.remove(pos).expect("fair_pick returns a valid index");
+            *inner.dispatched.entry(q.tenant.clone()).or_insert(0) += 1;
+            inner.running += 1;
+            self.stats.jobs_admitted.fetch_add(1, Ordering::Relaxed);
+            self.stats.note_concurrent(inner.running as u64);
+            let this = self.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("serve-job-{}", q.id))
+                .spawn(move || this.run_job(q));
+            match spawned {
+                Ok(h) => inner.workers.push(h),
+                Err(e) => {
+                    // The queue entry is consumed either way; report the
+                    // spawn failure through the job's own channel.
+                    inner.running -= 1;
+                    self.stats.jobs_faulted.fetch_add(1, Ordering::Relaxed);
+                    // q was moved into the closure only on success; on
+                    // failure the closure was never created, but `q` is
+                    // gone with it — nothing further to notify.
+                    let _ = e;
+                }
+            }
+        }
+    }
+
+    /// Worker body: run one job to completion, record how it ended,
+    /// free the admission slot and dispatch successors.
+    fn run_job(self: Arc<Serve>, q: Queued) {
+        let mut builder = TransferJob::builder(&self.cfg, &q.req.spec)
+            .source_pfs(q.req.source_pfs)
+            .sink_pfs(q.req.sink_pfs)
+            .runtime(q.req.runtime)
+            .job_id(q.id);
+        if self.cfg.serve_registry {
+            builder = builder
+                .shared_source_osts(Arc::new(self.src_registry.handle()))
+                .shared_sink_osts(Arc::new(self.snk_registry.handle()));
+        }
+        let result = builder.run();
+        match &result {
+            Ok(out) if out.completed => {
+                self.stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                self.stats.jobs_faulted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let _ = q.tx.send(result);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.running -= 1;
+        self.dispatch_locked(&mut inner);
+        drop(inner);
+        self.idle.notify_all();
+    }
+}
+
+/// Weighted fair share: among the queued jobs, pick the index whose
+/// tenant has the smallest `dispatched / weight` ratio (compared
+/// cross-multiplied in integers — no float drift), breaking ties by
+/// queue order. `None` when the queue is empty.
+fn fair_pick<'a>(
+    queue: impl Iterator<Item = (&'a str, u32)>,
+    dispatched: &BTreeMap<String, u64>,
+) -> Option<usize> {
+    let mut best: Option<(usize, u64, u32)> = None; // (index, dispatched, weight)
+    for (i, (tenant, weight)) in queue.enumerate() {
+        let d = dispatched.get(tenant).copied().unwrap_or(0);
+        let better = match best {
+            None => true,
+            // d/w < bd/bw  <=>  d*bw < bd*w (weights are >= 1).
+            Some((_, bd, bw)) => (d as u128) * (bw as u128) < (bd as u128) * (weight as u128),
+        };
+        if better {
+            best = Some((i, d, weight));
+        }
+    }
+    best.map(|(i, _, _)| i)
+}
+
+// ---------------------------------------------------------------------------
+// TCP front-end
+// ---------------------------------------------------------------------------
+
+/// An endpoint whose first received message was already consumed by the
+/// serve demultiplexer (to route the connection): hand it back to the
+/// session before delegating to the real connection.
+struct ReplayEndpoint {
+    head: Mutex<Option<Message>>,
+    inner: Arc<dyn Endpoint>,
+}
+
+impl Endpoint for ReplayEndpoint {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        self.inner.send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        if let Some(m) = self.head.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            return Ok(m);
+        }
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        if let Some(m) = self.head.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            return Ok(m);
+        }
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+/// One TCP job waiting for (or holding) an admission slot.
+struct TcpPending {
+    job: u64,
+    ctrl: Arc<dyn Endpoint>,
+    data_rx: mpsc::Receiver<(u32, Arc<dyn Endpoint>)>,
+}
+
+/// Shared dispatch state of the sink daemon's accept loop and its
+/// session threads.
+struct TcpDispatch {
+    pending: Mutex<VecDeque<TcpPending>>,
+    running: Mutex<usize>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Serve `jobs` transfer jobs as the **sink** role of an `ftlads serve`
+/// daemon: one listener, many concurrent job sessions, demultiplexed by
+/// the wire-level job tag each connection leads with (CONNECT for
+/// control, STREAM_HELLO for data). Jobs beyond `cfg.serve_max_jobs`
+/// queue for an admission slot. Returns each job's sink report (in
+/// completion order) plus the daemon counters.
+pub fn serve_sink(
+    cfg: &Config,
+    listener: &TcpListener,
+    pfs: Arc<dyn Pfs>,
+    runtime: Option<RuntimeHandle>,
+    jobs: usize,
+) -> Result<(Vec<(u64, Result<SinkReport>)>, DaemonSnapshot)> {
+    let stats = Arc::new(DaemonStats::default());
+    let registry = OstRegistry::new(cfg.ost_count);
+    let dispatch = Arc::new(TcpDispatch {
+        pending: Mutex::new(VecDeque::new()),
+        running: Mutex::new(0),
+        workers: Mutex::new(Vec::new()),
+    });
+    // Job tag → that job's data-connection mailbox. Registered the
+    // moment the control connection arrives (even while the job queues
+    // for admission), so data connections never race the session.
+    type Mailboxes = Mutex<BTreeMap<u64, mpsc::Sender<(u32, Arc<dyn Endpoint>)>>>;
+    let mailboxes: Arc<Mailboxes> = Arc::new(Mutex::new(BTreeMap::new()));
+    let (done_tx, done_rx) = mpsc::channel::<(u64, Result<SinkReport>)>();
+
+    let mut accepted = 0usize;
+    while accepted < jobs {
+        let ep = tcp::accept(listener, cfg.wire(), FaultController::unarmed())?;
+        let ep: Arc<dyn Endpoint> = Arc::new(ep);
+        let first = match ep.recv_timeout(TCP_JOB_TIMEOUT) {
+            Ok(m) => m,
+            Err(_) => continue, // connection never introduced itself
+        };
+        match &first {
+            Message::Connect { job, .. } => {
+                let job = *job;
+                stats.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                let (tx, rx) = mpsc::channel();
+                mailboxes
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(job, tx);
+                let ctrl: Arc<dyn Endpoint> = Arc::new(ReplayEndpoint {
+                    head: Mutex::new(Some(first)),
+                    inner: ep,
+                });
+                dispatch
+                    .pending
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push_back(TcpPending { job, ctrl, data_rx: rx });
+                accepted += 1;
+                pump_tcp_jobs(
+                    cfg,
+                    &dispatch,
+                    &registry,
+                    &stats,
+                    &mailboxes,
+                    &pfs,
+                    &runtime,
+                    &done_tx,
+                );
+            }
+            Message::StreamHello { stream_id, job } => {
+                // A data connection for a registered job: route it to
+                // that job's connector. Unknown tags are dropped — the
+                // 30 s connector timeout surfaces the fault on the job.
+                let g = mailboxes.lock().unwrap_or_else(|e| e.into_inner());
+                if let Some(tx) = g.get(job) {
+                    let _ = tx.send((*stream_id, ep));
+                }
+            }
+            _ => {
+                // A fresh connection must lead with CONNECT or
+                // STREAM_HELLO; anything else is dropped.
+            }
+        }
+    }
+
+    // All jobs accepted; collect their reports as the sessions finish.
+    let mut results = Vec::with_capacity(jobs);
+    for _ in 0..jobs {
+        match done_rx.recv() {
+            Ok(r) => results.push(r),
+            Err(_) => break, // every worker gone — results are complete
+        }
+    }
+    let workers = std::mem::take(
+        &mut *dispatch.workers.lock().unwrap_or_else(|e| e.into_inner()),
+    );
+    for w in workers {
+        let _ = w.join();
+    }
+    Ok((results, stats.snapshot()))
+}
+
+/// Start pending TCP sink sessions while admission slots are free.
+/// Called from the accept loop (new job) and from finishing sessions
+/// (freed slot) — never blocks, so data connections keep flowing.
+#[allow(clippy::too_many_arguments)]
+fn pump_tcp_jobs(
+    cfg: &Config,
+    dispatch: &Arc<TcpDispatch>,
+    registry: &Arc<OstRegistry>,
+    stats: &Arc<DaemonStats>,
+    mailboxes: &Arc<Mutex<BTreeMap<u64, mpsc::Sender<(u32, Arc<dyn Endpoint>)>>>>,
+    pfs: &Arc<dyn Pfs>,
+    runtime: &Option<RuntimeHandle>,
+    done_tx: &mpsc::Sender<(u64, Result<SinkReport>)>,
+) {
+    loop {
+        let next = {
+            let mut running = dispatch.running.lock().unwrap_or_else(|e| e.into_inner());
+            if *running >= cfg.serve_max_jobs {
+                return;
+            }
+            let Some(p) = dispatch
+                .pending
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .pop_front()
+            else {
+                return;
+            };
+            *running += 1;
+            stats.jobs_admitted.fetch_add(1, Ordering::Relaxed);
+            stats.note_concurrent(*running as u64);
+            p
+        };
+        let TcpPending { job, ctrl, data_rx } = next;
+        let plane = DataPlane::Connector(Box::new(move |k| {
+            let mut slots: Vec<Option<Arc<dyn Endpoint>>> =
+                (0..k).map(|_| None).collect();
+            for _ in 0..k {
+                let (sid, dep) = data_rx.recv_timeout(TCP_JOB_TIMEOUT).map_err(|_| {
+                    anyhow::anyhow!("job {job}: timed out waiting for data connections")
+                })?;
+                let idx = sid as usize;
+                anyhow::ensure!(
+                    idx < k as usize,
+                    "job {job}: STREAM_HELLO stream {sid} out of range (k = {k})"
+                );
+                anyhow::ensure!(
+                    slots[idx].is_none(),
+                    "job {job}: duplicate STREAM_HELLO for stream {sid}"
+                );
+                slots[idx] = Some(dep);
+            }
+            Ok(slots
+                .into_iter()
+                .map(|s| s.expect("k distinct in-range hellos fill every slot"))
+                .collect())
+        }));
+        let cfg_job = cfg.clone();
+        let pfs_job = pfs.clone();
+        let runtime_job = runtime.clone();
+        let shared = if cfg.serve_registry {
+            Some(Arc::new(registry.handle()))
+        } else {
+            None
+        };
+        let dispatch_job = dispatch.clone();
+        let registry_job = registry.clone();
+        let stats_job = stats.clone();
+        let mailboxes_job = mailboxes.clone();
+        let done_job = done_tx.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("serve-sink-{job}"))
+            .spawn(move || {
+                let mut session = SinkSession::new(&cfg_job, pfs_job, ctrl)
+                    .data_plane(plane)
+                    .runtime(runtime_job);
+                if let Some(h) = shared {
+                    session = session.shared_osts(h);
+                }
+                let report = session.spawn().map(|node| node.join());
+                match &report {
+                    Ok(r) if r.fault.is_none() => {
+                        stats_job.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    _ => {
+                        stats_job.jobs_faulted.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                mailboxes_job
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .remove(&job);
+                let _ = done_job.send((job, report));
+                {
+                    let mut running =
+                        dispatch_job.running.lock().unwrap_or_else(|e| e.into_inner());
+                    *running -= 1;
+                }
+                pump_tcp_jobs(
+                    &cfg_job,
+                    &dispatch_job,
+                    &registry_job,
+                    &stats_job,
+                    &mailboxes_job,
+                    &pfs_job,
+                    &runtime_job,
+                    &done_job,
+                );
+            });
+        match spawned {
+            Ok(h) => dispatch
+                .workers
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(h),
+            Err(e) => {
+                let mut running =
+                    dispatch.running.lock().unwrap_or_else(|e| e.into_inner());
+                *running -= 1;
+                stats.jobs_faulted.fetch_add(1, Ordering::Relaxed);
+                let _ = done_tx.send((job, Err(anyhow::anyhow!("spawn session: {e}"))));
+            }
+        }
+    }
+}
+
+/// Drive N tagged jobs as the **source** role of an `ftlads serve`
+/// daemon against a serve sink at `addr`: job i runs `specs[i]` under
+/// wire tag `i + 1`, up to `cfg.serve_max_jobs` concurrently, all
+/// sharing one source-side congestion registry. Each job logs (and
+/// resumes) under its own `<ft_dir>/job-<tag>` namespace. Returns each
+/// job's report, in spec order.
+pub fn serve_source(
+    cfg: &Config,
+    addr: std::net::SocketAddr,
+    pfs: Arc<dyn Pfs>,
+    specs: Vec<TransferSpec>,
+) -> Result<Vec<(u64, Result<SourceReport>)>> {
+    let registry = OstRegistry::new(cfg.ost_count);
+    // Admission: a counting gate at `serve_max_jobs` (source jobs only
+    // dial out, so blocking here cannot deadlock the daemon).
+    let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+    let mut workers = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.into_iter().enumerate() {
+        let job = i as u64 + 1;
+        {
+            let (lock, cv) = &*gate;
+            let mut running = lock.lock().unwrap_or_else(|e| e.into_inner());
+            while *running >= cfg.serve_max_jobs {
+                running = cv.wait(running).unwrap_or_else(|e| e.into_inner());
+            }
+            *running += 1;
+        }
+        let mut cfg_job = cfg.clone();
+        // Per-job FT namespace, mirroring TransferJob::job_id.
+        cfg_job.ft_dir = cfg_job.ft_dir.join(format!("job-{job}"));
+        let shared = if cfg.serve_registry {
+            Some(Arc::new(registry.handle()))
+        } else {
+            None
+        };
+        let pfs_job = pfs.clone();
+        let gate_job = gate.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("serve-src-{job}"))
+                .spawn(move || {
+                    let report = run_tcp_source_job(&cfg_job, addr, pfs_job, job, shared, &spec);
+                    let (lock, cv) = &*gate_job;
+                    let mut running = lock.lock().unwrap_or_else(|e| e.into_inner());
+                    *running -= 1;
+                    drop(running);
+                    cv.notify_all();
+                    (job, report)
+                })?,
+        );
+    }
+    let mut results = Vec::with_capacity(workers.len());
+    for w in workers {
+        match w.join() {
+            Ok(r) => results.push(r),
+            Err(_) => anyhow::bail!("serve: source job worker panicked"),
+        }
+    }
+    Ok(results)
+}
+
+/// One tagged source job: dial the control connection, run the session
+/// (its CONNECT and STREAM_HELLOs carry the job tag; data connections
+/// are dialed on demand, the serve sink's demultiplexer routes them by
+/// that tag).
+fn run_tcp_source_job(
+    cfg: &Config,
+    addr: std::net::SocketAddr,
+    pfs: Arc<dyn Pfs>,
+    job: u64,
+    shared: Option<Arc<crate::pfs::JobOstHandle>>,
+    spec: &TransferSpec,
+) -> Result<SourceReport> {
+    let ep = tcp::connect(addr, cfg.wire(), FaultController::unarmed())?;
+    let ep: Arc<dyn Endpoint> = Arc::new(ep);
+    let wire = cfg.wire();
+    let plane = DataPlane::Connector(Box::new(move |k| {
+        let mut eps: Vec<Arc<dyn Endpoint>> = Vec::with_capacity(k as usize);
+        for _ in 0..k {
+            let dep = tcp::connect(addr, wire.clone(), FaultController::unarmed())?;
+            eps.push(Arc::new(dep));
+        }
+        Ok(eps)
+    }));
+    let mut session = SourceSession::new(cfg, pfs, ep).data_plane(plane).job(job);
+    if let Some(h) = shared {
+        session = session.shared_osts(h);
+    }
+    session.run(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pick(queue: &[(&str, u32)], dispatched: &[(&str, u64)]) -> Option<usize> {
+        let d: BTreeMap<String, u64> =
+            dispatched.iter().map(|(t, n)| (t.to_string(), *n)).collect();
+        fair_pick(queue.iter().copied(), &d)
+    }
+
+    #[test]
+    fn fair_pick_prefers_underserved_tenant() {
+        // a has had 3 of weight 1 (ratio 3); b has had 1 of weight 1
+        // (ratio 1) — b dispatches first regardless of queue order.
+        assert_eq!(pick(&[("a", 1), ("b", 1)], &[("a", 3), ("b", 1)]), Some(1));
+        // Equal ratios tie-break to queue order.
+        assert_eq!(pick(&[("a", 1), ("b", 1)], &[("a", 2), ("b", 2)]), Some(0));
+        assert_eq!(pick(&[], &[]), None);
+    }
+
+    #[test]
+    fn fair_pick_honors_weights() {
+        // a: 4 dispatched at weight 4 (ratio 1); b: 2 dispatched at
+        // weight 1 (ratio 2) — a is still the less-served tenant.
+        assert_eq!(pick(&[("b", 1), ("a", 4)], &[("a", 4), ("b", 2)]), Some(1));
+        // Fresh tenants (ratio 0) beat everyone.
+        assert_eq!(pick(&[("a", 1), ("new", 1)], &[("a", 1)]), Some(1));
+    }
+
+    #[test]
+    fn fair_pick_weighted_round_robin_sequence() {
+        // One tenant at weight 2 vs one at weight 1: over 6 dispatches
+        // the weight-2 tenant gets 4 slots — the 2:1 share.
+        let mut dispatched: BTreeMap<String, u64> = BTreeMap::new();
+        let queue = [("heavy", 2u32), ("light", 1u32)];
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            let i = fair_pick(queue.iter().copied(), &dispatched).unwrap();
+            got.push(queue[i].0);
+            *dispatched.entry(queue[i].0.to_string()).or_insert(0) += 1;
+        }
+        let heavy = got.iter().filter(|t| **t == "heavy").count();
+        assert_eq!(heavy, 4, "weight-2 tenant gets 2/3 of slots: {got:?}");
+    }
+}

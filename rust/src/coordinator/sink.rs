@@ -70,9 +70,10 @@ use crate::integrity::{Digest, DigestEngine, IntegrityMode, NativeEngine, PjrtEn
 use crate::metrics::{Counters, CounterSnapshot};
 use crate::net::{Endpoint, Message, NetError, RmaPool, RmaSlot};
 use crate::pfs::ost::OstId;
+use crate::pfs::registry::JobOstHandle;
 use crate::pfs::{FileId, Pfs};
 use crate::runtime::RuntimeHandle;
-use crate::sched::{SchedSnapshot, SchedStats, Scheduler};
+use crate::sched::{OstCongestion, SchedSnapshot, SchedStats, Scheduler};
 use crate::util::bytes::Bytes;
 
 /// One received object awaiting pwrite.
@@ -263,6 +264,12 @@ struct Shared {
     data: OnceLock<Vec<SnkStream>>,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SnkFile>>,
+    /// This job's charge handle on the daemon's shared sink-side
+    /// [`crate::pfs::OstRegistry`] (None for standalone transfers). IO
+    /// threads fold its foreign load into every dequeue's congestion
+    /// view; enqueue/complete charge and discharge it, and dropping the
+    /// session drains whatever a killed job still had in flight.
+    shared_osts: Option<Arc<JobOstHandle>>,
     abort: Mutex<Option<String>>,
     aborted: AtomicBool,
     done: AtomicBool,
@@ -468,10 +475,73 @@ pub struct SinkNode {
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
+/// A configured-but-not-yet-running sink job: the entry point for
+/// serving the sink half of a transfer. Construct with [`new`]
+/// (`SinkSession::new`), optionally attach a multi-stream data plane, a
+/// PJRT runtime, or a shared OST registry handle, then [`spawn`]
+/// (`SinkSession::spawn`) to get a joinable [`SinkNode`].
+///
+/// ```ignore
+/// let node = SinkSession::new(&cfg, pfs, ep)
+///     .data_plane(plane)          // only needed for data_streams >= 2
+///     .runtime(handle)            // only needed for integrity = pjrt
+///     .spawn()?;
+/// let report = node.join();
+/// ```
+///
+/// With all options at their defaults this is behavior- and
+/// wire-identical to the historical `spawn_sink(cfg, pfs, ep, None)`.
+pub struct SinkSession<'a> {
+    cfg: &'a Config,
+    pfs: Arc<dyn Pfs>,
+    ep: Arc<dyn Endpoint>,
+    plane: DataPlane,
+    runtime: Option<RuntimeHandle>,
+    shared_osts: Option<Arc<JobOstHandle>>,
+}
+
+impl<'a> SinkSession<'a> {
+    /// A session over a single control connection, with no data plane
+    /// (fused single-stream unless [`Self::data_plane`] is attached), no
+    /// PJRT runtime, and no shared OST registry.
+    pub fn new(cfg: &'a Config, pfs: Arc<dyn Pfs>, ep: Arc<dyn Endpoint>) -> SinkSession<'a> {
+        SinkSession { cfg, pfs, ep, plane: DataPlane::none(), runtime: None, shared_osts: None }
+    }
+
+    /// Supply the per-stream data connections, consumed only when the
+    /// CONNECT handshake negotiates `data_streams ≥ 2`.
+    pub fn data_plane(mut self, plane: DataPlane) -> Self {
+        self.plane = plane;
+        self
+    }
+
+    /// Supply the PJRT runtime handle (required for `integrity = pjrt`).
+    pub fn runtime(mut self, runtime: Option<RuntimeHandle>) -> Self {
+        self.runtime = runtime;
+        self
+    }
+
+    /// Attach this job's handle on a daemon-wide sink-side
+    /// [`crate::pfs::OstRegistry`], so dequeues steer around other jobs'
+    /// in-flight load and this job's own load is visible to them.
+    pub fn shared_osts(mut self, handle: Arc<JobOstHandle>) -> Self {
+        self.shared_osts = Some(handle);
+        self
+    }
+
+    /// Spawn the sink: comm + master + IO threads (+ verifier with
+    /// pjrt). Never blocks — negotiation happens asynchronously in the
+    /// comm thread, so the in-process harness can spawn the sink and run
+    /// the source on the same thread.
+    pub fn spawn(self) -> Result<SinkNode> {
+        spawn_session(self.cfg, self.pfs, self.ep, self.plane, self.runtime, self.shared_osts)
+    }
+}
+
 /// Spawn the sink over a single fused connection (the legacy /
 /// `data_streams = 1` path). Fails fast when `cfg.data_streams > 1` —
-/// a multi-stream session needs a data-plane provider; use
-/// [`spawn_sink_multi`].
+/// a multi-stream session needs a data-plane provider.
+#[deprecated(note = "use SinkSession::new(cfg, pfs, ep).runtime(runtime).spawn()")]
 pub fn spawn_sink(
     cfg: &Config,
     pfs: Arc<dyn Pfs>,
@@ -480,25 +550,33 @@ pub fn spawn_sink(
 ) -> Result<SinkNode> {
     anyhow::ensure!(
         cfg.data_streams <= 1,
-        "data_streams = {} needs a data-plane provider: call spawn_sink_multi",
+        "data_streams = {} needs a data-plane provider: attach a data plane",
         cfg.data_streams
     );
-    spawn_sink_multi(cfg, pfs, ep, DataPlane::none(), runtime)
+    spawn_session(cfg, pfs, ep, DataPlane::none(), runtime, None)
 }
 
-/// Spawn the sink: comm + master + IO threads (+ verifier with pjrt).
-///
-/// `ep` is the control connection; `plane` supplies the per-stream data
-/// connections and is only consumed when the CONNECT handshake
-/// negotiates `data_streams ≥ 2` — negotiation happens asynchronously in
-/// the comm thread (this function never blocks: the in-process harness
-/// runs `spawn_sink_multi` and `run_source_multi` on the same thread).
+/// Spawn the sink with an explicit data plane.
+#[deprecated(note = "use SinkSession::new(cfg, pfs, ep).data_plane(plane).spawn()")]
 pub fn spawn_sink_multi(
     cfg: &Config,
     pfs: Arc<dyn Pfs>,
     ep: Arc<dyn Endpoint>,
     plane: DataPlane,
     runtime: Option<RuntimeHandle>,
+) -> Result<SinkNode> {
+    spawn_session(cfg, pfs, ep, plane, runtime, None)
+}
+
+/// The session body behind [`SinkSession::spawn`] (and the deprecated
+/// free-function wrappers).
+fn spawn_session(
+    cfg: &Config,
+    pfs: Arc<dyn Pfs>,
+    ep: Arc<dyn Endpoint>,
+    plane: DataPlane,
+    runtime: Option<RuntimeHandle>,
+    shared_osts: Option<Arc<JobOstHandle>>,
 ) -> Result<SinkNode> {
     let shared = Arc::new(Shared {
         pfs,
@@ -526,6 +604,7 @@ pub fn spawn_sink_multi(
         data: OnceLock::new(),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
+        shared_osts,
         abort: Mutex::new(None),
         aborted: AtomicBool::new(false),
         done: AtomicBool::new(false),
@@ -978,7 +1057,7 @@ fn data_comm_thread(
             }
         };
         match msg {
-            Message::StreamHello { stream_id } => {
+            Message::StreamHello { stream_id, .. } => {
                 // The source introduces each data connection with its
                 // stream id. The in-process channel transport delivers it
                 // here; the TCP acceptor already consumed it to order the
@@ -1078,6 +1157,9 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot, stream: usiz
             .insert(ost.0, stream);
     }
     shared.sched.on_enqueue(ost);
+    if let Some(h) = &shared.shared_osts {
+        h.begin(ost);
+    }
     shared.queues.push(
         ost,
         WriteReq {
@@ -1163,10 +1245,13 @@ fn master_thread(shared: &Arc<Shared>, park_rx: mpsc::Receiver<(usize, Message)>
 /// strictly drains.
 fn io_thread(shared: &Arc<Shared>, verify_tx: Option<mpsc::Sender<WriteReq>>) {
     let osts = shared.pfs.ost_model();
+    // Under `ftlads serve` the congestion view folds other jobs' in-flight
+    // load (from the daemon's shared registry) into every policy pick.
+    let cong = OstCongestion::with_shared(osts, shared.shared_osts.as_deref());
     'pop: while let Some((ost, first)) =
         shared
             .queues
-            .pop_next_timed(&*shared.sched, osts, &shared.sched_stats)
+            .pop_next_timed(&*shared.sched, &cong, &shared.sched_stats)
     {
         if shared.is_aborted() {
             break;
@@ -1354,6 +1439,9 @@ fn write_run(shared: &Arc<Shared>, ost: OstId, run: &mut [WriteReq]) -> bool {
     for _ in 0..run.len() {
         shared.sched.on_complete(ost, service);
         shared.sched_stats.record_complete(service);
+        if let Some(h) = &shared.shared_osts {
+            h.end(ost);
+        }
     }
     shared
         .counters

@@ -73,8 +73,9 @@ use crate::integrity::{self, IntegrityMode};
 use crate::metrics::{Counters, CounterSnapshot};
 use crate::net::{Endpoint, Message, NetError, RmaPool, RmaSlot};
 use crate::pfs::ost::OstId;
+use crate::pfs::registry::JobOstHandle;
 use crate::pfs::{FileId, Pfs};
-use crate::sched::{SchedSnapshot, SchedStats, Scheduler};
+use crate::sched::{OstCongestion, SchedSnapshot, SchedStats, Scheduler};
 
 /// One object read+send request.
 #[derive(Debug, Clone)]
@@ -331,6 +332,12 @@ struct Shared {
     /// Best observed epoch goodput (bytes/s), stored as `f64` bits.
     goodput_final: AtomicU64,
     files: Mutex<BTreeMap<u32, SrcFile>>,
+    /// This job's charge handle on the daemon's shared source-side
+    /// [`crate::pfs::OstRegistry`] (None for standalone transfers). IO
+    /// threads fold its foreign load into every dequeue's congestion
+    /// view; enqueue/complete charge and discharge it, and dropping the
+    /// session drains whatever a killed job still had in flight.
+    shared_osts: Option<Arc<JobOstHandle>>,
     logger: Mutex<Box<dyn FtLogger>>,
     abort: Mutex<Option<String>>,
     aborted: AtomicBool,
@@ -427,10 +434,75 @@ pub struct SourceReport {
     pub tune_trajectory: Vec<String>,
 }
 
+/// A configured-but-not-yet-running source job: the entry point for
+/// driving the source half of a transfer. Construct with [`new`]
+/// (`SourceSession::new`), optionally attach a multi-stream data plane,
+/// a daemon wire tag, or a shared OST registry handle, then [`run`]
+/// (`SourceSession::run`) to completion/fault.
+///
+/// ```ignore
+/// let report = SourceSession::new(&cfg, pfs, ctrl)
+///     .data_plane(plane)          // only needed for data_streams >= 2
+///     .job(7)                     // only needed under `ftlads serve`
+///     .run(&spec)?;
+/// ```
+///
+/// With all options at their defaults this is behavior- and
+/// wire-identical to the historical `run_source(cfg, pfs, ep, spec)`.
+pub struct SourceSession<'a> {
+    cfg: &'a Config,
+    pfs: Arc<dyn Pfs>,
+    ctrl: Arc<dyn Endpoint>,
+    plane: DataPlane,
+    job: u64,
+    shared_osts: Option<Arc<JobOstHandle>>,
+}
+
+impl<'a> SourceSession<'a> {
+    /// A session over a single control connection, with no data plane
+    /// (fused single-stream unless [`Self::data_plane`] is attached), no
+    /// daemon job tag, and no shared OST registry.
+    pub fn new(cfg: &'a Config, pfs: Arc<dyn Pfs>, ctrl: Arc<dyn Endpoint>) -> SourceSession<'a> {
+        SourceSession { cfg, pfs, ctrl, plane: DataPlane::none(), job: 0, shared_osts: None }
+    }
+
+    /// Supply the per-stream data connections, consumed only when the
+    /// CONNECT handshake negotiates `data_streams ≥ 2` (a legacy peer
+    /// negotiates 1 and the whole session stays fused on the control
+    /// connection).
+    pub fn data_plane(mut self, plane: DataPlane) -> Self {
+        self.plane = plane;
+        self
+    }
+
+    /// Tag every CONNECT / STREAM_HELLO with a daemon job id so a shared
+    /// `ftlads serve` listener can demultiplex sessions. 0 (the default)
+    /// keeps the wire byte-identical to a standalone transfer.
+    pub fn job(mut self, job: u64) -> Self {
+        self.job = job;
+        self
+    }
+
+    /// Attach this job's handle on a daemon-wide source-side
+    /// [`crate::pfs::OstRegistry`], so dequeues steer around other jobs'
+    /// in-flight load and this job's own load is visible to them.
+    pub fn shared_osts(mut self, handle: Arc<JobOstHandle>) -> Self {
+        self.shared_osts = Some(handle);
+        self
+    }
+
+    /// Run the source node to completion/fault. Blocks the calling
+    /// thread (which acts as the orchestrator); master/comm/IO threads
+    /// are spawned internally and joined before returning.
+    pub fn run(self, spec: &TransferSpec) -> Result<SourceReport> {
+        run_session(self.cfg, self.pfs, self.ctrl, self.plane, self.job, self.shared_osts, spec)
+    }
+}
+
 /// Run the source node over a single fused connection (the legacy /
 /// `data_streams = 1` path). Fails fast when `cfg.data_streams > 1` —
-/// a multi-stream session needs a data-plane provider; use
-/// [`run_source_multi`].
+/// a multi-stream session needs a data-plane provider.
+#[deprecated(note = "use SourceSession::new(cfg, pfs, ep).run(spec)")]
 pub fn run_source(
     cfg: &Config,
     pfs: Arc<dyn Pfs>,
@@ -439,25 +511,33 @@ pub fn run_source(
 ) -> Result<SourceReport> {
     anyhow::ensure!(
         cfg.data_streams <= 1,
-        "data_streams = {} needs a data-plane provider: call run_source_multi",
+        "data_streams = {} needs a data-plane provider: attach a data plane",
         cfg.data_streams
     );
-    run_source_multi(cfg, pfs, ep, DataPlane::none(), spec)
+    run_session(cfg, pfs, ep, DataPlane::none(), 0, None, spec)
 }
 
-/// Run the source node to completion/fault. Blocks the calling thread
-/// (which acts as the orchestrator); master/comm/IO threads are spawned
-/// internally and joined before returning.
-///
-/// `ctrl` is the control connection; `plane` supplies the per-stream
-/// data connections and is only consumed when the CONNECT handshake
-/// negotiates `data_streams ≥ 2` (a legacy peer negotiates 1 and the
-/// whole session stays fused on `ctrl`).
+/// Run the source node with an explicit data plane.
+#[deprecated(note = "use SourceSession::new(cfg, pfs, ctrl).data_plane(plane).run(spec)")]
 pub fn run_source_multi(
     cfg: &Config,
     pfs: Arc<dyn Pfs>,
     ctrl: Arc<dyn Endpoint>,
     plane: DataPlane,
+    spec: &TransferSpec,
+) -> Result<SourceReport> {
+    run_session(cfg, pfs, ctrl, plane, 0, None, spec)
+}
+
+/// The session body behind [`SourceSession::run`] (and the deprecated
+/// free-function wrappers).
+fn run_session(
+    cfg: &Config,
+    pfs: Arc<dyn Pfs>,
+    ctrl: Arc<dyn Endpoint>,
+    plane: DataPlane,
+    job: u64,
+    shared_osts: Option<Arc<JobOstHandle>>,
     spec: &TransferSpec,
 ) -> Result<SourceReport> {
     let logger = Mutex::new(ftlog::create_logger_with_mode(&cfg.ft(), cfg.logging)?);
@@ -481,6 +561,7 @@ pub fn run_source_multi(
         ack_batch: cfg.ack_batch_cap(),
         send_window: cfg.send_window_cap(),
         data_streams: cfg.data_streams.max(1),
+        job,
     }) {
         return Ok(handshake_fault_report(&logger, format!("connect: {e}")));
     }
@@ -518,7 +599,7 @@ pub fn run_source_multi(
             }
         };
         for (s, ep) in eps.iter().enumerate() {
-            if let Err(e) = ep.send(Message::StreamHello { stream_id: s as u32 }) {
+            if let Err(e) = ep.send(Message::StreamHello { stream_id: s as u32, job }) {
                 return Ok(handshake_fault_report(
                     &logger,
                     format!("stream {s} hello: {e}"),
@@ -591,6 +672,7 @@ pub fn run_source_multi(
         tune_trajectory: Mutex::new(Vec::new()),
         goodput_final: AtomicU64::new(0),
         files: Mutex::new(BTreeMap::new()),
+        shared_osts,
         logger,
         abort: Mutex::new(None),
         aborted: AtomicBool::new(false),
@@ -1014,6 +1096,9 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
     }
     for (ost, _) in &batch {
         shared.sched.on_enqueue(*ost);
+        if let Some(h) = &shared.shared_osts {
+            h.begin(*ost);
+        }
     }
     shared.push_to_streams(batch);
 }
@@ -1057,11 +1142,14 @@ fn schedule_file_blocks(shared: &Arc<Shared>, file_idx: u32) {
 fn io_thread(shared: &Arc<Shared>, stream_idx: usize) {
     let stream = &shared.streams[stream_idx];
     let osts = shared.pfs.ost_model();
+    // Under `ftlads serve` the congestion view folds other jobs' in-flight
+    // load (from the daemon's shared registry) into every policy pick.
+    let cong = OstCongestion::with_shared(osts, shared.shared_osts.as_deref());
     let windowed = stream.window.enabled();
     'pop: while let Some((ost, req)) =
         stream
             .queues
-            .pop_next_timed(&*shared.sched, osts, &shared.sched_stats)
+            .pop_next_timed(&*shared.sched, &cong, &shared.sched_stats)
     {
         if shared.is_aborted() {
             break;
@@ -1205,6 +1293,9 @@ fn io_thread(shared: &Arc<Shared>, stream_idx: usize) {
         for _ in 0..run.len() {
             shared.sched.on_complete(ost, service);
             shared.sched_stats.record_complete(service);
+            if let Some(h) = &shared.shared_osts {
+                h.end(ost);
+            }
         }
         for (r, _) in &run {
             // The staging pread is the zero-copy path's single payload
@@ -1483,6 +1574,9 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
     if !resched.is_empty() {
         for (ost, _) in &resched {
             shared.sched.on_enqueue(*ost);
+            if let Some(h) = &shared.shared_osts {
+                h.begin(*ost);
+            }
         }
         shared.push_to_streams(resched);
     }

@@ -178,6 +178,56 @@ pub struct CounterSnapshot {
     pub coalesce_continuations: u64,
 }
 
+/// Daemon-wide (`ftlads serve`) counters, spanning every job the serve
+/// manager has seen. Per-job figures live in each job's
+/// [`TransferOutcome`](crate::coordinator::TransferOutcome); these
+/// describe the daemon itself — admission, concurrency, and how jobs
+/// ended.
+#[derive(Debug, Default)]
+pub struct DaemonStats {
+    /// Jobs handed to the manager (admitted or rejected).
+    pub jobs_submitted: AtomicU64,
+    /// Jobs dispatched onto a worker (within the `serve_max_jobs` cap).
+    pub jobs_admitted: AtomicU64,
+    /// Jobs that ran to a completed transfer.
+    pub jobs_completed: AtomicU64,
+    /// Jobs that ended in a fault (including injected leg kills).
+    pub jobs_faulted: AtomicU64,
+    /// Jobs refused at submission (daemon shutting down).
+    pub jobs_rejected: AtomicU64,
+    /// High-water mark of concurrently running jobs.
+    pub peak_concurrent: AtomicU64,
+}
+
+impl DaemonStats {
+    pub fn snapshot(&self) -> DaemonSnapshot {
+        DaemonSnapshot {
+            jobs_submitted: self.jobs_submitted.load(Ordering::Relaxed),
+            jobs_admitted: self.jobs_admitted.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            jobs_faulted: self.jobs_faulted.load(Ordering::Relaxed),
+            jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),
+            peak_concurrent: self.peak_concurrent.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Record that `running` jobs are in flight right now (ratchets the
+    /// high-water mark).
+    pub fn note_concurrent(&self, running: u64) {
+        self.peak_concurrent.fetch_max(running, Ordering::Relaxed);
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DaemonSnapshot {
+    pub jobs_submitted: u64,
+    pub jobs_admitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_faulted: u64,
+    pub jobs_rejected: u64,
+    pub peak_concurrent: u64,
+}
+
 /// One `/proc/self` sample.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ProcSample {
@@ -304,6 +354,20 @@ mod tests {
         // A busy loop should register noticeable CPU (jiffy granularity is
         // 10ms, so keep the bar low but nonzero).
         assert!(report.cpu_percent > 10.0, "cpu {}%", report.cpu_percent);
+    }
+
+    #[test]
+    fn daemon_stats_snapshot_and_peak_ratchet() {
+        let d = DaemonStats::default();
+        d.jobs_submitted.fetch_add(3, Ordering::Relaxed);
+        d.jobs_admitted.fetch_add(2, Ordering::Relaxed);
+        d.note_concurrent(2);
+        d.note_concurrent(1); // lower load must not regress the peak
+        let s = d.snapshot();
+        assert_eq!(s.jobs_submitted, 3);
+        assert_eq!(s.jobs_admitted, 2);
+        assert_eq!(s.peak_concurrent, 2);
+        assert_eq!(s.jobs_faulted, 0);
     }
 
     #[test]

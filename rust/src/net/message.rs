@@ -51,6 +51,12 @@ pub enum Message {
     /// decodes as 1 and keeps the fused path. Because the trailing fields
     /// are positional, encoding a non-default `data_streams` forces the
     /// preceding `send_window` onto the wire even when it is 1.
+    /// `job` (0 = standalone transfer, the default) tags the connection
+    /// with a daemon job id so one `ftlads serve` listener can demux many
+    /// concurrent transfers to their job-scoped sessions; it is the last
+    /// trailing field, only encoded when non-zero (forcing the earlier
+    /// optionals onto the wire), so a standalone handshake stays
+    /// byte-identical to every prior revision.
     Connect {
         max_object_size: u64,
         rma_slots: u32,
@@ -58,6 +64,7 @@ pub enum Message {
         ack_batch: u32,
         send_window: u32,
         data_streams: u32,
+        job: u64,
     },
     /// Sink accepts; advertises its own RMA slot count, the ack batch
     /// size it will actually use (min of both sides' `ack_batch`), the
@@ -104,8 +111,11 @@ pub enum Message {
     /// multi-stream transfer: identifies which stream id the connection
     /// carries, so accepts arriving in any order still bind to the right
     /// OST shard. Never sent when the negotiated `data_streams` is 1 —
-    /// the default wire is untouched.
-    StreamHello { stream_id: u32 },
+    /// the default wire is untouched. `job` carries the same daemon job
+    /// id as the CONNECT (optional trailing field, encoded only when
+    /// non-zero) so a serve listener can bind late-arriving data
+    /// connections to the right job's session.
+    StreamHello { stream_id: u32, job: u64 },
 }
 
 const T_CONNECT: u8 = 0;
@@ -180,6 +190,7 @@ impl Message {
                 ack_batch,
                 send_window,
                 data_streams,
+                job,
             } => {
                 out.push(T_CONNECT);
                 put_u64(out, *max_object_size);
@@ -189,12 +200,16 @@ impl Message {
                 // Optional trailing fields, omitted at the defaults so the
                 // PR 2-era wire bytes are reproduced exactly. The decode is
                 // positional, so a non-default `data_streams` forces
-                // `send_window` onto the wire even at its default.
-                if *send_window != 1 || *data_streams != 1 {
+                // `send_window` onto the wire even at its default, and a
+                // non-zero `job` forces both earlier optionals.
+                if *send_window != 1 || *data_streams != 1 || *job != 0 {
                     put_u32(out, *send_window);
                 }
-                if *data_streams != 1 {
+                if *data_streams != 1 || *job != 0 {
                     put_u32(out, *data_streams);
+                }
+                if *job != 0 {
+                    put_u64(out, *job);
                 }
             }
             Message::ConnectAck { rma_slots, ack_batch, send_window, data_streams } => {
@@ -254,9 +269,12 @@ impl Message {
                 put_u32(out, *file_idx);
             }
             Message::Bye => out.push(T_BYE),
-            Message::StreamHello { stream_id } => {
+            Message::StreamHello { stream_id, job } => {
                 out.push(T_STREAM_HELLO);
                 put_u32(out, *stream_id);
+                if *job != 0 {
+                    put_u64(out, *job);
+                }
             }
         }
         None
@@ -379,6 +397,7 @@ impl<'a> Reader<'a> {
                 ack_batch: if self.remaining() > 0 { self.u32()? } else { 1 },
                 send_window: if self.remaining() > 0 { self.u32()? } else { 1 },
                 data_streams: if self.remaining() > 0 { self.u32()? } else { 1 },
+                job: if self.remaining() > 0 { self.u64()? } else { 0 },
             },
             T_CONNECT_ACK => Message::ConnectAck {
                 rma_slots: self.u32()?,
@@ -429,7 +448,10 @@ impl<'a> Reader<'a> {
             T_FILE_CLOSE => Message::FileClose { file_idx: self.u32()? },
             T_FILE_CLOSE_ACK => Message::FileCloseAck { file_idx: self.u32()? },
             T_BYE => Message::Bye,
-            T_STREAM_HELLO => Message::StreamHello { stream_id: self.u32()? },
+            T_STREAM_HELLO => Message::StreamHello {
+                stream_id: self.u32()?,
+                job: if self.remaining() > 0 { self.u64()? } else { 0 },
+            },
             t => bail!("unknown message type byte {t}"),
         })
     }
@@ -455,6 +477,7 @@ mod tests {
             ack_batch: 8,
             send_window: 1,
             data_streams: 1,
+            job: 0,
         });
         roundtrip(Message::Connect {
             max_object_size: 1 << 20,
@@ -463,6 +486,7 @@ mod tests {
             ack_batch: 8,
             send_window: 32,
             data_streams: 4,
+            job: 0,
         });
         // The forced-encode corner: data_streams != 1 with the default
         // send_window — positional decode must still land every field.
@@ -473,6 +497,18 @@ mod tests {
             ack_batch: 1,
             send_window: 1,
             data_streams: 8,
+            job: 0,
+        });
+        // The serve corner: a non-zero job tag with every earlier
+        // optional at its default — all three must land positionally.
+        roundtrip(Message::Connect {
+            max_object_size: 1 << 20,
+            rma_slots: 64,
+            resume: false,
+            ack_batch: 1,
+            send_window: 1,
+            data_streams: 1,
+            job: u64::MAX,
         });
         roundtrip(Message::ConnectAck {
             rma_slots: 8,
@@ -492,8 +528,9 @@ mod tests {
             send_window: 1,
             data_streams: 64,
         });
-        roundtrip(Message::StreamHello { stream_id: 0 });
-        roundtrip(Message::StreamHello { stream_id: 63 });
+        roundtrip(Message::StreamHello { stream_id: 0, job: 0 });
+        roundtrip(Message::StreamHello { stream_id: 63, job: 0 });
+        roundtrip(Message::StreamHello { stream_id: 2, job: 41 });
         roundtrip(Message::NewFile {
             file_idx: 3,
             name: "dir/file-α.bin".into(),
@@ -691,6 +728,7 @@ mod tests {
                 ack_batch: 1,
                 send_window: 1,
                 data_streams: 1,
+                job: 0,
             }
         );
         let mut buf = vec![T_CONNECT_ACK];
@@ -719,6 +757,7 @@ mod tests {
                 ack_batch: 8,
                 send_window: 1,
                 data_streams: 1,
+                job: 0,
             }
         );
         let mut buf = vec![T_CONNECT_ACK];
@@ -749,6 +788,7 @@ mod tests {
                 ack_batch: 8,
                 send_window: 16,
                 data_streams: 1,
+                job: 0,
             }
         );
         let mut buf = vec![T_CONNECT_ACK];
@@ -774,6 +814,7 @@ mod tests {
             ack_batch: 1,
             send_window: 1,
             data_streams: 1,
+            job: 0,
         }
         .encode(&mut buf);
         assert_eq!(buf.len(), 1 + 8 + 4 + 1 + 4, "CONNECT grew beyond the PR 2 shape");
@@ -796,6 +837,7 @@ mod tests {
             ack_batch: 1,
             send_window: 1,
             data_streams: 4,
+            job: 0,
         }
         .encode(&mut buf);
         assert_eq!(buf.len(), 1 + 8 + 4 + 1 + 4 + 4 + 4);
@@ -803,14 +845,44 @@ mod tests {
         Message::ConnectAck { rma_slots: 8, ack_batch: 1, send_window: 1, data_streams: 4 }
             .encode(&mut buf);
         assert_eq!(buf.len(), 1 + 4 + 4 + 4 + 4);
-        // And STREAM_HELLO is a fixed 5-byte frame.
+        // And an untagged STREAM_HELLO is a fixed 5-byte frame.
         let mut buf = Vec::new();
-        Message::StreamHello { stream_id: 3 }.encode(&mut buf);
+        Message::StreamHello { stream_id: 3, job: 0 }.encode(&mut buf);
         assert_eq!(buf, {
             let mut b = vec![T_STREAM_HELLO];
             b.extend_from_slice(&3u32.to_le_bytes());
             b
         });
+    }
+
+    #[test]
+    fn job_tag_forces_trailing_fields_and_legacy_decodes_as_zero() {
+        // A tagged CONNECT carries every positional optional: ack_batch +
+        // send_window + data_streams + the u64 job id.
+        let mut buf = Vec::new();
+        Message::Connect {
+            max_object_size: 1 << 20,
+            rma_slots: 64,
+            resume: false,
+            ack_batch: 1,
+            send_window: 1,
+            data_streams: 1,
+            job: 3,
+        }
+        .encode(&mut buf);
+        assert_eq!(buf.len(), 1 + 8 + 4 + 1 + 4 + 4 + 4 + 8);
+        // A tagged STREAM_HELLO appends the u64 job id.
+        let mut buf = Vec::new();
+        Message::StreamHello { stream_id: 1, job: 3 }.encode(&mut buf);
+        assert_eq!(buf.len(), 1 + 4 + 8);
+        // PR 7-era frames (no job field) decode as job = 0 — a standalone
+        // peer connecting to a serve daemon lands in the default job.
+        let mut buf = vec![T_STREAM_HELLO];
+        buf.extend_from_slice(&5u32.to_le_bytes());
+        assert_eq!(
+            Message::decode(&buf).unwrap(),
+            Message::StreamHello { stream_id: 5, job: 0 }
+        );
     }
 
     #[test]

@@ -23,12 +23,14 @@
 pub mod disk;
 pub mod layout;
 pub mod ost;
+pub mod registry;
 pub mod sim;
 
 use anyhow::Result;
 
 pub use layout::StripeLayout;
 pub use ost::{OstId, OstModel, OstStats};
+pub use registry::{JobOstHandle, OstRegistry};
 
 /// Upper bound on the iovs of one gathered write — POSIX's IOV_MAX
 /// (1024 on Linux). Load-bearing invariant: the sink caps coalesced

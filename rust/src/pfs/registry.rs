@@ -1,0 +1,213 @@
+//! Cross-job OST load registry (the `ftlads serve` tentpole).
+//!
+//! One transfer session only ever sees its *own* queue depths, so the
+//! congestion/straggler policies (paper §2.1) are blind to every other
+//! job hammering the same Lustre OSTs — exactly the shared-storage
+//! situation layout-aware scheduling exists for. An [`OstRegistry`] is
+//! the daemon-wide fix: a per-OST table of refcounted in-flight request
+//! counts, shared (`Arc`) by every job of one daemon. Each job holds a
+//! [`JobOstHandle`] and charges it at enqueue / discharges it at service
+//! completion; a scheduler then reads `foreign = total − own` through
+//! [`crate::sched::OstCongestion`] and steers around OSTs *other* jobs
+//! are saturating.
+//!
+//! The handle is the ownership boundary: dropping it (job done, job
+//! killed mid-transfer, session thread panicked) drains whatever the job
+//! still had charged, so a dead job can never pin phantom load onto the
+//! registry other jobs keep scheduling against.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::ost::OstId;
+
+/// Daemon-wide per-OST in-flight request totals, summed across every
+/// job's [`JobOstHandle`]. Keyed by OST id (dense vector — OST ids are
+/// `0..ost_count` everywhere in this crate).
+#[derive(Debug)]
+pub struct OstRegistry {
+    total: Vec<AtomicU64>,
+}
+
+impl OstRegistry {
+    pub fn new(ost_count: u32) -> Arc<OstRegistry> {
+        assert!(ost_count > 0);
+        Arc::new(OstRegistry {
+            total: (0..ost_count).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    pub fn ost_count(&self) -> u32 {
+        self.total.len() as u32
+    }
+
+    /// In-flight requests on `ost` across ALL jobs of the daemon.
+    pub fn load(&self, ost: OstId) -> u64 {
+        self.total[ost.0 as usize].load(Ordering::SeqCst)
+    }
+
+    /// In-flight requests across all OSTs and all jobs.
+    pub fn total_load(&self) -> u64 {
+        self.total.iter().map(|t| t.load(Ordering::SeqCst)).sum()
+    }
+
+    /// Mint one job's view of the registry. The handle's own charges are
+    /// tracked separately so `foreign()` can subtract them back out.
+    pub fn handle(self: &Arc<Self>) -> JobOstHandle {
+        JobOstHandle {
+            registry: self.clone(),
+            own: (0..self.total.len()).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// One job's refcounted charge against a shared [`OstRegistry`].
+///
+/// `begin`/`end` bracket a request's life on an OST (enqueue → service
+/// complete). `foreign(ost)` is the congestion signal the schedulers
+/// read: the registry total minus this job's own charges — i.e. what
+/// *other* jobs currently have in flight there. Dropping the handle
+/// drains every remaining own charge from the registry (the killed-job
+/// release path).
+#[derive(Debug)]
+pub struct JobOstHandle {
+    registry: Arc<OstRegistry>,
+    own: Vec<AtomicU64>,
+}
+
+impl JobOstHandle {
+    /// Charge one in-flight request against `ost`.
+    pub fn begin(&self, ost: OstId) {
+        let o = ost.0 as usize;
+        self.own[o].fetch_add(1, Ordering::SeqCst);
+        self.registry.total[o].fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Discharge one request from `ost`. Floored at zero on both sides:
+    /// a stray double-end (e.g. a retransmit acked twice after a resume)
+    /// must never underflow another job's charges out of the registry.
+    pub fn end(&self, ost: OstId) {
+        let o = ost.0 as usize;
+        if self.own[o]
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .is_ok()
+        {
+            let _ = self.registry.total[o]
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1));
+        }
+    }
+
+    /// This job's own in-flight requests on `ost`.
+    pub fn own(&self, ost: OstId) -> u64 {
+        self.own[ost.0 as usize].load(Ordering::SeqCst)
+    }
+
+    /// In-flight requests OTHER jobs have on `ost` — the cross-job
+    /// congestion signal. Saturating: the unlocked two-load race can
+    /// transiently read `total < own`, which means "no foreign load",
+    /// never a wrap to u64::MAX.
+    pub fn foreign(&self, ost: OstId) -> usize {
+        let o = ost.0 as usize;
+        let total = self.registry.total[o].load(Ordering::SeqCst);
+        let own = self.own[o].load(Ordering::SeqCst);
+        total.saturating_sub(own).min(usize::MAX as u64) as usize
+    }
+
+    pub fn registry(&self) -> &Arc<OstRegistry> {
+        &self.registry
+    }
+}
+
+impl Drop for JobOstHandle {
+    /// Drain whatever this job still had charged — a job that dies
+    /// mid-transfer (fault injection, panic, kill) must not leave
+    /// phantom load for surviving jobs to schedule around forever.
+    fn drop(&mut self) {
+        for (o, own) in self.own.iter().enumerate() {
+            let n = own.swap(0, Ordering::SeqCst);
+            if n > 0 {
+                let _ = self.registry.total[o]
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                        Some(v.saturating_sub(n))
+                    });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_end_roundtrip() {
+        let reg = OstRegistry::new(4);
+        let h = reg.handle();
+        h.begin(OstId(1));
+        h.begin(OstId(1));
+        h.begin(OstId(3));
+        assert_eq!(reg.load(OstId(1)), 2);
+        assert_eq!(reg.load(OstId(3)), 1);
+        assert_eq!(reg.total_load(), 3);
+        assert_eq!(h.own(OstId(1)), 2);
+        // A job never sees its own charges as foreign.
+        assert_eq!(h.foreign(OstId(1)), 0);
+        h.end(OstId(1));
+        assert_eq!(reg.load(OstId(1)), 1);
+        h.end(OstId(1));
+        h.end(OstId(3));
+        assert_eq!(reg.total_load(), 0);
+    }
+
+    #[test]
+    fn foreign_is_other_jobs_load_only() {
+        let reg = OstRegistry::new(4);
+        let a = reg.handle();
+        let b = reg.handle();
+        a.begin(OstId(2));
+        b.begin(OstId(2));
+        b.begin(OstId(2));
+        assert_eq!(a.foreign(OstId(2)), 2);
+        assert_eq!(b.foreign(OstId(2)), 1);
+        assert_eq!(a.foreign(OstId(0)), 0);
+        b.end(OstId(2));
+        b.end(OstId(2));
+        assert_eq!(a.foreign(OstId(2)), 0);
+        a.end(OstId(2));
+    }
+
+    #[test]
+    fn double_end_never_underflows() {
+        let reg = OstRegistry::new(2);
+        let a = reg.handle();
+        let b = reg.handle();
+        b.begin(OstId(0));
+        a.begin(OstId(0));
+        a.end(OstId(0));
+        a.end(OstId(0)); // stray: must not eat b's charge
+        assert_eq!(reg.load(OstId(0)), 1);
+        assert_eq!(b.own(OstId(0)), 1);
+        b.end(OstId(0));
+        assert_eq!(reg.load(OstId(0)), 0);
+    }
+
+    #[test]
+    fn drop_drains_remaining_charges() {
+        let reg = OstRegistry::new(3);
+        let survivor = reg.handle();
+        survivor.begin(OstId(0));
+        {
+            let killed = reg.handle();
+            killed.begin(OstId(0));
+            killed.begin(OstId(1));
+            killed.begin(OstId(1));
+            assert_eq!(survivor.foreign(OstId(0)), 1);
+            assert_eq!(survivor.foreign(OstId(1)), 2);
+            // `killed` dropped here mid-"transfer".
+        }
+        assert_eq!(survivor.foreign(OstId(0)), 0);
+        assert_eq!(survivor.foreign(OstId(1)), 0);
+        assert_eq!(reg.load(OstId(0)), 1, "the survivor's own charge stays");
+        survivor.end(OstId(0));
+    }
+}

@@ -1,19 +1,22 @@
 //! The seed scheduler, extracted verbatim: layout- and congestion-aware
 //! dequeue (LADS §2.1/§5.1).
 
-use crate::pfs::ost::{OstId, OstModel};
+use crate::pfs::ost::OstId;
 
-use super::{pick_min_by, QueueView, Scheduler};
+use super::{pick_min_by, OstCongestion, QueueView, Scheduler};
 
 /// Dequeue from the least-congested non-empty OST. The congestion signal
-/// is the OST model's in-service depth (requests queued or in service on
-/// the storage target itself); ties resolve by the shared chain — deeper
-/// backlog first, then lowest id — which makes this policy's pick order
-/// identical to the pre-refactor hardcoded `pop_least_congested`.
+/// is the combined [`OstCongestion::depth`]: the OST model's in-service
+/// depth (requests queued or in service on the storage target itself)
+/// plus any foreign load other jobs of the same daemon have in flight
+/// there. Ties resolve by the shared chain — deeper backlog first, then
+/// lowest id — which, for a standalone transfer (no foreign load), makes
+/// this policy's pick order identical to the pre-refactor hardcoded
+/// `pop_least_congested`.
 ///
-/// If one OST is slow (external load, deep device queue), IO threads
-/// naturally drain the others — "the N−1 threads are free to issue new
-/// requests to other OSTs" (§2.1).
+/// If one OST is slow (external load, deep device queue, another job's
+/// burst), IO threads naturally drain the others — "the N−1 threads are
+/// free to issue new requests to other OSTs" (§2.1).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CongestionAware;
 
@@ -22,7 +25,7 @@ impl Scheduler for CongestionAware {
         "congestion"
     }
 
-    fn pick(&self, view: &QueueView<'_>, osts: &OstModel) -> Option<OstId> {
-        pick_min_by(view, osts, |o| osts.queue_depth(o))
+    fn pick(&self, view: &QueueView<'_>, cong: &OstCongestion<'_>) -> Option<OstId> {
+        pick_min_by(view, cong, |o| cong.depth(o))
     }
 }

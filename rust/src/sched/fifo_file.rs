@@ -3,9 +3,9 @@
 //! order*, the bbcp-like logical-order baseline LADS argues against
 //! (§2.1: logical order ignores the physical layout).
 
-use crate::pfs::ost::{OstId, OstModel};
+use crate::pfs::ost::OstId;
 
-use super::{pick_min_by, QueueView, Scheduler};
+use super::{pick_min_by, OstCongestion, QueueView, Scheduler};
 
 /// Pick the OST whose head request arrived earliest (lowest global
 /// sequence number). Empty queues report `u64::MAX` heads and are never
@@ -19,7 +19,7 @@ impl Scheduler for FifoFile {
         "fifo_file"
     }
 
-    fn pick(&self, view: &QueueView<'_>, osts: &OstModel) -> Option<OstId> {
-        pick_min_by(view, osts, |o| view.head_seq[o.0 as usize])
+    fn pick(&self, view: &QueueView<'_>, cong: &OstCongestion<'_>) -> Option<OstId> {
+        pick_min_by(view, cong, |o| view.head_seq[o.0 as usize])
     }
 }

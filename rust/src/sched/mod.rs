@@ -9,6 +9,15 @@
 //! `OstQueues::pop_next(&*sched, osts)` and the queue layer consults the
 //! policy under its lock.
 //!
+//! Policies read congestion through an [`OstCongestion`] view rather than
+//! the raw [`OstModel`]: the view folds the session's own in-service
+//! depth together with *foreign* load other jobs of the same daemon have
+//! in flight on each OST (the shared [`crate::pfs::OstRegistry`] minted
+//! per job as a [`JobOstHandle`] — the `ftlads serve` tentpole). A
+//! standalone transfer uses [`OstCongestion::local`], where
+//! `depth == OstModel::queue_depth` and every pick is bit-identical to
+//! the registry-less behavior.
+//!
 //! A multi-stream source (`data_streams = K ≥ 2`) shares ONE policy
 //! instance across its K per-stream queue sets: `pick` is consulted under
 //! each queue set's own lock, so implementations must stay safe under
@@ -29,10 +38,10 @@
 //! ## Ordering contract (reproducibility)
 //!
 //! Every policy must be deterministic: given the same [`QueueView`], the
-//! same [`OstModel`] readings, and the same internal state, `pick` must
-//! return the same OST. Whenever a policy's primary score ties, it must
-//! break the tie with the shared chain implemented by [`pick_min_by`]:
-//! lower in-service congestion depth first, then the *deeper* backlog
+//! same [`OstCongestion`] readings, and the same internal state, `pick`
+//! must return the same OST. Whenever a policy's primary score ties, it
+//! must break the tie with the shared chain implemented by [`pick_min_by`]:
+//! lower combined congestion depth first, then the *deeper* backlog
 //! (drain pressure), then the lowest [`OstId`]. This is exactly the seed
 //! scheduler's ordering, so `CongestionAware` (whose primary score *is*
 //! the congestion depth) reproduces the seed's pick sequence bit for bit.
@@ -60,6 +69,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::pfs::ost::{OstId, OstModel};
+use crate::pfs::registry::JobOstHandle;
 
 pub use congestion::CongestionAware;
 pub use fifo_file::FifoFile;
@@ -100,6 +110,54 @@ impl QueueView<'_> {
     }
 }
 
+/// The congestion signal a [`Scheduler`] reads: the session's own
+/// in-service depth per OST ([`OstModel::queue_depth`]) plus, when the
+/// session runs under an `ftlads serve` daemon, the *foreign* in-flight
+/// load other jobs currently have on that OST (their charges in the
+/// shared [`crate::pfs::OstRegistry`], read through this job's
+/// [`JobOstHandle`]).
+///
+/// With `shared == None` (every standalone transfer), `depth` is exactly
+/// `queue_depth` and `foreign` is zero everywhere — policies behave
+/// bit-identically to the pre-registry code.
+#[derive(Clone, Copy)]
+pub struct OstCongestion<'a> {
+    osts: &'a OstModel,
+    shared: Option<&'a JobOstHandle>,
+}
+
+impl<'a> OstCongestion<'a> {
+    /// A session-local view: own service depth only, no cross-job signal.
+    pub fn local(osts: &'a OstModel) -> OstCongestion<'a> {
+        OstCongestion { osts, shared: None }
+    }
+
+    /// A daemon view folding in the job's shared-registry handle.
+    pub fn with_shared(osts: &'a OstModel, shared: Option<&'a JobOstHandle>) -> OstCongestion<'a> {
+        OstCongestion { osts, shared }
+    }
+
+    pub fn osts(&self) -> &'a OstModel {
+        self.osts
+    }
+
+    pub fn has_shared(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// Combined congestion depth of `ost`: own in-service requests plus
+    /// other jobs' in-flight requests. The score [`CongestionAware`] and
+    /// the tie-break chain minimize.
+    pub fn depth(&self, ost: OstId) -> usize {
+        self.osts.queue_depth(ost) + self.foreign(ost)
+    }
+
+    /// Other jobs' in-flight requests on `ost` (zero without a registry).
+    pub fn foreign(&self, ost: OstId) -> usize {
+        self.shared.map_or(0, |h| h.foreign(ost))
+    }
+}
+
 /// An OST dequeue policy. See the module docs for the ordering contract.
 pub trait Scheduler: Send + Sync {
     /// Canonical policy name (matches [`SchedPolicy::as_str`]).
@@ -110,7 +168,7 @@ pub trait Scheduler: Send + Sync {
     /// queue; returning `None` or an empty/out-of-range OST makes the
     /// queue layer fall back to the lowest-id non-empty queue (progress
     /// is guaranteed regardless of the policy).
-    fn pick(&self, view: &QueueView<'_>, osts: &OstModel) -> Option<OstId>;
+    fn pick(&self, view: &QueueView<'_>, cong: &OstCongestion<'_>) -> Option<OstId>;
 
     /// Hook: a request was handed to `ost`'s queue. Called outside the
     /// queue lock by the enqueuing thread; stateful policies may update
@@ -132,13 +190,13 @@ pub trait Scheduler: Send + Sync {
 /// ordering contract).
 pub fn pick_min_by<K: Ord>(
     view: &QueueView<'_>,
-    osts: &OstModel,
+    cong: &OstCongestion<'_>,
     mut key: impl FnMut(OstId) -> K,
 ) -> Option<OstId> {
     view.non_empty().min_by_key(|&o| {
         (
             key(o),
-            osts.queue_depth(o),
+            cong.depth(o),
             usize::MAX - view.len[o.0 as usize],
             o.0,
         )
@@ -164,6 +222,15 @@ pub struct SchedStats {
     /// Total nanoseconds of storage service time reported to
     /// `on_complete`.
     pub service_ns: AtomicU64,
+    /// Picks made while the shared [`crate::pfs::OstRegistry`] showed
+    /// foreign (other-job) load on at least one non-empty candidate OST —
+    /// i.e. picks where cross-job steering was possible at all.
+    pub shared_picks: AtomicU64,
+    /// The subset of `shared_picks` where the chosen OST itself carried
+    /// no foreign load: the scheduler steered *around* the other jobs'
+    /// hot OSTs. `shared_avoids / shared_picks` is the §A13 steering
+    /// rate; both stay zero without a registry.
+    pub shared_avoids: AtomicU64,
 }
 
 impl SchedStats {
@@ -182,6 +249,14 @@ impl SchedStats {
             .fetch_add(service.as_nanos() as u64, Ordering::Relaxed);
     }
 
+    /// Record one pick's cross-job steering outcome (registry runs only).
+    pub fn record_shared(&self, avoided: bool) {
+        self.shared_picks.fetch_add(1, Ordering::Relaxed);
+        if avoided {
+            self.shared_avoids.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub fn snapshot(&self) -> SchedSnapshot {
         SchedSnapshot {
             picks: self.picks.load(Ordering::Relaxed),
@@ -189,6 +264,8 @@ impl SchedStats {
             pick_ns: self.pick_ns.load(Ordering::Relaxed),
             completes: self.completes.load(Ordering::Relaxed),
             service_ns: self.service_ns.load(Ordering::Relaxed),
+            shared_picks: self.shared_picks.load(Ordering::Relaxed),
+            shared_avoids: self.shared_avoids.load(Ordering::Relaxed),
         }
     }
 }
@@ -201,6 +278,11 @@ pub struct SchedSnapshot {
     pub pick_ns: u64,
     pub completes: u64,
     pub service_ns: u64,
+    /// Picks where the shared registry showed foreign load on a
+    /// candidate (zero for standalone transfers).
+    pub shared_picks: u64,
+    /// Foreign-load picks that steered to an OST with no foreign load.
+    pub shared_avoids: u64,
 }
 
 impl SchedSnapshot {
@@ -318,6 +400,8 @@ mod tests {
         s.record_pick(Duration::from_nanos(100), false);
         s.record_pick(Duration::from_nanos(300), true);
         s.record_complete(Duration::from_micros(5));
+        s.record_shared(true);
+        s.record_shared(false);
         let snap = s.snapshot();
         assert_eq!(snap.picks, 2);
         assert_eq!(snap.fallback_picks, 1);
@@ -325,6 +409,8 @@ mod tests {
         assert_eq!(snap.avg_pick_ns(), 200.0);
         assert_eq!(snap.completes, 1);
         assert_eq!(snap.avg_service_us(), 5.0);
+        assert_eq!(snap.shared_picks, 2);
+        assert_eq!(snap.shared_avoids, 1);
     }
 
     #[test]
@@ -337,16 +423,17 @@ mod tests {
     #[test]
     fn pick_min_by_tie_break_chain() {
         let m = idle_model(4);
+        let c = OstCongestion::local(&m);
         // Equal key everywhere: deeper backlog wins, then lowest id.
         let len = [1usize, 3, 3, 0];
         let seq = [0u64, 1, 2, u64::MAX];
         let v = view(&len, &seq);
-        assert_eq!(pick_min_by(&v, &m, |_| 0u64), Some(OstId(1)));
+        assert_eq!(pick_min_by(&v, &c, |_| 0u64), Some(OstId(1)));
         // Empty view picks nothing.
         let len = [0usize; 4];
         let seq = [u64::MAX; 4];
         let v = view(&len, &seq);
-        assert_eq!(pick_min_by(&v, &m, |_| 0u64), None);
+        assert_eq!(pick_min_by(&v, &c, |_| 0u64), None);
     }
 
     #[test]
@@ -354,37 +441,41 @@ mod tests {
         // Idle model: (depth, MAX-len, id) collapses to deeper backlog
         // first, ties by lowest id — the seed scheduler's exact order.
         let m = idle_model(5);
+        let c = OstCongestion::local(&m);
         let len = [2usize, 1, 3, 0, 3];
         let seq = [0u64, 4, 1, u64::MAX, 3];
         let v = view(&len, &seq);
-        assert_eq!(CongestionAware.pick(&v, &m), Some(OstId(2)));
+        assert_eq!(CongestionAware.pick(&v, &c), Some(OstId(2)));
     }
 
     #[test]
     fn fifo_file_drains_global_arrival_order() {
         let m = idle_model(3);
+        let c = OstCongestion::local(&m);
         let len = [1usize, 2, 1];
         let seq = [7u64, 3, 5];
         let v = view(&len, &seq);
-        assert_eq!(FifoFile.pick(&v, &m), Some(OstId(1)));
+        assert_eq!(FifoFile.pick(&v, &c), Some(OstId(1)));
     }
 
     #[test]
     fn round_robin_cycles_non_empty_queues() {
         let m = idle_model(4);
+        let c = OstCongestion::local(&m);
         let rr = RoundRobin::new();
         let len = [1usize, 0, 1, 1];
         let seq = [0u64, u64::MAX, 1, 2];
         let v = view(&len, &seq);
-        assert_eq!(rr.pick(&v, &m), Some(OstId(0)));
-        assert_eq!(rr.pick(&v, &m), Some(OstId(2)));
-        assert_eq!(rr.pick(&v, &m), Some(OstId(3)));
-        assert_eq!(rr.pick(&v, &m), Some(OstId(0)));
+        assert_eq!(rr.pick(&v, &c), Some(OstId(0)));
+        assert_eq!(rr.pick(&v, &c), Some(OstId(2)));
+        assert_eq!(rr.pick(&v, &c), Some(OstId(3)));
+        assert_eq!(rr.pick(&v, &c), Some(OstId(0)));
     }
 
     #[test]
     fn straggler_penalizes_slow_ost() {
         let m = idle_model(2);
+        let c = OstCongestion::local(&m);
         let s = StragglerAware::new(2);
         // OST 0 is 10x slower than OST 1.
         for _ in 0..8 {
@@ -396,19 +487,48 @@ mod tests {
         let v = view(&len, &seq);
         // Despite OST 0's deeper backlog, the slow-OST penalty steers the
         // thread to OST 1.
-        assert_eq!(s.pick(&v, &m), Some(OstId(1)));
+        assert_eq!(s.pick(&v, &c), Some(OstId(1)));
     }
 
     #[test]
     fn straggler_with_no_samples_matches_congestion_order() {
         let m = idle_model(3);
+        let c = OstCongestion::local(&m);
         let s = StragglerAware::new(3);
         let len = [1usize, 2, 1];
         let seq = [0u64, 1, 2];
         let v = view(&len, &seq);
         // No service history: every estimate ties, the shared tie-break
         // chain decides (deepest backlog, OST 1) — same as CongestionAware.
-        assert_eq!(s.pick(&v, &m), CongestionAware.pick(&v, &m));
-        assert_eq!(s.pick(&v, &m), Some(OstId(1)));
+        assert_eq!(s.pick(&v, &c), CongestionAware.pick(&v, &c));
+        assert_eq!(s.pick(&v, &c), Some(OstId(1)));
+    }
+
+    #[test]
+    fn foreign_load_steers_congestion_pick_away() {
+        use crate::pfs::registry::OstRegistry;
+        let m = idle_model(3);
+        let reg = OstRegistry::new(3);
+        let me = reg.handle();
+        let other = reg.handle();
+        // Another job has 5 requests in flight on OST 0.
+        for _ in 0..5 {
+            other.begin(OstId(0));
+        }
+        let len = [3usize, 1, 0];
+        let seq = [0u64, 1, u64::MAX];
+        let v = view(&len, &seq);
+        // Registry-blind: deeper backlog on an idle model wins → OST 0.
+        let blind = OstCongestion::local(&m);
+        assert_eq!(CongestionAware.pick(&v, &blind), Some(OstId(0)));
+        // Registry-informed: OST 0 carries foreign depth 5 → steer to 1.
+        let informed = OstCongestion::with_shared(&m, Some(&me));
+        assert_eq!(informed.foreign(OstId(0)), 5);
+        assert_eq!(informed.depth(OstId(0)), 5);
+        assert_eq!(CongestionAware.pick(&v, &informed), Some(OstId(1)));
+        // Own charges are not foreign: charging via `me` changes nothing.
+        me.begin(OstId(1));
+        assert_eq!(informed.foreign(OstId(1)), 0);
+        me.end(OstId(1));
     }
 }

@@ -3,9 +3,9 @@
 
 use std::sync::atomic::{AtomicU32, Ordering};
 
-use crate::pfs::ost::{OstId, OstModel};
+use crate::pfs::ost::OstId;
 
-use super::{QueueView, Scheduler};
+use super::{OstCongestion, QueueView, Scheduler};
 
 /// Cycle through the OSTs, draining the next non-empty queue after the
 /// previously picked one. Deterministic: the pick sequence is a pure
@@ -38,7 +38,7 @@ impl Scheduler for RoundRobin {
         "round_robin"
     }
 
-    fn pick(&self, view: &QueueView<'_>, _osts: &OstModel) -> Option<OstId> {
+    fn pick(&self, view: &QueueView<'_>, _cong: &OstCongestion<'_>) -> Option<OstId> {
         let n = view.ost_count();
         if n == 0 {
             return None;

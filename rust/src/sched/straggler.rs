@@ -5,9 +5,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-use crate::pfs::ost::{OstId, OstModel};
+use crate::pfs::ost::OstId;
 
-use super::{pick_min_by, QueueView, Scheduler};
+use super::{pick_min_by, OstCongestion, QueueView, Scheduler};
 
 /// EWMA weight: `new = (3*old + sample) / 4` (α = 1/4).
 const EWMA_OLD_WEIGHT: u64 = 3;
@@ -18,8 +18,9 @@ const EWMA_DIV: u64 = 4;
 const STRAGGLER_FACTOR: u64 = 2;
 const STRAGGLER_PENALTY: u64 = 4;
 
-/// Score each OST by its expected wait — `(in-service depth + 1) ×
-/// EWMA(service time)` — and penalize stragglers. OSTs with no service
+/// Score each OST by its expected wait — `(combined congestion depth
+/// + 1) × EWMA(service time)`, where the depth folds in other jobs'
+/// in-flight load under a serve daemon — and penalize stragglers. OSTs with no service
 /// history yet borrow the fleet's fastest estimate so they are tried
 /// early. With no history anywhere, every score ties and the shared
 /// tie-break chain reduces this policy to [`super::CongestionAware`].
@@ -56,7 +57,7 @@ impl Scheduler for StragglerAware {
         "straggler"
     }
 
-    fn pick(&self, view: &QueueView<'_>, osts: &OstModel) -> Option<OstId> {
+    fn pick(&self, view: &QueueView<'_>, cong: &OstCongestion<'_>) -> Option<OstId> {
         // Fastest known estimate — the baseline for both unknown OSTs and
         // the straggler threshold.
         let min_ewma = self
@@ -66,10 +67,10 @@ impl Scheduler for StragglerAware {
             .filter(|&e| e > 0)
             .min()
             .unwrap_or(0);
-        pick_min_by(view, osts, |o| {
+        pick_min_by(view, cong, |o| {
             let e = self.estimate_ns(o);
             let est = if e == 0 { min_ewma } else { e };
-            let mut score = (osts.queue_depth(o) as u64 + 1).saturating_mul(est.max(1));
+            let mut score = (cong.depth(o) as u64 + 1).saturating_mul(est.max(1));
             if min_ewma > 0 && est > STRAGGLER_FACTOR * min_ewma {
                 score = score.saturating_mul(STRAGGLER_PENALTY);
             }

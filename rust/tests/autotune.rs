@@ -8,8 +8,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use ftlads::config::Config;
-use ftlads::coordinator::sink::spawn_sink;
-use ftlads::coordinator::source::run_source;
+use ftlads::coordinator::sink::SinkSession;
+use ftlads::coordinator::source::SourceSession;
 use ftlads::coordinator::{SimEnv, TransferSpec};
 use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
 use ftlads::workload;
@@ -57,14 +57,12 @@ fn tune_off_is_seed_exact_on_the_wire_and_in_the_outcome() {
     let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
     let sent = Arc::new(Mutex::new(Vec::new()));
     let rec = Recorder { inner: src_ep, sent: sent.clone() };
-    let node = spawn_sink(&cfg, env.sink.clone(), Arc::new(snk_ep), None).unwrap();
-    let src = run_source(
-        &cfg,
-        env.source.clone(),
-        Arc::new(rec),
-        &TransferSpec::fresh(env.files.clone()),
-    )
-    .unwrap();
+    let node = SinkSession::new(&cfg, env.sink.clone(), Arc::new(snk_ep))
+        .spawn()
+        .unwrap();
+    let src = SourceSession::new(&cfg, env.source.clone(), Arc::new(rec))
+        .run(&TransferSpec::fresh(env.files.clone()))
+        .unwrap();
     let snk = node.join();
     assert!(src.fault.is_none(), "{:?}", src.fault);
     assert!(snk.fault.is_none(), "{:?}", snk.fault);

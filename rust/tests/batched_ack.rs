@@ -6,8 +6,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use ftlads::config::Config;
-use ftlads::coordinator::sink::{spawn_sink, SinkReport};
-use ftlads::coordinator::source::{run_source, SourceReport};
+use ftlads::coordinator::sink::{SinkReport, SinkSession};
+use ftlads::coordinator::source::{SourceReport, SourceSession};
 use ftlads::coordinator::{SimEnv, TransferSpec};
 use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
 use ftlads::workload;
@@ -53,10 +53,13 @@ fn run_split(
     let sent_types = Arc::new(Mutex::new(Vec::new()));
     let tap = Tap { inner: sink_ep, sent_types: sent_types.clone() };
 
-    let sink_node = spawn_sink(sink_cfg, env.sink.clone(), Arc::new(tap), None).unwrap();
+    let sink_node = SinkSession::new(sink_cfg, env.sink.clone(), Arc::new(tap))
+        .spawn()
+        .unwrap();
     let spec = TransferSpec::fresh(env.files.clone());
-    let src_report =
-        run_source(src_cfg, env.source.clone(), Arc::new(src_ep), &spec).unwrap();
+    let src_report = SourceSession::new(src_cfg, env.source.clone(), Arc::new(src_ep))
+        .run(&spec)
+        .unwrap();
     let sink_report = sink_node.join();
     let types = sent_types.lock().unwrap_or_else(|e| e.into_inner()).clone();
     (src_report, sink_report, types)

@@ -9,9 +9,9 @@ use std::time::Duration;
 
 use anyhow::Result;
 use ftlads::config::Config;
-use ftlads::coordinator::sink::spawn_sink;
-use ftlads::coordinator::source::run_source;
-use ftlads::coordinator::{SimEnv, TransferSpec};
+use ftlads::coordinator::sink::SinkSession;
+use ftlads::coordinator::source::SourceSession;
+use ftlads::coordinator::{SimEnv, TransferJob, TransferSpec};
 use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
 use ftlads::pfs::ost::OstConfig;
 use ftlads::pfs::sim::SimPfs;
@@ -88,9 +88,13 @@ fn coalesce_off_is_ack_for_ack_identical_to_seed() {
     let (src_ep, sink_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
     let sent_types = Arc::new(Mutex::new(Vec::new()));
     let tap = Tap { inner: sink_ep, sent_types: sent_types.clone() };
-    let sink_node = spawn_sink(&cfg, env.sink.clone(), Arc::new(tap), None).unwrap();
+    let sink_node = SinkSession::new(&cfg, env.sink.clone(), Arc::new(tap))
+        .spawn()
+        .unwrap();
     let spec = TransferSpec::fresh(env.files.clone());
-    let src = run_source(&cfg, env.source.clone(), Arc::new(src_ep), &spec).unwrap();
+    let src = SourceSession::new(&cfg, env.source.clone(), Arc::new(src_ep))
+        .run(&spec)
+        .unwrap();
     let snk = sink_node.join();
     let types = sent_types.lock().unwrap_or_else(|e| e.into_inner()).clone();
 
@@ -221,14 +225,11 @@ fn failed_vectored_write_degrades_to_per_block_and_completes() {
     cfg.write_coalesce_bytes = 4 << 20;
     let env = slow_sink_env(3, 8, cfg); // 24 objects
     let gateless: Arc<dyn Pfs> = Arc::new(NoGatherPfs { inner: env.sink.clone() });
-    let out = ftlads::coordinator::run_transfer(
-        &env.cfg,
-        env.source.clone(),
-        gateless,
-        &TransferSpec::fresh(env.files.clone()),
-        None,
-    )
-    .unwrap();
+    let out = TransferJob::builder(&env.cfg, &TransferSpec::fresh(env.files.clone()))
+        .source_pfs(env.source.clone())
+        .sink_pfs(gateless)
+        .run()
+        .unwrap();
     assert!(out.completed, "{:?}", out.fault);
     // Every gathered submission failed over to per-block writes: the
     // syscall count collapses back to one per object and no run is
@@ -333,7 +334,7 @@ fn coalescer_continues_run_after_successor_arrives_mid_write() {
         release: Mutex::new(release_rx),
     });
     let (src_ep, sink_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
-    let node = spawn_sink(&cfg, gate, Arc::new(sink_ep), None).unwrap();
+    let node = SinkSession::new(&cfg, gate, Arc::new(sink_ep)).spawn().unwrap();
 
     // Scripted source: handshake, open the file, then the gated dance.
     src_ep
@@ -344,6 +345,7 @@ fn coalescer_continues_run_after_successor_arrives_mid_write() {
             ack_batch: 4,
             send_window: 1,
             data_streams: 1,
+            job: 0,
         })
         .unwrap();
     let Message::ConnectAck { .. } = src_ep.recv_timeout(Duration::from_secs(5)).unwrap()
@@ -455,9 +457,13 @@ fn rma_autosize_respects_the_negotiated_minimum() {
     let env = SimEnv::new(src_cfg.clone(), &wl);
 
     let (src_ep, sink_ep) = channel::pair(src_cfg.wire(), FaultController::unarmed());
-    let sink_node = spawn_sink(&sink_cfg, env.sink.clone(), Arc::new(sink_ep), None).unwrap();
+    let sink_node = SinkSession::new(&sink_cfg, env.sink.clone(), Arc::new(sink_ep))
+        .spawn()
+        .unwrap();
     let spec = TransferSpec::fresh(env.files.clone());
-    let src = run_source(&src_cfg, env.source.clone(), Arc::new(src_ep), &spec).unwrap();
+    let src = SourceSession::new(&src_cfg, env.source.clone(), Arc::new(src_ep))
+        .run(&spec)
+        .unwrap();
     let snk = sink_node.join();
     assert!(src.fault.is_none(), "{:?}", src.fault);
     assert_eq!(src.send_window, 4, "negotiation lands the min");

@@ -11,8 +11,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use ftlads::config::Config;
-use ftlads::coordinator::sink::{spawn_sink, spawn_sink_multi, SinkReport};
-use ftlads::coordinator::source::{run_source, run_source_multi, SourceReport};
+use ftlads::coordinator::sink::{SinkReport, SinkSession};
+use ftlads::coordinator::source::{SourceReport, SourceSession};
 use ftlads::coordinator::{DataPlane, SimEnv, TransferSpec};
 use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
 use ftlads::workload;
@@ -155,22 +155,14 @@ fn run_multi(cfg: &Config, env: &SimEnv) -> MultiRun {
         highs.push(max_inflight);
     }
 
-    let node = spawn_sink_multi(
-        cfg,
-        env.sink.clone(),
-        Arc::new(snk_ctrl),
-        DataPlane::Ready(snk_data),
-        None,
-    )
-    .unwrap();
-    let src = run_source_multi(
-        cfg,
-        env.source.clone(),
-        Arc::new(ctrl_tap),
-        DataPlane::Ready(src_data),
-        &TransferSpec::fresh(env.files.clone()),
-    )
-    .unwrap();
+    let node = SinkSession::new(cfg, env.sink.clone(), Arc::new(snk_ctrl))
+        .data_plane(DataPlane::Ready(snk_data))
+        .spawn()
+        .unwrap();
+    let src = SourceSession::new(cfg, env.source.clone(), Arc::new(ctrl_tap))
+        .data_plane(DataPlane::Ready(src_data))
+        .run(&TransferSpec::fresh(env.files.clone()))
+        .unwrap();
     let snk = node.join();
     MultiRun {
         src,
@@ -189,6 +181,7 @@ fn sorted(trace: &[Vec<u8>]) -> Vec<Vec<u8>> {
 }
 
 #[test]
+#[allow(deprecated)] // run A deliberately pins the deprecated wrappers
 fn default_single_stream_wire_is_byte_identical_to_fused_path() {
     // The acceptance pin: `data_streams = 1` (the default) puts exactly
     // the pre-multi-stream bytes on the wire — the handshake carries no
@@ -201,12 +194,15 @@ fn default_single_stream_wire_is_byte_identical_to_fused_path() {
     let wl = workload::big_workload(4, 512 << 10); // 32 objects
     let env = SimEnv::new(cfg.clone(), &wl);
 
-    // Run A: legacy fused entry points (run_source / spawn_sink).
+    // Run A: the legacy fused entry points (run_source / spawn_sink) —
+    // now thin deprecated wrappers over the session API, pinned here to
+    // stay wire-identical to it.
     let events = Arc::new(Mutex::new(Vec::new()));
     let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
     let (tap_a, sent_a, _) = Tap::new(src_ep, CONTROL, events.clone());
-    let node = spawn_sink(&cfg, env.sink.clone(), Arc::new(snk_ep), None).unwrap();
-    let src_a = run_source(
+    let node = ftlads::coordinator::sink::spawn_sink(&cfg, env.sink.clone(), Arc::new(snk_ep), None)
+        .unwrap();
+    let src_a = ftlads::coordinator::source::run_source(
         &cfg,
         env.source.clone(),
         Arc::new(tap_a),
@@ -278,22 +274,14 @@ fn connect_negotiation_takes_min_streams() {
             src_data.push(Arc::new(s));
             snk_data.push(Arc::new(d));
         }
-        let node = spawn_sink_multi(
-            &sink_cfg,
-            env.sink.clone(),
-            Arc::new(snk_ctrl),
-            DataPlane::Ready(snk_data),
-            None,
-        )
-        .unwrap();
-        let src = run_source_multi(
-            &src_cfg,
-            env.source.clone(),
-            Arc::new(src_ctrl),
-            DataPlane::Ready(src_data),
-            &TransferSpec::fresh(env.files.clone()),
-        )
-        .unwrap();
+        let node = SinkSession::new(&sink_cfg, env.sink.clone(), Arc::new(snk_ctrl))
+            .data_plane(DataPlane::Ready(snk_data))
+            .spawn()
+            .unwrap();
+        let src = SourceSession::new(&src_cfg, env.source.clone(), Arc::new(src_ctrl))
+            .data_plane(DataPlane::Ready(src_data))
+            .run(&TransferSpec::fresh(env.files.clone()))
+            .unwrap();
         let snk = node.join();
         assert!(src.fault.is_none(), "{src_k}/{sink_k}: {:?}", src.fault);
         assert!(snk.fault.is_none(), "{src_k}/{sink_k}: {:?}", snk.fault);
@@ -360,16 +348,12 @@ fn legacy_field_less_sink_falls_back_to_fused() {
         }
     });
 
-    let report = run_source_multi(
-        &cfg,
-        env.source.clone(),
-        Arc::new(tap),
+    let report = SourceSession::new(&cfg, env.source.clone(), Arc::new(tap))
         // Empty plane: materializing ANY stream count would error, so
         // the fallback is proven by the transfer completing at all.
-        DataPlane::Ready(Vec::new()),
-        &TransferSpec::fresh(env.files.clone()),
-    )
-    .unwrap();
+        .data_plane(DataPlane::Ready(Vec::new()))
+        .run(&TransferSpec::fresh(env.files.clone()))
+        .unwrap();
     legacy.join().unwrap();
     assert!(report.fault.is_none(), "{:?}", report.fault);
     assert_eq!(report.data_streams, 1, "legacy peer must negotiate down to fused");

@@ -263,6 +263,7 @@ fn prop_message_codec_roundtrips_random() {
                 ack_batch: rng.next_u32(),
                 send_window: if rng.bool(0.5) { 1 } else { rng.next_u32() },
                 data_streams: if rng.bool(0.5) { 1 } else { rng.next_u32() },
+                job: if rng.bool(0.5) { 0 } else { rng.next_u64() },
             },
             1 => Message::ConnectAck {
                 rma_slots: rng.next_u32(),
@@ -270,7 +271,10 @@ fn prop_message_codec_roundtrips_random() {
                 send_window: if rng.bool(0.5) { 1 } else { rng.next_u32() },
                 data_streams: if rng.bool(0.5) { 1 } else { rng.next_u32() },
             },
-            10 => Message::StreamHello { stream_id: rng.next_u32() },
+            10 => Message::StreamHello {
+                stream_id: rng.next_u32(),
+                job: if rng.bool(0.5) { 0 } else { rng.next_u64() },
+            },
             9 => {
                 let len = rng.range(0, 64) as usize;
                 let blocks = (0..len)

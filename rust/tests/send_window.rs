@@ -11,8 +11,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use ftlads::config::Config;
-use ftlads::coordinator::sink::{spawn_sink, SinkReport};
-use ftlads::coordinator::source::{run_source, SourceReport};
+use ftlads::coordinator::sink::{SinkReport, SinkSession};
+use ftlads::coordinator::source::{SourceReport, SourceSession};
 use ftlads::coordinator::{SimEnv, TransferSpec};
 use ftlads::net::{channel, Endpoint, FaultController, Message, NetError};
 use ftlads::pfs::Pfs;
@@ -103,9 +103,13 @@ fn run_split(src_cfg: &Config, sink_cfg: &Config, env: &SimEnv) -> SplitRun {
     let (src_tap, src_sent, max_inflight) = ByteTap::new(src_ep);
     let (snk_tap, snk_sent, _) = ByteTap::new(sink_ep);
 
-    let sink_node = spawn_sink(sink_cfg, env.sink.clone(), Arc::new(snk_tap), None).unwrap();
+    let sink_node = SinkSession::new(sink_cfg, env.sink.clone(), Arc::new(snk_tap))
+        .spawn()
+        .unwrap();
     let spec = TransferSpec::fresh(env.files.clone());
-    let src = run_source(src_cfg, env.source.clone(), Arc::new(src_tap), &spec).unwrap();
+    let src = SourceSession::new(src_cfg, env.source.clone(), Arc::new(src_tap))
+        .run(&spec)
+        .unwrap();
     let snk = sink_node.join();
     SplitRun {
         src,
@@ -444,13 +448,9 @@ fn out_of_range_ack_faults_cleanly_instead_of_panicking() {
         }
     });
 
-    let report = run_source(
-        &cfg,
-        env.source.clone(),
-        Arc::new(src_ep),
-        &TransferSpec::fresh(env.files.clone()),
-    )
-    .unwrap();
+    let report = SourceSession::new(&cfg, env.source.clone(), Arc::new(src_ep))
+        .run(&TransferSpec::fresh(env.files.clone()))
+        .unwrap();
     let fault = report.fault.expect("rogue ack must fault the source");
     assert!(
         fault.contains("out-of-range block"),

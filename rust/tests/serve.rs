@@ -1,0 +1,491 @@
+//! The `ftlads serve` multi-job daemon: equivalence pins for the session
+//! / builder API redesign (a default-config job through every entry
+//! point must stay wire- and behavior-identical to the old
+//! `run_transfer`), concurrent jobs through one in-process [`Serve`]
+//! with per-job FT-log isolation, the shared cross-job OST congestion
+//! registry steering the §2.1 schedulers around other jobs' hot OSTs,
+//! and the ft_matrix-style leg that kills one job mid-transfer while the
+//! daemon and its surviving jobs carry on.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ftlads::config::Config;
+use ftlads::coordinator::serve::{JobRequest, Serve};
+use ftlads::coordinator::sink::SinkSession;
+use ftlads::coordinator::source::SourceSession;
+use ftlads::coordinator::{SimEnv, TransferJob, TransferOutcome, TransferSpec};
+use ftlads::fault::FaultPlan;
+use ftlads::metrics::CounterSnapshot;
+use ftlads::net::{channel, Endpoint, FaultController, Message, NetError, Side};
+use ftlads::pfs::ost::OstId;
+use ftlads::pfs::{OstRegistry, Pfs};
+use ftlads::workload;
+
+/// Endpoint wrapper recording the encoded bytes of every send — the
+/// wire evidence for the entry-point equivalence pins.
+struct Recorder {
+    inner: channel::ChannelEndpoint,
+    sent: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl Recorder {
+    fn new(inner: channel::ChannelEndpoint) -> (Recorder, Arc<Mutex<Vec<Vec<u8>>>>) {
+        let sent = Arc::new(Mutex::new(Vec::new()));
+        (Recorder { inner, sent: sent.clone() }, sent)
+    }
+}
+
+impl Endpoint for Recorder {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        let mut bytes = Vec::new();
+        msg.encode(&mut bytes);
+        self.sent.lock().unwrap_or_else(|e| e.into_inner()).push(bytes);
+        self.inner.send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+/// Sorted copy — IO threads race, so cross-run wire comparison is by
+/// multiset (the same convention as the multi-stream byte-identity pin).
+fn sorted(trace: &[Vec<u8>]) -> Vec<Vec<u8>> {
+    let mut t = trace.to_vec();
+    t.sort();
+    t
+}
+
+/// A counter snapshot with the two scheduling-race-sensitive fields
+/// cleared: slot stalls and credit waits depend on thread interleaving,
+/// everything else at the default (lockstep) config is deterministic.
+fn canon(mut c: CounterSnapshot) -> CounterSnapshot {
+    c.send_stalls = 0;
+    c.credit_waits = 0;
+    c
+}
+
+/// Run one transfer over tapped channel endpoints through either the
+/// deprecated free functions (`legacy`) or the session API, returning
+/// the encoded frames each side sent.
+fn tapped_run(cfg: &Config, env: &SimEnv, legacy: bool) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let (src_tap, src_sent) = Recorder::new(src_ep);
+    let (snk_tap, snk_sent) = Recorder::new(snk_ep);
+    let spec = TransferSpec::fresh(env.files.clone());
+    if legacy {
+        #[allow(deprecated)] // this run deliberately pins the wrappers
+        {
+            let node = ftlads::coordinator::sink::spawn_sink(
+                cfg,
+                env.sink.clone(),
+                Arc::new(snk_tap),
+                None,
+            )
+            .unwrap();
+            let src = ftlads::coordinator::source::run_source(
+                cfg,
+                env.source.clone(),
+                Arc::new(src_tap),
+                &spec,
+            )
+            .unwrap();
+            assert!(src.fault.is_none(), "{:?}", src.fault);
+            let snk = node.join();
+            assert!(snk.fault.is_none(), "{:?}", snk.fault);
+        }
+    } else {
+        let node = SinkSession::new(cfg, env.sink.clone(), Arc::new(snk_tap))
+            .spawn()
+            .unwrap();
+        let src = SourceSession::new(cfg, env.source.clone(), Arc::new(src_tap))
+            .run(&spec)
+            .unwrap();
+        assert!(src.fault.is_none(), "{:?}", src.fault);
+        let snk = node.join();
+        assert!(snk.fault.is_none(), "{:?}", snk.fault);
+    }
+    let a = src_sent.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let b = snk_sent.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    (a, b)
+}
+
+fn default_job(env: &SimEnv) -> JobRequest {
+    JobRequest {
+        spec: TransferSpec::fresh(env.files.clone()),
+        source_pfs: env.source.clone() as Arc<dyn Pfs>,
+        sink_pfs: env.sink.clone() as Arc<dyn Pfs>,
+        runtime: None,
+    }
+}
+
+#[test]
+fn session_wire_bytes_match_deprecated_entry_points() {
+    // The tap-based equivalence pin: at the default config the session
+    // API must put EXACTLY the bytes of the legacy free functions on the
+    // wire, in both directions, starting with the pinned seed CONNECT
+    // (no trailing job / send_window / data_streams fields).
+    let cfg = Config::for_tests("serve-wire-pin");
+    let wl = workload::big_workload(4, 512 << 10); // 32 objects
+    let env_a = SimEnv::new(cfg.clone(), &wl);
+    let (src_a, snk_a) = tapped_run(&cfg, &env_a, true);
+    env_a.verify_sink_complete().unwrap();
+    let env_b = SimEnv::new(cfg.clone(), &wl);
+    let (src_b, snk_b) = tapped_run(&cfg, &env_b, false);
+    env_b.verify_sink_complete().unwrap();
+
+    // Hand-built fused CONNECT: the seed layout, byte for byte — a job
+    // tag (or any other trailing field) at the defaults would break it.
+    let mut connect = vec![0u8]; // T_CONNECT
+    connect.extend_from_slice(&cfg.object_size.to_le_bytes());
+    connect.extend_from_slice(&8u32.to_le_bytes()); // 8 RMA slots in tests
+    connect.push(0); // resume = false
+    connect.extend_from_slice(&1u32.to_le_bytes()); // ack_batch = 1
+    assert_eq!(src_a[0], connect, "legacy CONNECT drifted from the seed bytes");
+    assert_eq!(src_b[0], connect, "session CONNECT drifted from the seed bytes");
+    assert_eq!(
+        sorted(&src_a),
+        sorted(&src_b),
+        "session API changed the source->sink wire bytes"
+    );
+    assert_eq!(
+        sorted(&snk_a),
+        sorted(&snk_b),
+        "session API changed the sink->source wire bytes"
+    );
+    let _ = std::fs::remove_dir_all(&env_a.cfg.ft_dir);
+    let _ = std::fs::remove_dir_all(&env_b.cfg.ft_dir);
+}
+
+#[test]
+#[allow(deprecated)] // the baseline run deliberately pins run_transfer
+fn builder_and_serve_outcomes_match_run_transfer() {
+    // One default-config job through all three entry points — the
+    // deprecated `run_transfer`, the `TransferJob` builder, and a
+    // single-job `Serve` daemon — must produce identical outcomes
+    // (every deterministic counter, negotiated knob and byte total).
+    let wl = workload::mixed_workload(6, 256 << 10, 11);
+    let run = |out: TransferOutcome, env: &SimEnv| -> TransferOutcome {
+        assert!(out.completed, "{:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        out
+    };
+
+    let env_a = SimEnv::new(Config::for_tests("serve-eq-legacy"), &wl);
+    let out_a = run(
+        ftlads::coordinator::run_transfer(
+            &env_a.cfg,
+            env_a.source.clone(),
+            env_a.sink.clone(),
+            &TransferSpec::fresh(env_a.files.clone()),
+            None,
+        )
+        .unwrap(),
+        &env_a,
+    );
+
+    let env_b = SimEnv::new(Config::for_tests("serve-eq-builder"), &wl);
+    let out_b = run(
+        TransferJob::builder(&env_b.cfg, &TransferSpec::fresh(env_b.files.clone()))
+            .source_pfs(env_b.source.clone())
+            .sink_pfs(env_b.sink.clone())
+            .run()
+            .unwrap(),
+        &env_b,
+    );
+
+    let env_c = SimEnv::new(Config::for_tests("serve-eq-daemon"), &wl);
+    let serve = Serve::new(env_c.cfg.clone());
+    let handle = serve.submit("tenant", 1, default_job(&env_c)).unwrap();
+    let out_c = handle.wait().unwrap();
+    serve.drain();
+    assert_eq!(serve.stats().jobs_completed, 1);
+    // The daemon job logs under its own namespace...
+    assert!(env_c.cfg.ft_dir.join("job-1").is_dir(), "job FT namespace missing");
+    let out_c = run(out_c, &env_c);
+
+    for (label, out) in [("builder", &out_b), ("serve", &out_c)] {
+        assert_eq!(canon(out.source), canon(out_a.source), "{label} source counters");
+        assert_eq!(canon(out.sink), canon(out_a.sink), "{label} sink counters");
+        assert_eq!(out.payload_bytes, out_a.payload_bytes, "{label} payload bytes");
+        assert_eq!(out.send_window, out_a.send_window, "{label}");
+        assert_eq!(out.send_window_effective, out_a.send_window_effective, "{label}");
+        assert_eq!(out.ack_batch_effective, out_a.ack_batch_effective, "{label}");
+        assert_eq!(out.rma_bytes_effective, out_a.rma_bytes_effective, "{label}");
+        assert_eq!(out.data_streams, out_a.data_streams, "{label}");
+        assert_eq!(out.source_sched.picks, out_a.source_sched.picks, "{label}");
+        assert_eq!(out.sink_sched.picks, out_a.sink_sched.picks, "{label}");
+        assert_eq!(out.fault, out_a.fault, "{label}");
+        // A lone job sees no foreign load: the shared registry must not
+        // change a single scheduling decision.
+        assert_eq!(out.source_sched.shared_picks, 0, "{label}");
+        assert_eq!(out.sink_sched.shared_picks, 0, "{label}");
+    }
+}
+
+#[test]
+fn concurrent_jobs_match_sequential_and_isolate_logs() {
+    // N jobs through one daemon concurrently == the same N jobs run
+    // sequentially through the builder, job for job — and each job's FT
+    // object log lands in its own `job-<id>` namespace.
+    let workloads: Vec<_> =
+        (0..3u64).map(|j| workload::mixed_workload(4, 256 << 10, 20 + j)).collect();
+
+    // Sequential baseline, one isolated env per job.
+    let mut baseline = Vec::new();
+    for (j, wl) in workloads.iter().enumerate() {
+        let env = SimEnv::new(Config::for_tests(&format!("serve-seq-{j}")), wl);
+        let out = TransferJob::builder(&env.cfg, &TransferSpec::fresh(env.files.clone()))
+            .source_pfs(env.source.clone())
+            .sink_pfs(env.sink.clone())
+            .run()
+            .unwrap();
+        assert!(out.completed, "sequential {j}: {:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        baseline.push(out);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+
+    // The same jobs, all in flight through one daemon.
+    let mut cfg = Config::for_tests("serve-conc");
+    cfg.serve_max_jobs = 3;
+    let serve = Serve::new(cfg.clone());
+    let envs: Vec<_> =
+        workloads.iter().map(|wl| SimEnv::new(cfg.clone(), wl)).collect();
+    let handles: Vec<_> = envs
+        .iter()
+        .map(|env| serve.submit("tenant", 1, default_job(env)).unwrap())
+        .collect();
+    let ids: Vec<u64> = handles.iter().map(|h| h.id()).collect();
+    let outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    serve.drain();
+
+    for (j, (out, env)) in outs.iter().zip(&envs).enumerate() {
+        assert!(out.completed, "concurrent {j}: {:?}", out.fault);
+        env.verify_sink_complete().unwrap();
+        assert_eq!(canon(out.source), canon(baseline[j].source), "job {j} source");
+        assert_eq!(canon(out.sink), canon(baseline[j].sink), "job {j} sink");
+        assert_eq!(out.payload_bytes, baseline[j].payload_bytes, "job {j}");
+        // Per-job FT namespace: each job logged under its own id...
+        let dir = cfg.ft_dir.join(format!("job-{}", ids[j]));
+        assert!(dir.is_dir(), "job {} has no FT namespace {}", j, dir.display());
+    }
+    // ...and the ids are distinct by construction.
+    let mut unique = ids.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    assert_eq!(unique.len(), ids.len(), "job ids collided: {ids:?}");
+
+    let stats = serve.stats();
+    assert_eq!(stats.jobs_submitted, 3);
+    assert_eq!(stats.jobs_admitted, 3);
+    assert_eq!(stats.jobs_completed, 3);
+    assert_eq!(stats.jobs_faulted, 0);
+    assert!(stats.peak_concurrent <= 3);
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
+
+#[test]
+fn admission_cap_holds_and_drain_rejects_new_jobs() {
+    let mut cfg = Config::for_tests("serve-cap");
+    cfg.serve_max_jobs = 1;
+    let serve = Serve::new(cfg.clone());
+    let wl = workload::big_workload(2, 256 << 10);
+    let envs: Vec<_> = (0..3).map(|_| SimEnv::new(cfg.clone(), &wl)).collect();
+    let handles: Vec<_> = envs
+        .iter()
+        .map(|env| serve.submit("tenant", 1, default_job(env)).unwrap())
+        .collect();
+    for h in handles {
+        assert!(h.wait().unwrap().completed);
+    }
+    serve.drain();
+    let stats = serve.stats();
+    assert_eq!(stats.jobs_completed, 3);
+    assert_eq!(stats.peak_concurrent, 1, "one admission slot must serialize");
+    // Drained daemon: further submissions are refused and counted.
+    let env = SimEnv::new(cfg.clone(), &wl);
+    assert!(serve.submit("tenant", 1, default_job(&env)).is_err());
+    assert_eq!(serve.stats().jobs_rejected, 1);
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
+
+#[test]
+fn foreign_charges_steer_scheduler_deterministically() {
+    // The steering acceptance pin, deterministically: a phantom second
+    // job saturates OSTs 0..=4 on a shared registry; a real job running
+    // with a handle on that registry must (a) see the foreign load at
+    // pick time and (b) steer its congestion-aware picks onto OSTs the
+    // phantom job is NOT hammering.
+    let cfg = Config::for_tests("serve-steer-unit");
+    let wl = workload::big_workload(12, 512 << 10); // files across all 11 OSTs
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let registry = OstRegistry::new(cfg.ost_count);
+    let other = registry.handle();
+    for o in 0..5u32 {
+        for _ in 0..64 {
+            other.begin(OstId(o));
+        }
+    }
+    let out = TransferJob::builder(&cfg, &TransferSpec::fresh(env.files.clone()))
+        .source_pfs(env.source.clone())
+        .sink_pfs(env.sink.clone())
+        .shared_source_osts(Arc::new(registry.handle()))
+        .shared_sink_osts(Arc::new(registry.handle()))
+        .run()
+        .unwrap();
+    assert!(out.completed, "{:?}", out.fault);
+    env.verify_sink_complete().unwrap();
+    let picks = out.source_sched.shared_picks + out.sink_sched.shared_picks;
+    let avoids = out.source_sched.shared_avoids + out.sink_sched.shared_avoids;
+    assert!(picks > 0, "foreign load on half the OSTs never reached a pick");
+    assert!(
+        avoids > 0,
+        "{picks} foreign-load picks but not one steered to an un-hammered OST"
+    );
+    // The job's own charges drained with its handles: nothing but the
+    // phantom's load is left on the registry.
+    assert_eq!(registry.total_load(), 5 * 64);
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+
+    // Registry-blind control: the same transfer without a handle makes
+    // purely local decisions — no foreign-aware picks can exist.
+    let cfg2 = Config::for_tests("serve-steer-blind");
+    let env2 = SimEnv::new(cfg2.clone(), &wl);
+    let out2 = TransferJob::builder(&cfg2, &TransferSpec::fresh(env2.files.clone()))
+        .source_pfs(env2.source.clone())
+        .sink_pfs(env2.sink.clone())
+        .run()
+        .unwrap();
+    assert!(out2.completed, "{:?}", out2.fault);
+    assert_eq!(out2.source_sched.shared_picks, 0);
+    assert_eq!(out2.source_sched.shared_avoids, 0);
+    assert_eq!(out2.sink_sched.shared_picks, 0);
+    let _ = std::fs::remove_dir_all(&cfg2.ft_dir);
+}
+
+#[test]
+fn two_overlapping_jobs_share_congestion_through_the_daemon() {
+    // End to end through `Serve`: two storage-bound jobs overlap in real
+    // time on slow strictly-serial OSTs. With `serve_registry` on, each
+    // job's scheduler must consult (and steer around) the other's
+    // in-flight load; with it off, the same two jobs run registry-blind.
+    for informed in [true, false] {
+        let mut cfg = Config::for_tests(&format!("serve-steer-e2e-{informed}"));
+        cfg.serve_max_jobs = 2;
+        cfg.serve_registry = informed;
+        cfg.time_scale = 1.0;
+        cfg.net_bandwidth = 1e12;
+        cfg.net_latency_us = 0;
+        cfg.ost_bandwidth = 1e12;
+        cfg.ost_latency_us = 200;
+        cfg.ost_concurrent = 1;
+        cfg.send_window = 16;
+        cfg.rma_bytes = 16 * cfg.object_size as usize;
+        let serve = Serve::new(cfg.clone());
+        let wl = workload::big_workload(6, 512 << 10); // 48 objects each
+        let envs: Vec<_> = (0..2).map(|_| SimEnv::new(cfg.clone(), &wl)).collect();
+        let handles: Vec<_> = envs
+            .iter()
+            .map(|env| serve.submit("tenant", 1, default_job(env)).unwrap())
+            .collect();
+        let outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        serve.drain();
+        let mut picks = 0u64;
+        let mut avoids = 0u64;
+        for (out, env) in outs.iter().zip(&envs) {
+            assert!(out.completed, "informed={informed}: {:?}", out.fault);
+            env.verify_sink_complete().unwrap();
+            picks += out.source_sched.shared_picks + out.sink_sched.shared_picks;
+            avoids += out.source_sched.shared_avoids + out.sink_sched.shared_avoids;
+        }
+        // Jobs done → every handle dropped → no phantom load remains.
+        assert_eq!(serve.source_registry().total_load(), 0);
+        assert_eq!(serve.sink_registry().total_load(), 0);
+        if informed {
+            assert!(picks > 0, "overlapping jobs never saw each other's load");
+            assert!(avoids > 0, "{picks} foreign-load picks, zero steers");
+        } else {
+            assert_eq!(picks, 0, "serve_registry=off must be registry-blind");
+            assert_eq!(avoids, 0);
+        }
+        let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+    }
+}
+
+#[test]
+fn killed_job_leaves_daemon_and_survivors_intact_then_resumes() {
+    // ft_matrix-style leg at the daemon level: three jobs, the middle
+    // one's leg is killed mid-transfer. The survivors and the daemon
+    // must be unaffected; the killed job then resumes FROM ITS OWN
+    // job-scoped log and finishes without re-sending what it synced.
+    let mut cfg = Config::for_tests("serve-kill");
+    cfg.serve_max_jobs = 3;
+    let serve = Serve::new(cfg.clone());
+    let workloads: Vec<_> =
+        (0..3u64).map(|j| workload::mixed_workload(5, 256 << 10, 40 + j)).collect();
+    let envs: Vec<_> =
+        workloads.iter().map(|wl| SimEnv::new(cfg.clone(), wl)).collect();
+    let handles: Vec<_> = envs
+        .iter()
+        .enumerate()
+        .map(|(j, env)| {
+            let mut req = default_job(env);
+            if j == 1 {
+                req.spec =
+                    req.spec.with_fault(FaultPlan::at_fraction(0.5, Side::Source));
+            }
+            serve.submit("tenant", 1, req).unwrap()
+        })
+        .collect();
+    let killed_id = handles[1].id();
+    let outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+
+    assert!(outs[0].completed, "survivor 0: {:?}", outs[0].fault);
+    assert!(outs[2].completed, "survivor 2: {:?}", outs[2].fault);
+    assert!(!outs[1].completed, "the fault plan must kill job 1's leg");
+    assert!(outs[1].fault.is_some());
+    envs[0].verify_sink_complete().unwrap();
+    envs[2].verify_sink_complete().unwrap();
+
+    // The daemon itself is unaffected: counters add up and it still
+    // takes (and completes) new work.
+    let stats = serve.stats();
+    assert_eq!(stats.jobs_faulted, 1);
+    assert_eq!(stats.jobs_completed, 2);
+    let extra_env = SimEnv::new(cfg.clone(), &workloads[0]);
+    let extra = serve.submit("tenant", 1, default_job(&extra_env)).unwrap();
+    assert!(extra.wait().unwrap().completed, "daemon must keep serving");
+    serve.drain();
+    assert_eq!(serve.stats().jobs_completed, 3);
+
+    // Resume the killed transfer against its own namespace: same base
+    // config, same job id → the builder re-derives `<ft_dir>/job-<id>`
+    // and §5.2.2 recovery skips everything that job already synced.
+    let out = TransferJob::builder(
+        &cfg,
+        &TransferSpec::resuming(envs[1].files.clone()),
+    )
+    .source_pfs(envs[1].source.clone())
+    .sink_pfs(envs[1].sink.clone())
+    .job_id(killed_id)
+    .run()
+    .unwrap();
+    assert!(out.completed, "resume: {:?}", out.fault);
+    assert!(
+        out.source.objects_skipped_resume + out.source.files_skipped_resume > 0,
+        "resume must reuse the killed job's own log, not start over"
+    );
+    envs[1].verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}

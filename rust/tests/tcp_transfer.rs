@@ -48,20 +48,17 @@ impl TcpEnv {
         let src_ep: Arc<dyn Endpoint> = Arc::new(src_ep);
         let sink_ep: Arc<dyn Endpoint> = Arc::new(sink_ep);
 
-        let sink_node = coordinator::sink::spawn_sink(
-            &self.cfg,
-            self.sink.clone() as Arc<dyn Pfs>,
-            sink_ep,
-            None,
-        )
-        .expect("spawn sink");
+        let sink_node =
+            coordinator::sink::SinkSession::new(&self.cfg, self.sink.clone() as Arc<dyn Pfs>, sink_ep)
+                .spawn()
+                .expect("spawn sink");
         let spec = TransferSpec { files: self.files.clone(), resume, fault: FaultPlan::none() };
-        let src_report = coordinator::source::run_source(
+        let src_report = coordinator::source::SourceSession::new(
             &self.cfg,
             self.source.clone() as Arc<dyn Pfs>,
             src_ep.clone(),
-            &spec,
         )
+        .run(&spec)
         .expect("run source");
         let sink_report = sink_node.join();
         let fault_msg = src_report.fault.clone().or(sink_report.fault);
@@ -83,6 +80,13 @@ impl TcpEnv {
             send_window_effective: src_report.send_window_effective,
             ack_batch_effective: sink_report.ack_batch_effective,
             rma_bytes_effective: src_report.rma_bytes_effective,
+            data_streams: src_report.data_streams,
+            tune_epochs: 0,
+            tune_grows: 0,
+            tune_shrinks: 0,
+            tune_reverts: 0,
+            goodput_final: 0.0,
+            tune_trajectory: Vec::new(),
         }
     }
 
