@@ -39,6 +39,12 @@
 //!                   order under a full admission queue, and cross-job
 //!                   OST steering via the shared congestion registry
 //!                   (registry-informed vs blind) — the §A13 tables
+//!   torture         adversarial-network transport: per-profile overhead
+//!                   vs a torture-off run for every FT mechanism (wall
+//!                   time, duplicates absorbed, retries) and the
+//!                   recovery leg — each profile composed with a
+//!                   mid-transfer kill, resume honoring the
+//!                   `resent <= total - logged` bound — the §A14 tables
 //!
 //! Plain timing mains (no criterion offline); each reports mean ± 99 % CI
 //! over fixed iteration counts with warmup. With `FTLADS_BENCH_JSON_DIR`
@@ -960,6 +966,134 @@ fn bench_serve() {
     );
 }
 
+/// §A14: the adversarial-network transport. (a) Overhead — each torture
+/// profile against a torture-off baseline for every FT mechanism on a
+/// wire-bound transfer: wall time, duplicates the dedup ledgers
+/// absorbed, handshake retries. Every run must still complete with a
+/// byte-verified sink and exactly-once writes. (b) Recovery — each
+/// profile composed with a mid-transfer kill: the resume (adversary
+/// still armed) must honor the log-based retransmit bound
+/// `resent <= total - logged`.
+fn bench_torture() {
+    use ftlads::fault::FaultPlan;
+    use ftlads::net::Side;
+
+    let quick = std::env::var("FTLADS_BENCH_SCALE").as_deref() == Ok("quick");
+    let (files, blocks) = if quick { (3usize, 4u64) } else { (4, 8) };
+
+    let torture_cfg = |tag: &str, profile: &str, mech: Mechanism| {
+        let mut cfg = Config::for_tests(tag);
+        cfg.mechanism = mech;
+        cfg.method = Method::Bit64;
+        // Wire-bound in real time so held/duplicated traffic costs
+        // something measurable: ~330 µs per 64 KiB object.
+        cfg.time_scale = 1.0;
+        cfg.net_bandwidth = 2.0e8;
+        cfg.net_latency_us = 5;
+        cfg.ost_bandwidth = f64::INFINITY;
+        cfg.ost_latency_us = 0;
+        cfg.send_window = 4;
+        cfg.ack_batch = 4;
+        cfg.ack_flush_us = 500;
+        cfg.data_streams = 2;
+        cfg.connect_timeout_ms = 100;
+        cfg.connect_retries = 6;
+        cfg.torture_profile = profile.into();
+        cfg.torture_seed = if profile == "off" { 0 } else { 0xA14 };
+        cfg
+    };
+
+    // (a) per-profile overhead vs the torture-off baseline.
+    let mut rows = Vec::new();
+    for mech in Mechanism::ALL_FT {
+        let mut off_ms = 0.0f64;
+        for profile in ["off", "reorder", "dup", "partition"] {
+            let cfg = torture_cfg(
+                &format!("micro-torture-{profile}-{}", mech.as_str()),
+                profile,
+                mech,
+            );
+            let wl = workload::big_workload(files, blocks * cfg.object_size);
+            let total = wl.total_objects(cfg.object_size);
+            let env = SimEnv::new(cfg, &wl);
+            let started = std::time::Instant::now();
+            let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+            let ms = started.elapsed().as_secs_f64() * 1e3;
+            assert!(out.completed, "{profile}/{mech:?}: {:?}", out.fault);
+            assert_eq!(
+                out.sink.write_syscalls, total,
+                "{profile}/{mech:?}: duplicate reached a pwrite"
+            );
+            env.verify_sink_complete().unwrap();
+            if profile == "off" {
+                off_ms = ms;
+            }
+            rows.push(vec![
+                profile.to_string(),
+                mech.as_str().to_string(),
+                format!("{ms:.1}"),
+                format!("{:.2}", ms / off_ms.max(1e-9)),
+                format!("{}", out.sink.dup_blocks_dropped),
+                format!("{}", out.source.dup_acks_dropped),
+                format!("{}", out.source.retries + out.sink.retries),
+            ]);
+            let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        }
+    }
+    print_table(
+        "torture overhead (profile vs off, per FT mechanism)",
+        &["profile", "mechanism", "ms", "x off", "dup blocks", "dup acks", "retries"],
+        &rows,
+    );
+
+    // (b) recovery: profile + mid-transfer kill, resume under torture.
+    let mut rows = Vec::new();
+    for profile in ["reorder", "dup", "partition", "cut-stream"] {
+        let cfg = torture_cfg(
+            &format!("micro-torture-kill-{profile}"),
+            profile,
+            Mechanism::Universal,
+        );
+        let wl = workload::big_workload(files, blocks * cfg.object_size);
+        let total = wl.total_objects(cfg.object_size);
+        let env = SimEnv::new(cfg, &wl);
+        let plan = FaultPlan::at_fraction(0.5, Side::Source);
+        let label = plan.label_with(Some(profile));
+        let out = env
+            .run(&TransferSpec::fresh(env.files.clone()).with_fault(plan))
+            .unwrap();
+        assert!(!out.completed, "{label}: kill did not fire");
+        let logged: u64 = ftlog::recover::recover_all(&env.cfg.ft())
+            .unwrap()
+            .values()
+            .map(|s| s.count() as u64)
+            .sum();
+        let started = std::time::Instant::now();
+        let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+        let resume_ms = started.elapsed().as_secs_f64() * 1e3;
+        assert!(out2.completed, "{label}: resume failed: {:?}", out2.fault);
+        assert!(
+            out2.source.objects_sent <= total - logged,
+            "{label}: resume retransmitted logged objects"
+        );
+        env.verify_sink_complete().unwrap();
+        rows.push(vec![
+            label,
+            format!("{total}"),
+            format!("{logged}"),
+            format!("{}", out2.source.objects_skipped_resume),
+            format!("{}", out2.source.objects_sent),
+            format!("{resume_ms:.1}"),
+        ]);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    print_table(
+        "torture recovery (profile + mid-transfer kill, resume bound)",
+        &["kill+profile", "total", "logged", "skipped", "resent", "resume ms"],
+        &rows,
+    );
+}
+
 fn bench_recovery_parse() {
     let blocks_per_file = 256u32;
     let files = 64usize;
@@ -1137,6 +1271,7 @@ fn main() {
     bench_multi_stream();
     bench_autotune();
     bench_serve();
+    bench_torture();
     bench_recovery_parse();
     let _ = ftlads::bench_support::write_json_summary("micro_hotpath");
 }

@@ -289,6 +289,52 @@ mod tests {
     }
 
     #[test]
+    fn torture_and_hardening_flags_roundtrip_into_config() {
+        use crate::config::Config;
+        // The way main.rs wires them: every knob takes a value, and each
+        // exists as a --set key too.
+        let a = Args::parse(
+            &argv(&[
+                "transfer",
+                "--torture-seed",
+                "7",
+                "--torture-profile=reorder",
+                "--connect-timeout-ms",
+                "50",
+                "--connect-retries",
+                "3",
+                "--job-deadline-ms",
+                "2000",
+            ]),
+            &[],
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.torture_seed = a.get_parse("torture-seed", 0u64).unwrap();
+        cfg.torture_profile = a.get("torture-profile").unwrap().to_string();
+        cfg.connect_timeout_ms = a.get_parse("connect-timeout-ms", 10_000u64).unwrap();
+        cfg.connect_retries = a.get_parse("connect-retries", 0u32).unwrap();
+        cfg.job_deadline_ms = a.get_parse("job-deadline-ms", 0u64).unwrap();
+        assert!(cfg.validate().is_ok());
+        let spec = cfg.torture().expect("seed + profile arm the adversary");
+        assert_eq!(spec.seed, 7);
+        assert_eq!(cfg.connect_retries, 3);
+        assert_eq!(cfg.job_deadline_ms, 2000);
+
+        let mut cfg = Config::default();
+        cfg.apply_kv("torture_seed", "9").unwrap();
+        cfg.apply_kv("torture_profile", "dup").unwrap();
+        cfg.apply_kv("connect_retries", "2").unwrap();
+        assert!(cfg.validate().is_ok());
+        assert!(cfg.torture().is_some());
+        // Seed 0 is the hard off switch: no profile ever arms without it.
+        let mut cfg = Config::default();
+        cfg.apply_kv("torture_profile", "reorder").unwrap();
+        assert!(cfg.torture().is_none());
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
     fn scheduler_typo_error_lists_valid_policies() {
         use crate::sched::SchedPolicy;
         let a = Args::parse(&argv(&["transfer", "--scheduler", "speedy"]), &[]).unwrap();

@@ -7,6 +7,7 @@
 //! 11 OSTs, 1 MB stripes), scaled per DESIGN.md §Substitutions.
 
 pub mod toml_lite;
+pub mod torture;
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -21,6 +22,7 @@ use crate::pfs::ost::OstConfig;
 use crate::sched::SchedPolicy;
 
 pub use toml_lite::TomlLite;
+pub use torture::{TortureSpec, TORTURE_PROFILES};
 
 /// Everything a transfer session needs.
 #[derive(Debug, Clone)]
@@ -151,6 +153,25 @@ pub struct Config {
     /// Wire model.
     pub net_latency_us: u64,
     pub net_bandwidth: f64,
+    /// Handshake patience: how long one CONNECT (or CONNECT_ACK) wait
+    /// lasts before the source re-sends, and the budget a sink-side
+    /// connection grants its first inbound message.
+    pub connect_timeout_ms: u64,
+    /// Bounded exponential-backoff handshake retries: after a
+    /// `connect_timeout_ms` wait expires the source re-sends CONNECT
+    /// (doubling the wait each attempt) up to this many times. 0 (the
+    /// default) reproduces the legacy single-wait behavior exactly.
+    pub connect_retries: u32,
+    /// `ftlads serve` per-job watchdog: a job still running after this
+    /// many milliseconds is faulted and its admission slot freed (a
+    /// silent peer can no longer pin a slot forever). 0 (default) = off.
+    pub job_deadline_ms: u64,
+    /// Adversarial-network torture seed (see [`torture`]): 0 (default)
+    /// disarms the adversary entirely — endpoints are not even wrapped,
+    /// so the wire is byte-identical to a torture-free build.
+    pub torture_seed: u64,
+    /// Named torture profile ([`TORTURE_PROFILES`]); "off" disarms.
+    pub torture_profile: String,
     /// Global time scaling for the simulated service times (0 = no sleeps).
     pub time_scale: f64,
     /// Workload seed (synthetic data + mixed distribution).
@@ -194,6 +215,11 @@ impl Default for Config {
             ost_concurrent: 1,
             net_latency_us: 15,
             net_bandwidth: 6.0e9,
+            connect_timeout_ms: 10_000,
+            connect_retries: 0,
+            job_deadline_ms: 0,
+            torture_seed: 0,
+            torture_profile: String::from("off"),
             time_scale: 1.0,
             seed: 42,
         }
@@ -309,6 +335,19 @@ impl Config {
         }
     }
 
+    /// The armed adversarial-network policy, if any: a nonzero
+    /// `torture_seed` plus a profile other than "off". With the seed at
+    /// 0 (the default) this is `None` and the transports are not even
+    /// wrapped — byte-identical to a torture-free build.
+    pub fn torture(&self) -> Option<TortureSpec> {
+        if self.torture_seed == 0 {
+            return None;
+        }
+        TortureSpec::profile(&self.torture_profile, self.torture_seed)
+            .ok()
+            .flatten()
+    }
+
     /// Apply `key = value` (config file or CLI `--set key=value`).
     pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
@@ -352,6 +391,11 @@ impl Config {
             "ost_concurrent" => self.ost_concurrent = value.parse()?,
             "net_latency_us" => self.net_latency_us = value.parse()?,
             "net_bandwidth" => self.net_bandwidth = value.parse()?,
+            "connect_timeout_ms" => self.connect_timeout_ms = value.parse()?,
+            "connect_retries" => self.connect_retries = value.parse()?,
+            "job_deadline_ms" => self.job_deadline_ms = value.parse()?,
+            "torture_seed" => self.torture_seed = value.parse()?,
+            "torture_profile" => self.torture_profile = value.to_string(),
             "time_scale" => self.time_scale = value.parse()?,
             "seed" => self.seed = value.parse()?,
             _ => anyhow::bail!("unknown config key '{key}'"),
@@ -402,6 +446,24 @@ impl Config {
             (1..=1024).contains(&self.serve_max_jobs),
             "serve_max_jobs must be in 1..=1024"
         );
+        anyhow::ensure!(
+            self.connect_timeout_ms >= 1,
+            "connect_timeout_ms must be >= 1"
+        );
+        anyhow::ensure!(
+            self.connect_retries <= 16,
+            "connect_retries must be <= 16 (exponential backoff sanity cap)"
+        );
+        anyhow::ensure!(
+            self.torture_seed == 0 || self.torture_profile != "off",
+            "torture_seed is set but torture_profile is 'off' — pick one of {}",
+            TORTURE_PROFILES.join("|")
+        );
+        // Resolve the profile name eagerly so a typo fails at validate
+        // time, not mid-transfer; also bounds-check the resolved spec.
+        if let Some(spec) = TortureSpec::profile(&self.torture_profile, self.torture_seed)? {
+            spec.validate()?;
+        }
         Ok(())
     }
 
@@ -725,6 +787,65 @@ mod tests {
         c.write_coalesce_bytes = 64 << 20;
         assert_eq!(c.send_window_cap(), 128);
         assert_eq!(c.coalesce_cap(), 64 << 20);
+    }
+
+    #[test]
+    fn torture_kv_defaults_and_validation() {
+        let mut c = Config::default();
+        // Off by default: no adversary, no wire change.
+        assert_eq!(c.torture_seed, 0);
+        assert_eq!(c.torture_profile, "off");
+        assert!(c.torture().is_none());
+        assert!(c.validate().is_ok());
+        c.apply_kv("torture_seed", "7").unwrap();
+        // A seed without a profile is a likely operator mistake: reject.
+        assert!(c.validate().is_err());
+        c.apply_kv("torture_profile", "reorder").unwrap();
+        assert!(c.validate().is_ok());
+        let spec = c.torture().expect("armed");
+        assert_eq!(spec.seed, 7);
+        assert!(spec.delay_data > 0.0);
+        // Profile without a seed stays disarmed (seed gates the arming).
+        c.apply_kv("torture_seed", "0").unwrap();
+        assert!(c.torture().is_none());
+        assert!(c.validate().is_ok());
+        // Typos fail at validate time with the profile list.
+        c.apply_kv("torture_profile", "chaos-monkey").unwrap();
+        c.apply_kv("torture_seed", "7").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("chaos-monkey"), "{err}");
+        assert!(c.apply_kv("torture_seed", "many").is_err());
+    }
+
+    #[test]
+    fn connect_retry_kv_defaults_and_validation() {
+        let mut c = Config::default();
+        // Defaults reproduce the legacy single 10 s handshake wait.
+        assert_eq!(c.connect_timeout_ms, 10_000);
+        assert_eq!(c.connect_retries, 0);
+        c.apply_kv("connect_timeout_ms", "50").unwrap();
+        c.apply_kv("connect_retries", "5").unwrap();
+        assert_eq!(c.connect_timeout_ms, 50);
+        assert_eq!(c.connect_retries, 5);
+        assert!(c.validate().is_ok());
+        c.connect_timeout_ms = 0;
+        assert!(c.validate().is_err(), "zero handshake patience rejected");
+        c.connect_timeout_ms = 1;
+        c.connect_retries = 17;
+        assert!(c.validate().is_err(), "retry cap enforced");
+        c.connect_retries = 16;
+        assert!(c.validate().is_ok());
+        assert!(c.apply_kv("connect_retries", "lots").is_err());
+    }
+
+    #[test]
+    fn job_deadline_kv_defaults() {
+        let mut c = Config::default();
+        assert_eq!(c.job_deadline_ms, 0, "watchdog must be opt-in");
+        c.apply_kv("job_deadline_ms", "250").unwrap();
+        assert_eq!(c.job_deadline_ms, 250);
+        assert!(c.validate().is_ok());
+        assert!(c.apply_kv("job_deadline_ms", "soon").is_err());
     }
 
     #[test]

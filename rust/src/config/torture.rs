@@ -1,0 +1,247 @@
+//! Adversarial-network torture specification.
+//!
+//! A [`TortureSpec`] parameterizes the [`crate::net::adversary`]
+//! transport adapter: per-message-class probabilities for delay
+//! (bounded reorder), duplication and drop, plus timed partition/heal
+//! windows and an optional deterministic data-stream cut. Everything is
+//! driven by one seed — the i-th message sent on a given endpoint gets
+//! an identical verdict on every run — so a failing torture case is
+//! replayable by seed alone.
+//!
+//! The spec deliberately stays inside the protocol's *recoverable
+//! envelope*:
+//!
+//! - **Drops apply only to the handshake class** (CONNECT / CONNECT_ACK
+//!   / STREAM_HELLO), which is covered by the `connect_timeout_ms` /
+//!   `connect_retries` retry loop. Control messages (NEW_FILE,
+//!   FILE_CLOSE, BYE, …) have no retransmit path, so the adversary
+//!   never drops or duplicates them — it only ever *delays the traffic
+//!   around* them.
+//! - **Duplication and delay apply to the data and ack classes**
+//!   (NEW_BLOCK, BLOCK_SYNC), which the hardened endpoints dedup by
+//!   `(fid, block)`.
+//! - **Partitions defer, never drop**: a partition window buffers
+//!   data/ack sends in order and releases them when the window heals,
+//!   so byte-exact delivery is preserved.
+//!
+//! Profiles are selected by name (`--torture-profile`) and armed by a
+//! nonzero `--torture-seed`; with the seed at 0 (the default) no
+//! adversary is constructed at all and the wire is byte-identical to a
+//! build without this module.
+
+use anyhow::Result;
+
+/// Seeded, deterministic adversarial-network policy. Constructed from a
+/// named profile ([`TortureSpec::profile`]) or directly (property tests
+/// randomize the fields inside the recoverable envelope).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TortureSpec {
+    /// Master seed; each wrapped endpoint derives its own PCG32 stream
+    /// from (seed, side, stream id).
+    pub seed: u64,
+    /// P(drop) for handshake-class messages (retried by the peer).
+    pub drop_handshake: f64,
+    /// P(duplicate) for handshake-class messages.
+    pub dup_handshake: f64,
+    /// P(duplicate) for NEW_BLOCK.
+    pub dup_data: f64,
+    /// P(duplicate) for BLOCK_SYNC / BLOCK_SYNC_BATCH.
+    pub dup_ack: f64,
+    /// P(hold back into the reorder window) for NEW_BLOCK.
+    pub delay_data: f64,
+    /// P(hold back into the reorder window) for BLOCK_SYNC(_BATCH).
+    pub delay_ack: f64,
+    /// Max logical-clock ticks a delayed message slips past later
+    /// traffic (the bounded reorder window; min 1 when any delay
+    /// probability is nonzero).
+    pub reorder_window: u32,
+    /// Start a partition after every N data/ack sends (0 = never).
+    pub partition_every: u64,
+    /// Partition duration in logical-clock ticks; deferred traffic is
+    /// released in order when the window heals.
+    pub partition_len: u64,
+    /// Deterministically sever data stream `cut_stream` (both
+    /// directions) once its endpoints' logical clocks pass
+    /// [`TortureSpec::cut_after_ops`] — the stream-failover drill.
+    pub cut_stream: Option<u32>,
+    pub cut_after_ops: u64,
+}
+
+/// The named profiles `--torture-profile` accepts ("off" disarms).
+pub const TORTURE_PROFILES: &[&str] =
+    &["off", "reorder", "dup", "lossy-handshake", "partition", "cut-stream"];
+
+impl TortureSpec {
+    /// A spec that perturbs nothing (useful as a fields base).
+    pub fn quiet(seed: u64) -> TortureSpec {
+        TortureSpec {
+            seed,
+            drop_handshake: 0.0,
+            dup_handshake: 0.0,
+            dup_data: 0.0,
+            dup_ack: 0.0,
+            delay_data: 0.0,
+            delay_ack: 0.0,
+            reorder_window: 1,
+            partition_every: 0,
+            partition_len: 0,
+            cut_stream: None,
+            cut_after_ops: 0,
+        }
+    }
+
+    /// Resolve a named profile. `None` for "off"; an error for names
+    /// not in [`TORTURE_PROFILES`].
+    pub fn profile(name: &str, seed: u64) -> Result<Option<TortureSpec>> {
+        let q = TortureSpec::quiet(seed);
+        Ok(Some(match name {
+            "off" => return Ok(None),
+            // Delay-heavy: ~30% of data/ack traffic slips up to 4 ticks.
+            "reorder" => TortureSpec {
+                delay_data: 0.3,
+                delay_ack: 0.3,
+                reorder_window: 4,
+                ..q
+            },
+            // Duplicate-heavy: the dedup drill. No delays, so the
+            // emitted frame sequence is a pure function of the send
+            // sequence — the schedule-determinism pin uses this.
+            "dup" => TortureSpec {
+                dup_handshake: 0.5,
+                dup_data: 0.3,
+                dup_ack: 0.3,
+                ..q
+            },
+            // Handshake attrition: CONNECT/CONNECT_ACK/STREAM_HELLO
+            // flips a 30% drop coin; the retry loop must carry it.
+            "lossy-handshake" => TortureSpec {
+                drop_handshake: 0.3,
+                dup_handshake: 0.2,
+                ..q
+            },
+            // Periodic partition/heal with mild reordering.
+            "partition" => TortureSpec {
+                partition_every: 32,
+                partition_len: 8,
+                delay_data: 0.1,
+                delay_ack: 0.1,
+                reorder_window: 2,
+                ..q
+            },
+            // Sever data stream 1 mid-transfer: at K ≥ 2 the source
+            // must re-home its queues onto survivors; at K = 1 the job
+            // must fault cleanly with a resumable log.
+            "cut-stream" => TortureSpec {
+                cut_stream: Some(1),
+                cut_after_ops: 60,
+                dup_data: 0.1,
+                dup_ack: 0.1,
+                ..q
+            },
+            other => anyhow::bail!(
+                "unknown torture profile '{other}' (expected one of {})",
+                TORTURE_PROFILES.join("|")
+            ),
+        }))
+    }
+
+    /// True when every perturbation is disabled (a quiet spec wraps the
+    /// wire in pure pass-through).
+    pub fn is_quiet(&self) -> bool {
+        self.drop_handshake == 0.0
+            && self.dup_handshake == 0.0
+            && self.dup_data == 0.0
+            && self.dup_ack == 0.0
+            && self.delay_data == 0.0
+            && self.delay_ack == 0.0
+            && self.partition_every == 0
+            && self.cut_stream.is_none()
+    }
+
+    /// Sanity bounds: probabilities in [0, 1], a usable reorder window.
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("drop_handshake", self.drop_handshake),
+            ("dup_handshake", self.dup_handshake),
+            ("dup_data", self.dup_data),
+            ("dup_ack", self.dup_ack),
+            ("delay_data", self.delay_data),
+            ("delay_ack", self.delay_ack),
+        ] {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&p),
+                "torture {name} must be a probability in [0, 1], got {p}"
+            );
+        }
+        anyhow::ensure!(
+            self.reorder_window >= 1,
+            "torture reorder_window must be >= 1"
+        );
+        anyhow::ensure!(
+            self.partition_every == 0 || self.partition_len >= 1,
+            "torture partition_every set but partition_len is 0"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_profile_resolves_to_none() {
+        assert!(TortureSpec::profile("off", 7).unwrap().is_none());
+        assert!(TortureSpec::profile("warp-speed", 7).is_err());
+    }
+
+    #[test]
+    fn every_named_profile_resolves_and_validates() {
+        for name in TORTURE_PROFILES {
+            let spec = TortureSpec::profile(name, 9).unwrap();
+            if *name == "off" {
+                assert!(spec.is_none());
+                continue;
+            }
+            let spec = spec.unwrap();
+            spec.validate().unwrap();
+            assert_eq!(spec.seed, 9);
+            assert!(!spec.is_quiet(), "profile '{name}' must perturb something");
+        }
+    }
+
+    #[test]
+    fn profiles_stay_inside_the_recoverable_envelope() {
+        for name in TORTURE_PROFILES {
+            let Some(spec) = TortureSpec::profile(name, 1).unwrap() else {
+                continue;
+            };
+            // Drops only ever hit the handshake class — everything else
+            // must be delivered (possibly late, possibly twice).
+            assert!(
+                spec.drop_handshake <= 1.0
+                    && spec.dup_data <= 0.5
+                    && spec.dup_ack <= 0.5,
+                "profile '{name}' leaves the completable envelope"
+            );
+        }
+    }
+
+    #[test]
+    fn quiet_spec_is_quiet_and_valid() {
+        let q = TortureSpec::quiet(3);
+        assert!(q.is_quiet());
+        q.validate().unwrap();
+        let mut bad = q.clone();
+        bad.dup_data = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = TortureSpec::quiet(3);
+        bad.reorder_window = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = TortureSpec::quiet(3);
+        bad.partition_every = 8;
+        assert!(bad.validate().is_err(), "partition window needs a length");
+        bad.partition_len = 4;
+        assert!(bad.validate().is_ok());
+    }
+}

@@ -28,7 +28,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::Config;
+use crate::config::{Config, TortureSpec};
 use crate::fault::FaultPlan;
 use crate::ftlog::SpaceStats;
 use crate::metrics::{CounterSnapshot, ResourceReport, Sampler};
@@ -230,6 +230,7 @@ pub struct TransferJob {
     job_id: u64,
     shared_source_osts: Option<Arc<JobOstHandle>>,
     shared_sink_osts: Option<Arc<JobOstHandle>>,
+    torture: Option<TortureSpec>,
 }
 
 impl TransferJob {
@@ -245,6 +246,7 @@ impl TransferJob {
             job_id: 0,
             shared_source_osts: None,
             shared_sink_osts: None,
+            torture: None,
         }
     }
 
@@ -291,6 +293,15 @@ impl TransferJob {
         self
     }
 
+    /// Wrap every connection of this job in the adversarial torture
+    /// transport (tests and property checks construct specs directly;
+    /// the CLI arms one via `--torture-seed`/`--torture-profile`, which
+    /// this override takes precedence over).
+    pub fn torture(mut self, spec: TortureSpec) -> Self {
+        self.torture = Some(spec);
+        self
+    }
+
     /// Run the job over the in-process channel transport, to completion
     /// or injected fault.
     pub fn run(self) -> Result<TransferOutcome> {
@@ -303,6 +314,7 @@ impl TransferJob {
             job_id,
             shared_source_osts,
             shared_sink_osts,
+            torture,
         } = self;
         let source_pfs =
             source_pfs.ok_or_else(|| anyhow::anyhow!("TransferJob needs a source_pfs"))?;
@@ -340,9 +352,30 @@ impl TransferJob {
         }
 
         let fault = spec.fault.arm(total_bytes);
+
+        // Adversarial torture transport: an explicit builder override
+        // wins, else the config's `--torture-seed`/`--torture-profile`
+        // pair. With no spec (the default) the closure is the identity —
+        // no wrapper type exists on the wire path at all.
+        let torture = torture.or_else(|| cfg.torture());
+        let wrap = |ep: Arc<dyn Endpoint>,
+                    side: crate::net::Side,
+                    stream: Option<u32>|
+         -> Arc<dyn Endpoint> {
+            match &torture {
+                Some(spec) => Arc::new(crate::net::adversary::AdversaryEndpoint::new(
+                    ep,
+                    spec.clone(),
+                    side,
+                    stream,
+                )),
+                None => ep,
+            }
+        };
+
         let (src_ep, sink_ep) = channel::pair(cfg.wire(), fault.clone());
-        let src_ep: Arc<dyn Endpoint> = Arc::new(src_ep);
-        let sink_ep: Arc<dyn Endpoint> = Arc::new(sink_ep);
+        let src_ep = wrap(Arc::new(src_ep), crate::net::Side::Source, None);
+        let sink_ep = wrap(Arc::new(sink_ep), crate::net::Side::Sink, None);
 
         // Pre-establish the data plane: one extra channel pair per
         // requested stream, all sharing the session's fault controller —
@@ -356,10 +389,10 @@ impl TransferJob {
         let mut src_data: Vec<Arc<dyn Endpoint>> = Vec::new();
         let mut snk_data: Vec<Arc<dyn Endpoint>> = Vec::new();
         if k >= 2 {
-            for _ in 0..k {
+            for s_id in 0..k {
                 let (s, d) = channel::pair(cfg.wire(), fault.clone());
-                src_data.push(Arc::new(s));
-                snk_data.push(Arc::new(d));
+                src_data.push(wrap(Arc::new(s), crate::net::Side::Source, Some(s_id)));
+                snk_data.push(wrap(Arc::new(d), crate::net::Side::Sink, Some(s_id)));
             }
         }
 

@@ -235,7 +235,12 @@ impl Serve {
     }
 
     /// Worker body: run one job to completion, record how it ended,
-    /// free the admission slot and dispatch successors.
+    /// free the admission slot and dispatch successors. With
+    /// `Config::job_deadline_ms > 0` the job body runs under a watchdog:
+    /// a job silent past the deadline is faulted and its admission slot
+    /// freed immediately (the wedged body thread is detached — it holds
+    /// only job-scoped state and its late result is discarded), so one
+    /// stuck transfer can never starve the daemon.
     fn run_job(self: Arc<Serve>, q: Queued) {
         let mut builder = TransferJob::builder(&self.cfg, &q.req.spec)
             .source_pfs(q.req.source_pfs)
@@ -247,7 +252,38 @@ impl Serve {
                 .shared_source_osts(Arc::new(self.src_registry.handle()))
                 .shared_sink_osts(Arc::new(self.snk_registry.handle()));
         }
-        let result = builder.run();
+        let result = if self.cfg.job_deadline_ms > 0 {
+            let deadline = Duration::from_millis(self.cfg.job_deadline_ms);
+            let id = q.id;
+            let (rtx, rrx) = mpsc::channel();
+            let spawned = std::thread::Builder::new()
+                .name(format!("serve-job-{id}-body"))
+                .spawn(move || {
+                    let _ = rtx.send(builder.run());
+                });
+            match spawned {
+                Ok(h) => match rrx.recv_timeout(deadline) {
+                    Ok(r) => {
+                        let _ = h.join();
+                        r
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        drop(h); // detach: the zombie's late send is discarded
+                        Err(anyhow::anyhow!(
+                            "serve: job {id} exceeded job_deadline_ms = {}",
+                            self.cfg.job_deadline_ms
+                        ))
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        let _ = h.join();
+                        Err(anyhow::anyhow!("serve: job {id} body panicked"))
+                    }
+                },
+                Err(e) => Err(anyhow::anyhow!("serve: spawn job {id} body: {e}")),
+            }
+        } else {
+            builder.run()
+        };
         match &result {
             Ok(out) if out.completed => {
                 self.stats.jobs_completed.fetch_add(1, Ordering::Relaxed);

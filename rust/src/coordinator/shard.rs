@@ -45,6 +45,23 @@ pub fn lpt_assignment(weights: &BTreeMap<u32, u64>, k: usize) -> BTreeMap<u32, u
     out
 }
 
+/// Re-home OST weights onto the surviving stream ids after a stream
+/// death: an LPT plan over `survivors.len()` virtual slots, mapped back
+/// through the survivor list so the assignment names real stream
+/// indices. Empty `survivors` yields an empty map — the caller treats
+/// that as "no stream left to carry the backlog". Determinism carries
+/// over from [`lpt_assignment`] as long as `survivors` is sorted (the
+/// natural order of a `BTreeSet` of dead streams' complement).
+pub fn rehome_assignment(
+    weights: &BTreeMap<u32, u64>,
+    survivors: &[usize],
+) -> BTreeMap<u32, usize> {
+    lpt_assignment(weights, survivors.len())
+        .into_iter()
+        .map(|(ost, idx)| (ost, survivors[idx]))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +116,21 @@ mod tests {
         let loads = stream_loads(&w, &a, 4);
         assert!(loads.iter().all(|&l| l > 0), "{loads:?}");
         assert_eq!(a.len(), 11);
+    }
+
+    #[test]
+    fn rehome_maps_onto_surviving_ids() {
+        let w = weights(&[(0, 80), (1, 10), (2, 10), (3, 10)]);
+        // Streams 0 and 2 survive (1 died): every OST lands on one of
+        // them, and the plan is the K = 2 LPT plan renamed.
+        let a = rehome_assignment(&w, &[0, 2]);
+        assert_eq!(a.len(), 4);
+        assert!(a.values().all(|s| [0, 2].contains(s)), "{a:?}");
+        let base = lpt_assignment(&w, 2);
+        for (ost, s) in &a {
+            assert_eq!(*s, [0, 2][base[ost]]);
+        }
+        assert!(rehome_assignment(&w, &[]).is_empty());
     }
 
     #[test]

@@ -56,8 +56,8 @@
 //! the legacy field-less peer fallback) runs the single fused connection
 //! exactly as before — byte-identical to the pre-multi-stream wire.
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -104,6 +104,16 @@ struct WriteReq {
 struct SnkFile {
     fid: FileId,
     start_ost: u32,
+    /// Blocks whose write finished AND verified: the sink half of the
+    /// idempotency ledger. A NEW_BLOCK for a member is a duplicate
+    /// delivery — never re-written, only re-acked `ok` so a source that
+    /// lost the first ack can still make progress. Failed-verify blocks
+    /// leave the ledger entirely: their retransmission must be writable.
+    done: BTreeSet<u32>,
+    /// Blocks accepted onto a write queue but not yet finished. A
+    /// duplicate arriving while the original is in flight is dropped
+    /// silently — the pending write will ack it exactly once.
+    inflight: BTreeSet<u32>,
 }
 
 /// Per-file acknowledgements waiting to be coalesced into one
@@ -262,6 +272,11 @@ struct Shared {
     /// thread after negotiation, before any data comm thread exists.
     /// Empty (unset) for the whole life of a fused session.
     data: OnceLock<Vec<SnkStream>>,
+    /// Data streams whose connection died (K ≥ 2 only). The source
+    /// re-homes the dead stream's OSTs onto survivors, so a single
+    /// stream's death is survivable; only when EVERY data stream is gone
+    /// does the sink abort.
+    data_dead: AtomicUsize,
     counters: Counters,
     files: Mutex<BTreeMap<u32, SnkFile>>,
     /// This job's charge handle on the daemon's shared sink-side
@@ -602,6 +617,7 @@ fn spawn_session(
         autosize: cfg.rma_autosize,
         rma: RmaPool::new(cfg.rma_bytes, cfg.object_size as usize),
         data: OnceLock::new(),
+        data_dead: AtomicUsize::new(0),
         counters: Counters::default(),
         files: Mutex::new(BTreeMap::new()),
         shared_osts,
@@ -812,6 +828,10 @@ fn comm_thread(
     // Data comm threads this thread spawned after negotiation; joined on
     // the way out so SinkNode::join transitively waits for them.
     let mut data_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // The answer the first CONNECT negotiated, kept so a retried CONNECT
+    // (the source timed out waiting for an ack that was merely slow or
+    // lost) is answered verbatim instead of renegotiating mid-session.
+    let mut connect_ack: Option<Message> = None;
     loop {
         if shared.is_aborted() {
             break;
@@ -839,6 +859,12 @@ fn comm_thread(
                 data_streams,
                 ..
             } => {
+                if let Some(ack) = &connect_ack {
+                    // Duplicate CONNECT: the handshake is idempotent.
+                    shared.counters.retries.fetch_add(1, Ordering::Relaxed);
+                    let _ = shared.ep.send(ack.clone());
+                    continue;
+                }
                 shared.resume.store(resume, Ordering::SeqCst);
                 if max_object_size as usize > shared.rma.slot_bytes() {
                     shared.abort_with(format!(
@@ -884,12 +910,14 @@ fn comm_thread(
                 // source only dials its K data connections once it sees
                 // the negotiated count, so an accept-first order would
                 // deadlock the handshake.
-                let _ = shared.ep.send(Message::ConnectAck {
+                let ack = Message::ConnectAck {
                     rma_slots: shared.rma.slots() as u32,
                     ack_batch: negotiated,
                     send_window: win,
                     data_streams: k,
-                });
+                };
+                connect_ack = Some(ack.clone());
+                let _ = shared.ep.send(ack);
                 if k >= 2 {
                     let Some(plane) = plane.take() else {
                         shared.abort_with("duplicate multi-stream CONNECT".into());
@@ -1047,7 +1075,14 @@ fn data_comm_thread(
             Err(NetError::Timeout) => continue,
             Err(NetError::Closed) => {
                 if !shared.done.load(Ordering::SeqCst) {
-                    shared.abort_with(format!("data stream {s} closed by source"));
+                    // One dead data stream is survivable: the source
+                    // re-homes its OSTs onto the survivors and duplicates
+                    // are absorbed by the write ledger. Only a fully
+                    // severed data plane is fatal.
+                    let dead = shared.data_dead.fetch_add(1, Ordering::SeqCst) + 1;
+                    if dead >= shared.k() {
+                        shared.abort_with("all data streams closed".into());
+                    }
                 }
                 break;
             }
@@ -1120,7 +1155,15 @@ fn handle_new_file(shared: &Arc<Shared>, file_idx: u32, name: &str, size: u64, s
         .files
         .lock()
         .unwrap_or_else(|e| e.into_inner())
-        .insert(file_idx, SnkFile { fid, start_ost });
+        .insert(
+            file_idx,
+            SnkFile {
+                fid,
+                start_ost,
+                done: BTreeSet::new(),
+                inflight: BTreeSet::new(),
+            },
+        );
     let _ = shared
         .ep
         .send(Message::FileId { file_idx, sink_fd: fid.0, skip: false });
@@ -1135,15 +1178,46 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot, stream: usiz
     let Message::NewBlock { file_idx, block_idx, offset, digest, data } = msg else {
         return;
     };
-    let (fid, start_ost) = {
-        let files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
-        match files.get(&file_idx) {
-            Some(f) => (f.fid, f.start_ost),
-            None => {
-                shared.abort_with(format!("NEW_BLOCK for unknown file {file_idx}"));
-                return;
+    // Ledger verdict under the files lock; duplicate handling (counter +
+    // re-ack) runs after the lock drops.
+    let mut dup_done = false;
+    let mut dup_inflight = false;
+    let looked_up = {
+        let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
+        match files.get_mut(&file_idx) {
+            Some(f) => {
+                if f.done.contains(&block_idx) {
+                    dup_done = true;
+                    None
+                } else if !f.inflight.insert(block_idx) {
+                    dup_inflight = true;
+                    None
+                } else {
+                    Some((f.fid, f.start_ost))
+                }
             }
+            None => None,
         }
+    };
+    let Some((fid, start_ost)) = looked_up else {
+        if dup_done || dup_inflight {
+            shared
+                .counters
+                .dup_blocks_dropped
+                .fetch_add(1, Ordering::Relaxed);
+            if dup_done {
+                // The write already verified: re-ack on the arrival stream
+                // so a peer whose first acknowledgement went missing still
+                // advances. The payload and slot drop here — nothing of a
+                // duplicate ever reaches the write queues.
+                shared.push_ack(stream, file_idx, block_idx, true);
+            }
+            // An in-flight original acks exactly once, when it lands:
+            // drop the duplicate silently.
+            return;
+        }
+        shared.abort_with(format!("NEW_BLOCK for unknown file {file_idx}"));
+        return;
     };
     let ost = shared.pfs.layout().ost_for(start_ost, offset);
     if shared.k() > 1 {
@@ -1469,6 +1543,19 @@ fn write_one(shared: &Arc<Shared>, req: &mut WriteReq) -> bool {
 }
 
 fn finish_block(shared: &Arc<Shared>, req: &WriteReq, ok: bool) {
+    // Ledger first, ack second: the moment the ack hits the wire a
+    // duplicate of this block may arrive, and it must see the final
+    // state. A failed block leaves the ledger entirely — the source
+    // retransmits it and the retry must be writable again.
+    {
+        let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(f) = files.get_mut(&req.file_idx) {
+            f.inflight.remove(&req.block_idx);
+            if ok {
+                f.done.insert(req.block_idx);
+            }
+        }
+    }
     if ok {
         shared.counters.objects_synced.fetch_add(1, Ordering::Relaxed);
     } else {

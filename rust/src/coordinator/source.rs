@@ -57,7 +57,7 @@
 //! fallback) runs the single fused connection exactly as before —
 //! byte-identical to the pre-multi-stream wire.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -325,8 +325,15 @@ struct Shared {
     /// per dequeue.
     read_gather_bytes: AtomicU64,
     /// Bytes-weighted OST → stream plan ([`shard::lpt_assignment`]),
-    /// computed once from the dataset layout. Empty at K = 1.
-    shard: BTreeMap<u32, usize>,
+    /// computed once from the dataset layout (empty at K = 1) — and
+    /// re-homed by [`Shared::fail_stream`] when a data stream dies, so
+    /// it lives behind a lock.
+    shard: Mutex<BTreeMap<u32, usize>>,
+    /// Data streams whose connection died mid-transfer and whose OST
+    /// shard has been re-homed onto the survivors. A stream in this set
+    /// is never picked by [`Shared::stream_of`] again; its IO threads
+    /// wind down on their next abort/dead check.
+    dead: Mutex<BTreeSet<usize>>,
     /// The tuner's move/revert log, drained into the session report.
     tune_trajectory: Mutex<Vec<String>>,
     /// Best observed epoch goodput (bytes/s), stored as `f64` bits.
@@ -367,15 +374,113 @@ impl Shared {
     /// OST → stream shard from the bytes-weighted LPT plan. Every OST's
     /// objects ride exactly one stream, so per-stream scheduling stays
     /// layout-aware; an OST the plan never saw (a file that appeared
-    /// after planning) falls back to the old `ost % K`.
+    /// after planning) falls back to the old `ost % K`. A pick that
+    /// lands on a dead stream (the `ost % K` fallback, or the race
+    /// window while [`Shared::fail_stream`] is still re-homing) is
+    /// redirected to the first surviving stream.
     fn stream_of(&self, ost: OstId) -> usize {
-        if self.streams.len() == 1 {
+        let k = self.streams.len();
+        if k == 1 {
             return 0;
         }
-        self.shard
+        let raw = self
+            .shard
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
             .get(&ost.0)
             .copied()
-            .unwrap_or(ost.0 as usize % self.streams.len())
+            .unwrap_or(ost.0 as usize % k);
+        let dead = self.dead.lock().unwrap_or_else(|e| e.into_inner());
+        if dead.contains(&raw) {
+            (0..k).find(|s| !dead.contains(s)).unwrap_or(raw)
+        } else {
+            raw
+        }
+    }
+
+    fn is_dead(&self, s: usize) -> bool {
+        self.dead.lock().unwrap_or_else(|e| e.into_inner()).contains(&s)
+    }
+
+    /// Data stream `s`'s connection died. Returns true when the transfer
+    /// can continue: the dead stream's OST shard is re-homed across the
+    /// survivors with a fresh LPT pass and every one of its
+    /// not-yet-synced blocks — queued, in flight, or acked on the wire
+    /// when it went down — is re-derived from the files ledger and
+    /// re-enqueued (the sink's (fid, block) write ledger absorbs any
+    /// resulting duplicates). Returns false when no stream survives; the
+    /// caller aborts, and the synchronous FT log makes the fault
+    /// resumable.
+    fn fail_stream(&self, s: usize) -> bool {
+        let k = self.streams.len();
+        {
+            let mut dead = self.dead.lock().unwrap_or_else(|e| e.into_inner());
+            if !dead.insert(s) {
+                return dead.len() < k; // another thread already re-homed it
+            }
+            if dead.len() >= k {
+                return false;
+            }
+        }
+        // Discard the dead stream's queued work: the ledger walk below
+        // re-derives it (and everything in flight) uniformly.
+        self.streams[s].queues.close_and_clear();
+        let survivors: Vec<usize> = {
+            let dead = self.dead.lock().unwrap_or_else(|e| e.into_inner());
+            (0..k).filter(|i| !dead.contains(i)).collect()
+        };
+
+        // Collect the dead stream's pending backlog and per-OST byte
+        // weights from the files ledger. Files not yet scheduled
+        // (no log key) are skipped — FILE_ID will shard them against
+        // the updated plan.
+        let layout = self.pfs.layout();
+        let mut weights: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut backlog: Vec<(OstId, BlockReq)> = Vec::new();
+        {
+            let files = self.files.lock().unwrap_or_else(|e| e.into_inner());
+            let shard = self.shard.lock().unwrap_or_else(|e| e.into_inner()).clone();
+            for (&file_idx, f) in files.iter() {
+                if f.log_key.is_none() {
+                    continue;
+                }
+                for b in f.synced.pending() {
+                    let offset = b as u64 * self.object_size;
+                    let ost = layout.ost_for(f.start_ost, offset);
+                    let raw =
+                        shard.get(&ost.0).copied().unwrap_or(ost.0 as usize % k);
+                    if raw != s {
+                        continue;
+                    }
+                    let len = (f.size - offset).min(self.object_size) as u32;
+                    *weights.entry(ost.0).or_insert(0) += len as u64;
+                    backlog.push((
+                        ost,
+                        BlockReq { file_idx, block_idx: b, fid: f.fid, offset, len },
+                    ));
+                }
+            }
+        }
+
+        // Re-home the orphaned OSTs: LPT over the survivors, named by
+        // their real stream indices.
+        let plan = shard::rehome_assignment(&weights, &survivors);
+        {
+            let mut shard = self.shard.lock().unwrap_or_else(|e| e.into_inner());
+            shard.extend(plan);
+        }
+        // Congestion accounting: charge the re-homed backlog as new load
+        // (blocks that were still queued get double-counted — a
+        // transient heuristic-only skew, and those OSTs really do have
+        // the work ahead of them again).
+        for (ost, _) in &backlog {
+            self.sched.on_enqueue(*ost);
+            if let Some(h) = &self.shared_osts {
+                h.begin(*ost);
+            }
+        }
+        self.push_to_streams(backlog);
+        true
     }
 
     /// Partition a batch across the stream shards and enqueue each
@@ -541,13 +646,16 @@ fn run_session(
     spec: &TransferSpec,
 ) -> Result<SourceReport> {
     let logger = Mutex::new(ftlog::create_logger_with_mode(&cfg.ft(), cfg.logging)?);
+    // Created ahead of the shared state so handshake retries are counted
+    // even when the session dies before the data plane exists.
+    let counters = Counters::default();
 
     // Connect handshake (control connection). Stream 0's pool doubles as
     // the CONNECT-time slot advertisement — every stream's pool is
     // carved with the same `rma_bytes` budget, so one number describes
     // each of them.
     let rma0 = RmaPool::new(cfg.rma_bytes, cfg.object_size as usize);
-    if let Err(e) = ctrl.send(Message::Connect {
+    let connect = Message::Connect {
         max_object_size: cfg.object_size,
         rma_slots: rma0.slots() as u32,
         resume: spec.resume,
@@ -562,23 +670,50 @@ fn run_session(
         send_window: cfg.send_window_cap(),
         data_streams: cfg.data_streams.max(1),
         job,
-    }) {
-        return Ok(handshake_fault_report(&logger, format!("connect: {e}")));
+    };
+    if let Err(e) = ctrl.send(connect.clone()) {
+        return Ok(handshake_fault_report(&counters, &logger, format!("connect: {e}")));
     }
-    let (win, k) = match ctrl.recv_timeout(Duration::from_secs(10)) {
-        Ok(Message::ConnectAck { send_window, data_streams, .. }) => {
-            // Honor the sink's negotiated values, but never exceed our own
-            // configured advertisements (defensive against a bad peer). A
-            // legacy field-less CONNECT_ACK decodes as window 1 (lockstep)
-            // and 1 data stream (fused).
-            (
-                send_window.max(1).min(cfg.send_window_cap()),
-                data_streams.max(1).min(cfg.data_streams.max(1)),
-            )
-        }
-        Ok(m) => anyhow::bail!("handshake: unexpected {}", m.type_name()),
-        Err(e) => {
-            return Ok(handshake_fault_report(&logger, format!("connect ack: {e}")))
+    // Wait for the CONNECT_ACK under the negotiated handshake budget,
+    // re-sending CONNECT with exponential backoff up to
+    // `connect_retries` times (the sink re-acks a duplicate CONNECT
+    // idempotently, so a retry races its own late ack safely). The
+    // defaults — 10 s, 0 retries — reproduce the legacy single wait
+    // exactly.
+    let mut attempt: u32 = 0;
+    let (win, k) = loop {
+        let budget =
+            Duration::from_millis(cfg.connect_timeout_ms << attempt.min(6));
+        match ctrl.recv_timeout(budget) {
+            Ok(Message::ConnectAck { send_window, data_streams, .. }) => {
+                // Honor the sink's negotiated values, but never exceed our own
+                // configured advertisements (defensive against a bad peer). A
+                // legacy field-less CONNECT_ACK decodes as window 1 (lockstep)
+                // and 1 data stream (fused).
+                break (
+                    send_window.max(1).min(cfg.send_window_cap()),
+                    data_streams.max(1).min(cfg.data_streams.max(1)),
+                );
+            }
+            Ok(m) => anyhow::bail!("handshake: unexpected {}", m.type_name()),
+            Err(NetError::Timeout) if attempt < cfg.connect_retries => {
+                attempt += 1;
+                counters.retries.fetch_add(1, Ordering::Relaxed);
+                if let Err(e) = ctrl.send(connect.clone()) {
+                    return Ok(handshake_fault_report(
+                        &counters,
+                        &logger,
+                        format!("connect retry {attempt}: {e}"),
+                    ));
+                }
+            }
+            Err(e) => {
+                return Ok(handshake_fault_report(
+                    &counters,
+                    &logger,
+                    format!("connect ack: {e}"),
+                ))
+            }
         }
     };
 
@@ -593,6 +728,7 @@ fn run_session(
             Ok(eps) => eps,
             Err(e) => {
                 return Ok(handshake_fault_report(
+                    &counters,
                     &logger,
                     format!("data plane ({k} streams): {e}"),
                 ))
@@ -601,6 +737,7 @@ fn run_session(
         for (s, ep) in eps.iter().enumerate() {
             if let Err(e) = ep.send(Message::StreamHello { stream_id: s as u32, job }) {
                 return Ok(handshake_fault_report(
+                    &counters,
                     &logger,
                     format!("stream {s} hello: {e}"),
                 ));
@@ -666,9 +803,10 @@ fn run_session(
         streams,
         sched: cfg.scheduler.build(cfg.ost_count),
         sched_stats: SchedStats::default(),
-        counters: Counters::default(),
+        counters,
         read_gather_bytes: AtomicU64::new(cfg.read_gather_bytes),
-        shard: ost_shard,
+        shard: Mutex::new(ost_shard),
+        dead: Mutex::new(BTreeSet::new()),
         tune_trajectory: Mutex::new(Vec::new()),
         goodput_final: AtomicU64::new(0),
         files: Mutex::new(BTreeMap::new()),
@@ -800,12 +938,13 @@ fn aggregate_report(shared: &Shared, files_done: u64) -> SourceReport {
 /// A session that died during the CONNECT handshake, before any data
 /// plane (or shared state) existed.
 fn handshake_fault_report(
+    counters: &Counters,
     logger: &Mutex<Box<dyn FtLogger>>,
     msg: String,
 ) -> SourceReport {
     SourceReport {
         fault: Some(msg),
-        counters: Counters::default().snapshot(),
+        counters: counters.snapshot(),
         log_space: logger.lock().unwrap_or_else(|e| e.into_inner()).space(),
         files_done: 0,
         sched: SchedStats::default().snapshot(),
@@ -1163,8 +1302,12 @@ fn io_thread(shared: &Arc<Shared>, stream_idx: usize) {
                 loop {
                     match stream.rma.reserve_timeout(Duration::from_millis(50)) {
                         Some(s) => break Some(s),
+                        // A dead stream's pool can stay dry forever (its
+                        // in-flight payloads are pinned in the severed
+                        // connection) — wind the thread down instead.
                         None if shared.is_aborted()
-                            || shared.done.load(Ordering::SeqCst) =>
+                            || shared.done.load(Ordering::SeqCst)
+                            || shared.is_dead(stream_idx) =>
                         {
                             break None
                         }
@@ -1339,7 +1482,13 @@ fn io_thread(shared: &Arc<Shared>, stream_idx: usize) {
                     shared.counters.credit_waits.fetch_add(1, Ordering::Relaxed);
                     stream.window.feedback_grow(&shared.counters);
                     let mut granted = false;
-                    while !shared.is_aborted() && !shared.done.load(Ordering::SeqCst) {
+                    // A dead stream's credits never come back (its acks
+                    // are lost with the connection) — the dead check
+                    // keeps this wait from spinning forever.
+                    while !shared.is_aborted()
+                        && !shared.done.load(Ordering::SeqCst)
+                        && !shared.is_dead(stream_idx)
+                    {
                         if stream.window.acquire_timeout(Duration::from_millis(50)) {
                             granted = true;
                             break;
@@ -1359,7 +1508,23 @@ fn io_thread(shared: &Arc<Shared>, stream_idx: usize) {
                         .fetch_add(req.len as u64, Ordering::Relaxed);
                 }
                 Err(NetError::Fault(e)) => {
+                    // The injected payload-threshold fault severs the
+                    // whole session (every connection shares the
+                    // controller) — the FT kill-point semantics, not a
+                    // single-stream death.
                     shared.abort_with(e);
+                    break 'pop;
+                }
+                Err(NetError::Closed) if !shared.done.load(Ordering::SeqCst) => {
+                    // This stream's connection died. Fail over: re-home
+                    // its backlog (including the block we just failed to
+                    // send — it is still unsynced in the ledger) onto the
+                    // survivors, or fault cleanly when none remain.
+                    if !shared.fail_stream(stream_idx) {
+                        shared.abort_with(format!(
+                            "data stream {stream_idx} closed with no surviving streams"
+                        ));
+                    }
                     break 'pop;
                 }
                 Err(e) => {
@@ -1404,10 +1569,18 @@ fn comm_thread(shared: &Arc<Shared>, role: CommRole, master_tx: mpsc::Sender<Mas
             Err(NetError::Timeout) => continue,
             Err(NetError::Closed) => {
                 if !shared.done.load(Ordering::SeqCst) {
-                    shared.abort_with(match role {
-                        CommRole::Data(s) => format!("data stream {s} closed by sink"),
-                        _ => "connection closed by sink".into(),
-                    });
+                    if let CommRole::Data(s) = role {
+                        // A single data stream died: fail over to the
+                        // survivors instead of killing the session.
+                        if shared.fail_stream(s) {
+                            break;
+                        }
+                        shared.abort_with(format!(
+                            "data stream {s} closed with no surviving streams"
+                        ));
+                    } else {
+                        shared.abort_with("connection closed by sink".into());
+                    }
                     let _ = master_tx.send(MasterEvent::Abort);
                 }
                 break;
@@ -1426,35 +1599,44 @@ fn comm_thread(shared: &Arc<Shared>, role: CommRole, master_tx: mpsc::Sender<Mas
                 let _ = master_tx.send(MasterEvent::CloseAck { file_idx });
             }
             (CommRole::Fused, Message::BlockSync { file_idx, block_idx, ok }) => {
-                // Every acknowledged block returns one send credit —
-                // failed writes too: the object left the window and its
-                // retransmit will take a fresh credit.
-                shared.streams[0].window.release(1);
+                // Every *fresh* acknowledged block returns one send
+                // credit — failed writes too: the object left the window
+                // and its retransmit will take a fresh credit. Duplicate
+                // acks (a torture replay, or a batch retransmit after
+                // resume) return nothing — crediting them would overfill
+                // the window past the un-acked in-flight count.
+                let credits = handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
+                shared.streams[0].window.release(credits);
                 shared.streams[0]
                     .acked
-                    .fetch_add(shared.object_size, Ordering::Relaxed);
-                handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
+                    .fetch_add(credits as u64 * shared.object_size, Ordering::Relaxed);
             }
             (CommRole::Fused, Message::BlockSyncBatch { file_idx, blocks }) => {
-                shared.streams[0].window.release(blocks.len() as u32);
+                let credits = handle_block_syncs(shared, file_idx, &blocks);
+                shared.streams[0].window.release(credits);
                 shared.streams[0]
                     .acked
-                    .fetch_add(blocks.len() as u64 * shared.object_size, Ordering::Relaxed);
-                handle_block_syncs(shared, file_idx, &blocks);
+                    .fetch_add(credits as u64 * shared.object_size, Ordering::Relaxed);
             }
             (CommRole::Data(s), Message::BlockSync { file_idx, block_idx, ok }) => {
-                shared.streams[s].window.release(1);
+                let credits = handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
+                shared.streams[s].window.release(credits);
                 shared.streams[s]
                     .acked
-                    .fetch_add(shared.object_size, Ordering::Relaxed);
-                handle_block_syncs(shared, file_idx, &[(block_idx, ok)]);
+                    .fetch_add(credits as u64 * shared.object_size, Ordering::Relaxed);
             }
             (CommRole::Data(s), Message::BlockSyncBatch { file_idx, blocks }) => {
-                shared.streams[s].window.release(blocks.len() as u32);
+                let credits = handle_block_syncs(shared, file_idx, &blocks);
+                shared.streams[s].window.release(credits);
                 shared.streams[s]
                     .acked
-                    .fetch_add(blocks.len() as u64 * shared.object_size, Ordering::Relaxed);
-                handle_block_syncs(shared, file_idx, &blocks);
+                    .fetch_add(credits as u64 * shared.object_size, Ordering::Relaxed);
+            }
+            (CommRole::Fused | CommRole::Control, Message::ConnectAck { .. }) => {
+                // A duplicated (or retry-raced) CONNECT_ACK arriving
+                // after the handshake already completed: idempotent,
+                // ignore.
+                shared.counters.dup_acks_dropped.fetch_add(1, Ordering::Relaxed);
             }
             (role, other) => {
                 shared.abort_with(format!(
@@ -1482,14 +1664,29 @@ fn comm_thread(shared: &Arc<Shared>, role: CommRole, master_tx: mpsc::Sender<Mas
 /// only emitted once the file's shared `CompletedSet` is complete — the
 /// cross-stream barrier: every stream's outstanding acks for the file
 /// must have arrived, whichever stream carried them.
-fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)]) {
+///
+/// Returns the number of entries that should release a send credit:
+/// fresh syncs and failed-write reports. Duplicate acks — a torture-
+/// transport replay, a batch retransmit after resume, or a late ack for
+/// a file already closed — are counted in `dup_acks_dropped`, write no
+/// second FT-log record, and release nothing.
+fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)]) -> u32 {
     let mut resched: Vec<(OstId, BlockReq)> = Vec::new();
     let mut log_err: Option<String> = None;
     let mut proto_err: Option<String> = None;
     let mut close = false;
+    let mut credits: u32 = 0;
     {
         let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
-        let Some(f) = files.get_mut(&file_idx) else { return };
+        let Some(f) = files.get_mut(&file_idx) else {
+            // The file is already closed and retired — every entry is a
+            // stale duplicate.
+            shared
+                .counters
+                .dup_acks_dropped
+                .fetch_add(acks.len() as u64, Ordering::Relaxed);
+            return 0;
+        };
         let mut fresh: Vec<u32> = Vec::with_capacity(acks.len());
         for &(block_idx, ok) in acks {
             if block_idx >= f.total_blocks {
@@ -1519,11 +1716,16 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
                     ost,
                     BlockReq { file_idx, block_idx, fid: f.fid, offset, len },
                 ));
+                credits += 1;
                 continue;
             }
             if !f.synced.insert(block_idx) {
-                continue; // duplicate sync (batch retransmit after resume)
+                // Duplicate sync (torture replay / batch retransmit
+                // after resume): already durable and logged.
+                shared.counters.dup_acks_dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
             }
+            credits += 1;
             shared.counters.objects_synced.fetch_add(1, Ordering::Relaxed);
             // The tuner's goodput signal: unique durable bytes (dupes
             // and failed writes don't count as progress).
@@ -1565,11 +1767,11 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
     }
     if let Some(e) = proto_err {
         shared.abort_with(e);
-        return;
+        return 0;
     }
     if let Some(e) = log_err {
         shared.abort_with(format!("FT logging failed: {e}"));
-        return;
+        return 0;
     }
     if !resched.is_empty() {
         for (ost, _) in &resched {
@@ -1583,4 +1785,5 @@ fn handle_block_syncs(shared: &Arc<Shared>, file_idx: u32, acks: &[(u32, bool)])
     if close {
         let _ = shared.ep.send(Message::FileClose { file_idx });
     }
+    credits
 }

@@ -40,8 +40,18 @@ impl FaultPlan {
     }
 
     pub fn at_fraction(frac: f64, side: Side) -> Self {
-        assert!((0.0..=1.0).contains(&frac), "fault fraction must be in [0,1]");
-        FaultPlan { point: FaultPoint::Fraction(frac), side }
+        Self::try_at_fraction(frac, side).expect("fault fraction must be in [0,1]")
+    }
+
+    /// Non-panicking [`at_fraction`](FaultPlan::at_fraction): matrix
+    /// harnesses composing fault points with other knobs (e.g. torture
+    /// profiles) validate generated sweeps instead of crashing them.
+    pub fn try_at_fraction(frac: f64, side: Side) -> Option<Self> {
+        if (0.0..=1.0).contains(&frac) {
+            Some(FaultPlan { point: FaultPoint::Fraction(frac), side })
+        } else {
+            None
+        }
     }
 
     pub fn at_bytes(bytes: u64, side: Side) -> Self {
@@ -74,6 +84,16 @@ impl FaultPlan {
             FaultPoint::None => "no-fault".to_string(),
             FaultPoint::Fraction(f) => format!("{}%@{}", (f * 100.0).round() as u32, self.side),
             FaultPoint::Bytes(b) => format!("{}B@{}", b, self.side),
+        }
+    }
+
+    /// The plan's label composed with a torture-profile tag:
+    /// `"60%@source+reorder"`. `None` or `"off"` yields the bare label,
+    /// so fault-matrix rows without an adversary keep their names.
+    pub fn label_with(&self, torture: Option<&str>) -> String {
+        match torture {
+            Some(p) if !p.is_empty() && p != "off" => format!("{}+{p}", self.label()),
+            _ => self.label(),
         }
     }
 }
@@ -126,5 +146,25 @@ mod tests {
         );
         assert_eq!(FaultPlan::at_bytes(7, Side::Sink).label(), "7B@sink");
         assert_eq!(FaultPlan::paper_points(), [0.2, 0.4, 0.6, 0.8]);
+    }
+
+    #[test]
+    fn composed_labels() {
+        let p = FaultPlan::at_fraction(0.6, Side::Source);
+        assert_eq!(p.label_with(Some("reorder")), "60%@source+reorder");
+        assert_eq!(p.label_with(Some("off")), "60%@source");
+        assert_eq!(p.label_with(Some("")), "60%@source");
+        assert_eq!(p.label_with(None), "60%@source");
+        assert_eq!(FaultPlan::none().label_with(Some("dup")), "no-fault+dup");
+    }
+
+    #[test]
+    fn try_at_fraction_rejects_out_of_range() {
+        assert!(FaultPlan::try_at_fraction(1.5, Side::Source).is_none());
+        assert!(FaultPlan::try_at_fraction(-0.1, Side::Sink).is_none());
+        assert_eq!(
+            FaultPlan::try_at_fraction(0.4, Side::Sink),
+            Some(FaultPlan::at_fraction(0.4, Side::Sink))
+        );
     }
 }

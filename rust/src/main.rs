@@ -185,6 +185,22 @@ fn print_usage() {
                                                          in fair-share order; --set\n\
                                                          serve_registry=off disables the\n\
                                                          cross-job OST registry\n\
+           --connect-timeout-ms MS                       handshake wait per attempt\n\
+                                                         (exponential backoff per retry;\n\
+                                                         default 10000)\n\
+           --connect-retries N                           CONNECT/ACK retransmissions\n\
+                                                         before faulting (default 0,\n\
+                                                         the legacy single wait)\n\
+           --job-deadline-ms MS                          serve: fault a job silent past\n\
+                                                         this deadline and free its\n\
+                                                         admission slot (0 = off)\n\
+           --torture-seed N                              arm the adversarial transport\n\
+                                                         with this RNG seed (0 = off,\n\
+                                                         byte-identical wire)\n\
+           --torture-profile NAME                        off|reorder|dup|lossy-handshake|\n\
+                                                         partition|cut-stream — the\n\
+                                                         seeded deterministic delay/dup/\n\
+                                                         drop/partition/cut policy\n\
            --workload big|small|mixed  --files N  --file-size BYTES\n\
            --fault FRAC [--fault-side source|sink]       inject fault at FRAC\n\
            --resume                                      resume per FT logs\n\
@@ -263,6 +279,21 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(v) = args.get("tune-epoch-ms") {
         cfg.tune_epoch_ms = v.parse().context("--tune-epoch-ms")?;
+    }
+    if let Some(v) = args.get("connect-timeout-ms") {
+        cfg.connect_timeout_ms = v.parse().context("--connect-timeout-ms")?;
+    }
+    if let Some(v) = args.get("connect-retries") {
+        cfg.connect_retries = v.parse().context("--connect-retries")?;
+    }
+    if let Some(v) = args.get("job-deadline-ms") {
+        cfg.job_deadline_ms = v.parse().context("--job-deadline-ms")?;
+    }
+    if let Some(v) = args.get("torture-seed") {
+        cfg.torture_seed = v.parse().context("--torture-seed")?;
+    }
+    if let Some(v) = args.get("torture-profile") {
+        cfg.torture_profile = v.to_string();
     }
     if let Some(v) = args.get("object-size") {
         cfg.object_size = parse_bytes(v)?;

@@ -101,6 +101,18 @@ pub struct Counters {
     /// flush) and extended the logical run instead of returning to the
     /// policy pick.
     pub coalesce_continuations: AtomicU64,
+    /// Duplicate NEW_BLOCKs the sink refused to write twice: the (fid,
+    /// block) was already in the write ledger (done or in flight), so the
+    /// payload was dropped and — when already durable — re-acked.
+    pub dup_blocks_dropped: AtomicU64,
+    /// Duplicate/stray BLOCK_SYNC entries the source ignored (object
+    /// already marked synced, or for an unknown file) — no credit
+    /// released, no second FT-log record.
+    pub dup_acks_dropped: AtomicU64,
+    /// Handshake retransmissions: CONNECTs re-sent after a
+    /// `connect_timeout_ms` expiry and extra STREAM_HELLOs under a lossy
+    /// handshake, plus duplicate CONNECTs the sink re-acked.
+    pub retries: AtomicU64,
 }
 
 impl Counters {
@@ -138,6 +150,9 @@ impl Counters {
             tune_shrinks: self.tune_shrinks.load(Ordering::Relaxed),
             tune_reverts: self.tune_reverts.load(Ordering::Relaxed),
             coalesce_continuations: self.coalesce_continuations.load(Ordering::Relaxed),
+            dup_blocks_dropped: self.dup_blocks_dropped.load(Ordering::Relaxed),
+            dup_acks_dropped: self.dup_acks_dropped.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
         }
     }
 }
@@ -176,6 +191,9 @@ pub struct CounterSnapshot {
     pub tune_shrinks: u64,
     pub tune_reverts: u64,
     pub coalesce_continuations: u64,
+    pub dup_blocks_dropped: u64,
+    pub dup_acks_dropped: u64,
+    pub retries: u64,
 }
 
 /// Daemon-wide (`ftlads serve`) counters, spanning every job the serve
@@ -379,5 +397,11 @@ mod tests {
         assert_eq!(s.objects_sent, 3);
         assert_eq!(s.bytes_sent, 999);
         assert_eq!(s.objects_synced, 0);
+        assert_eq!(s.dup_blocks_dropped, 0);
+        c.dup_blocks_dropped.fetch_add(2, Ordering::Relaxed);
+        c.dup_acks_dropped.fetch_add(1, Ordering::Relaxed);
+        c.retries.fetch_add(4, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!((s.dup_blocks_dropped, s.dup_acks_dropped, s.retries), (2, 1, 4));
     }
 }

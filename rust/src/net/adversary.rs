@@ -1,0 +1,459 @@
+//! Adversarial-network transport adapter: a deterministic, seeded
+//! torture layer over any [`Endpoint`].
+//!
+//! [`AdversaryEndpoint`] wraps one side of a connection and perturbs its
+//! *send* path per message class — delay into a bounded reorder window,
+//! duplicate, drop (handshake class only), and timed partition/heal —
+//! according to a [`TortureSpec`]. Wrapping both endpoints of a pair
+//! tortures both directions. The receive path is passthrough except
+//! that every `recv`/`recv_timeout` call advances the endpoint's
+//! logical clock and flushes any held-back traffic that has come due,
+//! so delayed and partitioned messages always drain as long as *someone*
+//! polls the endpoint (every coordinator comm thread does, on a 50 ms
+//! tick).
+//!
+//! **Determinism.** Each endpoint derives a private PCG32 stream from
+//! `(spec.seed, side, stream id)` and draws verdicts only on sends, so
+//! the i-th message sent on a given endpoint receives an identical
+//! verdict (drop / duplicate / delay distance / partition entry) on
+//! every run with the same seed. Release *timing* of held traffic rides
+//! the logical clock, which also counts receive polls — schedules are
+//! decision-deterministic always, and byte-for-byte reproducible for
+//! specs without delay/partition (e.g. the "dup" profile).
+//!
+//! **Liveness rules** (why torture runs cannot deadlock):
+//!
+//! - Control-class messages (NEW_FILE, FILE_ID, FILE_CLOSE,
+//!   FILE_CLOSE_ACK, BYE) are never dropped, duplicated, or held; each
+//!   acts as a barrier that first flushes everything pending, so the
+//!   protocol's ordering-sensitive spine is delivered exactly once, in
+//!   order, relative to itself.
+//! - Drops apply only to the handshake class, which the hardened
+//!   endpoints retry (`connect_retries`).
+//! - Partitions defer (in order) rather than drop, and heal on the
+//!   logical clock.
+//! - A [`TortureSpec::cut_stream`] cut makes the endpoint behave like a
+//!   severed connection (`NetError::Closed`) — the stream-failover and
+//!   clean-fault paths take over from there.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::TortureSpec;
+use crate::testutil::Pcg32;
+
+use super::{Endpoint, Message, NetError, Side};
+
+/// Which torture policy a message falls under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MsgClass {
+    /// CONNECT / CONNECT_ACK / STREAM_HELLO — droppable (retried).
+    Handshake,
+    /// NEW_BLOCK — dup/delay (receiver dedups by (fid, block)).
+    Data,
+    /// BLOCK_SYNC / BLOCK_SYNC_BATCH — dup/delay (sender dedups).
+    Ack,
+    /// Everything else — never perturbed, flushes pending traffic.
+    Control,
+}
+
+fn class_of(msg: &Message) -> MsgClass {
+    match msg {
+        Message::Connect { .. } | Message::ConnectAck { .. } | Message::StreamHello { .. } => {
+            MsgClass::Handshake
+        }
+        Message::NewBlock { .. } => MsgClass::Data,
+        Message::BlockSync { .. } | Message::BlockSyncBatch { .. } => MsgClass::Ack,
+        _ => MsgClass::Control,
+    }
+}
+
+/// Counters for what the adversary actually did (per endpoint).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdversaryStats {
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub delayed: u64,
+    pub partitions: u64,
+}
+
+struct AdvState {
+    rng: Pcg32,
+    /// Held-back (delayed) messages: (due logical tick, insertion seq,
+    /// message), flushed in (due, seq) order once due.
+    held: Vec<(u64, u64, Message)>,
+    held_seq: u64,
+    /// Partition buffer — deferred in order, released on heal.
+    deferred: VecDeque<Message>,
+    /// Logical tick the current partition heals at (0 = no partition).
+    heal_at: u64,
+    /// Data/ack sends since the last partition began.
+    sends_since_partition: u64,
+    stats: AdversaryStats,
+}
+
+/// The torture adapter. See the module docs for semantics.
+pub struct AdversaryEndpoint {
+    inner: Arc<dyn Endpoint>,
+    spec: TortureSpec,
+    /// Data stream id (None = the control connection, never cut).
+    stream: Option<u32>,
+    /// Logical clock: advances on every send and every receive poll.
+    ops: AtomicU64,
+    cut: std::sync::atomic::AtomicBool,
+    st: Mutex<AdvState>,
+}
+
+impl AdversaryEndpoint {
+    pub fn new(
+        inner: Arc<dyn Endpoint>,
+        spec: TortureSpec,
+        side: Side,
+        stream: Option<u32>,
+    ) -> AdversaryEndpoint {
+        // Private verdict stream per endpoint: same seed → same
+        // schedule, different endpoints → independent schedules.
+        let tag = ((side == Side::Sink) as u64) << 32
+            | stream.map(|s| s as u64 + 1).unwrap_or(0);
+        AdversaryEndpoint {
+            inner,
+            stream,
+            ops: AtomicU64::new(0),
+            cut: std::sync::atomic::AtomicBool::new(false),
+            st: Mutex::new(AdvState {
+                rng: Pcg32::with_stream(spec.seed, tag),
+                held: Vec::new(),
+                held_seq: 0,
+                deferred: VecDeque::new(),
+                heal_at: 0,
+                sends_since_partition: 0,
+                stats: AdversaryStats::default(),
+            }),
+            spec,
+        }
+    }
+
+    pub fn stats(&self) -> AdversaryStats {
+        self.st.lock().unwrap_or_else(|e| e.into_inner()).stats
+    }
+
+    /// Advance the logical clock; returns Closed once the cut tripped.
+    fn tick(&self) -> Result<u64, NetError> {
+        let now = self.ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.cut.load(Ordering::Relaxed) {
+            return Err(NetError::Closed);
+        }
+        if let Some(cut) = self.spec.cut_stream {
+            if self.stream == Some(cut) && now >= self.spec.cut_after_ops.max(1) {
+                self.cut.store(true, Ordering::Relaxed);
+                return Err(NetError::Closed);
+            }
+        }
+        Ok(now)
+    }
+
+    /// Forward everything whose time has come: a healed partition's
+    /// deferred run (in order), then held messages due by `now`.
+    fn flush_due(&self, st: &mut AdvState, now: u64, all: bool) -> Result<(), NetError> {
+        if !st.deferred.is_empty() && (all || (st.heal_at != 0 && now >= st.heal_at)) {
+            st.heal_at = 0;
+            while let Some(m) = st.deferred.pop_front() {
+                self.inner.send(m)?;
+            }
+        }
+        if !st.held.is_empty() && (all || st.held.iter().any(|(due, _, _)| *due <= now)) {
+            let mut due_now: Vec<(u64, u64, Message)> = Vec::new();
+            st.held.retain_mut(|entry| {
+                if all || entry.0 <= now {
+                    due_now.push((entry.0, entry.1, entry.2.clone()));
+                    false
+                } else {
+                    true
+                }
+            });
+            due_now.sort_by_key(|(due, seq, _)| (*due, *seq));
+            for (_, _, m) in due_now {
+                self.inner.send(m)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Endpoint for AdversaryEndpoint {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        let now = self.tick()?;
+        let mut st = self.st.lock().unwrap_or_else(|e| e.into_inner());
+        let class = class_of(&msg);
+        match class {
+            MsgClass::Control => {
+                // Barrier: everything pending goes first, then the
+                // control message itself — exactly once, unperturbed.
+                self.flush_due(&mut st, now, true)?;
+                self.inner.send(msg)
+            }
+            MsgClass::Handshake => {
+                self.flush_due(&mut st, now, false)?;
+                let drop_it = st.rng.bool(self.spec.drop_handshake);
+                let dup_it = st.rng.bool(self.spec.dup_handshake);
+                if drop_it {
+                    st.stats.dropped += 1;
+                    return Ok(());
+                }
+                self.inner.send(msg.clone())?;
+                if dup_it {
+                    st.stats.duplicated += 1;
+                    self.inner.send(msg)?;
+                }
+                Ok(())
+            }
+            MsgClass::Data | MsgClass::Ack => {
+                self.flush_due(&mut st, now, false)?;
+                let (p_dup, p_delay) = match class {
+                    MsgClass::Data => (self.spec.dup_data, self.spec.delay_data),
+                    _ => (self.spec.dup_ack, self.spec.delay_ack),
+                };
+                // Draw every verdict up front so the decision stream
+                // stays positionally aligned across code paths.
+                let dup_it = st.rng.bool(p_dup);
+                let delay_it = st.rng.bool(p_delay);
+                let delay_by = 1 + st.rng.below(self.spec.reorder_window.max(1)) as u64;
+                if st.heal_at != 0 {
+                    // Mid-partition: defer in order.
+                    st.deferred.push_back(msg);
+                    return Ok(());
+                }
+                if self.spec.partition_every > 0 {
+                    st.sends_since_partition += 1;
+                    if st.sends_since_partition >= self.spec.partition_every {
+                        st.sends_since_partition = 0;
+                        st.heal_at = now + self.spec.partition_len.max(1);
+                        st.stats.partitions += 1;
+                        st.deferred.push_back(msg);
+                        return Ok(());
+                    }
+                }
+                if delay_it {
+                    st.stats.delayed += 1;
+                    let seq = st.held_seq;
+                    st.held_seq += 1;
+                    st.held.push((now + delay_by, seq, msg));
+                    return Ok(());
+                }
+                self.inner.send(msg.clone())?;
+                if dup_it {
+                    st.stats.duplicated += 1;
+                    self.inner.send(msg)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        let now = self.tick()?;
+        {
+            let mut st = self.st.lock().unwrap_or_else(|e| e.into_inner());
+            self.flush_due(&mut st, now, false)?;
+        }
+        // The lock is NOT held across the blocking receive: senders on
+        // other threads must stay free to make progress.
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        let now = self.tick()?;
+        {
+            let mut st = self.st.lock().unwrap_or_else(|e| e.into_inner());
+            self.flush_due(&mut st, now, false)?;
+        }
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{channel, FaultController, WireModel};
+
+    fn torture_pair(
+        spec: &TortureSpec,
+        stream: Option<u32>,
+    ) -> (AdversaryEndpoint, Arc<dyn Endpoint>) {
+        let (a, b) = channel::pair(WireModel::none(), FaultController::unarmed());
+        let src = AdversaryEndpoint::new(Arc::new(a), spec.clone(), Side::Source, stream);
+        (src, Arc::new(b) as Arc<dyn Endpoint>)
+    }
+
+    fn block(n: u32) -> Message {
+        Message::NewBlock {
+            file_idx: 0,
+            block_idx: n,
+            offset: 0,
+            digest: 0,
+            data: vec![n as u8; 4].into(),
+        }
+    }
+
+    fn drain(ep: &Arc<dyn Endpoint>) -> Vec<Message> {
+        let mut out = Vec::new();
+        while let Ok(m) = ep.recv_timeout(Duration::from_millis(20)) {
+            out.push(m);
+        }
+        out
+    }
+
+    #[test]
+    fn quiet_spec_is_passthrough() {
+        let (src, sink) = torture_pair(&TortureSpec::quiet(1), None);
+        for i in 0..10 {
+            src.send(block(i)).unwrap();
+        }
+        let got = drain(&sink);
+        assert_eq!(got.len(), 10);
+        for (i, m) in got.iter().enumerate() {
+            match m {
+                Message::NewBlock { block_idx, .. } => assert_eq!(*block_idx, i as u32),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(src.stats(), AdversaryStats::default());
+    }
+
+    #[test]
+    fn dup_profile_duplicates_deterministically() {
+        let spec = TortureSpec::profile("dup", 42).unwrap().unwrap();
+        let run = |spec: &TortureSpec| {
+            let (src, sink) = torture_pair(spec, None);
+            for i in 0..64 {
+                src.send(block(i)).unwrap();
+            }
+            let frames: Vec<u32> = drain(&sink)
+                .into_iter()
+                .map(|m| match m {
+                    Message::NewBlock { block_idx, .. } => block_idx,
+                    other => panic!("unexpected {other:?}"),
+                })
+                .collect();
+            (frames, src.stats())
+        };
+        let (frames_a, stats_a) = run(&spec);
+        let (frames_b, stats_b) = run(&spec);
+        // Same seed, same schedule — byte-for-byte.
+        assert_eq!(frames_a, frames_b);
+        assert_eq!(stats_a, stats_b);
+        assert!(stats_a.duplicated > 0, "64 sends at p=0.3 must dup some");
+        assert_eq!(frames_a.len() as u64, 64 + stats_a.duplicated);
+        // A different seed produces a different schedule.
+        let mut other = spec.clone();
+        other.seed = 43;
+        let (frames_c, _) = run(&other);
+        assert_ne!(frames_a, frames_c);
+    }
+
+    #[test]
+    fn control_message_flushes_held_traffic_first() {
+        let mut spec = TortureSpec::quiet(7);
+        spec.delay_data = 1.0; // hold every block
+        spec.reorder_window = 1000; // far future: only the barrier flushes
+        let (src, sink) = torture_pair(&spec, None);
+        src.send(block(0)).unwrap();
+        src.send(block(1)).unwrap();
+        assert!(
+            sink.recv_timeout(Duration::from_millis(20)).is_err(),
+            "both blocks are held"
+        );
+        src.send(Message::FileClose { file_idx: 0 }).unwrap();
+        let got = drain(&sink);
+        assert_eq!(got.len(), 3);
+        // Held traffic drains before the barrier, in order.
+        assert!(matches!(got[0], Message::NewBlock { block_idx: 0, .. }));
+        assert!(matches!(got[1], Message::NewBlock { block_idx: 1, .. }));
+        assert!(matches!(got[2], Message::FileClose { file_idx: 0 }));
+    }
+
+    #[test]
+    fn delayed_traffic_drains_on_receive_polls() {
+        let mut spec = TortureSpec::quiet(7);
+        spec.delay_data = 1.0;
+        spec.reorder_window = 2;
+        let (src, sink) = torture_pair(&spec, None);
+        src.send(block(0)).unwrap();
+        // The sender's own receive polling advances the clock past the
+        // reorder window and flushes the held block.
+        for _ in 0..4 {
+            let _ = src.recv_timeout(Duration::from_millis(1));
+        }
+        let got = drain(&sink);
+        assert_eq!(got.len(), 1, "held block must drain via polls: {got:?}");
+    }
+
+    #[test]
+    fn partition_defers_then_heals_in_order() {
+        let mut spec = TortureSpec::quiet(5);
+        spec.partition_every = 3;
+        spec.partition_len = 2;
+        let (src, sink) = torture_pair(&spec, None);
+        for i in 0..6 {
+            src.send(block(i)).unwrap();
+        }
+        // Sends 0,1 pass; send 2 starts the partition (deferred); the
+        // heal tick passes during sends 3/4 (also deferred until the
+        // flush check), so everything arrives, in order, with no loss.
+        for _ in 0..4 {
+            let _ = src.recv_timeout(Duration::from_millis(1));
+        }
+        let got: Vec<u32> = drain(&sink)
+            .into_iter()
+            .map(|m| match m {
+                Message::NewBlock { block_idx, .. } => block_idx,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+        assert!(src.stats().partitions >= 1);
+    }
+
+    #[test]
+    fn handshake_drops_only_handshake_class() {
+        let mut spec = TortureSpec::quiet(11);
+        spec.drop_handshake = 1.0;
+        let (src, sink) = torture_pair(&spec, None);
+        src.send(Message::StreamHello { stream_id: 0, job: 0 }).unwrap();
+        src.send(block(0)).unwrap();
+        src.send(Message::Bye).unwrap();
+        let got = drain(&sink);
+        assert_eq!(got.len(), 2, "hello dropped, data+control delivered: {got:?}");
+        assert!(matches!(got[0], Message::NewBlock { .. }));
+        assert!(matches!(got[1], Message::Bye));
+        assert_eq!(src.stats().dropped, 1);
+    }
+
+    #[test]
+    fn cut_stream_severs_matching_stream_only() {
+        let mut spec = TortureSpec::quiet(13);
+        spec.cut_stream = Some(1);
+        spec.cut_after_ops = 3;
+        // Stream 1: cut after 3 ops, then permanently Closed.
+        let (src, _sink) = torture_pair(&spec, Some(1));
+        src.send(block(0)).unwrap();
+        src.send(block(1)).unwrap();
+        assert_eq!(src.send(block(2)), Err(NetError::Closed));
+        assert_eq!(src.recv_timeout(Duration::from_millis(1)), Err(NetError::Closed));
+        // Stream 0 and the control connection never cut.
+        let (src0, sink0) = torture_pair(&spec, Some(0));
+        let (ctrl, csink) = torture_pair(&spec, None);
+        for i in 0..8 {
+            src0.send(block(i)).unwrap();
+            ctrl.send(block(i)).unwrap();
+        }
+        assert_eq!(drain(&sink0).len(), 8);
+        assert_eq!(drain(&csink).len(), 8);
+    }
+}

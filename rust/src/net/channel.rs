@@ -147,6 +147,7 @@ mod tests {
             ack_batch: 1,
             send_window: 1,
             data_streams: 1,
+            job: 0,
         })
         .unwrap();
         let m = sink.recv().unwrap();

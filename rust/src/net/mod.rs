@@ -15,8 +15,12 @@
 //! Fault injection lives here too: a [`FaultController`] trips the
 //! connection once a configured number of payload bytes has crossed the
 //! wire — the simulation environment of paper §6 ("we generate faults
-//! after transferring 20 %, 40 %, 60 %, 80 % of total data size").
+//! after transferring 20 %, 40 %, 60 %, 80 % of total data size") — and
+//! an [`adversary::AdversaryEndpoint`] can wrap either backend with a
+//! seeded deterministic torture policy (delay, duplicate, handshake
+//! drop, partition/heal, stream cut) for protocol-hardening tests.
 
+pub mod adversary;
 pub mod channel;
 pub mod message;
 pub mod rma;

@@ -90,6 +90,51 @@ matrix! {
 }
 
 #[test]
+fn torture_profile_composes_with_matrix_kill_points() {
+    // The matrix drill with the adversary armed on top: for every FT
+    // mechanism, run the reorder profile under a mid-transfer kill and
+    // resume (adversary still on). The composed `label_with` tag names
+    // both legs in every assertion, and the invariants are exactly the
+    // plain matrix ones — resume completes, logged objects are skipped,
+    // sink byte-verifies, no logs survive.
+    for mech in Mechanism::ALL_FT {
+        let mut cfg = Config::for_tests(&format!("matrix-torture-{}", mech.as_str()));
+        cfg.mechanism = mech;
+        cfg.method = Method::Bit64;
+        cfg.send_window = 4;
+        cfg.ack_batch = 4;
+        cfg.ack_flush_us = 500;
+        cfg.torture_profile = "reorder".into();
+        cfg.torture_seed = 0xA11CE;
+        let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+        let env = SimEnv::new(cfg, &wl);
+        let plan = FaultPlan::try_at_fraction(0.5, Side::Source)
+            .expect("0.5 is a valid fault fraction");
+        let label = plan.label_with(Some(&env.cfg.torture_profile));
+        let out = env
+            .run(&TransferSpec::fresh(env.files.clone()).with_fault(plan))
+            .unwrap();
+        assert!(!out.completed, "{mech:?} {label}: fault did not fire");
+        let logged: u64 = recover::recover_all(&env.cfg.ft())
+            .unwrap()
+            .values()
+            .map(|s| s.count() as u64)
+            .sum();
+        let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+        assert!(out2.completed, "{mech:?} {label}: resume failed: {:?}", out2.fault);
+        assert!(
+            out2.source.objects_skipped_resume >= logged,
+            "{mech:?} {label}: logged objects not skipped"
+        );
+        env.verify_sink_complete()
+            .unwrap_or_else(|e| panic!("{mech:?} {label}: {e}"));
+        let left = recover::recover_all(&env.cfg.ft()).unwrap();
+        assert!(left.is_empty(), "{mech:?} {label}: logs left after completion");
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+}
+
+#[test]
 fn batched_acks_fault_mid_window_every_mechanism() {
     // The batched-ack pipeline: for every FT mechanism and several
     // ack_batch sizes, kill the connection mid-transfer (hence mid-flush-

@@ -252,6 +252,88 @@ fn prop_batched_ack_fault_mid_window_never_resends_acked() {
 }
 
 #[test]
+fn prop_torture_outcome_parity_with_calm_reference() {
+    // Randomized adversary specs inside the recoverable envelope (dup +
+    // delay + partition — no drops, no cuts): the tortured transfer
+    // must complete with the SAME logical outcome as a calm run of the
+    // same workload/config — every object synced exactly once, every
+    // byte written exactly once, sink byte-verified. Duplicates and
+    // reordering may only ever cost wire traffic, never correctness.
+    use ftlads::config::TortureSpec;
+    use ftlads::coordinator::TransferJob;
+    forall("torture_parity", 12, |rng| {
+        let mut cfg = Config::for_tests("prop-torture");
+        cfg.mechanism = *rng.choose(&[
+            Mechanism::File,
+            Mechanism::Transaction,
+            Mechanism::Universal,
+        ]);
+        cfg.method = *rng.choose(&Method::ALL);
+        cfg.send_window = rng.range(1, 6) as u32;
+        cfg.ack_batch = rng.range(1, 5) as u32;
+        cfg.ack_flush_us = 500;
+        cfg.data_streams = if rng.bool(0.5) { 1 } else { rng.range(2, 5) as u32 };
+
+        let mut spec = TortureSpec::quiet(rng.next_u64() | 1);
+        spec.dup_data = rng.f64() * 0.5;
+        spec.dup_ack = rng.f64() * 0.5;
+        spec.delay_data = rng.f64() * 0.5;
+        spec.delay_ack = rng.f64() * 0.5;
+        spec.reorder_window = rng.range(1, 8) as u32;
+        if rng.bool(0.5) {
+            spec.partition_every = rng.range(16, 64);
+            spec.partition_len = rng.range(4, 32);
+        }
+        spec.validate().map_err(|e| e.to_string())?;
+
+        let wl = random_workload(rng, cfg.object_size);
+        let total = wl.total_objects(cfg.object_size);
+        let bytes = wl.total_bytes();
+
+        let env = SimEnv::new(cfg.clone(), &wl);
+        let out = TransferJob::builder(
+            &env.cfg,
+            &TransferSpec::fresh(env.files.clone()),
+        )
+        .source_pfs(env.source.clone())
+        .sink_pfs(env.sink.clone())
+        .torture(spec.clone())
+        .run()
+        .map_err(|e| e.to_string())?;
+        prop_assert!(out.completed, "tortured run faulted: {:?} ({spec:?})", out.fault);
+        env.verify_sink_complete().map_err(|e| e.to_string())?;
+
+        let calm_env = SimEnv::new(cfg, &wl);
+        let calm = calm_env
+            .run(&TransferSpec::fresh(calm_env.files.clone()))
+            .map_err(|e| e.to_string())?;
+        prop_assert!(calm.completed, "{:?}", calm.fault);
+        calm_env.verify_sink_complete().map_err(|e| e.to_string())?;
+
+        for (label, tortured, reference) in [
+            ("objects_synced", out.source.objects_synced, calm.source.objects_synced),
+            ("bytes_written", out.sink.bytes_written, calm.sink.bytes_written),
+            ("write_syscalls", out.sink.write_syscalls, calm.sink.write_syscalls),
+            (
+                "files_completed",
+                out.source.files_completed,
+                calm.source.files_completed,
+            ),
+        ] {
+            prop_assert!(
+                tortured == reference,
+                "{label} diverged under torture: {tortured} vs {reference} ({spec:?})"
+            );
+        }
+        prop_assert_eq!(out.source.objects_synced, total);
+        prop_assert_eq!(out.sink.bytes_written, bytes);
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        let _ = std::fs::remove_dir_all(&calm_env.cfg.ft_dir);
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_message_codec_roundtrips_random() {
     use ftlads::net::Message;
     forall("msg_codec", 300, |rng| {

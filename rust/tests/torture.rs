@@ -1,0 +1,455 @@
+//! Adversarial-network torture suite: the seeded deterministic
+//! adversary transport (`net::adversary`) against the hardened
+//! protocol — duplicate/reorder/partition profiles across every FT
+//! mechanism, handshake attrition against the CONNECT retry loop,
+//! data-stream cuts against the failover path, torture composed with
+//! kill-point fault plans, and the serve watchdog. Throughout: the sink
+//! dataset must land byte-exact, every object must be written exactly
+//! once (the (fid, block) write ledger absorbs duplicates), and resumes
+//! must honor the log-based retransmit bound `resent <= total - logged`.
+//!
+//! The off-switch is pinned too: with the adversary disarmed (seed 0)
+//! and the hardening knobs at ANY value, the wire bytes are identical
+//! to a run without this subsystem.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ftlads::config::{Config, TortureSpec};
+use ftlads::coordinator::serve::{JobRequest, Serve};
+use ftlads::coordinator::sink::SinkSession;
+use ftlads::coordinator::source::SourceSession;
+use ftlads::coordinator::{SimEnv, TransferJob, TransferOutcome, TransferSpec};
+use ftlads::fault::FaultPlan;
+use ftlads::ftlog::{recover, Mechanism, Method};
+use ftlads::net::adversary::AdversaryEndpoint;
+use ftlads::net::{channel, Endpoint, FaultController, Message, NetError, Side};
+use ftlads::pfs::Pfs;
+use ftlads::workload;
+
+/// Endpoint tap recording the encoded bytes of every send that passes
+/// through it. Placed UNDER an [`AdversaryEndpoint`] it records exactly
+/// what the adversary emitted (duplicates included); used bare it
+/// records what a session put on the wire.
+struct ByteTap {
+    inner: Arc<dyn Endpoint>,
+    sent: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl ByteTap {
+    fn new(inner: Arc<dyn Endpoint>) -> (ByteTap, Arc<Mutex<Vec<Vec<u8>>>>) {
+        let sent = Arc::new(Mutex::new(Vec::new()));
+        (ByteTap { inner, sent: sent.clone() }, sent)
+    }
+}
+
+impl Endpoint for ByteTap {
+    fn send(&self, msg: Message) -> Result<(), NetError> {
+        let mut bytes = Vec::new();
+        msg.encode(&mut bytes);
+        self.sent.lock().unwrap_or_else(|e| e.into_inner()).push(bytes);
+        self.inner.send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, NetError> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Message, NetError> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn payload_sent(&self) -> u64 {
+        self.inner.payload_sent()
+    }
+}
+
+/// Sorted copy — IO threads race, so cross-run wire comparison is by
+/// multiset (the same convention as the other byte-identity pins).
+fn sorted(trace: &Arc<Mutex<Vec<Vec<u8>>>>) -> Vec<Vec<u8>> {
+    let mut t = trace.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    t.sort();
+    t
+}
+
+/// Run one fused (K = 1) session over tapped channel endpoints, with an
+/// optional torture wrapper over each tap, returning both sides' frame
+/// traces.
+fn tapped_session(
+    cfg: &Config,
+    env: &SimEnv,
+    torture: Option<&TortureSpec>,
+) -> (Arc<Mutex<Vec<Vec<u8>>>>, Arc<Mutex<Vec<Vec<u8>>>>) {
+    let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let (src_tap, src_sent) = ByteTap::new(Arc::new(src_ep));
+    let (snk_tap, snk_sent) = ByteTap::new(Arc::new(snk_ep));
+    let wrap = |tap: ByteTap, side: Side| -> Arc<dyn Endpoint> {
+        match torture {
+            Some(spec) => {
+                Arc::new(AdversaryEndpoint::new(Arc::new(tap), spec.clone(), side, None))
+            }
+            None => Arc::new(tap),
+        }
+    };
+    let node = SinkSession::new(cfg, env.sink.clone(), wrap(snk_tap, Side::Sink))
+        .spawn()
+        .unwrap();
+    let spec = TransferSpec::fresh(env.files.clone());
+    let src = SourceSession::new(cfg, env.source.clone(), wrap(src_tap, Side::Source))
+        .run(&spec)
+        .unwrap();
+    assert!(src.fault.is_none(), "{:?}", src.fault);
+    let snk = node.join();
+    assert!(snk.fault.is_none(), "{:?}", snk.fault);
+    env.verify_sink_complete().unwrap();
+    (src_sent, snk_sent)
+}
+
+#[test]
+fn torture_off_is_byte_identical_to_baseline() {
+    // The off-switch pin, two layers deep: (a) non-default hardening
+    // knobs (connect timeout/retries, job deadline) plus a torture
+    // profile with the seed at 0 — i.e. disarmed — must put EXACTLY the
+    // baseline's bytes on the wire in both directions; (b) a QUIET
+    // armed adversary (every probability 0) must be pure pass-through.
+    let wl = workload::big_workload(4, 8 * (64 << 10)); // 32 objects
+
+    let base_cfg = Config::for_tests("torture-off-base");
+    let base_env = SimEnv::new(base_cfg.clone(), &wl);
+    let (base_src, base_snk) = tapped_session(&base_cfg, &base_env, None);
+
+    let mut hard_cfg = Config::for_tests("torture-off-hard");
+    hard_cfg.connect_timeout_ms = 1234;
+    hard_cfg.connect_retries = 5;
+    hard_cfg.job_deadline_ms = 60_000;
+    hard_cfg.torture_profile = "dup".into();
+    hard_cfg.torture_seed = 0; // disarmed: no adversary is constructed
+    assert!(hard_cfg.torture().is_none(), "seed 0 must disarm the profile");
+    let hard_env = SimEnv::new(hard_cfg.clone(), &wl);
+    let (hard_src, hard_snk) = tapped_session(&hard_cfg, &hard_env, None);
+
+    let quiet_cfg = Config::for_tests("torture-off-quiet");
+    let quiet_env = SimEnv::new(quiet_cfg.clone(), &wl);
+    let quiet = TortureSpec::quiet(99);
+    assert!(quiet.is_quiet());
+    let (quiet_src, quiet_snk) = tapped_session(&quiet_cfg, &quiet_env, Some(&quiet));
+
+    for (label, src, snk) in
+        [("hardening knobs", &hard_src, &hard_snk), ("quiet adversary", &quiet_src, &quiet_snk)]
+    {
+        assert_eq!(
+            sorted(src),
+            sorted(&base_src),
+            "{label} changed the source->sink wire bytes"
+        );
+        assert_eq!(
+            sorted(snk),
+            sorted(&base_snk),
+            "{label} changed the sink->source wire bytes"
+        );
+    }
+    for env in [&base_env, &hard_env, &quiet_env] {
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+}
+
+#[test]
+fn torture_profiles_complete_every_ft_mechanism() {
+    // The core sweep: {reorder, dup, partition} × every FT mechanism,
+    // on the full pipeline shape (windowed issue, batched acks, two
+    // data streams). Every combination must complete with a byte-exact
+    // sink, every object written exactly once (write_syscalls == total:
+    // the (fid, block) ledger dropped every duplicate before the
+    // pwrite) and logged exactly once (objects_synced == total: the
+    // source's send-window dedup dropped every duplicate ack).
+    for (i, profile) in ["reorder", "dup", "partition"].iter().enumerate() {
+        for mech in Mechanism::ALL_FT {
+            let mut cfg =
+                Config::for_tests(&format!("torture-{profile}-{}", mech.as_str()));
+            cfg.mechanism = mech;
+            cfg.method = Method::Bit64;
+            cfg.send_window = 4;
+            cfg.ack_batch = 4;
+            cfg.ack_flush_us = 500;
+            cfg.data_streams = 2;
+            cfg.torture_profile = (*profile).into();
+            cfg.torture_seed = 0xF7 + i as u64;
+            let wl = workload::big_workload(4, 8 * cfg.object_size); // 32 objects
+            let total = wl.total_objects(cfg.object_size);
+            let env = SimEnv::new(cfg, &wl);
+            let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+            assert!(out.completed, "{profile}/{mech:?}: {:?}", out.fault);
+            assert_eq!(
+                out.source.objects_synced, total,
+                "{profile}/{mech:?}: every object exactly once in the send ledger"
+            );
+            assert_eq!(
+                out.sink.write_syscalls, total,
+                "{profile}/{mech:?}: duplicate NEW_BLOCK reached a pwrite"
+            );
+            if *profile == "dup" {
+                assert!(
+                    out.sink.dup_blocks_dropped > 0,
+                    "{mech:?}: dup profile never duplicated a block"
+                );
+                assert!(
+                    out.source.dup_acks_dropped > 0,
+                    "{mech:?}: dup profile never duplicated an ack"
+                );
+            }
+            env.verify_sink_complete()
+                .unwrap_or_else(|e| panic!("{profile}/{mech:?}: {e}"));
+            let left = recover::recover_all(&env.cfg.ft()).unwrap();
+            assert!(
+                left.is_empty(),
+                "{profile}/{mech:?}: logs left after completion"
+            );
+            let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        }
+    }
+}
+
+#[test]
+fn dup_profile_schedule_is_deterministic_by_seed() {
+    // The replayability pin at session level: a lockstep transfer (one
+    // IO thread, window 1, batch 1, one file) under the delay-free
+    // "dup" profile must emit the IDENTICAL frame sequence — order and
+    // bytes — on both sides across two runs with the same seed. The
+    // taps sit under the adversary, so duplicated frames are recorded
+    // exactly as the wire saw them.
+    let spec = TortureSpec::profile("dup", 42).unwrap().unwrap();
+    let run = |tag: &str| -> (Vec<Vec<u8>>, u64) {
+        let mut cfg = Config::for_tests(tag);
+        cfg.io_threads = 1;
+        cfg.send_window = 1;
+        cfg.ack_batch = 1;
+        cfg.data_streams = 1;
+        let wl = workload::big_workload(1, 16 * cfg.object_size); // 16 objects
+        let env = SimEnv::new(cfg.clone(), &wl);
+        let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+        let (src_tap, src_sent) = ByteTap::new(Arc::new(src_ep));
+        let (snk_tap, snk_sent) = ByteTap::new(Arc::new(snk_ep));
+        let src_adv = Arc::new(AdversaryEndpoint::new(
+            Arc::new(src_tap),
+            spec.clone(),
+            Side::Source,
+            None,
+        ));
+        let snk_adv = Arc::new(AdversaryEndpoint::new(
+            Arc::new(snk_tap),
+            spec.clone(),
+            Side::Sink,
+            None,
+        ));
+        let node = SinkSession::new(&cfg, env.sink.clone(), snk_adv.clone())
+            .spawn()
+            .unwrap();
+        let src = SourceSession::new(&cfg, env.source.clone(), src_adv.clone())
+            .run(&TransferSpec::fresh(env.files.clone()))
+            .unwrap();
+        assert!(src.fault.is_none(), "{:?}", src.fault);
+        let snk = node.join();
+        assert!(snk.fault.is_none(), "{:?}", snk.fault);
+        env.verify_sink_complete().unwrap();
+        let duplicated = src_adv.stats().duplicated + snk_adv.stats().duplicated;
+        let mut frames = src_sent.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        frames.extend(snk_sent.lock().unwrap_or_else(|e| e.into_inner()).clone());
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+        (frames, duplicated)
+    };
+    let (frames_a, dup_a) = run("torture-det-a");
+    let (frames_b, dup_b) = run("torture-det-b");
+    assert!(dup_a > 0, "the dup profile must actually duplicate something");
+    assert_eq!(dup_a, dup_b, "same seed, same duplication schedule");
+    assert_eq!(
+        frames_a, frames_b,
+        "same seed must reproduce the same message schedule"
+    );
+}
+
+#[test]
+fn lossy_handshake_retry_loop_carries_connect() {
+    // Handshake attrition: CONNECT / CONNECT_ACK drop 30% of the time.
+    // With `connect_retries` armed, each seeded run must either complete
+    // (the common case — the backoff loop re-offers the handshake) or
+    // fault cleanly and then complete on a disarmed resume. Across the
+    // sweep the retry path must demonstrably fire.
+    let mut completions = 0u32;
+    let mut total_retries = 0u64;
+    for seed in 1..=16u64 {
+        let mut cfg = Config::for_tests(&format!("torture-lossy-{seed}"));
+        cfg.connect_timeout_ms = 40;
+        cfg.connect_retries = 6;
+        cfg.torture_profile = "lossy-handshake".into();
+        cfg.torture_seed = seed;
+        let wl = workload::big_workload(2, 4 * cfg.object_size); // 8 objects
+        let env = SimEnv::new(cfg, &wl);
+        let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+        total_retries += out.source.retries + out.sink.retries;
+        if out.completed {
+            completions += 1;
+        } else {
+            // Retries exhausted: the fault must be clean and resumable.
+            assert!(out.fault.is_some(), "seed {seed}: incomplete without a fault");
+            let mut calm = env.cfg.clone();
+            calm.torture_seed = 0;
+            let out2 = TransferJob::builder(&calm, &TransferSpec::resuming(env.files.clone()))
+                .source_pfs(env.source.clone())
+                .sink_pfs(env.sink.clone())
+                .run()
+                .unwrap();
+            assert!(out2.completed, "seed {seed}: resume failed: {:?}", out2.fault);
+        }
+        env.verify_sink_complete()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+    assert!(
+        completions >= 8,
+        "lossy handshake must usually be survivable: {completions}/16 completed"
+    );
+    assert!(total_retries > 0, "16 lossy seeds and the retry path never fired");
+}
+
+#[test]
+fn cut_stream_fails_over_to_survivors() {
+    // The failover drill: at K = 4 the cut-stream profile severs data
+    // stream 1 (both directions) mid-transfer. The source must re-home
+    // its OST queues onto the three survivors (fresh LPT plan) and
+    // finish the job in ONE session — no fault, byte-exact sink, every
+    // object written exactly once despite the re-derived in-flight
+    // blocks (the write ledger absorbs re-sends).
+    let mut cfg = Config::for_tests("torture-cut-k4");
+    cfg.mechanism = Mechanism::Universal;
+    cfg.method = Method::Bit64;
+    cfg.data_streams = 4;
+    cfg.send_window = 4;
+    cfg.ack_batch = 4;
+    cfg.ack_flush_us = 500;
+    cfg.torture_profile = "cut-stream".into();
+    cfg.torture_seed = 21;
+    let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+    let total = wl.total_objects(cfg.object_size);
+    let env = SimEnv::new(cfg, &wl);
+    let out = env.run(&TransferSpec::fresh(env.files.clone())).unwrap();
+    assert!(out.completed, "failover did not carry the transfer: {:?}", out.fault);
+    assert_eq!(out.data_streams, 4);
+    assert_eq!(out.source.objects_synced, total);
+    assert_eq!(
+        out.sink.write_syscalls, total,
+        "failover re-sends must be deduped before the pwrite"
+    );
+    env.verify_sink_complete().unwrap();
+    let left = recover::recover_all(&env.cfg.ft()).unwrap();
+    assert!(left.is_empty(), "logs left after completion");
+    let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+}
+
+#[test]
+fn torture_composes_with_kill_point_faults() {
+    // Torture × the ft_matrix drill: every profile runs under a
+    // mid-transfer kill (50% of payload, source side), faults, and
+    // resumes — with the adversary STILL armed on the resume. The
+    // composed label names both legs, the resume honors the log-based
+    // retransmit bound `resent <= total - logged`, and the sink
+    // byte-verifies. (cut-stream at K = 2 stacks all three mechanisms:
+    // stream death -> failover, kill -> clean fault, resume.)
+    for profile in ["reorder", "dup", "partition", "cut-stream"] {
+        let mut cfg = Config::for_tests(&format!("torture-kill-{profile}"));
+        cfg.mechanism = Mechanism::Universal;
+        cfg.method = Method::Bit64;
+        cfg.send_window = 4;
+        cfg.ack_batch = 4;
+        cfg.ack_flush_us = 500;
+        cfg.data_streams = 2;
+        cfg.torture_profile = profile.into();
+        cfg.torture_seed = 0xC0FFEE;
+        let wl = workload::big_workload(6, 8 * cfg.object_size); // 48 objects
+        let total = wl.total_objects(cfg.object_size);
+        let env = SimEnv::new(cfg, &wl);
+        let plan = FaultPlan::at_fraction(0.5, Side::Source);
+        let label = plan.label_with(Some(profile));
+        assert!(label.contains(profile), "composed label must name the profile");
+        let out = env
+            .run(&TransferSpec::fresh(env.files.clone()).with_fault(plan))
+            .unwrap();
+        assert!(!out.completed, "{label}: kill point did not fire");
+        let logged: u64 = recover::recover_all(&env.cfg.ft())
+            .unwrap()
+            .values()
+            .map(|s| s.count() as u64)
+            .sum();
+        let out2 = env.run(&TransferSpec::resuming(env.files.clone())).unwrap();
+        assert!(out2.completed, "{label}: resume failed: {:?}", out2.fault);
+        assert!(
+            out2.source.objects_skipped_resume >= logged,
+            "{label}: logged objects not skipped ({} skipped, {logged} logged)",
+            out2.source.objects_skipped_resume
+        );
+        assert!(
+            out2.source.objects_sent <= total - logged,
+            "{label}: resume retransmitted logged objects \
+             ({} sent, {logged} logged of {total})",
+            out2.source.objects_sent
+        );
+        env.verify_sink_complete()
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        let left = recover::recover_all(&env.cfg.ft()).unwrap();
+        assert!(left.is_empty(), "{label}: logs left after completion");
+        let _ = std::fs::remove_dir_all(&env.cfg.ft_dir);
+    }
+}
+
+#[test]
+fn serve_watchdog_faults_silent_job_and_frees_the_slot() {
+    // The per-job deadline: a daemon with one admission slot and a
+    // 400 ms deadline gets a job that needs seconds of modeled wire
+    // time. The watchdog must fault it (freeing the slot and counting
+    // jobs_faulted), and a subsequent fast job must run to completion
+    // through the same daemon.
+    let mut cfg = Config::for_tests("torture-watchdog");
+    cfg.time_scale = 1.0;
+    cfg.net_bandwidth = 2e6; // 2 MB/s modeled wire
+    cfg.serve_max_jobs = 1;
+    cfg.job_deadline_ms = 400;
+
+    let slow_wl = workload::big_workload(4, 16 * cfg.object_size); // 4 MiB ≈ 2 s
+    let slow_env = SimEnv::new(cfg.clone(), &slow_wl);
+    let serve = Serve::new(cfg.clone());
+    let slow = serve
+        .submit(
+            "tenant",
+            1,
+            JobRequest {
+                spec: TransferSpec::fresh(slow_env.files.clone()),
+                source_pfs: slow_env.source.clone() as Arc<dyn Pfs>,
+                sink_pfs: slow_env.sink.clone() as Arc<dyn Pfs>,
+                runtime: None,
+            },
+        )
+        .unwrap();
+    let res = slow.wait();
+    assert!(res.is_err(), "watchdog must fault the over-deadline job: {res:?}");
+    assert_eq!(serve.stats().jobs_faulted, 1);
+
+    let fast_wl = workload::big_workload(1, cfg.object_size); // 64 KiB ≈ 32 ms
+    let fast_env = SimEnv::new(cfg.clone(), &fast_wl);
+    let fast = serve
+        .submit(
+            "tenant",
+            1,
+            JobRequest {
+                spec: TransferSpec::fresh(fast_env.files.clone()),
+                source_pfs: fast_env.source.clone() as Arc<dyn Pfs>,
+                sink_pfs: fast_env.sink.clone() as Arc<dyn Pfs>,
+                runtime: None,
+            },
+        )
+        .unwrap();
+    let out: TransferOutcome = fast.wait().unwrap();
+    assert!(out.completed, "slot not freed for the next job: {:?}", out.fault);
+    let stats = serve.stats();
+    assert_eq!(stats.jobs_completed, 1);
+    assert_eq!(stats.jobs_faulted, 1);
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
