@@ -36,9 +36,12 @@
 //!                   pessimal run — the §A12 convergence table
 //!   serve           multi-job daemon: J concurrent jobs through one
 //!                   in-process `Serve`, weighted fair-share dispatch
-//!                   order under a full admission queue, and cross-job
+//!                   order under a full admission queue, cross-job
 //!                   OST steering via the shared congestion registry
-//!                   (registry-informed vs blind) — the §A13 tables
+//!                   (registry-informed vs blind) — the §A13 tables —
+//!                   and the daemon-kill recovery leg: manifest replay
+//!                   re-admits every incomplete job under the
+//!                   `resent <= total - logged` bound — the §A15 tables
 //!   torture         adversarial-network transport: per-profile overhead
 //!                   vs a torture-off run for every FT mechanism (wall
 //!                   time, duplicates absorbed, retries) and the
@@ -758,9 +761,15 @@ fn bench_autotune() {
 /// slow serial storage, shared registry on vs off: registry-informed
 /// runs must record foreign-load-aware picks (`shared_picks`) and
 /// actual steers away from the other job's hot OSTs (`shared_avoids`);
-/// registry-blind runs must record exactly zero of both.
+/// registry-blind runs must record exactly zero of both. (d) The §A15
+/// daemon-kill recovery leg — every job killed mid-transfer, a second
+/// daemon over the same ft_dir replays the job manifest, re-admits the
+/// complement under the `resent <= total - logged` bound, and the
+/// recovery wall time is reported against a fault-free full run.
 fn bench_serve() {
     use ftlads::coordinator::serve::{JobRequest, Serve};
+    use ftlads::fault::FaultPlan;
+    use ftlads::net::Side;
     use ftlads::pfs::sim::SimPfs;
     use std::sync::Arc;
 
@@ -964,6 +973,136 @@ fn bench_serve() {
         &["registry", "foreign-load picks", "steered picks", "ms"],
         &rows,
     );
+
+    // (d) daemon-kill recovery: `serve_recover` on, every job killed
+    // mid-transfer (the whole daemon dies with them), then a second
+    // daemon over the same ft_dir replays the job manifest and
+    // re-admits the complement. Reported against a fault-free full run
+    // of the same job mix — the paper's claim is that recovery costs
+    // ~10 % of the transfer, not a restart from zero.
+    let jobs = if quick { 2usize } else { 3 };
+    let mk_cfg = |tag: &str| {
+        let mut c = wire_cfg(tag);
+        c.serve_max_jobs = 4;
+        c.serve_recover = true;
+        c
+    };
+
+    // Fault-free baseline of the same mix (its own ft_dir).
+    let cfg_full = mk_cfg("micro-serve-recover-full");
+    let serve = Serve::new(cfg_full.clone());
+    let mut envs = Vec::new();
+    let started = std::time::Instant::now();
+    let handles: Vec<_> = (0..jobs)
+        .map(|j| {
+            let (req, source, sink, names, _) =
+                make_job(&cfg_full, cfg_full.seed + 300 + j as u64);
+            envs.push(SimEnv { cfg: cfg_full.clone(), source, sink, files: names });
+            serve.submit("bench", 1, req).unwrap()
+        })
+        .collect();
+    for h in handles {
+        assert!(h.wait().unwrap().completed, "baseline job faulted");
+    }
+    serve.drain();
+    let full_ms = started.elapsed().as_secs_f64() * 1e3;
+    let _ = std::fs::remove_dir_all(&cfg_full.ft_dir);
+
+    // Kill run: identical mix, every job dies at 50 % of its bytes.
+    let cfg = mk_cfg("micro-serve-recover");
+    let serve = Serve::new(cfg.clone());
+    let mut envs = Vec::new();
+    let mut totals = Vec::new();
+    let started = std::time::Instant::now();
+    let handles: Vec<_> = (0..jobs)
+        .map(|j| {
+            let (mut req, source, sink, names, _) =
+                make_job(&cfg, cfg.seed + 300 + j as u64);
+            req.spec = req
+                .spec
+                .with_fault(FaultPlan::at_fraction(0.5, Side::Source));
+            totals.push(
+                (files as u64) * blocks, // big_workload: uniform objects
+            );
+            envs.push(SimEnv { cfg: cfg.clone(), source, sink, files: names });
+            serve.submit("bench", 1, req).unwrap()
+        })
+        .collect();
+    for h in handles {
+        assert!(!h.wait().unwrap().completed, "kill did not fire");
+    }
+    serve.drain();
+    let kill_ms = started.elapsed().as_secs_f64() * 1e3;
+    drop(serve); // the daemon is gone; only ft_dir + PFS state survive
+
+    let logged: Vec<u64> = (1..=jobs as u64)
+        .map(|id| {
+            let mut ft = cfg.ft();
+            ft.dir = cfg.ft_dir.join(format!("job-{id}"));
+            ftlog::recover::recover_all(&ft)
+                .unwrap()
+                .values()
+                .map(|s| s.count() as u64)
+                .sum()
+        })
+        .collect();
+
+    // Restart: manifest replay re-admits every incomplete job, resume
+    // forced, only the complement crosses the wire.
+    let serve = Serve::new(cfg.clone());
+    let started = std::time::Instant::now();
+    let handles = serve
+        .recover(|r| {
+            let env = &envs[(r.id - 1) as usize];
+            Some(JobRequest {
+                spec: TransferSpec::fresh(env.files.clone()),
+                source_pfs: env.source.clone() as Arc<dyn ftlads::pfs::Pfs>,
+                sink_pfs: env.sink.clone() as Arc<dyn ftlads::pfs::Pfs>,
+                runtime: None,
+            })
+        })
+        .unwrap();
+    assert_eq!(handles.len(), jobs, "manifest must re-admit every job");
+    let mut rows = Vec::new();
+    let outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    serve.drain();
+    let recover_ms = started.elapsed().as_secs_f64() * 1e3;
+    for (i, (out, env)) in outs.iter().zip(&envs).enumerate() {
+        assert!(out.completed, "recovered job {}: {:?}", i + 1, out.fault);
+        assert!(
+            out.source.objects_sent <= totals[i] - logged[i],
+            "job {}: resume retransmitted logged objects",
+            i + 1
+        );
+        env.verify_sink_complete().unwrap();
+        rows.push(vec![
+            format!("{}", i + 1),
+            format!("{}", totals[i]),
+            format!("{}", logged[i]),
+            format!("{}", out.source.objects_skipped_resume),
+            format!("{}", out.source.objects_sent),
+        ]);
+    }
+    let stats = serve.stats();
+    assert_eq!(stats.jobs_recovered, jobs as u64);
+    assert_eq!(stats.jobs_submitted, 0);
+    print_table(
+        "serve recovery (daemon kill mid-jobs, manifest re-admission)",
+        &["job", "total", "logged", "skipped", "resent"],
+        &rows,
+    );
+    print_table(
+        "serve recovery cost (manifest replay + resumed complement vs full run)",
+        &["jobs", "full ms", "killed-run ms", "recover ms", "recover/full"],
+        &[vec![
+            format!("{jobs}"),
+            format!("{full_ms:.1}"),
+            format!("{kill_ms:.1}"),
+            format!("{recover_ms:.1}"),
+            format!("{:.2}", recover_ms / full_ms),
+        ]],
+    );
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
 }
 
 /// §A14: the adversarial-network transport. (a) Overhead — each torture

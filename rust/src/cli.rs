@@ -335,6 +335,35 @@ mod tests {
     }
 
     #[test]
+    fn recover_and_quota_flags_roundtrip_into_config() {
+        use crate::config::{parse_bytes, Config};
+        // The way main.rs wires them: --recover is a bare flag,
+        // --serve-quota-bytes a byte value; both exist as --set keys.
+        let a = Args::parse(
+            &argv(&["serve", "--recover", "--serve-quota-bytes", "64M"]),
+            &["recover"],
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.serve_recover = a.flag("recover");
+        cfg.serve_quota_bytes = parse_bytes(a.get("serve-quota-bytes").unwrap()).unwrap();
+        assert!(cfg.serve_recover);
+        assert_eq!(cfg.serve_quota_bytes, 64 << 20);
+        assert!(cfg.validate().is_ok());
+
+        let mut cfg = Config::default();
+        cfg.apply_kv("serve_recover", "true").unwrap();
+        cfg.apply_kv("serve_quota_bytes", "1G").unwrap();
+        assert!(cfg.serve_recover);
+        assert_eq!(cfg.serve_quota_bytes, 1 << 30);
+        assert!(cfg.validate().is_ok());
+        // Off / 0 is the seed-exact default position.
+        let cfg = Config::default();
+        assert!(!cfg.serve_recover);
+        assert_eq!(cfg.serve_quota_bytes, 0);
+    }
+
+    #[test]
     fn scheduler_typo_error_lists_valid_policies() {
         use crate::sched::SchedPolicy;
         let a = Args::parse(&argv(&["transfer", "--scheduler", "speedy"]), &[]).unwrap();

@@ -133,6 +133,21 @@ pub struct Config {
     /// OSTs a concurrent job is hammering. False runs each job
     /// registry-blind (the A/B baseline for §A13).
     pub serve_registry: bool,
+    /// `ftlads serve` crash consistency: when true the daemon keeps a
+    /// durable job manifest under `<ft_dir>/manifest/` (one fsynced
+    /// record per job state change) and, at startup, replays it to
+    /// re-admit every incomplete job so it resumes from its own
+    /// `job-<id>` FT log — including handing a reconnecting TCP client
+    /// its recovered session by job tag. False (the default) writes no
+    /// manifest at all: startup and wire bytes are identical to a
+    /// manifest-free build.
+    pub serve_recover: bool,
+    /// `ftlads serve` per-tenant byte quota: a submission whose source
+    /// bytes would push its tenant's cumulative submitted bytes over
+    /// this cap is rejected (counted in `jobs_rejected`, broken down
+    /// per tenant in `DaemonSnapshot::rejected_by_tenant`). 0 (the
+    /// default) = unlimited.
+    pub serve_quota_bytes: u64,
     /// Integrity verification backend.
     pub integrity: IntegrityMode,
     /// OST dequeue policy for the source's IO threads (§2.1; see
@@ -203,6 +218,8 @@ impl Default for Config {
             tune_epoch_ms: 100,
             serve_max_jobs: 4,
             serve_registry: true,
+            serve_recover: false,
+            serve_quota_bytes: 0,
             integrity: IntegrityMode::Native,
             scheduler: SchedPolicy::CongestionAware,
             sink_scheduler: None,
@@ -373,6 +390,8 @@ impl Config {
             "tune_epoch_ms" => self.tune_epoch_ms = value.parse()?,
             "serve_max_jobs" => self.serve_max_jobs = value.parse()?,
             "serve_registry" => self.serve_registry = parse_bool(value)?,
+            "serve_recover" => self.serve_recover = parse_bool(value)?,
+            "serve_quota_bytes" => self.serve_quota_bytes = parse_bytes(value)?,
             "integrity" => self.integrity = IntegrityMode::parse(value)?,
             "scheduler" => self.scheduler = SchedPolicy::parse(value)?,
             "sink_scheduler" => {
@@ -666,6 +685,28 @@ mod tests {
         assert!(c.validate().is_ok());
         assert!(c.apply_kv("serve_max_jobs", "lots").is_err());
         assert!(c.apply_kv("serve_registry", "maybe").is_err());
+    }
+
+    #[test]
+    fn serve_recover_and_quota_kv_defaults() {
+        let mut c = Config::default();
+        // Crash consistency and quotas are opt-in: off/unlimited keeps
+        // the daemon byte-identical to a manifest-free build.
+        assert!(!c.serve_recover);
+        assert_eq!(c.serve_quota_bytes, 0);
+        assert!(c.validate().is_ok());
+        c.apply_kv("serve_recover", "on").unwrap();
+        assert!(c.serve_recover);
+        assert!(c.validate().is_ok());
+        c.apply_kv("serve_recover", "false").unwrap();
+        assert!(!c.serve_recover);
+        c.apply_kv("serve_quota_bytes", "16M").unwrap();
+        assert_eq!(c.serve_quota_bytes, 16 << 20);
+        assert!(c.validate().is_ok());
+        c.apply_kv("serve_quota_bytes", "0").unwrap();
+        assert_eq!(c.serve_quota_bytes, 0);
+        assert!(c.apply_kv("serve_recover", "maybe").is_err());
+        assert!(c.apply_kv("serve_quota_bytes", "plenty").is_err());
     }
 
     #[test]

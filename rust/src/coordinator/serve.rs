@@ -27,8 +27,19 @@
 //! *other* jobs' load into its congestion view — so the §2.1
 //! layout-aware scheduler steers around OSTs a concurrent job is
 //! already hammering, not just its own queue depths.
+//!
+//! With `Config::serve_recover` on, both front-ends are additionally
+//! **crash-consistent**: every job state change appends a durable
+//! record to the [`manifest`] store under `<ft_dir>/manifest/`, and a
+//! restarted daemon replays it — [`Serve::recover`] re-admits every
+//! incomplete job through the normal fair-share path with `resume`
+//! forced, and [`serve_sink`] hands a reconnecting client whose CONNECT
+//! carries a known incomplete job tag its recovered session (queue-jump
+//! re-admission) instead of a fresh one. Each re-admitted job resumes
+//! from its own `job-<id>` object log, so the §5.2.2 retransmit bound
+//! (`resent <= total - logged`) holds across a daemon kill too.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -40,10 +51,48 @@ use super::sink::{SinkReport, SinkSession};
 use super::source::{SourceReport, SourceSession};
 use super::{DataPlane, TransferJob, TransferOutcome, TransferSpec};
 use crate::config::Config;
+use crate::ftlog::manifest::{self, JobState, ManifestRecord, ManifestStore};
+use crate::ftlog::recover::recover_all;
 use crate::metrics::{DaemonSnapshot, DaemonStats};
 use crate::net::{tcp, Endpoint, FaultController, Message, NetError};
 use crate::pfs::{OstRegistry, Pfs};
 use crate::runtime::RuntimeHandle;
+
+/// FNV-1a over `bytes`, continuing from `acc`.
+fn fnv1a(mut acc: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        acc ^= b as u64;
+        acc = acc.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    acc
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fingerprint of WHAT a job transfers: its ordered file list. Stored
+/// in the manifest so recovery can refuse a provider that hands back a
+/// different transfer under a recycled job id (`resume` itself is not
+/// part of the digest — recovery forces it on).
+pub fn spec_digest(spec: &TransferSpec) -> u64 {
+    let mut acc = FNV_OFFSET;
+    for name in &spec.files {
+        acc = fnv1a(acc, name.as_bytes());
+        acc = fnv1a(acc, &[0]); // name separator
+    }
+    acc
+}
+
+/// Fingerprint of HOW a job logs: the config knobs a restarted daemon
+/// must match for the job's FT log to stay readable (mechanism, method,
+/// object size, txn size).
+pub fn knobs_digest(cfg: &Config) -> u64 {
+    let mut acc = FNV_OFFSET;
+    acc = fnv1a(acc, cfg.mechanism.as_str().as_bytes());
+    acc = fnv1a(acc, cfg.method.as_str().as_bytes());
+    acc = fnv1a(acc, &cfg.object_size.to_le_bytes());
+    acc = fnv1a(acc, &(cfg.txn_size as u64).to_le_bytes());
+    acc
+}
 
 /// How long a session waits for the pieces of a job to arrive over TCP
 /// (data connections routed by the demultiplexer).
@@ -83,6 +132,27 @@ impl JobHandle {
     }
 }
 
+/// What [`Serve::recover`] knows about an incomplete job from the
+/// manifest alone, handed to the recovery provider so it can rebuild
+/// the job's [`JobRequest`] (PFS handles and runtimes do not survive a
+/// daemon crash; the durable parts — id, tenant, weight, digests, and
+/// the per-job FT log — do).
+#[derive(Debug, Clone)]
+pub struct RecoveredJob {
+    /// Original daemon job id — re-admission keeps it, so the job's
+    /// `job-<id>` FT log keeps matching.
+    pub id: u64,
+    pub tenant: String,
+    pub weight: u32,
+    /// Latest manifest state (never [`JobState::Completed`] here).
+    pub state: JobState,
+    pub spec_digest: u64,
+    pub knobs_digest: u64,
+    /// Objects already committed to this job's FT log — the `logged`
+    /// term of the §5.2.2 retransmit bound `resent <= total - logged`.
+    pub logged_objects: u64,
+}
+
 /// One queued-but-not-yet-dispatched job.
 struct Queued {
     id: u64,
@@ -98,6 +168,10 @@ struct Inner {
     /// Jobs dispatched so far per tenant — the weighted-fair-share
     /// numerator (`dispatched / weight` picks the next tenant).
     dispatched: BTreeMap<String, u64>,
+    /// Cumulative source bytes accepted per tenant — the
+    /// `serve_quota_bytes` denominator (only tracked when the quota is
+    /// armed).
+    tenant_bytes: BTreeMap<String, u64>,
     shutting_down: bool,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -113,6 +187,11 @@ pub struct Serve {
     next_id: AtomicU64,
     inner: Mutex<Inner>,
     idle: Condvar,
+    /// Durable job manifest (`serve_recover`), opened lazily on the
+    /// first append so a recover-off daemon never creates
+    /// `<ft_dir>/manifest/` (startup stays identical to a
+    /// manifest-free build).
+    manifest: Mutex<Option<ManifestStore>>,
 }
 
 impl Serve {
@@ -128,11 +207,45 @@ impl Serve {
                 queue: VecDeque::new(),
                 running: 0,
                 dispatched: BTreeMap::new(),
+                tenant_bytes: BTreeMap::new(),
                 shutting_down: false,
                 workers: Vec::new(),
             }),
             idle: Condvar::new(),
+            manifest: Mutex::new(None),
         })
+    }
+
+    /// Append one manifest record for a job state change. A no-op with
+    /// `serve_recover` off; with it on, the record is on disk (fsynced)
+    /// when this returns. Lock order is inner → manifest everywhere, so
+    /// callers may hold the inner lock.
+    fn manifest_append(
+        &self,
+        id: u64,
+        tenant: &str,
+        weight: u32,
+        spec: &TransferSpec,
+        state: JobState,
+    ) -> Result<()> {
+        if !self.cfg.serve_recover {
+            return Ok(());
+        }
+        let mut guard = self.manifest.lock().unwrap_or_else(|e| e.into_inner());
+        if guard.is_none() {
+            *guard = Some(ManifestStore::open(&self.cfg.ft_dir)?);
+        }
+        let store = guard.as_mut().expect("opened above");
+        store.append(&ManifestRecord {
+            job: id,
+            state,
+            tenant: tenant.to_string(),
+            weight,
+            spec_digest: spec_digest(spec),
+            knobs_digest: knobs_digest(&self.cfg),
+        })?;
+        self.stats.manifest_records.fetch_add(1, Ordering::Relaxed);
+        Ok(())
     }
 
     /// The daemon-wide source-side congestion registry (all jobs'
@@ -164,18 +277,43 @@ impl Serve {
         self.stats.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if inner.shutting_down {
-            self.stats.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            self.stats.note_rejected(tenant);
             anyhow::bail!("serve: daemon is shutting down, job rejected");
+        }
+        if self.cfg.serve_quota_bytes > 0 {
+            // The job's source bytes (files the PFS does not know are
+            // charged as 0 — the job will fault on them anyway).
+            let bytes: u64 = req
+                .spec
+                .files
+                .iter()
+                .filter_map(|n| req.source_pfs.lookup(n).map(|(_, m)| m.size))
+                .sum();
+            let used = inner.tenant_bytes.get(tenant).copied().unwrap_or(0);
+            if used.saturating_add(bytes) > self.cfg.serve_quota_bytes {
+                self.stats.note_rejected(tenant);
+                anyhow::bail!(
+                    "serve: tenant '{tenant}' over serve_quota_bytes \
+                     ({used} used + {bytes} requested > {})",
+                    self.cfg.serve_quota_bytes
+                );
+            }
+            *inner.tenant_bytes.entry(tenant.to_string()).or_insert(0) += bytes;
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        inner.queue.push_back(Queued {
+        let q = Queued {
             id,
             tenant: tenant.to_string(),
             weight: weight.max(1),
             req,
             tx,
-        });
+        };
+        // The durable SUBMITTED record precedes queueing: if the append
+        // fails the job was never accepted (the error surfaces here),
+        // and once it succeeds a crash at any later point replays it.
+        self.manifest_append(q.id, &q.tenant, q.weight, &q.req.spec, JobState::Submitted)?;
+        inner.queue.push_back(q);
         self.dispatch_locked(&mut inner);
         Ok(JobHandle { id, rx })
     }
@@ -214,6 +352,11 @@ impl Serve {
             inner.running += 1;
             self.stats.jobs_admitted.fetch_add(1, Ordering::Relaxed);
             self.stats.note_concurrent(inner.running as u64);
+            // Best-effort ADMITTED record: losing it degrades the
+            // manifest's story, not its safety (the job is still
+            // SUBMITTED — recovery re-admits either state).
+            let _ =
+                self.manifest_append(q.id, &q.tenant, q.weight, &q.req.spec, JobState::Admitted);
             let this = self.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("serve-job-{}", q.id))
@@ -284,20 +427,106 @@ impl Serve {
         } else {
             builder.run()
         };
-        match &result {
+        let terminal = match &result {
             Ok(out) if out.completed => {
                 self.stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                JobState::Completed
             }
             _ => {
                 self.stats.jobs_faulted.fetch_add(1, Ordering::Relaxed);
+                JobState::Faulted
             }
-        }
+        };
+        // Best-effort terminal record, written before the inner lock is
+        // retaken (lock order inner → manifest). A FAULTED record — the
+        // watchdog path included — is deliberately non-terminal for
+        // recovery: `Serve::recover` re-admits the job from its FT log.
+        let _ = self.manifest_append(q.id, &q.tenant, q.weight, &q.req.spec, terminal);
         let _ = q.tx.send(result);
         let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         inner.running -= 1;
         self.dispatch_locked(&mut inner);
         drop(inner);
         self.idle.notify_all();
+    }
+
+    /// Replay the durable job manifest under the daemon's `ft_dir` and
+    /// re-admit every incomplete job through the normal fair-share
+    /// admission path. For each incomplete record the `provide`
+    /// callback is asked to rebuild the job's I/O endpoints (see
+    /// [`RecoveredJob`]); returning `None` skips that job (it stays
+    /// incomplete in the manifest), returning a request re-admits it
+    /// under its ORIGINAL id with `resume` forced on, so it replays
+    /// only the complement of its `job-<id>` object log (§5.2.2:
+    /// `resent <= total - logged`). The provided spec must hash to the
+    /// recorded `spec_digest` and the daemon's knobs to `knobs_digest`
+    /// — a mismatch is an error, not silent log corruption.
+    ///
+    /// Replays whatever manifest exists regardless of `serve_recover`
+    /// (no manifest → nothing to do); re-admission writes fresh
+    /// manifest records only when the knob is on, as usual. Recovered
+    /// jobs count in `DaemonSnapshot::jobs_recovered`, not
+    /// `jobs_submitted`.
+    pub fn recover(
+        self: &Arc<Serve>,
+        mut provide: impl FnMut(&RecoveredJob) -> Option<JobRequest>,
+    ) -> Result<Vec<JobHandle>> {
+        let replay = manifest::replay(&self.cfg.ft_dir)?;
+        self.stats
+            .manifest_records
+            .fetch_add(replay.records, Ordering::Relaxed);
+        // Fresh submissions must never recycle a recovered job's id
+        // (and with it, its FT log namespace).
+        self.next_id.fetch_max(replay.max_job() + 1, Ordering::Relaxed);
+        let mut handles = Vec::new();
+        for rec in replay.incomplete() {
+            let mut ft = self.cfg.ft();
+            ft.dir = self.cfg.ft_dir.join(format!("job-{}", rec.job));
+            let logged_objects: u64 =
+                recover_all(&ft)?.values().map(|s| s.count() as u64).sum();
+            let info = RecoveredJob {
+                id: rec.job,
+                tenant: rec.tenant.clone(),
+                weight: rec.weight,
+                state: rec.state,
+                spec_digest: rec.spec_digest,
+                knobs_digest: rec.knobs_digest,
+                logged_objects,
+            };
+            let Some(mut req) = provide(&info) else {
+                continue;
+            };
+            anyhow::ensure!(
+                spec_digest(&req.spec) == rec.spec_digest,
+                "serve: recover job {}: provided spec does not match the manifest",
+                rec.job
+            );
+            anyhow::ensure!(
+                knobs_digest(&self.cfg) == rec.knobs_digest,
+                "serve: recover job {}: daemon FT knobs changed since the manifest was written",
+                rec.job
+            );
+            // Resume from the job's own FT log — recovery's whole point.
+            req.spec.resume = true;
+            let (tx, rx) = mpsc::channel();
+            let q = Queued {
+                id: rec.job,
+                tenant: rec.tenant.clone(),
+                weight: rec.weight.max(1),
+                req,
+                tx,
+            };
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            if inner.shutting_down {
+                anyhow::bail!("serve: daemon is shutting down, recovery aborted");
+            }
+            inner.queue.push_back(q);
+            self.dispatch_locked(&mut inner);
+            drop(inner);
+            self.stats.jobs_recovered.fetch_add(1, Ordering::Relaxed);
+            handles.push(JobHandle { id: rec.job, rx });
+        }
+        Ok(handles)
     }
 }
 
@@ -375,12 +604,48 @@ struct TcpDispatch {
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
+/// Append one manifest record from the TCP sink daemon. A no-op
+/// without a store (i.e. `serve_recover` off). The sink side learns a
+/// job's file list only in-session, so its records carry a zero
+/// `spec_digest` (recovery on this path matches jobs by wire tag, not
+/// by re-provided spec) under the fixed tenant `"tcp"`.
+fn tcp_manifest_append(
+    store: &Option<Arc<Mutex<ManifestStore>>>,
+    stats: &DaemonStats,
+    cfg: &Config,
+    job: u64,
+    state: JobState,
+) {
+    let Some(store) = store else { return };
+    let mut guard = store.lock().unwrap_or_else(|e| e.into_inner());
+    let ok = guard.append(&ManifestRecord {
+        job,
+        state,
+        tenant: "tcp".to_string(),
+        weight: 1,
+        spec_digest: 0,
+        knobs_digest: knobs_digest(cfg),
+    });
+    if ok.is_ok() {
+        stats.manifest_records.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// Serve `jobs` transfer jobs as the **sink** role of an `ftlads serve`
 /// daemon: one listener, many concurrent job sessions, demultiplexed by
 /// the wire-level job tag each connection leads with (CONNECT for
 /// control, STREAM_HELLO for data). Jobs beyond `cfg.serve_max_jobs`
 /// queue for an admission slot. Returns each job's sink report (in
 /// completion order) plus the daemon counters.
+///
+/// With `cfg.serve_recover` on, the daemon first replays the manifest
+/// under `cfg.ft_dir`: a reconnecting client whose CONNECT carries a
+/// known incomplete job tag is handed the recovered session — it
+/// queue-jumps admission (front of the pending queue, counted in
+/// `jobs_recovered` rather than `jobs_submitted`) and its session
+/// resumes against the surviving sink files and `job-<tag>` FT log.
+/// Every accepted job's lifecycle is recorded durably (SUBMITTED →
+/// ADMITTED → COMPLETED | FAULTED) for the next restart.
 pub fn serve_sink(
     cfg: &Config,
     listener: &TcpListener,
@@ -390,6 +655,15 @@ pub fn serve_sink(
 ) -> Result<(Vec<(u64, Result<SinkReport>)>, DaemonSnapshot)> {
     let stats = Arc::new(DaemonStats::default());
     let registry = OstRegistry::new(cfg.ost_count);
+    let (manifest, mut recovered) = if cfg.serve_recover {
+        let replay = manifest::replay(&cfg.ft_dir)?;
+        stats.manifest_records.fetch_add(replay.records, Ordering::Relaxed);
+        let incomplete: BTreeSet<u64> = replay.incomplete().map(|r| r.job).collect();
+        let store = Arc::new(Mutex::new(ManifestStore::open(&cfg.ft_dir)?));
+        (Some(store), incomplete)
+    } else {
+        (None, BTreeSet::new())
+    };
     let dispatch = Arc::new(TcpDispatch {
         pending: Mutex::new(VecDeque::new()),
         running: Mutex::new(0),
@@ -413,7 +687,18 @@ pub fn serve_sink(
         match &first {
             Message::Connect { job, .. } => {
                 let job = *job;
-                stats.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                // Listener-side resume handoff: a CONNECT carrying a
+                // job tag the manifest knows is incomplete is the
+                // job's owner reconnecting after the daemon died — it
+                // gets its recovered session back (front of the
+                // admission queue), not a fresh submission.
+                let handoff = recovered.remove(&job);
+                if handoff {
+                    stats.jobs_recovered.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    stats.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+                    tcp_manifest_append(&manifest, &stats, cfg, job, JobState::Submitted);
+                }
                 let (tx, rx) = mpsc::channel();
                 mailboxes
                     .lock()
@@ -423,11 +708,15 @@ pub fn serve_sink(
                     head: Mutex::new(Some(first)),
                     inner: ep,
                 });
-                dispatch
-                    .pending
-                    .lock()
-                    .unwrap_or_else(|e| e.into_inner())
-                    .push_back(TcpPending { job, ctrl, data_rx: rx });
+                let mut pending =
+                    dispatch.pending.lock().unwrap_or_else(|e| e.into_inner());
+                let entry = TcpPending { job, ctrl, data_rx: rx };
+                if handoff {
+                    pending.push_front(entry);
+                } else {
+                    pending.push_back(entry);
+                }
+                drop(pending);
                 accepted += 1;
                 pump_tcp_jobs(
                     cfg,
@@ -437,6 +726,7 @@ pub fn serve_sink(
                     &mailboxes,
                     &pfs,
                     &runtime,
+                    &manifest,
                     &done_tx,
                 );
             }
@@ -485,6 +775,7 @@ fn pump_tcp_jobs(
     mailboxes: &Arc<Mutex<BTreeMap<u64, mpsc::Sender<(u32, Arc<dyn Endpoint>)>>>>,
     pfs: &Arc<dyn Pfs>,
     runtime: &Option<RuntimeHandle>,
+    manifest: &Option<Arc<Mutex<ManifestStore>>>,
     done_tx: &mpsc::Sender<(u64, Result<SinkReport>)>,
 ) {
     loop {
@@ -507,6 +798,7 @@ fn pump_tcp_jobs(
             p
         };
         let TcpPending { job, ctrl, data_rx } = next;
+        tcp_manifest_append(manifest, stats, cfg, job, JobState::Admitted);
         let plane = DataPlane::Connector(Box::new(move |k| {
             let mut slots: Vec<Option<Arc<dyn Endpoint>>> =
                 (0..k).map(|_| None).collect();
@@ -542,6 +834,7 @@ fn pump_tcp_jobs(
         let registry_job = registry.clone();
         let stats_job = stats.clone();
         let mailboxes_job = mailboxes.clone();
+        let manifest_job = manifest.clone();
         let done_job = done_tx.clone();
         let spawned = std::thread::Builder::new()
             .name(format!("serve-sink-{job}"))
@@ -553,14 +846,17 @@ fn pump_tcp_jobs(
                     session = session.shared_osts(h);
                 }
                 let report = session.spawn().map(|node| node.join());
-                match &report {
+                let terminal = match &report {
                     Ok(r) if r.fault.is_none() => {
                         stats_job.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                        JobState::Completed
                     }
                     _ => {
                         stats_job.jobs_faulted.fetch_add(1, Ordering::Relaxed);
+                        JobState::Faulted
                     }
-                }
+                };
+                tcp_manifest_append(&manifest_job, &stats_job, &cfg_job, job, terminal);
                 mailboxes_job
                     .lock()
                     .unwrap_or_else(|e| e.into_inner())
@@ -579,6 +875,7 @@ fn pump_tcp_jobs(
                     &mailboxes_job,
                     &pfs_job,
                     &runtime_job,
+                    &manifest_job,
                     &done_job,
                 );
             });
@@ -605,6 +902,12 @@ fn pump_tcp_jobs(
 /// sharing one source-side congestion registry. Each job logs (and
 /// resumes) under its own `<ft_dir>/job-<tag>` namespace. Returns each
 /// job's report, in spec order.
+///
+/// With `cfg.serve_recover` on every job runs with `resume` forced: a
+/// restarted source replays only the complement of each job's
+/// surviving `job-<tag>` FT log (a job with no log resumes from
+/// nothing, i.e. sends everything — so the flag is safe for the
+/// mixed case where some jobs completed before the crash).
 pub fn serve_source(
     cfg: &Config,
     addr: std::net::SocketAddr,
@@ -616,8 +919,11 @@ pub fn serve_source(
     // dial out, so blocking here cannot deadlock the daemon).
     let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
     let mut workers = Vec::with_capacity(specs.len());
-    for (i, spec) in specs.into_iter().enumerate() {
+    for (i, mut spec) in specs.into_iter().enumerate() {
         let job = i as u64 + 1;
+        if cfg.serve_recover {
+            spec.resume = true;
+        }
         {
             let (lock, cv) = &*gate;
             let mut running = lock.lock().unwrap_or_else(|e| e.into_inner());
@@ -672,13 +978,24 @@ fn run_tcp_source_job(
     shared: Option<Arc<crate::pfs::JobOstHandle>>,
     spec: &TransferSpec,
 ) -> Result<SourceReport> {
-    let ep = tcp::connect(addr, cfg.wire(), FaultController::unarmed())?;
+    // Arm the job's fault plan against its payload size, exactly like
+    // the in-process path (`TransferJob::run`): a `FaultPlan::none()`
+    // arms to the unarmed controller, so fault-free jobs keep the seed
+    // behavior bit for bit.
+    let total_bytes: u64 = spec
+        .files
+        .iter()
+        .filter_map(|n| pfs.lookup(n).map(|(_, m)| m.size))
+        .sum();
+    let fault = spec.fault.arm(total_bytes);
+    let ep = tcp::connect(addr, cfg.wire(), fault.clone())?;
     let ep: Arc<dyn Endpoint> = Arc::new(ep);
     let wire = cfg.wire();
+    let fault_data = fault.clone();
     let plane = DataPlane::Connector(Box::new(move |k| {
         let mut eps: Vec<Arc<dyn Endpoint>> = Vec::with_capacity(k as usize);
         for _ in 0..k {
-            let dep = tcp::connect(addr, wire.clone(), FaultController::unarmed())?;
+            let dep = tcp::connect(addr, wire.clone(), fault_data.clone())?;
             eps.push(Arc::new(dep));
         }
         Ok(eps)

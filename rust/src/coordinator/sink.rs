@@ -114,6 +114,14 @@ struct SnkFile {
     /// duplicate arriving while the original is in flight is dropped
     /// silently — the pending write will ack it exactly once.
     inflight: BTreeSet<u32>,
+    /// Set on FILE_CLOSE, when both block sets are cleared: a committed
+    /// file's every block is durable, so the per-block ledger entries
+    /// carry no information anymore — dropping them bounds ledger
+    /// memory by the largest OPEN file, not by the whole transfer. A
+    /// late duplicate for a closed file is answered like a `done`
+    /// member (re-acked `ok`, payload dropped), and a write that lands
+    /// after the close must not resurrect ledger entries.
+    closed: bool,
 }
 
 /// Per-file acknowledgements waiting to be coalesced into one
@@ -482,6 +490,11 @@ pub struct SinkReport {
     pub rma_bytes_effective: u64,
     /// The sink tuner's move/revert log, one line per knob step.
     pub tune_trajectory: Vec<String>,
+    /// `(fid, block)` dedup-ledger entries still held at session end
+    /// (done + in-flight, summed over files). FILE_CLOSE retires a
+    /// file's entries, so a fault-free session ends at 0 no matter how
+    /// many blocks it moved — the ledger is bounded by open files.
+    pub ledger_blocks: u64,
 }
 
 /// Handle to the running sink node.
@@ -737,6 +750,13 @@ impl SinkNode {
                 .lock()
                 .unwrap_or_else(|e| e.into_inner())
                 .clone(),
+            ledger_blocks: shared
+                .files
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .values()
+                .map(|f| (f.done.len() + f.inflight.len()) as u64)
+                .sum(),
         }
     }
 }
@@ -1037,6 +1057,20 @@ fn comm_thread(
                         break;
                     }
                     shared.counters.files_completed.fetch_add(1, Ordering::Relaxed);
+                    // Commit durable: retire the file's ledger entries.
+                    // The entry itself stays (its `closed` flag keeps
+                    // answering late duplicates) — only the per-block
+                    // sets are dropped, so ledger memory is bounded by
+                    // open files, not by transfer size.
+                    {
+                        let mut files =
+                            shared.files.lock().unwrap_or_else(|e| e.into_inner());
+                        if let Some(f) = files.get_mut(&file_idx) {
+                            f.done.clear();
+                            f.inflight.clear();
+                            f.closed = true;
+                        }
+                    }
                     let _ = shared.ep.send(Message::FileCloseAck { file_idx });
                 }
             }
@@ -1162,6 +1196,7 @@ fn handle_new_file(shared: &Arc<Shared>, file_idx: u32, name: &str, size: u64, s
                 start_ost,
                 done: BTreeSet::new(),
                 inflight: BTreeSet::new(),
+                closed: false,
             },
         );
     let _ = shared
@@ -1186,7 +1221,10 @@ fn enqueue_block(shared: &Arc<Shared>, msg: Message, slot: RmaSlot, stream: usiz
         let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
         match files.get_mut(&file_idx) {
             Some(f) => {
-                if f.done.contains(&block_idx) {
+                if f.closed || f.done.contains(&block_idx) {
+                    // A closed file's blocks are all durable (commit
+                    // already ran) — a late duplicate is answered the
+                    // same way as a `done` member.
                     dup_done = true;
                     None
                 } else if !f.inflight.insert(block_idx) {
@@ -1551,7 +1589,10 @@ fn finish_block(shared: &Arc<Shared>, req: &WriteReq, ok: bool) {
         let mut files = shared.files.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(f) = files.get_mut(&req.file_idx) {
             f.inflight.remove(&req.block_idx);
-            if ok {
+            // A write landing after FILE_CLOSE retired the ledger must
+            // not resurrect entries — the closed flag already answers
+            // every future duplicate.
+            if ok && !f.closed {
                 f.done.insert(req.block_idx);
             }
         }

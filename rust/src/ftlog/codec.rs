@@ -269,6 +269,36 @@ impl CompletedSet {
     }
 }
 
+/// Append one length-prefixed frame: a little-endian u32 payload length
+/// followed by the payload bytes. The manifest store (and any other
+/// append-only ftlog consumer that needs self-delimiting records over a
+/// plain file) shares this framing so a crash mid-append tears at most
+/// the final frame.
+pub fn encode_frame(payload: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Split a buffer of [`encode_frame`] frames back into payload slices,
+/// stopping cleanly at a torn tail: a truncated length prefix or a
+/// payload shorter than its prefix ends the scan (the lost suffix is the
+/// record that was mid-append at the crash — the writer re-appends it).
+pub fn decode_frames(buf: &[u8]) -> Vec<&[u8]> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while buf.len() - pos >= 4 {
+        let len =
+            u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]]) as usize;
+        pos += 4;
+        if buf.len() - pos < len {
+            break; // torn payload
+        }
+        out.push(&buf[pos..pos + len]);
+        pos += len;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -406,5 +436,32 @@ mod tests {
     #[should_panic]
     fn insert_out_of_range_panics() {
         CompletedSet::new(4).insert(4);
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let mut buf = Vec::new();
+        encode_frame(b"", &mut buf);
+        encode_frame(b"one", &mut buf);
+        encode_frame(&[0u8; 300], &mut buf);
+        let frames = decode_frames(&buf);
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0], b"");
+        assert_eq!(frames[1], b"one");
+        assert_eq!(frames[2], &[0u8; 300][..]);
+    }
+
+    #[test]
+    fn frames_tolerate_torn_tail() {
+        let mut buf = Vec::new();
+        encode_frame(b"intact", &mut buf);
+        encode_frame(b"torn-record", &mut buf);
+        for cut in 1..=b"torn-record".len() + 3 {
+            let torn = &buf[..buf.len() - cut];
+            let frames = decode_frames(torn);
+            assert_eq!(frames, vec![&b"intact"[..]], "cut {cut}");
+        }
+        assert!(decode_frames(&buf[..2]).is_empty(), "torn length prefix");
+        assert!(decode_frames(&[]).is_empty());
     }
 }

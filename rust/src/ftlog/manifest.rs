@@ -1,0 +1,336 @@
+//! Crash-consistent daemon job manifest (the serve-mode hardening leg
+//! of the paper's fault-tolerance story): every job the daemon accepts
+//! leaves a durable record under `<ft_dir>/manifest/`, so a killed
+//! daemon can be restarted with `--recover` and re-admit every
+//! incomplete job from its own per-job `job-<id>` object log instead of
+//! forgetting the job ever existed.
+//!
+//! The store is a single append-only file using the same discipline as
+//! the object loggers: length-prefixed frames ([`codec::encode_frame`])
+//! appended and fsynced one record at a time, torn-tail tolerant on
+//! replay ([`codec::decode_frames`] stops at a frame the crash tore).
+//! Records are last-writer-wins per job id, so a job's lifecycle is the
+//! record sequence SUBMITTED → ADMITTED → COMPLETED | FAULTED. Only
+//! COMPLETED is terminal: a FAULTED job (including one the
+//! `job_deadline_ms` watchdog shot) is re-admitted by recovery — its FT
+//! log bounds the retransmit, exactly like §5.2.2 resume.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::codec::{decode_frames, encode_frame};
+use super::{escape_name, unescape_name};
+
+/// Subdirectory of the daemon's `ft_dir` holding the store.
+pub const MANIFEST_DIR: &str = "manifest";
+/// The append-only record file inside [`MANIFEST_DIR`].
+pub const MANIFEST_FILE: &str = "jobs.mlog";
+/// File magic. A file that is shorter than the magic was torn during
+/// creation (nothing durable was recorded — replay treats it as empty);
+/// a file with *different* leading bytes is not ours and is an error.
+const MAGIC: &[u8; 4] = b"FTM1";
+
+/// Lifecycle state carried by each manifest record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Submitted,
+    Admitted,
+    Completed,
+    Faulted,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Submitted => "SUBMITTED",
+            JobState::Admitted => "ADMITTED",
+            JobState::Completed => "COMPLETED",
+            JobState::Faulted => "FAULTED",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobState> {
+        Some(match s {
+            "SUBMITTED" => JobState::Submitted,
+            "ADMITTED" => JobState::Admitted,
+            "COMPLETED" => JobState::Completed,
+            "FAULTED" => JobState::Faulted,
+            _ => return None,
+        })
+    }
+
+    /// Only COMPLETED ends a job's story — FAULTED jobs are re-admitted
+    /// on recovery and resume from their FT logs.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Completed)
+    }
+}
+
+/// One durable record. `spec_digest`/`knobs_digest` fingerprint what
+/// was submitted (file list) and how (FT mechanism/method, object and
+/// txn sizes) so recovery can refuse a provider that hands back a
+/// different transfer under a recycled job id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestRecord {
+    pub job: u64,
+    pub state: JobState,
+    pub tenant: String,
+    pub weight: u32,
+    pub spec_digest: u64,
+    pub knobs_digest: u64,
+}
+
+impl ManifestRecord {
+    /// Frame payload: a single space-separated text line (tenant %xx
+    /// escaped like log file names), human-greppable on disk.
+    fn encode(&self) -> Vec<u8> {
+        format!(
+            "JOB {} {} {} {} {:016x} {:016x}",
+            self.job,
+            self.state.as_str(),
+            escape_name(&self.tenant),
+            self.weight,
+            self.spec_digest,
+            self.knobs_digest
+        )
+        .into_bytes()
+    }
+
+    /// Decode one frame payload; `None` for anything malformed (a
+    /// corrupt or foreign frame is skipped, not fatal — the frames
+    /// before and after it still replay).
+    fn decode(payload: &[u8]) -> Option<ManifestRecord> {
+        let text = std::str::from_utf8(payload).ok()?;
+        let mut parts = text.split(' ');
+        if parts.next()? != "JOB" {
+            return None;
+        }
+        let job = parts.next()?.parse::<u64>().ok()?;
+        let state = JobState::parse(parts.next()?)?;
+        let tenant = unescape_name(parts.next()?)?;
+        let weight = parts.next()?.parse::<u32>().ok()?;
+        let spec_digest = u64::from_str_radix(parts.next()?, 16).ok()?;
+        let knobs_digest = u64::from_str_radix(parts.next()?, 16).ok()?;
+        Some(ManifestRecord { job, state, tenant, weight, spec_digest, knobs_digest })
+    }
+}
+
+/// Append handle on the store. Opening creates `<ft_dir>/manifest/` and
+/// the record file (magic written+fsynced first) if absent; an existing
+/// file is appended to, never rewritten.
+pub struct ManifestStore {
+    file: File,
+    path: PathBuf,
+}
+
+impl ManifestStore {
+    pub fn open(ft_dir: &Path) -> Result<ManifestStore> {
+        let dir = ft_dir.join(MANIFEST_DIR);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating manifest dir {}", dir.display()))?;
+        let path = dir.join(MANIFEST_FILE);
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening manifest {}", path.display()))?;
+        if file.metadata()?.len() == 0 {
+            file.write_all(MAGIC)?;
+            file.sync_data()?;
+        }
+        Ok(ManifestStore { file, path })
+    }
+
+    /// Append one record durably: the frame is written and fsynced
+    /// before this returns, so a daemon crash at ANY later point still
+    /// replays the record.
+    pub fn append(&mut self, rec: &ManifestRecord) -> Result<()> {
+        let mut buf = Vec::new();
+        encode_frame(&rec.encode(), &mut buf);
+        self.file
+            .write_all(&buf)
+            .with_context(|| format!("appending manifest {}", self.path.display()))?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// What a replay found: the latest record per job id, plus the raw
+/// record count (the `DaemonSnapshot::manifest_records` figure).
+#[derive(Debug, Default)]
+pub struct ManifestReplay {
+    pub jobs: BTreeMap<u64, ManifestRecord>,
+    pub records: u64,
+}
+
+impl ManifestReplay {
+    /// Jobs whose latest state is not terminal — the recovery set, in
+    /// ascending job-id order.
+    pub fn incomplete(&self) -> impl Iterator<Item = &ManifestRecord> {
+        self.jobs.values().filter(|r| !r.state.is_terminal())
+    }
+
+    /// Highest job id on record (0 when empty) — restart seeds its id
+    /// counter above this so recovered and fresh jobs never collide.
+    pub fn max_job(&self) -> u64 {
+        self.jobs.keys().next_back().copied().unwrap_or(0)
+    }
+}
+
+/// Replay the store under `ft_dir`. Missing dir/file (or a file torn
+/// inside the magic) replays as empty; frames the crash tore are
+/// dropped by [`decode_frames`]; malformed frame payloads are skipped.
+pub fn replay(ft_dir: &Path) -> Result<ManifestReplay> {
+    let path = ft_dir.join(MANIFEST_DIR).join(MANIFEST_FILE);
+    let mut buf = Vec::new();
+    match File::open(&path) {
+        Ok(mut f) => {
+            f.read_to_end(&mut buf)
+                .with_context(|| format!("reading manifest {}", path.display()))?;
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(ManifestReplay::default());
+        }
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("opening manifest {}", path.display()));
+        }
+    }
+    if buf.len() < MAGIC.len() {
+        return Ok(ManifestReplay::default()); // torn during creation
+    }
+    anyhow::ensure!(
+        &buf[..MAGIC.len()] == MAGIC,
+        "{} is not a job manifest (bad magic)",
+        path.display()
+    );
+    let mut out = ManifestReplay::default();
+    for frame in decode_frames(&buf[MAGIC.len()..]) {
+        let Some(rec) = ManifestRecord::decode(frame) else { continue };
+        out.records += 1;
+        out.jobs.insert(rec.job, rec);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ftlads-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn rec(job: u64, state: JobState) -> ManifestRecord {
+        ManifestRecord {
+            job,
+            state,
+            tenant: "tenant a".to_string(), // space exercises escaping
+            weight: 2,
+            spec_digest: 0xdead_beef_0123_4567,
+            knobs_digest: 0x89ab_cdef_0000_0001,
+        }
+    }
+
+    #[test]
+    fn append_replay_roundtrip_last_record_wins() {
+        let dir = tmp("roundtrip");
+        let mut store = ManifestStore::open(&dir).unwrap();
+        store.append(&rec(1, JobState::Submitted)).unwrap();
+        store.append(&rec(2, JobState::Submitted)).unwrap();
+        store.append(&rec(1, JobState::Admitted)).unwrap();
+        store.append(&rec(1, JobState::Completed)).unwrap();
+        store.append(&rec(2, JobState::Faulted)).unwrap();
+        drop(store);
+
+        let replay = replay(&dir).unwrap();
+        assert_eq!(replay.records, 5);
+        assert_eq!(replay.jobs.len(), 2);
+        assert_eq!(replay.jobs[&1].state, JobState::Completed);
+        assert_eq!(replay.jobs[&2].state, JobState::Faulted);
+        assert_eq!(replay.jobs[&2].tenant, "tenant a");
+        assert_eq!(replay.jobs[&2], rec(2, JobState::Faulted));
+        // COMPLETED is terminal, FAULTED is the recovery set.
+        let inc: Vec<u64> = replay.incomplete().map(|r| r.job).collect();
+        assert_eq!(inc, vec![2]);
+        assert_eq!(replay.max_job(), 2);
+
+        // Reopening appends — records survive.
+        let mut store = ManifestStore::open(&dir).unwrap();
+        store.append(&rec(3, JobState::Submitted)).unwrap();
+        drop(store);
+        let replay = replay(&dir).unwrap();
+        assert_eq!(replay.records, 6);
+        assert_eq!(replay.max_job(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_tolerates_torn_tail_and_junk_frames() {
+        let dir = tmp("torn");
+        let mut store = ManifestStore::open(&dir).unwrap();
+        store.append(&rec(1, JobState::Submitted)).unwrap();
+        store.append(&rec(2, JobState::Submitted)).unwrap();
+        drop(store);
+        let path = dir.join(MANIFEST_DIR).join(MANIFEST_FILE);
+
+        // Tear mid-way through the last frame, crash-style.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let r = replay(&dir).unwrap();
+        assert_eq!(r.records, 1, "torn record must be dropped");
+        assert!(r.jobs.contains_key(&1));
+
+        // A junk (undecodable) frame between valid ones is skipped.
+        let mut buf = std::fs::read(&path).unwrap();
+        encode_frame(b"not a JOB line", &mut buf);
+        encode_frame(&rec(7, JobState::Admitted).encode(), &mut buf);
+        std::fs::write(&path, &buf).unwrap();
+        let r = replay(&dir).unwrap();
+        assert_eq!(r.records, 2);
+        assert!(r.jobs.contains_key(&7));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_missing_or_torn_header_is_empty_wrong_magic_errors() {
+        let dir = tmp("magic");
+        let r = replay(&dir).unwrap();
+        assert_eq!(r.records, 0);
+        assert_eq!(r.max_job(), 0);
+
+        let mdir = dir.join(MANIFEST_DIR);
+        std::fs::create_dir_all(&mdir).unwrap();
+        let path = mdir.join(MANIFEST_FILE);
+        std::fs::write(&path, b"FT").unwrap(); // torn inside the magic
+        assert_eq!(replay(&dir).unwrap().records, 0);
+        std::fs::write(&path, b"WRONG MAGIC").unwrap();
+        assert!(replay(&dir).is_err(), "foreign file must not replay");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn states_parse_and_terminality() {
+        for s in
+            [JobState::Submitted, JobState::Admitted, JobState::Completed, JobState::Faulted]
+        {
+            assert_eq!(JobState::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(JobState::parse("RUNNING"), None);
+        assert!(JobState::Completed.is_terminal());
+        assert!(!JobState::Faulted.is_terminal());
+        assert!(!JobState::Submitted.is_terminal());
+        assert!(!JobState::Admitted.is_terminal());
+    }
+}

@@ -29,6 +29,7 @@
 pub mod async_logger;
 pub mod codec;
 pub mod file_logger;
+pub mod manifest;
 pub mod recover;
 pub mod region;
 pub mod vld;

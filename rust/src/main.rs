@@ -41,7 +41,7 @@ use ftlads::sched::SchedPolicy;
 use ftlads::util::{fmt_bytes, fmt_duration};
 use ftlads::workload::{self, Workload};
 
-const FLAGS: [&str; 7] = [
+const FLAGS: [&str; 8] = [
     "resume",
     "verbose",
     "json",
@@ -49,6 +49,7 @@ const FLAGS: [&str; 7] = [
     "send-window-adaptive",
     "rma-autosize",
     "tune",
+    "recover",
 ];
 
 /// The subcommand table: name, one-line summary, handler. Single source
@@ -194,6 +195,19 @@ fn print_usage() {
            --job-deadline-ms MS                          serve: fault a job silent past\n\
                                                          this deadline and free its\n\
                                                          admission slot (0 = off)\n\
+           --recover                                     serve: durable job manifest +\n\
+                                                         crash recovery. Every job state\n\
+                                                         change is fsynced under\n\
+                                                         <ft_dir>/manifest/; a restarted\n\
+                                                         daemon re-admits incomplete\n\
+                                                         jobs, which resume from their\n\
+                                                         per-job FT logs (sink role\n\
+                                                         hands reconnecting clients\n\
+                                                         their recovered session)\n\
+           --serve-quota-bytes BYTES                     serve: reject a tenant's job\n\
+                                                         once its cumulative source\n\
+                                                         bytes would exceed this quota\n\
+                                                         (0 = unlimited)\n\
            --torture-seed N                              arm the adversarial transport\n\
                                                          with this RNG seed (0 = off,\n\
                                                          byte-identical wire)\n\
@@ -288,6 +302,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(v) = args.get("job-deadline-ms") {
         cfg.job_deadline_ms = v.parse().context("--job-deadline-ms")?;
+    }
+    if args.flag("recover") {
+        cfg.serve_recover = true;
+    }
+    if let Some(v) = args.get("serve-quota-bytes") {
+        cfg.serve_quota_bytes = parse_bytes(v)?;
     }
     if let Some(v) = args.get("torture-seed") {
         cfg.torture_seed = v.parse().context("--torture-seed")?;
@@ -808,6 +828,12 @@ fn cmd_source(args: &Args) -> Result<i32> {
 /// serve sink. Jobs beyond `serve_max_jobs` queue for an admission
 /// slot, and all of a daemon's jobs share one cross-job OST congestion
 /// registry (disable with `--set serve_registry=off`).
+///
+/// `--recover` arms the crash-consistent job manifest: job lifecycles
+/// are fsynced under `<ft_dir>/manifest/`, a restarted sink daemon
+/// hands reconnecting clients their recovered sessions, and a
+/// restarted source daemon re-runs its jobs with resume forced.
+/// `--serve-quota-bytes` caps each tenant's cumulative source bytes.
 fn cmd_serve(args: &Args) -> Result<i32> {
     let cfg = build_config(args)?;
     let jobs: usize = args.get_parse("jobs", 1usize)?;
@@ -866,6 +892,15 @@ fn cmd_serve(args: &Args) -> Result<i32> {
                 stats.jobs_faulted,
                 stats.peak_concurrent
             );
+            if cfg.serve_recover {
+                println!(
+                    "serve(sink): manifest {} record(s), {} job(s) recovered",
+                    stats.manifest_records, stats.jobs_recovered
+                );
+            }
+            for (tenant, n) in &stats.rejected_by_tenant {
+                println!("serve(sink): tenant '{tenant}': {n} job(s) rejected");
+            }
             Ok(code)
         }
         "source" => {

@@ -211,10 +211,18 @@ pub struct DaemonStats {
     pub jobs_completed: AtomicU64,
     /// Jobs that ended in a fault (including injected leg kills).
     pub jobs_faulted: AtomicU64,
-    /// Jobs refused at submission (daemon shutting down).
+    /// Jobs refused at submission (daemon shutting down, or a tenant
+    /// over its `serve_quota_bytes` byte quota).
     pub jobs_rejected: AtomicU64,
     /// High-water mark of concurrently running jobs.
     pub peak_concurrent: AtomicU64,
+    /// Incomplete jobs the manifest replay re-admitted (`--recover`).
+    pub jobs_recovered: AtomicU64,
+    /// Durable manifest records written by this daemon plus records
+    /// replayed from a pre-crash manifest at recovery.
+    pub manifest_records: AtomicU64,
+    /// Rejections broken down by tenant (quota enforcement evidence).
+    pub rejected_by_tenant: std::sync::Mutex<std::collections::BTreeMap<String, u64>>,
 }
 
 impl DaemonStats {
@@ -226,6 +234,15 @@ impl DaemonStats {
             jobs_faulted: self.jobs_faulted.load(Ordering::Relaxed),
             jobs_rejected: self.jobs_rejected.load(Ordering::Relaxed),
             peak_concurrent: self.peak_concurrent.load(Ordering::Relaxed),
+            jobs_recovered: self.jobs_recovered.load(Ordering::Relaxed),
+            manifest_records: self.manifest_records.load(Ordering::Relaxed),
+            rejected_by_tenant: self
+                .rejected_by_tenant
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .iter()
+                .map(|(t, n)| (t.clone(), *n))
+                .collect(),
         }
     }
 
@@ -234,9 +251,20 @@ impl DaemonStats {
     pub fn note_concurrent(&self, running: u64) {
         self.peak_concurrent.fetch_max(running, Ordering::Relaxed);
     }
+
+    /// Count one rejection, attributed to `tenant`.
+    pub fn note_rejected(&self, tenant: &str) {
+        self.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+        *self
+            .rejected_by_tenant
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(tenant.to_string())
+            .or_insert(0) += 1;
+    }
 }
 
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DaemonSnapshot {
     pub jobs_submitted: u64,
     pub jobs_admitted: u64,
@@ -244,6 +272,11 @@ pub struct DaemonSnapshot {
     pub jobs_faulted: u64,
     pub jobs_rejected: u64,
     pub peak_concurrent: u64,
+    pub jobs_recovered: u64,
+    pub manifest_records: u64,
+    /// `(tenant, rejections)` pairs in tenant order; empty when nothing
+    /// was ever rejected.
+    pub rejected_by_tenant: Vec<(String, u64)>,
 }
 
 /// One `/proc/self` sample.
@@ -386,6 +419,23 @@ mod tests {
         assert_eq!(s.jobs_admitted, 2);
         assert_eq!(s.peak_concurrent, 2);
         assert_eq!(s.jobs_faulted, 0);
+        assert_eq!(s.jobs_recovered, 0);
+        assert_eq!(s.manifest_records, 0);
+        assert!(s.rejected_by_tenant.is_empty());
+
+        d.jobs_recovered.fetch_add(4, Ordering::Relaxed);
+        d.manifest_records.fetch_add(9, Ordering::Relaxed);
+        d.note_rejected("greedy");
+        d.note_rejected("greedy");
+        d.note_rejected("alice");
+        let s = d.snapshot();
+        assert_eq!(s.jobs_recovered, 4);
+        assert_eq!(s.manifest_records, 9);
+        assert_eq!(s.jobs_rejected, 3, "note_rejected must bump the total");
+        assert_eq!(
+            s.rejected_by_tenant,
+            vec![("alice".to_string(), 1), ("greedy".to_string(), 2)]
+        );
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! registry steering the §2.1 schedulers around other jobs' hot OSTs,
 //! and the ft_matrix-style leg that kills one job mid-transfer while the
 //! daemon and its surviving jobs carry on.
+//!
+//! Crash consistency (`serve_recover`): a daemon whose jobs all die
+//! mid-transfer leaves a durable manifest, and a NEW daemon over the
+//! same ft_dir re-admits every incomplete job (watchdog-faulted ones
+//! included) within the §5.2.2 resume bound; per-tenant byte quotas
+//! (`serve_quota_bytes`) reject over-quota submissions with a
+//! per-tenant breakdown; and with the knobs off, nothing of the
+//! manifest machinery ever touches disk.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -128,6 +136,18 @@ fn default_job(env: &SimEnv) -> JobRequest {
     }
 }
 
+/// Objects already durable in job `id`'s FT log under `cfg.ft_dir` —
+/// the `logged` term of the §5.2.2 bound `resent <= total - logged`.
+fn logged_objects(cfg: &Config, id: u64) -> u64 {
+    let mut ft = cfg.ft();
+    ft.dir = cfg.ft_dir.join(format!("job-{id}"));
+    ftlads::ftlog::recover::recover_all(&ft)
+        .unwrap()
+        .values()
+        .map(|s| s.count() as u64)
+        .sum()
+}
+
 #[test]
 fn session_wire_bytes_match_deprecated_entry_points() {
     // The tap-based equivalence pin: at the default config the session
@@ -212,6 +232,12 @@ fn builder_and_serve_outcomes_match_run_transfer() {
     assert_eq!(serve.stats().jobs_completed, 1);
     // The daemon job logs under its own namespace...
     assert!(env_c.cfg.ft_dir.join("job-1").is_dir(), "job FT namespace missing");
+    // ...and with `serve_recover` at its default (off) the manifest
+    // machinery never touches disk — startup is seed-identical.
+    assert!(
+        !env_c.cfg.ft_dir.join("manifest").exists(),
+        "recover-off daemon must not create a manifest dir"
+    );
     let out_c = run(out_c, &env_c);
 
     for (label, out) in [("builder", &out_b), ("serve", &out_c)] {
@@ -487,5 +513,176 @@ fn killed_job_leaves_daemon_and_survivors_intact_then_resumes() {
         "resume must reuse the killed job's own log, not start over"
     );
     envs[1].verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
+
+#[test]
+fn daemon_kill_recovers_all_jobs_from_manifest() {
+    // The crash-consistency tentpole, in-process: a `serve_recover`
+    // daemon accepts three jobs that ALL die mid-transfer (the stand-in
+    // for SIGKILL-ing the daemon — every job incomplete, only the
+    // manifest and the per-job FT logs surviving on disk). A NEW daemon
+    // over the same ft_dir replays the manifest, re-admits every
+    // incomplete job under its ORIGINAL id with resume forced, and each
+    // finishes byte-exact within the §5.2.2 bound.
+    let mut cfg = Config::for_tests("serve-manifest-recover");
+    cfg.serve_recover = true;
+    cfg.serve_max_jobs = 3;
+    let workloads: Vec<_> =
+        (0..3u64).map(|j| workload::mixed_workload(5, 256 << 10, 60 + j)).collect();
+    let envs: Vec<_> =
+        workloads.iter().map(|wl| SimEnv::new(cfg.clone(), wl)).collect();
+    let serve = Serve::new(cfg.clone());
+    let handles: Vec<_> = envs
+        .iter()
+        .map(|env| {
+            let mut req = default_job(env);
+            req.spec = req.spec.with_fault(FaultPlan::at_fraction(0.5, Side::Source));
+            serve.submit("tenant", 1, req).unwrap()
+        })
+        .collect();
+    let ids: Vec<u64> = handles.iter().map(|h| h.id()).collect();
+    for h in handles {
+        assert!(!h.wait().unwrap().completed, "every job must die mid-transfer");
+    }
+    serve.drain();
+    drop(serve); // the "killed" daemon
+
+    // What the crash left on disk: per-job logged objects + a manifest
+    // whose latest word on every job is non-terminal (FAULTED).
+    let logged: Vec<u64> = ids.iter().map(|&id| logged_objects(&cfg, id)).collect();
+    assert!(logged.iter().any(|&l| l > 0), "nothing was logged before the kill");
+    let replay = ftlads::ftlog::manifest::replay(&cfg.ft_dir).unwrap();
+    assert_eq!(replay.incomplete().count(), 3, "all three jobs incomplete");
+
+    // Restart: replay the manifest, rebuild each job's endpoints, let
+    // the daemon re-admit the lot through the fair-share path.
+    let serve2 = Serve::new(cfg.clone());
+    let recovered = serve2
+        .recover(|job| {
+            let i = ids.iter().position(|&id| id == job.id).unwrap();
+            assert_eq!(job.tenant, "tenant");
+            assert_eq!(job.logged_objects, logged[i], "job {i} logged count");
+            Some(default_job(&envs[i])) // resume=false here: recover forces it
+        })
+        .unwrap();
+    assert_eq!(recovered.len(), 3);
+    let stats = serve2.stats();
+    assert_eq!(stats.jobs_recovered, 3);
+    assert_eq!(stats.jobs_submitted, 0, "recovered jobs are not submissions");
+    assert!(stats.manifest_records >= 9, "3 jobs x SUBMITTED/ADMITTED/FAULTED");
+    for h in recovered {
+        let id = h.id();
+        let i = ids.iter().position(|&x| x == id).unwrap();
+        let out = h.wait().unwrap();
+        assert!(out.completed, "recovered job {id}: {:?}", out.fault);
+        // §5.2.2 across the daemon kill: only the complement is resent.
+        let total = workloads[i].total_objects(cfg.object_size);
+        assert!(
+            out.source.objects_sent <= total - logged[i],
+            "job {id}: resent {} > total {} - logged {}",
+            out.source.objects_sent,
+            total,
+            logged[i]
+        );
+        envs[i].verify_sink_complete().unwrap();
+    }
+    // A fresh submission on the recovered daemon never recycles an id.
+    let extra_env = SimEnv::new(cfg.clone(), &workloads[0]);
+    let extra = serve2.submit("tenant", 1, default_job(&extra_env)).unwrap();
+    assert!(ids.iter().all(|&id| id != extra.id()), "job id recycled: {ids:?}");
+    assert!(extra.wait().unwrap().completed);
+    serve2.drain();
+    // The manifest's last word on every job is now COMPLETED.
+    let replay = ftlads::ftlog::manifest::replay(&cfg.ft_dir).unwrap();
+    assert_eq!(replay.incomplete().count(), 0, "recovery must complete the story");
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
+
+#[test]
+fn watchdog_faulted_job_leaves_manifest_record_and_recovers() {
+    // Satellite: a job the `job_deadline_ms` watchdog shoots leaves a
+    // FAULTED manifest record, and `Serve::recover` re-admits it like
+    // any other incomplete job. Slow strictly-serial OSTs make the
+    // transfer take far longer than the 1 ms deadline, so the watchdog
+    // fires deterministically; the detached body's own fault plan kills
+    // it shortly after, so the zombie is long gone before recovery.
+    let mut cfg = Config::for_tests("serve-watchdog-manifest");
+    cfg.serve_recover = true;
+    cfg.job_deadline_ms = 1;
+    cfg.time_scale = 1.0;
+    cfg.ost_latency_us = 2_000;
+    cfg.ost_concurrent = 1;
+    let wl = workload::big_workload(4, 256 << 10);
+    let env = SimEnv::new(cfg.clone(), &wl);
+    let serve = Serve::new(cfg.clone());
+    let mut req = default_job(&env);
+    req.spec = req.spec.with_fault(FaultPlan::at_fraction(0.5, Side::Source));
+    let handle = serve.submit("tenant", 1, req).unwrap();
+    let id = handle.id();
+    let err = handle.wait().expect_err("watchdog must fault the silent job");
+    assert!(err.to_string().contains("job_deadline_ms"), "{err:#}");
+    serve.drain();
+    assert_eq!(serve.stats().jobs_faulted, 1);
+    drop(serve);
+    // Let the detached body hit its own fault point and exit before the
+    // recovery run reuses its PFS handles.
+    std::thread::sleep(Duration::from_millis(800));
+
+    let replay = ftlads::ftlog::manifest::replay(&cfg.ft_dir).unwrap();
+    let rec = replay.jobs.get(&id).expect("watchdog job missing from manifest");
+    assert_eq!(rec.state, ftlads::ftlog::manifest::JobState::Faulted);
+
+    // Recovery re-admits the watchdog victim (deadline off this time —
+    // the FT knobs the digest pins are unchanged) and it completes.
+    let mut cfg2 = cfg.clone();
+    cfg2.job_deadline_ms = 0;
+    let serve2 = Serve::new(cfg2.clone());
+    let recovered = serve2.recover(|_| Some(default_job(&env))).unwrap();
+    assert_eq!(recovered.len(), 1);
+    assert_eq!(serve2.stats().jobs_recovered, 1);
+    for h in recovered {
+        assert!(h.wait().unwrap().completed, "recovered watchdog job must finish");
+    }
+    serve2.drain();
+    env.verify_sink_complete().unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
+
+#[test]
+fn tenant_quota_rejects_over_quota_jobs_with_breakdown() {
+    // Satellite: `serve_quota_bytes` caps each tenant's cumulative
+    // source bytes. The 4-file 1 MiB workload weighs in at 1 MiB per
+    // job; a 1.5 MiB quota admits each tenant's first job and rejects
+    // the second, counted per tenant in the snapshot breakdown.
+    let mut cfg = Config::for_tests("serve-quota");
+    cfg.serve_quota_bytes = 3 << 19; // 1.5 MiB
+    let wl = workload::big_workload(4, 256 << 10); // 1 MiB per job
+    let serve = Serve::new(cfg.clone());
+    let env_a = SimEnv::new(cfg.clone(), &wl);
+    let a1 = serve.submit("alice", 1, default_job(&env_a)).unwrap();
+    assert!(a1.wait().unwrap().completed);
+    let env_a2 = SimEnv::new(cfg.clone(), &wl);
+    let err = serve
+        .submit("alice", 1, default_job(&env_a2))
+        .expect_err("second 1 MiB job must blow alice's 1.5 MiB quota");
+    assert!(err.to_string().contains("serve_quota_bytes"), "{err:#}");
+    // Quotas are per tenant: bob's first job still fits.
+    let env_b = SimEnv::new(cfg.clone(), &wl);
+    let b1 = serve.submit("bob", 1, default_job(&env_b)).unwrap();
+    assert!(b1.wait().unwrap().completed);
+    let env_b2 = SimEnv::new(cfg.clone(), &wl);
+    assert!(serve.submit("bob", 1, default_job(&env_b2)).is_err());
+    serve.drain();
+    let stats = serve.stats();
+    assert_eq!(stats.jobs_completed, 2);
+    assert_eq!(stats.jobs_rejected, 2);
+    assert_eq!(
+        stats.rejected_by_tenant,
+        vec![("alice".to_string(), 1), ("bob".to_string(), 1)]
+    );
+    // The quota knob never armed the manifest: nothing under ft_dir
+    // but the per-job FT namespaces.
+    assert!(!cfg.ft_dir.join("manifest").exists());
     let _ = std::fs::remove_dir_all(&cfg.ft_dir);
 }

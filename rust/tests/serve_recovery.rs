@@ -1,0 +1,220 @@
+//! Crash-consistent serve daemon, end to end over real TCP: a sink
+//! daemon with `serve_recover` on serves 4 concurrent tagged clients,
+//! every client's leg is killed at a `FaultPlan` point mid-transfer and
+//! the daemon torn down (the SIGKILL stand-in — only the disk state
+//! survives: per-job FT logs, partial sink files, and the durable job
+//! manifest). A restarted daemon over the same ft_dir replays the
+//! manifest and hands every reconnecting client its recovered session;
+//! each job finishes byte-exact within the §5.2.2 retransmit bound
+//! (`resent <= total - logged`).
+//!
+//! Also pins the bounded `(fid, block)` dedup ledger: FILE_CLOSE
+//! retires a file's ledger entries, so a completed session holds zero
+//! of them no matter how many objects it moved.
+
+use std::sync::Arc;
+
+use ftlads::config::Config;
+use ftlads::coordinator::serve::{serve_sink, serve_source};
+use ftlads::coordinator::sink::SinkSession;
+use ftlads::coordinator::source::SourceSession;
+use ftlads::coordinator::TransferSpec;
+use ftlads::fault::FaultPlan;
+use ftlads::net::{channel, tcp, FaultController, Side};
+use ftlads::pfs::sim::SimPfs;
+use ftlads::pfs::Pfs;
+use ftlads::workload;
+
+/// Byte-exact sink check: every object of every file present, committed
+/// and carrying the source's digest — the "zero duplicate / zero
+/// corrupt pwrites" evidence.
+fn verify_sink(cfg: &Config, source: &SimPfs, sink: &SimPfs, files: &[String]) {
+    for name in files {
+        let (_, meta) = sink
+            .lookup(name)
+            .unwrap_or_else(|| panic!("{name} missing at sink"));
+        assert!(meta.committed, "{name} not committed");
+        let objects = (meta.size + cfg.object_size - 1) / cfg.object_size;
+        for b in 0..objects {
+            let offset = b * cfg.object_size;
+            let len = (meta.size - offset).min(cfg.object_size) as usize;
+            let (got, _) = sink
+                .written_digest(name, offset)
+                .unwrap_or_else(|| panic!("{name} block {b} missing"));
+            assert_eq!(
+                got,
+                source.expected_digest(name, offset, len),
+                "{name} block {b} corrupt"
+            );
+        }
+    }
+}
+
+/// Objects durable in `<ft_dir>/job-<id>`'s FT log.
+fn logged_objects(cfg: &Config, id: u64) -> u64 {
+    let mut ft = cfg.ft();
+    ft.dir = cfg.ft_dir.join(format!("job-{id}"));
+    ftlads::ftlog::recover::recover_all(&ft)
+        .unwrap()
+        .values()
+        .map(|s| s.count() as u64)
+        .sum()
+}
+
+#[test]
+fn dedup_ledger_is_retired_on_file_close() {
+    // 6 files x 8 objects through a fault-free session: before the
+    // bounded ledger, the sink would end holding one `done` entry per
+    // object (48); FILE_CLOSE now retires each file's entries, so a
+    // completed session holds exactly zero — ledger memory is bounded
+    // by OPEN files, not by transfer size.
+    let cfg = Config::for_tests("serve-ledger-bound");
+    let wl = workload::big_workload(6, 512 << 10);
+    let source = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), cfg.seed));
+    source.populate(&wl.as_tuples());
+    let sink = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), cfg.seed));
+    let files: Vec<String> = wl.files.iter().map(|f| f.name.clone()).collect();
+
+    let (src_ep, snk_ep) = channel::pair(cfg.wire(), FaultController::unarmed());
+    let node = SinkSession::new(&cfg, sink.clone() as Arc<dyn Pfs>, Arc::new(snk_ep))
+        .spawn()
+        .unwrap();
+    let src = SourceSession::new(&cfg, source.clone() as Arc<dyn Pfs>, Arc::new(src_ep))
+        .run(&TransferSpec::fresh(files.clone()))
+        .unwrap();
+    assert!(src.fault.is_none(), "{:?}", src.fault);
+    let report = node.join();
+    assert!(report.fault.is_none(), "{:?}", report.fault);
+    assert_eq!(report.counters.objects_synced, 6 * 8, "every object moved");
+    assert_eq!(
+        report.ledger_blocks, 0,
+        "closed files must not retain dedup-ledger entries"
+    );
+    verify_sink(&cfg, &source, &sink, &files);
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
+
+#[test]
+fn tcp_daemon_kill_and_recover_four_clients() {
+    let mut cfg = Config::for_tests("serve-recovery-tcp");
+    cfg.serve_recover = true;
+    cfg.serve_max_jobs = 4;
+    let jobs = 4usize;
+
+    // One dataset per job, all on the same PFS pair (the "disks" that
+    // survive the daemon kill).
+    let source = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), cfg.seed));
+    let sink = Arc::new(SimPfs::new(cfg.layout(), cfg.ost_config(), cfg.seed));
+    let mut job_files: Vec<Vec<String>> = Vec::new();
+    for j in 0..jobs {
+        let wl = workload::mixed_workload(4, 256 << 10, 80 + j as u64);
+        let named: Vec<(String, u64)> = wl
+            .files
+            .iter()
+            .map(|f| (format!("job{j}-{}", f.name), f.size))
+            .collect();
+        source.populate(&named);
+        job_files.push(named.into_iter().map(|(n, _)| n).collect());
+    }
+    let totals: Vec<u64> = job_files
+        .iter()
+        .map(|files| {
+            files
+                .iter()
+                .map(|n| {
+                    let size = source.lookup(n).unwrap().1.size;
+                    (size + cfg.object_size - 1) / cfg.object_size
+                })
+                .sum()
+        })
+        .collect();
+
+    // Phase 1: four concurrent clients, every leg killed at its own
+    // fault point (the daemon "dies" with all four jobs incomplete —
+    // serve_sink returns once all four sessions ended, the listener
+    // drops with it).
+    let listener = tcp::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sink_cfg = cfg.clone();
+    let sink_pfs = sink.clone();
+    let daemon = std::thread::spawn(move || {
+        serve_sink(&sink_cfg, &listener, sink_pfs as Arc<dyn Pfs>, None, jobs).unwrap()
+    });
+    let specs: Vec<TransferSpec> = job_files
+        .iter()
+        .enumerate()
+        .map(|(j, files)| {
+            TransferSpec::fresh(files.clone()).with_fault(FaultPlan::at_fraction(
+                0.35 + 0.1 * j as f64,
+                Side::Source,
+            ))
+        })
+        .collect();
+    let results = serve_source(&cfg, addr, source.clone() as Arc<dyn Pfs>, specs).unwrap();
+    for (job, report) in &results {
+        let faulted = match report {
+            Ok(r) => r.fault.is_some(),
+            Err(_) => true,
+        };
+        assert!(faulted, "job {job} must die at its fault point");
+    }
+    let (_, stats1) = daemon.join().unwrap();
+    assert_eq!(stats1.jobs_submitted, jobs as u64);
+    assert_eq!(stats1.jobs_faulted, jobs as u64);
+    assert_eq!(stats1.jobs_recovered, 0);
+    // SUBMITTED + ADMITTED + FAULTED per job, all fsynced.
+    assert!(stats1.manifest_records >= 3 * jobs as u64);
+
+    // What survived the kill.
+    let logged: Vec<u64> = (1..=jobs as u64).map(|id| logged_objects(&cfg, id)).collect();
+    assert!(logged.iter().any(|&l| l > 0), "nothing durable before the kill");
+    let replay = ftlads::ftlog::manifest::replay(&cfg.ft_dir).unwrap();
+    assert_eq!(replay.incomplete().count(), jobs, "all jobs incomplete on disk");
+
+    // Phase 2: restart the daemon over the same ft_dir and reconnect
+    // the four clients (same tags, no fault plans). The manifest replay
+    // hands each CONNECT its recovered session; `serve_recover` forces
+    // resume on the source side, so only the complement is resent.
+    let listener = tcp::listen("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sink_cfg = cfg.clone();
+    let sink_pfs = sink.clone();
+    let daemon = std::thread::spawn(move || {
+        serve_sink(&sink_cfg, &listener, sink_pfs as Arc<dyn Pfs>, None, jobs).unwrap()
+    });
+    let specs: Vec<TransferSpec> =
+        job_files.iter().map(|files| TransferSpec::fresh(files.clone())).collect();
+    let results = serve_source(&cfg, addr, source.clone() as Arc<dyn Pfs>, specs).unwrap();
+    for (job, report) in &results {
+        let r = report.as_ref().unwrap_or_else(|e| panic!("job {job}: {e:#}"));
+        assert!(r.fault.is_none(), "job {job} resume: {:?}", r.fault);
+        let i = (*job - 1) as usize;
+        // §5.2.2 across the daemon kill, per job.
+        assert!(
+            r.counters.objects_sent <= totals[i] - logged[i],
+            "job {job}: resent {} > total {} - logged {}",
+            r.counters.objects_sent,
+            totals[i],
+            logged[i]
+        );
+    }
+    let (reports2, stats2) = daemon.join().unwrap();
+    assert_eq!(stats2.jobs_recovered, jobs as u64, "every CONNECT handed off");
+    assert_eq!(stats2.jobs_submitted, 0, "no job counted as a fresh submission");
+    assert_eq!(stats2.jobs_completed, jobs as u64);
+    for (job, report) in &reports2 {
+        let r = report.as_ref().unwrap_or_else(|e| panic!("sink job {job}: {e:#}"));
+        assert!(r.fault.is_none(), "sink job {job}: {:?}", r.fault);
+        assert_eq!(r.ledger_blocks, 0, "sink job {job} retains ledger entries");
+    }
+
+    // Byte-exact sinks: every file of every job present, committed,
+    // digest-identical to the source — no duplicate or torn writes.
+    for files in &job_files {
+        verify_sink(&cfg, &source, &sink, files);
+    }
+    // The recovered daemon's manifest now ends every job COMPLETED.
+    let replay = ftlads::ftlog::manifest::replay(&cfg.ft_dir).unwrap();
+    assert_eq!(replay.incomplete().count(), 0, "recovery must close the story");
+    let _ = std::fs::remove_dir_all(&cfg.ft_dir);
+}
